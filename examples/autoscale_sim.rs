@@ -1,0 +1,60 @@
+//! Autoscaling-scheme comparison on the cloud simulator (no artifacts
+//! needed): replay any of the four calibrated traces against all five
+//! procurement schemes and print the cost/SLO table — the interactive
+//! version of Figures 5/6/9.
+//!
+//!     cargo run --release --example autoscale_sim -- --trace twitter --rate 100
+
+use paragon::models::Registry;
+use paragon::scheduler;
+use paragon::sim::{simulate, SimConfig};
+use paragon::trace::{generators, synthesize_requests, TraceKind, WorkloadKind};
+use paragon::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let trace_name = args.get_or("trace", "berkeley");
+    let rate = args.get_f64("rate", 100.0)?;
+    let duration = args.get_usize("duration", 3600)?;
+    let seed = args.get_u64("seed", 42)?;
+    let kind = TraceKind::from_name(&trace_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace {trace_name}"))?;
+
+    let reg = Registry::builtin();
+    let trace = generators::generate_with(kind, seed, duration, rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, seed ^ 0x51);
+    println!(
+        "trace '{}': {}s, mean {:.0} q/s, peak/median {:.2}, {} requests\n",
+        trace.name,
+        duration,
+        rate,
+        paragon::trace::analysis::peak_to_median(&trace.rates),
+        reqs.len()
+    );
+    println!("{:<12} {:>10} {:>9} {:>9} {:>9} {:>9} {:>10} {:>9}",
+             "scheme", "cost $", "vs react", "viol %", "lambda %", "mean VMs",
+             "p99 ms", "cold");
+    println!("{}", "-".repeat(84));
+
+    let mut base_cost = None;
+    for name in scheduler::ALL_SCHEMES {
+        let mut scheme = scheduler::by_name(name).unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, &trace.name, &SimConfig {
+            seed,
+            ..SimConfig::default()
+        });
+        let base = *base_cost.get_or_insert(rep.total_cost());
+        println!(
+            "{:<12} {:>10.3} {:>8.2}x {:>8.1}% {:>8.1}% {:>9.1} {:>10.0} {:>9}",
+            name,
+            rep.total_cost(),
+            rep.total_cost() / base,
+            rep.violation_pct(),
+            rep.lambda_share_pct(),
+            rep.mean_vms(),
+            rep.latency_p99_ms,
+            rep.lambda_cold_starts,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: load an AOT-compiled pool model and run one inference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the minimal three-layer path: the pallas/JAX graph lowered
+//! at build time, compiled on the PJRT CPU client, executed from rust with
+//! device-resident weights.
+
+use paragon::models::Registry;
+use paragon::runtime::Runtime;
+use paragon::util::rng::Pcg;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts/ not built — run `make artifacts` first");
+    }
+
+    // 1. The registry: model profiles from the manifest + paper anchors.
+    let reg = Registry::from_manifest(artifacts)?;
+    println!("model pool ({} models):", reg.len());
+    for m in &reg.models {
+        println!("  {:<16} acc {:>5.1}%  ref-lat {:>7.1} ms  {:>9} params",
+                 m.name, m.accuracy, m.latency_ms, m.param_count);
+    }
+
+    // 2. The runtime: compile HLO text once, upload weights once.
+    let rt = Runtime::new(artifacts)?;
+    println!("\nPJRT platform: {}", rt.platform());
+    let model = rt.load_model(&reg, reg.by_name("squeezenet").unwrap().idx)?;
+    println!("loaded {} (batch sizes {:?})", model.name, model.batch_sizes());
+
+    // 3. Inference: a random "image", batch of 1.
+    let mut rng = Pcg::seeded(7);
+    let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
+    // Warmup then timed run.
+    rt.infer(&model, &input, 1)?;
+    let out = rt.infer(&model, &input, 1)?;
+    let class = out
+        .probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("\npredicted class {class}  (p = {:.3})  exec {:.2} ms",
+             out.probs[class], out.exec_ms);
+    println!("probabilities: {:?}",
+             out.probs.iter().map(|p| (p * 1000.0).round() / 1000.0).collect::<Vec<_>>());
+    Ok(())
+}

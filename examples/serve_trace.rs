@@ -1,0 +1,125 @@
+//! End-to-end serving driver (the repo's headline validation run):
+//! a real model pool served through router → dynamic batcher → PJRT
+//! workers under a scaled real-trace workload, reporting latency,
+//! throughput and an EC2/Lambda cost estimate. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example serve_trace -- \
+//!         --trace berkeley --rate 40 --duration 60
+//!
+//! Python never runs here: the models are AOT HLO artifacts executed on
+//! the PJRT CPU client.
+
+use paragon::models::{Registry, SelectionPolicy};
+use paragon::runtime::engine::Engine;
+use paragon::serving::{Server, ServerConfig};
+use paragon::trace::{generators, synthesize_requests, TraceKind, WorkloadKind};
+use paragon::util::cli::Args;
+use paragon::util::rng::Pcg;
+use paragon::util::stats::percentile;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts/ not built — run `make artifacts` first");
+    }
+    let trace_name = args.get_or("trace", "berkeley");
+    let mean_rate = args.get_f64("rate", 40.0)?;
+    let duration = args.get_usize("duration", 60)?;
+    let kind = TraceKind::from_name(&trace_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace {trace_name}"))?;
+
+    let reg = Registry::from_manifest(&artifacts)?;
+    // Serve the four ISO-latency models (Fig 3a's candidate set).
+    let model_idx: Vec<usize> = reg.iso_latency(500.0).iter().map(|m| m.idx).collect();
+    println!("loading {} models through PJRT...", model_idx.len());
+    let t_load = Instant::now();
+    let engine = Engine::start(artifacts, reg.clone(), model_idx.clone())?;
+    println!("engine up in {:.1}s: {:?}", t_load.elapsed().as_secs_f64(),
+             engine.handle().models.values().collect::<Vec<_>>());
+
+    let server = Server::start(engine.handle(), &reg, ServerConfig {
+        max_batch: 16,
+        batch_timeout_ms: 8.0,
+        workers: 2,
+        selection: SelectionPolicy::Paragon,
+    });
+
+    // Open-loop load from the scaled trace.
+    let trace = generators::generate_with(kind, 42, duration, mean_rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::VarConstraints, 42);
+    println!("replaying {} requests over {}s from trace '{}' (mean {:.0} q/s)",
+             reqs.len(), duration, trace_name, mean_rate);
+
+    let mut rng = Pcg::seeded(1);
+    let inputs_pool: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..reg.input_dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    let started = Instant::now();
+    let mut pending = Vec::with_capacity(reqs.len());
+    for r in &reqs {
+        // Pace to the trace's arrival schedule.
+        let due = Duration::from_secs_f64(r.arrival_s);
+        let elapsed = started.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        let input = inputs_pool[(r.id % 32) as usize].clone();
+        let rx = server.submit(input, r.slo_ms, r.min_accuracy);
+        pending.push((r.slo_ms, rx));
+    }
+    println!("all submitted in {:.1}s; draining...", started.elapsed().as_secs_f64());
+
+    let mut lats = Vec::with_capacity(pending.len());
+    let mut viol = 0u64;
+    let mut exec_ms_sum = 0.0;
+    let mut queue_ms_sum = 0.0;
+    let mut batch_sum = 0usize;
+    let mut by_model = std::collections::BTreeMap::<usize, u64>::new();
+    for (slo, rx) in pending {
+        let resp = rx.recv()?;
+        if resp.total_ms > slo {
+            viol += 1;
+        }
+        exec_ms_sum += resp.exec_ms;
+        queue_ms_sum += resp.queue_ms;
+        batch_sum += resp.batch;
+        *by_model.entry(resp.model).or_default() += 1;
+        lats.push(resp.total_ms);
+    }
+    let wall = started.elapsed().as_secs_f64();
+    let n = lats.len();
+    let stats = server.shutdown();
+
+    println!("\n=== serve_trace results ===");
+    println!("requests          {n}");
+    println!("wall time         {wall:.1} s");
+    println!("throughput        {:.1} q/s", n as f64 / wall);
+    println!("latency mean      {:.2} ms", lats.iter().sum::<f64>() / n as f64);
+    println!("latency p50       {:.2} ms", percentile(&mut lats, 50.0));
+    println!("latency p95       {:.2} ms", percentile(&mut lats, 95.0));
+    println!("latency p99       {:.2} ms", percentile(&mut lats, 99.0));
+    println!("SLO violations    {} ({:.2}%)", viol, viol as f64 / n as f64 * 100.0);
+    println!("mean exec         {:.2} ms", exec_ms_sum / n as f64);
+    println!("mean queue        {:.2} ms", queue_ms_sum / n as f64);
+    println!("mean ridden batch {:.2}", batch_sum as f64 / n as f64);
+    println!("server batches    {} (mean formed batch {:.2})", stats.batches, stats.mean_batch);
+    for (m, c) in &by_model {
+        println!("  model {:<16} {:>6} requests", reg.models[*m].name, c);
+    }
+    // Cost estimate: what this hour-scaled workload would bill on the
+    // paper's cheapest feasible deployment (m4.large steady-state fleet).
+    let vm = paragon::cloud::default_vm_type();
+    let mix_cost: f64 = by_model
+        .iter()
+        .map(|(m, c)| reg.models[*m].vm_cost_per_query(vm) * *c as f64)
+        .sum();
+    println!("estimated EC2 cost of this workload: ${:.4} (${:.4}/1k queries)",
+             mix_cost, mix_cost / n as f64 * 1000.0);
+    assert_eq!(stats.errors, 0, "inference errors during the run");
+    Ok(())
+}

@@ -1,0 +1,4 @@
+"""L1 Pallas kernels + pure-jnp oracles (build-time only)."""
+
+from .fused_linear import fused_linear, matmul_fused  # noqa: F401
+from .softmax import softmax_rows  # noqa: F401

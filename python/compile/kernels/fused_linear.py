@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: tiled fused linear layer  y = act(x @ w + b).
+
+This is the compute hot-spot of every model in the serving pool and of the
+PPO policy/value networks. It is written TPU-idiomatically (see DESIGN.md
+§Hardware-Adaptation):
+
+  * the grid tiles (M, N, K) into MXU-shaped blocks (multiples of 128 where
+    the layer dimensions allow), with the K reduction as the innermost grid
+    dimension accumulating into the output block held in VMEM;
+  * bias add and activation are fused into the epilogue of the last K step,
+    so the activation never round-trips through HBM;
+  * matmuls request ``preferred_element_type=float32`` so bf16 inputs
+    accumulate in f32 on the MXU.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness (and AOT) path;
+real-TPU performance is estimated from the BlockSpecs in DESIGN.md §Perf.
+
+A ``jax.custom_vjp`` makes the layer differentiable so the PPO *train step*
+also bottoms out in these kernels: the backward pass reuses the same tiled
+matmul kernel for dx = g·Wᵀ and dW = xᵀ·g.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activations supported by the fused epilogue. The backward pass recovers
+# act'(z) from the *output* y alone, which is why only these three are
+# offered: relu' = 1[y>0], tanh' = 1-y², identity' = 1.
+ACTIVATIONS = ("none", "relu", "tanh")
+
+_MXU = 128  # MXU systolic-array tile edge; block sizes aim for multiples.
+
+
+def _blk(dim: int, target: int = _MXU) -> int:
+    """Largest MXU-aligned block size that divides ``dim`` exactly.
+
+    Layer dimensions in this repo are either multiples of 128 (hidden
+    widths, flattened image inputs) or small (class counts, observation
+    features), so this never silently pads: it returns ``target`` when the
+    dimension is a multiple, otherwise the full dimension (a single block).
+    """
+    if dim % target == 0:
+        return target
+    return dim
+
+
+def _apply_act(y, act: str):
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, act: str,
+                   use_bias: bool):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into o[i,j].
+
+    o_ref is the VMEM-resident accumulator block; the epilogue (bias +
+    activation) fires on the final K step only.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if use_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_act(acc, act)
+
+
+def matmul_fused(x, w, b=None, act: str = "none"):
+    """Tiled pallas matmul with fused bias+activation epilogue.
+
+    x: (M, K), w: (K, N), b: (N,) or None. Returns act(x@w+b) as (M, N)
+    in float32 (accumulation dtype).
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; want one of {ACTIVATIONS}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"matmul inner-dim mismatch: x{x.shape} w{w.shape}")
+    use_bias = b is not None
+    if use_bias and b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm, bn, bk = _blk(m), _blk(n), _blk(k)
+    grid = (m // bm, n // bn, k // bk)
+    nk = grid[2]
+
+    b2d = (b if use_bias else jnp.zeros((n,), jnp.float32)).reshape(1, n)
+
+    kernel = functools.partial(_matmul_kernel, nk=nk, act=act,
+                               use_bias=use_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b2d)
+
+
+def _act_grad_from_output(y, act: str):
+    """act'(z) recovered from y = act(z)."""
+    if act == "relu":
+        return (y > 0.0).astype(y.dtype)
+    if act == "tanh":
+        return 1.0 - y * y
+    return jnp.ones_like(y)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act: str = "none"):
+    """Differentiable fused linear layer y = act(x @ w + b).
+
+    Forward and backward both run through the tiled pallas matmul kernel,
+    so the PPO train step (L2) bottoms out in L1 on both passes.
+    """
+    return matmul_fused(x, w, b, act=act)
+
+
+def _fused_linear_fwd(x, w, b, act):
+    y = matmul_fused(x, w, b, act=act)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(act, res, g):
+    x, w, y = res
+    gz = g * _act_grad_from_output(y, act)
+    # dx = gz @ wᵀ and dw = xᵀ @ gz reuse the same tiled kernel.
+    dx = matmul_fused(gz, jnp.transpose(w), None, act="none").astype(x.dtype)
+    dw = matmul_fused(jnp.transpose(x), gz, None, act="none").astype(w.dtype)
+    db = jnp.sum(gz, axis=0).astype(gz.dtype)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: single-pass fused row softmax.
+
+Each grid step owns a block of full rows resident in VMEM and performs the
+numerically-stable max-subtract, exp and normalize without any intermediate
+HBM round-trip — the TPU analogue of the shared-memory softmax every GPU
+serving stack fuses into its classifier head / policy head.
+
+``interpret=True`` for CPU-PJRT executability (see fused_linear.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ROW_BLOCK = 128
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def softmax_rows(x):
+    """Row-wise softmax over a 2-D array (M, N), computed in f32."""
+    m, n = x.shape
+    bm = _ROW_BLOCK if m % _ROW_BLOCK == 0 else m
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,141 @@
+"""L2: the serving-pool model family, written in JAX over the L1 kernels.
+
+The paper serves a pool of pre-trained image-classification models
+(squeezenet … resnet-class, MXNet/TensorFlow on EC2).  We reproduce the pool
+as eight residual-MLP classifiers of strictly increasing capacity over
+flattened 32×32×3 images (see DESIGN.md §Substitutions): what every figure
+consumes is each model's (accuracy, latency, memory, $) profile, and this
+family yields *genuine* monotone latency (real PJRT execution of real
+matmuls) and genuine accuracy ordering (quick build-time training against a
+fixed random teacher task).
+
+Every layer is the L1 pallas ``fused_linear`` kernel; the classifier head is
+the L1 fused row-softmax. Python runs at build time only — `aot.py` lowers
+``forward`` per (model, batch) to HLO text that the rust coordinator loads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, softmax_rows
+from .kernels.ref import linear_ref, softmax_rows_ref
+
+INPUT_DIM = 3072  # flattened 32x32x3
+NUM_CLASSES = 10
+
+# The serving pool. Anchors (`acc_paper` %, `lat_paper_ms` on the paper's
+# c4.large-class VM, `mem_mb` minimum lambda footprint) reproduce the Fig 2
+# envelope: exactly four models satisfy ISO-latency (<=500 ms) and exactly
+# four satisfy ISO-accuracy (>=80%), as in Fig 3a/3b.  `hidden` gives this
+# repo's actual architecture (strictly increasing compute).
+POOL: List[Dict] = [
+    dict(name="mobilenet_025", hidden=[128],                acc_paper=52.0, lat_paper_ms=45.0,   mem_mb=512),
+    dict(name="squeezenet",    hidden=[256],                acc_paper=65.0, lat_paper_ms=90.0,   mem_mb=640),
+    dict(name="mobilenet_10",  hidden=[256, 256],           acc_paper=72.0, lat_paper_ms=150.0,  mem_mb=896),
+    dict(name="resnet18",      hidden=[512, 512],           acc_paper=79.5, lat_paper_ms=480.0,  mem_mb=1152),
+    dict(name="resnet50",      hidden=[768, 768, 768],      acc_paper=82.0, lat_paper_ms=620.0,  mem_mb=1536),
+    dict(name="densenet121",   hidden=[1024, 1024, 1024],   acc_paper=85.0, lat_paper_ms=900.0,  mem_mb=1792),
+    dict(name="inception_v3",  hidden=[1280, 1280, 1280, 1280], acc_paper=87.0, lat_paper_ms=1400.0, mem_mb=2048),
+    dict(name="resnet152",     hidden=[1536, 1536, 1536, 1536, 1536], acc_paper=89.0, lat_paper_ms=2200.0, mem_mb=2560),
+]
+
+BATCH_SIZES = [1, 4, 8, 16]  # one AOT executable per (model, batch)
+
+
+def layer_dims(hidden: Sequence[int]) -> List[Tuple[int, int]]:
+    dims = [INPUT_DIM, *hidden, NUM_CLASSES]
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(key, hidden: Sequence[int]) -> List[jnp.ndarray]:
+    """He-initialised [w0, b0, w1, b1, ...] parameter list."""
+    params = []
+    for (fan_in, fan_out) in layer_dims(hidden):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / fan_in)
+        params.append(jax.random.normal(sub, (fan_in, fan_out), jnp.float32) * scale)
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+    return params
+
+
+def param_count(hidden: Sequence[int]) -> int:
+    return sum(i * o + o for (i, o) in layer_dims(hidden))
+
+
+def forward(params: Sequence[jnp.ndarray], x, *, use_pallas: bool = True,
+            residual: bool = True):
+    """Pool-model forward: residual-MLP trunk + softmax head -> class probs.
+
+    ``use_pallas=False`` routes through the pure-jnp oracle (used by the
+    kernel-equivalence tests and the fast build-time training loop).
+    """
+    lin = fused_linear if use_pallas else linear_ref
+    soft = softmax_rows if use_pallas else softmax_rows_ref
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers - 1):
+        w, b = params[2 * i], params[2 * i + 1]
+        out = lin(h, w, b, "relu")
+        # Residual connection when shapes allow (the "resnet" in resnet18+).
+        if residual and h.shape == out.shape:
+            out = out + h
+        h = out
+    logits = lin(h, params[-2], params[-1], "none")
+    return soft(logits)
+
+
+def make_teacher_dataset(key, n_train: int = 4096, n_test: int = 1024):
+    """Synthetic classification task: labels from a fixed random teacher.
+
+    Bigger students approximate the teacher better, giving the pool a
+    genuine capacity->accuracy ordering without needing ImageNet.
+    """
+    kx, kt, kx2 = jax.random.split(key, 3)
+    teacher = init_params(kt, [512, 512])
+    x_train = jax.random.normal(kx, (n_train, INPUT_DIM), jnp.float32)
+    x_test = jax.random.normal(kx2, (n_test, INPUT_DIM), jnp.float32)
+
+    def label(x):
+        p = forward(teacher, x, use_pallas=False, residual=False)
+        return jnp.argmax(p, axis=-1)
+
+    return (x_train, label(x_train)), (x_test, label(x_test))
+
+
+def _ce_loss(params, x, y):
+    probs = forward(params, x, use_pallas=False)
+    logp = jnp.log(jnp.clip(probs, 1e-9, 1.0))
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _sgd_step(params, x, y, lr: float = 0.05):
+    loss, grads = jax.value_and_grad(_ce_loss)(list(params), x, y)
+    return [p - lr * g for p, g in zip(params, grads)], loss
+
+
+def train_pool_model(key, hidden: Sequence[int], data, *, steps: int = 150,
+                     batch: int = 256) -> Tuple[List[jnp.ndarray], float]:
+    """Quick build-time training; returns (params, test accuracy in %).
+
+    Learning rate shrinks with depth x width (deep residual stacks at
+    lr 0.05 diverge); combined with the capacity gap vs the fixed teacher
+    this keeps accuracy roughly monotone in model size.
+    """
+    (x_train, y_train), (x_test, y_test) = data
+    params = init_params(key, hidden)
+    lr = 0.05 / (1.0 + 0.04 * len(hidden) * (max(hidden) / 256.0))
+    n = x_train.shape[0]
+    for step in range(steps):
+        lo = (step * batch) % n
+        xb = jax.lax.dynamic_slice_in_dim(x_train, lo, batch)
+        yb = jax.lax.dynamic_slice_in_dim(y_train, lo, batch)
+        params, _ = _sgd_step(params, xb, yb, lr=lr)
+    preds = jnp.argmax(forward(params, x_test, use_pallas=False), axis=-1)
+    acc = float(jnp.mean((preds == y_test).astype(jnp.float32)) * 100.0)
+    return params, acc

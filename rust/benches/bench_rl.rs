@@ -1,0 +1,58 @@
+//! RL-path benchmarks: env step rate, GAE, and (with artifacts) PPO
+//! acting/training through PJRT — the §V loop's cost profile.
+
+use paragon::models::Registry;
+use paragon::rl::buffer::Rollout;
+use paragon::rl::env::ServeEnv;
+use paragon::trace::generators;
+use paragon::util::bench::{bench, bench_throughput};
+use std::path::Path;
+
+fn main() {
+    let reg = Registry::builtin();
+    println!("== env ==");
+    let trace = generators::constant(80.0, 4096);
+    let mut env = ServeEnv::new(&reg, trace, 3, 7);
+    env.reset();
+    bench_throughput("serve_env::step x1024", 1, 20, 1024.0, || {
+        let mut acc = 0.0;
+        for i in 0..1024 {
+            let (_, r) = env.step(i % 9);
+            acc += r.reward;
+            if r.done {
+                env.reset();
+            }
+        }
+        acc
+    });
+
+    println!("\n== GAE ==");
+    let mut roll = Rollout::new(16);
+    let obs = [0.1f32; 16];
+    for i in 0..4096 {
+        roll.push(&obs, (i % 9) as i32, -2.2, -0.01, 0.0, i % 1024 == 1023);
+    }
+    bench("rollout::finish (4096 steps)", 5, 50, || {
+        let mut r = roll.clone();
+        r.finish(0.0, 0.99, 0.95);
+        r.advantages.len()
+    });
+
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\n(artifacts/ not built — skipping PPO PJRT benches)");
+        return;
+    }
+    println!("\n== PPO through PJRT ==");
+    let mut agent = paragon::rl::PpoAgent::load(artifacts, 7).unwrap();
+    let obs_v = vec![0.1f32; 16];
+    bench("agent::act (policy_fwd b1)", 5, 100, || agent.act(&obs_v).unwrap());
+    let mut roll = Rollout::new(16);
+    for i in 0..256 {
+        roll.push(&[0.05f32; 16], (i % 9) as i32, -2.2, -0.01, 0.0, i == 255);
+    }
+    roll.finish(0.0, 0.99, 0.95);
+    bench("agent::update (1 epoch, 1 minibatch of 256)", 1, 10, || {
+        agent.update(&roll, 1).unwrap()
+    });
+}

@@ -1,0 +1,67 @@
+//! Serving-path benchmarks: router decisions, batcher polls, and (when
+//! artifacts are built) real PJRT inference latency/throughput per model
+//! and batch size — the L3 overhead vs L1/L2 compute breakdown that the
+//! §Perf pass optimizes.
+
+use paragon::models::{Registry, SelectionPolicy};
+use paragon::serving::batcher::Batcher;
+use paragon::serving::router::Router;
+use paragon::serving::LiveRequest;
+use paragon::util::bench::{bench, bench_throughput};
+use paragon::util::rng::Pcg;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let reg = Registry::builtin();
+
+    println!("== router ==");
+    let router = Router::new(&reg, &[0, 1, 2, 3, 4, 5, 6, 7], SelectionPolicy::Paragon);
+    let mut rng = Pcg::seeded(3);
+    bench_throughput("router::route x1000", 10, 200, 1000.0, || {
+        let mut acc = 0usize;
+        for _ in 0..1000 {
+            acc += router.route(rng.uniform(300.0, 6000.0), rng.uniform(50.0, 88.0));
+        }
+        acc
+    });
+
+    println!("\n== batcher ==");
+    let now = Instant::now();
+    bench("batcher push+poll batch of 16", 10, 200, || {
+        let mut b = Batcher::new(8, 16, 5.0);
+        for i in 0..16u64 {
+            let (tx, _rx) = std::sync::mpsc::channel();
+            b.push(3, LiveRequest {
+                id: i,
+                input: Vec::new(),
+                slo_ms: 1000.0,
+                min_accuracy: 0.0,
+                submitted: now,
+                resp: tx,
+            });
+        }
+        b.poll(now, true)
+    });
+
+    // --- real PJRT inference (needs artifacts) -----------------------------
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\n(artifacts/ not built — skipping PJRT inference benches)");
+        return;
+    }
+    println!("\n== PJRT inference (real AOT pallas/JAX artifacts) ==");
+    let reg = Registry::from_manifest(artifacts).unwrap();
+    let rt = paragon::runtime::Runtime::new(artifacts).unwrap();
+    let mut rng = Pcg::seeded(4);
+    for name in ["mobilenet_025", "squeezenet", "resnet18", "resnet50"] {
+        let idx = reg.by_name(name).unwrap().idx;
+        let model = rt.load_model(&reg, idx).unwrap();
+        for &b in &[1usize, 8, 16] {
+            let input: Vec<f32> = (0..b * reg.input_dim).map(|_| rng.normal() as f32).collect();
+            bench_throughput(&format!("infer[{name} b{b}]"), 3, 20, b as f64, || {
+                rt.infer(&model, &input, b).unwrap()
+            });
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Simulator hot-path benchmarks: events/second per scheme, plus the
+//! substrate microbenches the sim leans on (RNG, histogram, monitor).
+//! The DESIGN.md §Perf target: >= 1M sim-events/s end-to-end.
+
+use paragon::models::Registry;
+use paragon::scheduler;
+use paragon::sim::{simulate, SimConfig};
+use paragon::trace::{generators, synthesize_requests, TraceKind, WorkloadKind};
+use paragon::util::bench::{bench, bench_throughput};
+use paragon::util::rng::Pcg;
+use paragon::util::stats::LogHistogram;
+
+fn main() {
+    println!("== substrate microbenches ==");
+    let mut rng = Pcg::seeded(1);
+    bench("pcg::poisson(mean=80)", 100, 200, || {
+        let mut s = 0u64;
+        for _ in 0..1000 {
+            s += rng.poisson(80.0);
+        }
+        s
+    });
+    let mut h = LogHistogram::latency_ms();
+    bench("loghistogram::record x1000", 100, 200, || {
+        for i in 0..1000 {
+            h.record(0.5 + i as f64);
+        }
+        h.count()
+    });
+    let mut mon = paragon::scheduler::LoadMonitor::new();
+    for _ in 0..200 {
+        mon.on_arrival();
+        mon.tick();
+    }
+    bench("load_monitor::rate_pred", 100, 500, || mon.rate_pred(50.0));
+    bench("load_monitor::peak_to_median", 100, 500, || mon.peak_to_median());
+
+    println!("\n== trace synthesis ==");
+    bench("generate berkeley 3600s", 2, 10, || {
+        generators::generate_with(TraceKind::Berkeley, 42, 3600, 100.0)
+    });
+    let trace = generators::generate_with(TraceKind::Berkeley, 42, 600, 100.0);
+    bench_throughput("synthesize_requests (600s @ 100/s)", 2, 10, 60_000.0, || {
+        synthesize_requests(&trace, WorkloadKind::MixedSlo, 7)
+    });
+
+    println!("\n== end-to-end simulation (600s berkeley @ 100 q/s) ==");
+    let reg = Registry::builtin();
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+    let n_events = reqs.len() as f64 * 2.0 + 600.0; // arrivals + completions + ticks
+    for name in scheduler::ALL_SCHEMES {
+        bench_throughput(&format!("simulate[{name}]"), 1, 5, n_events, || {
+            let mut scheme = scheduler::by_name(name).unwrap();
+            simulate(scheme.as_mut(), &reg, &reqs, "bench", &SimConfig::default())
+        });
+    }
+}

@@ -1,0 +1,269 @@
+//! Fleet state: every VM procured during a run, with aggregate queries the
+//! schedulers consume (utilization, free slots, boot inventory) and the cost
+//! accounting the figures consume.
+
+use super::pricing::VmType;
+use super::vm::{Vm, VmState, PROVISION_JITTER_S, PROVISION_MEAN_S};
+use crate::util::rng::Pcg;
+
+#[derive(Debug)]
+pub struct Cluster {
+    pub vms: Vec<Vm>,
+    next_id: u64,
+    rng: Pcg,
+    /// Realized cost of already-terminated VMs (so `vms` can be compacted).
+    retired_cost: f64,
+    /// Cumulative VM-seconds spent in Booting state (over-provision metric).
+    pub boot_seconds: f64,
+    /// Integral of (provisioned - needed) slots over time, for Fig 5.
+    pub excess_slot_seconds: f64,
+    pub provisioned_slot_seconds: f64,
+    /// Integral of alive (Running + Booting) VM count over time.
+    pub alive_vm_seconds: f64,
+}
+
+impl Cluster {
+    pub fn new(seed: u64) -> Self {
+        Cluster {
+            vms: Vec::new(),
+            next_id: 0,
+            rng: Pcg::new(seed, 0xc1a57e7),
+            retired_cost: 0.0,
+            boot_seconds: 0.0,
+            excess_slot_seconds: 0.0,
+            provisioned_slot_seconds: 0.0,
+            alive_vm_seconds: 0.0,
+        }
+    }
+
+    /// Launch a VM for `model` with `slots` concurrency; returns its id.
+    /// Boot latency is sampled around the published EC2 mean.
+    pub fn spawn(&mut self, vm_type: &'static VmType, model: usize, slots: u32,
+                 now: f64) -> u64 {
+        let jitter = self.rng.uniform(-PROVISION_JITTER_S, PROVISION_JITTER_S);
+        let boot = (PROVISION_MEAN_S + jitter).max(1.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.vms.push(Vm::new(id, vm_type, model, slots, now, boot));
+        id
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Vm> {
+        self.vms.iter_mut().find(|v| v.id == id)
+    }
+
+    /// Advance every VM's lifecycle to `now` and integrate the Booting /
+    /// slot-occupancy metrics over the elapsed `dt`.
+    pub fn tick(&mut self, now: f64, dt: f64, needed_slots: f64) {
+        let mut provisioned = 0.0;
+        let mut alive = 0.0;
+        for vm in &mut self.vms {
+            if vm.state == VmState::Booting {
+                self.boot_seconds += dt;
+            }
+            vm.tick(now);
+            if matches!(vm.state, VmState::Running | VmState::Booting) {
+                provisioned += vm.slots as f64;
+                alive += 1.0;
+            }
+        }
+        self.provisioned_slot_seconds += provisioned * dt;
+        self.alive_vm_seconds += alive * dt;
+        self.excess_slot_seconds += (provisioned - needed_slots).max(0.0) * dt;
+    }
+
+    /// Route one request for `model` to a running VM with a free slot
+    /// (most-loaded first, to keep the fleet drainable). Returns the VM id.
+    pub fn route(&mut self, model: usize) -> Option<u64> {
+        let cand = self
+            .vms
+            .iter_mut()
+            .filter(|v| v.model == model && v.can_accept())
+            .max_by_key(|v| v.busy)?;
+        cand.busy += 1;
+        Some(cand.id)
+    }
+
+    pub fn release(&mut self, id: u64, now: f64) {
+        if let Some(vm) = self.get_mut(id) {
+            vm.release(now);
+        }
+    }
+
+    /// Drain the `n` emptiest running VMs serving `model`.
+    pub fn scale_down(&mut self, model: usize, n: usize, now: f64) {
+        let mut idx: Vec<usize> = (0..self.vms.len())
+            .filter(|&i| {
+                self.vms[i].model == model
+                    && matches!(self.vms[i].state, VmState::Running | VmState::Booting)
+            })
+            .collect();
+        // Prefer cancelling Booting VMs, then the emptiest Running ones.
+        idx.sort_by_key(|&i| {
+            let v = &self.vms[i];
+            (v.state == VmState::Running, v.busy)
+        });
+        for &i in idx.iter().take(n) {
+            self.vms[i].drain(now);
+        }
+    }
+
+    // ---- aggregates -------------------------------------------------------
+
+    pub fn count(&self, model: usize, state: VmState) -> usize {
+        self.vms
+            .iter()
+            .filter(|v| v.model == model && v.state == state)
+            .count()
+    }
+
+    pub fn alive(&self, model: usize) -> usize {
+        self.count(model, VmState::Running) + self.count(model, VmState::Booting)
+    }
+
+    pub fn free_slots(&self, model: usize) -> u32 {
+        self.vms
+            .iter()
+            .filter(|v| v.model == model)
+            .map(|v| v.free_slots())
+            .sum()
+    }
+
+    pub fn total_alive(&self) -> usize {
+        self.vms
+            .iter()
+            .filter(|v| matches!(v.state, VmState::Running | VmState::Booting))
+            .count()
+    }
+
+    /// Mean utilization over Running VMs of `model` (1.0 if none — a fully
+    /// missing fleet reads as saturated, prompting scale-up).
+    pub fn utilization(&self, model: usize) -> f64 {
+        let running: Vec<&Vm> = self
+            .vms
+            .iter()
+            .filter(|v| v.model == model && v.state == VmState::Running)
+            .collect();
+        if running.is_empty() {
+            return 1.0;
+        }
+        running.iter().map(|v| v.utilization()).sum::<f64>() / running.len() as f64
+    }
+
+    /// Total billed cost of the fleet as of `now` (terminated VMs at their
+    /// final bills, live VMs pro-rated).
+    pub fn total_cost(&self, now: f64) -> f64 {
+        self.retired_cost + self.vms.iter().map(|v| v.cost_until(now)).sum::<f64>()
+    }
+
+    /// Drop terminated VMs from the working set, folding their bills into
+    /// `retired_cost` (keeps long sims O(live fleet), not O(history)).
+    pub fn compact(&mut self, now: f64) {
+        let mut retired = 0.0;
+        self.vms.retain(|v| {
+            if v.state == VmState::Terminated {
+                retired += v.cost_until(now);
+                false
+            } else {
+                true
+            }
+        });
+        self.retired_cost += retired;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::default_vm_type;
+
+    fn cluster_with_running(n: usize, slots: u32) -> Cluster {
+        let mut c = Cluster::new(1);
+        for _ in 0..n {
+            c.spawn(default_vm_type(), 0, slots, 0.0);
+        }
+        c.tick(500.0, 0.0, 0.0); // everything boots by t=500
+        c
+    }
+
+    #[test]
+    fn spawn_boot_route_release() {
+        let mut c = Cluster::new(2);
+        c.spawn(default_vm_type(), 0, 2, 0.0);
+        assert_eq!(c.alive(0), 1);
+        assert!(c.route(0).is_none(), "booting VM must not serve");
+        c.tick(300.0, 1.0, 0.0);
+        let id = c.route(0).expect("running VM serves");
+        assert_eq!(c.free_slots(0), 1);
+        c.release(id, 301.0);
+        assert_eq!(c.free_slots(0), 2);
+    }
+
+    #[test]
+    fn route_prefers_most_loaded() {
+        let mut c = cluster_with_running(2, 2);
+        let a = c.route(0).unwrap();
+        // Next request should stack on the same VM (bin-packing).
+        let b = c.route(0).unwrap();
+        assert_eq!(a, b);
+        // Third spills to the other VM.
+        let d = c.route(0).unwrap();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn route_respects_model_affinity() {
+        let mut c = Cluster::new(3);
+        c.spawn(default_vm_type(), 7, 2, 0.0);
+        c.tick(500.0, 0.0, 0.0);
+        assert!(c.route(0).is_none());
+        assert!(c.route(7).is_some());
+    }
+
+    #[test]
+    fn scale_down_prefers_booting_then_empty() {
+        let mut c = Cluster::new(4);
+        c.spawn(default_vm_type(), 0, 2, 0.0); // id 0
+        c.spawn(default_vm_type(), 0, 2, 0.0); // id 1
+        c.tick(500.0, 0.0, 0.0);
+        let busy_id = c.route(0).unwrap();
+        c.spawn(default_vm_type(), 0, 2, 500.0); // id 2, booting
+        c.scale_down(0, 2, 501.0);
+        // The booting VM and the idle VM die; the busy one survives.
+        let survivor: Vec<u64> = c
+            .vms
+            .iter()
+            .filter(|v| matches!(v.state, VmState::Running | VmState::Draining))
+            .map(|v| v.id)
+            .collect();
+        assert_eq!(survivor, vec![busy_id]);
+    }
+
+    #[test]
+    fn cost_accumulates_and_compacts() {
+        let mut c = cluster_with_running(3, 2);
+        let pre = c.total_cost(3600.0);
+        assert!((pre - 3.0 * 0.10).abs() < 1e-6, "3 m4.large-hours: {pre}");
+        c.scale_down(0, 3, 3600.0);
+        c.compact(3600.0);
+        assert!(c.vms.is_empty());
+        let post = c.total_cost(7200.0);
+        assert!((post - pre).abs() < 1e-9, "terminated VMs stop billing");
+    }
+
+    #[test]
+    fn boot_seconds_integrated() {
+        let mut c = Cluster::new(5);
+        c.spawn(default_vm_type(), 0, 2, 0.0);
+        for t in 1..=50 {
+            c.tick(t as f64, 1.0, 0.0);
+        }
+        assert!(c.boot_seconds >= 49.0, "boot_seconds={}", c.boot_seconds);
+    }
+
+    #[test]
+    fn empty_fleet_reads_saturated() {
+        let c = Cluster::new(6);
+        assert_eq!(c.utilization(0), 1.0);
+    }
+}

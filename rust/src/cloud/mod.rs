@@ -1,0 +1,16 @@
+//! Public-cloud substrate: the paper's AWS testbed rebuilt as a faithful
+//! cost/latency model — EC2 VM lifecycle with real provisioning latencies
+//! and per-second billing, Lambda-like serverless functions with
+//! memory-proportional compute and GB-second billing, and fleet accounting.
+//!
+//! See DESIGN.md §Substitutions for the paper→simulator mapping.
+
+pub mod cluster;
+pub mod pricing;
+pub mod serverless;
+pub mod vm;
+
+pub use cluster::Cluster;
+pub use pricing::{default_vm_type, vm_type, LambdaPricing, VmPrice, VmType, VM_TYPES};
+pub use serverless::{LambdaFn, WarmPool};
+pub use vm::{Vm, VmState};

@@ -1,0 +1,141 @@
+//! Public-cloud price book (AWS us-east-1, 2020 — the paper's testbed era).
+//!
+//! The characterization figures hinge on two published price structures:
+//! EC2 on-demand VMs billed per-second (60 s minimum) at an hourly rate that
+//! is *linear in instance size* (paper Observation 2), and Lambda billed per
+//! invocation plus GB-seconds with duration rounded up to 100 ms.
+
+/// EC2 on-demand hourly price, USD.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VmPrice {
+    pub hourly_usd: f64,
+}
+
+impl VmPrice {
+    pub fn per_second(&self) -> f64 {
+        self.hourly_usd / 3600.0
+    }
+
+    /// Billed cost for a VM alive `secs` seconds (per-second billing with
+    /// AWS's 60-second minimum charge).
+    pub fn cost_for(&self, secs: f64) -> f64 {
+        self.per_second() * secs.max(60.0)
+    }
+}
+
+/// AWS Lambda price constants (2020).
+#[derive(Debug, Clone, Copy)]
+pub struct LambdaPricing {
+    /// USD per single invocation ($0.20 per 1M).
+    pub per_invocation_usd: f64,
+    /// USD per GB-second of billed duration.
+    pub per_gb_second_usd: f64,
+    /// Billing granularity in seconds (duration rounds up to this).
+    pub billing_quantum_s: f64,
+    /// Maximum configurable function memory, GB (2020 limit).
+    pub max_memory_gb: f64,
+}
+
+impl Default for LambdaPricing {
+    fn default() -> Self {
+        LambdaPricing {
+            per_invocation_usd: 0.20 / 1e6,
+            per_gb_second_usd: 0.000_016_666_7,
+            billing_quantum_s: 0.1,
+            max_memory_gb: 3.0,
+        }
+    }
+}
+
+impl LambdaPricing {
+    /// Cost of one invocation running `duration_s` at `mem_gb`.
+    pub fn invocation_cost(&self, duration_s: f64, mem_gb: f64) -> f64 {
+        let billed = (duration_s / self.billing_quantum_s).ceil() * self.billing_quantum_s;
+        self.per_invocation_usd + billed * mem_gb * self.per_gb_second_usd
+    }
+}
+
+/// An EC2 instance type. `capacity_factor` scales how many concurrent
+/// inference slots the box offers relative to vCPU count (profiled offline,
+/// §IV-A: "by offline profiling, we estimate the number of model instances
+/// each VM can execute in parallel").
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmType {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub mem_gb: f64,
+    pub price: VmPrice,
+    /// Single-thread speed relative to the paper's c4.large profiling box.
+    pub speed: f64,
+}
+
+/// The instance types used in the paper's evaluation (§IV-A: "all the c5
+/// and m5 instances", §II-B: m4.large). Prices: AWS on-demand us-east-1,
+/// 2020. Linearity in size is visible within each family.
+pub const VM_TYPES: &[VmType] = &[
+    VmType { name: "m4.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.10 },  speed: 1.0 },
+    VmType { name: "m5.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.096 }, speed: 1.1 },
+    VmType { name: "m5.xlarge",  vcpus: 4, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.192 }, speed: 1.1 },
+    VmType { name: "m5.2xlarge", vcpus: 8, mem_gb: 32.0, price: VmPrice { hourly_usd: 0.384 }, speed: 1.1 },
+    VmType { name: "c5.large",   vcpus: 2, mem_gb: 4.0,  price: VmPrice { hourly_usd: 0.085 }, speed: 1.25 },
+    VmType { name: "c5.xlarge",  vcpus: 4, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.17 },  speed: 1.25 },
+    VmType { name: "c5.2xlarge", vcpus: 8, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.34 },  speed: 1.25 },
+];
+
+pub fn vm_type(name: &str) -> Option<&'static VmType> {
+    VM_TYPES.iter().find(|t| t.name == name)
+}
+
+/// Default worker type for the schemes (paper §II-B uses m4.large).
+pub fn default_vm_type() -> &'static VmType {
+    vm_type("m4.large").unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_second_billing_with_minimum() {
+        let p = VmPrice { hourly_usd: 0.36 }; // 0.0001/s
+        assert!((p.cost_for(3600.0) - 0.36).abs() < 1e-12);
+        // 10s alive still bills 60s
+        assert!((p.cost_for(10.0) - 0.006).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lambda_rounds_up_to_quantum() {
+        let l = LambdaPricing::default();
+        let c1 = l.invocation_cost(0.101, 1.0);
+        let c2 = l.invocation_cost(0.200, 1.0);
+        assert!((c1 - c2).abs() < 1e-15, "0.101s and 0.200s both bill 200ms");
+        let c3 = l.invocation_cost(0.201, 1.0);
+        assert!(c3 > c2);
+    }
+
+    #[test]
+    fn lambda_cost_scales_with_memory() {
+        let l = LambdaPricing::default();
+        // Same duration, 3x memory => ~3x GB-s cost component.
+        let c1 = l.invocation_cost(1.0, 1.0) - l.per_invocation_usd;
+        let c3 = l.invocation_cost(1.0, 3.0) - l.per_invocation_usd;
+        assert!((c3 / c1 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn price_linear_in_size_within_family() {
+        // Paper Observation 2: bigger VMs cost linearly more.
+        let m5l = vm_type("m5.large").unwrap();
+        let m5x = vm_type("m5.xlarge").unwrap();
+        let m52x = vm_type("m5.2xlarge").unwrap();
+        assert!((m5x.price.hourly_usd / m5l.price.hourly_usd - 2.0).abs() < 1e-9);
+        assert!((m52x.price.hourly_usd / m5l.price.hourly_usd - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(vm_type("m4.large").is_some());
+        assert!(vm_type("t2.nano").is_none());
+        assert_eq!(default_vm_type().name, "m4.large");
+    }
+}

@@ -1,0 +1,210 @@
+//! VM lifecycle substrate: provisioning latency, concurrency slots, billing.
+//!
+//! The paper's central VM pain point (Observation 3) is the *provisioning
+//! latency*: ~100 s of boot during which the VM bills but serves nothing,
+//! which is what pushes predictive autoscalers into over-provisioning.
+
+use super::pricing::VmType;
+
+/// Mean VM provisioning (boot-to-serving) latency, seconds. Mao & Humphrey
+/// (CLOUD'12) measure 96.9 s for EC2 Linux on-demand; the paper says "a few
+/// hundred seconds" (§III-B3).
+pub const PROVISION_MEAN_S: f64 = 100.0;
+/// Uniform jitter half-width around the mean.
+pub const PROVISION_JITTER_S: f64 = 20.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmState {
+    /// Launched, billing, not serving yet.
+    Booting,
+    /// Serving requests.
+    Running,
+    /// No new requests; terminates when in-flight work drains.
+    Draining,
+    /// Gone; no billing.
+    Terminated,
+}
+
+/// One virtual machine hosting instances of a single model type
+/// (the paper pins model replicas to VMs sized by offline profiling).
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub id: u64,
+    pub vm_type: &'static VmType,
+    /// Index into the model registry of the model this VM hosts.
+    pub model: usize,
+    pub state: VmState,
+    /// Simulation time the VM was launched (billing starts here).
+    pub launched_at: f64,
+    /// Simulation time the VM becomes Running.
+    pub ready_at: f64,
+    /// Simulation time the VM terminated (billing stops here).
+    pub terminated_at: Option<f64>,
+    /// Concurrency slots (max in-flight inferences without SLO violation).
+    pub slots: u32,
+    /// Currently-occupied slots.
+    pub busy: u32,
+}
+
+impl Vm {
+    pub fn new(id: u64, vm_type: &'static VmType, model: usize, slots: u32,
+               launched_at: f64, provision_s: f64) -> Self {
+        Vm {
+            id,
+            vm_type,
+            model,
+            state: VmState::Booting,
+            launched_at,
+            ready_at: launched_at + provision_s,
+            terminated_at: None,
+            slots,
+            busy: 0,
+        }
+    }
+
+    /// Advance lifecycle to `now` (Booting -> Running when boot completes;
+    /// Draining -> Terminated when the last in-flight request leaves).
+    pub fn tick(&mut self, now: f64) {
+        if self.state == VmState::Booting && now >= self.ready_at {
+            self.state = VmState::Running;
+        }
+        if self.state == VmState::Draining && self.busy == 0 {
+            self.state = VmState::Terminated;
+            self.terminated_at = Some(now);
+        }
+    }
+
+    pub fn is_billing(&self) -> bool {
+        !matches!(self.state, VmState::Terminated)
+    }
+
+    pub fn can_accept(&self) -> bool {
+        self.state == VmState::Running && self.busy < self.slots
+    }
+
+    pub fn free_slots(&self) -> u32 {
+        if self.state == VmState::Running { self.slots - self.busy } else { 0 }
+    }
+
+    pub fn acquire(&mut self) -> bool {
+        if self.can_accept() {
+            self.busy += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn release(&mut self, now: f64) {
+        assert!(self.busy > 0, "release on idle VM {}", self.id);
+        self.busy -= 1;
+        self.tick(now); // may complete a drain
+    }
+
+    /// Begin graceful shutdown. Running VMs stop accepting work; an idle VM
+    /// terminates immediately, a Booting VM is cancelled (still billed for
+    /// its minimum).
+    pub fn drain(&mut self, now: f64) {
+        match self.state {
+            VmState::Terminated => {}
+            _ if self.busy == 0 => {
+                self.state = VmState::Terminated;
+                self.terminated_at = Some(now);
+            }
+            _ => self.state = VmState::Draining,
+        }
+    }
+
+    /// Utilization in [0,1]; Booting VMs count as 0 (they serve nothing —
+    /// exactly why util-threshold autoscalers mis-read load, Observation 3).
+    pub fn utilization(&self) -> f64 {
+        if self.state == VmState::Running && self.slots > 0 {
+            self.busy as f64 / self.slots as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Billed cost if the VM dies (or is observed) at `now`.
+    pub fn cost_until(&self, now: f64) -> f64 {
+        let end = self.terminated_at.unwrap_or(now);
+        self.vm_type.price.cost_for((end - self.launched_at).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::default_vm_type;
+
+    fn vm() -> Vm {
+        Vm::new(1, default_vm_type(), 0, 4, 100.0, 100.0)
+    }
+
+    #[test]
+    fn boot_then_run() {
+        let mut v = vm();
+        assert_eq!(v.state, VmState::Booting);
+        assert!(!v.can_accept());
+        v.tick(150.0);
+        assert_eq!(v.state, VmState::Booting);
+        v.tick(200.0);
+        assert_eq!(v.state, VmState::Running);
+        assert!(v.can_accept());
+    }
+
+    #[test]
+    fn slots_enforced() {
+        let mut v = vm();
+        v.tick(200.0);
+        for _ in 0..4 {
+            assert!(v.acquire());
+        }
+        assert!(!v.acquire());
+        assert_eq!(v.utilization(), 1.0);
+        v.release(201.0);
+        assert_eq!(v.free_slots(), 1);
+    }
+
+    #[test]
+    fn drain_waits_for_inflight() {
+        let mut v = vm();
+        v.tick(200.0);
+        assert!(v.acquire());
+        v.drain(201.0);
+        assert_eq!(v.state, VmState::Draining);
+        assert!(!v.can_accept());
+        v.release(202.0);
+        assert_eq!(v.state, VmState::Terminated);
+        assert_eq!(v.terminated_at, Some(202.0));
+    }
+
+    #[test]
+    fn idle_drain_is_immediate() {
+        let mut v = vm();
+        v.tick(200.0);
+        v.drain(201.0);
+        assert_eq!(v.state, VmState::Terminated);
+    }
+
+    #[test]
+    fn booting_vm_bills_and_reads_zero_util() {
+        let v = vm();
+        assert!(v.is_billing());
+        assert_eq!(v.utilization(), 0.0);
+        // 50s alive but 60s minimum: 60 * 0.10/3600
+        let c = v.cost_until(150.0);
+        assert!((c - 60.0 * 0.10 / 3600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_stops_at_termination() {
+        let mut v = vm();
+        v.tick(200.0);
+        v.drain(400.0);
+        let c1 = v.cost_until(400.0);
+        let c2 = v.cost_until(4000.0);
+        assert!((c1 - c2).abs() < 1e-12);
+        assert!((c1 - 300.0 * 0.10 / 3600.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! Typed experiment configuration, JSON-backed.
+//!
+//! Everything a deployment would want to override without recompiling:
+//! the workload (trace, rate, duration), the fleet (VM type, scheme and
+//! its knobs), selection policy, and seeds. `ExperimentConfig::from_file`
+//! loads a JSON document; every field is optional and defaults to the
+//! values used by the paper reproduction, so `{}` is a valid config.
+//!
+//! ```json
+//! {
+//!   "trace": "twitter",
+//!   "mean_rate": 150.0,
+//!   "duration_s": 1800,
+//!   "vm_type": "c5.large",
+//!   "scheme": "paragon",
+//!   "selection": "paragon",
+//!   "workload": "constraints",
+//!   "seed": 7,
+//!   "paragon": { "p2m_gate": 1.5 }
+//! }
+//! ```
+
+use crate::cloud::pricing::{vm_type, VmType};
+use crate::models::SelectionPolicy;
+use crate::sim::Assignment;
+use crate::trace::{TraceKind, WorkloadKind};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Scheme-specific tunables (subset that is worth exposing; defaults are
+/// the calibrated constants in scheduler/*.rs).
+#[derive(Debug, Clone)]
+pub struct ParagonKnobs {
+    /// Peak-to-median threshold opening the serverless valve.
+    pub p2m_gate: f64,
+}
+
+impl Default for ParagonKnobs {
+    fn default() -> Self {
+        ParagonKnobs { p2m_gate: crate::scheduler::paragon::P2M_GATE }
+    }
+}
+
+/// A full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub trace: TraceKind,
+    /// Optional CSV replacing the synthetic generator.
+    pub trace_file: Option<String>,
+    pub mean_rate: f64,
+    pub duration_s: usize,
+    pub vm_type: &'static VmType,
+    pub scheme: String,
+    pub workload: WorkloadKind,
+    pub assignment: Assignment,
+    pub seed: u64,
+    pub paragon: ParagonKnobs,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            trace: TraceKind::Berkeley,
+            trace_file: None,
+            mean_rate: 100.0,
+            duration_s: 3600,
+            vm_type: crate::cloud::default_vm_type(),
+            scheme: "paragon".to_string(),
+            workload: WorkloadKind::MixedSlo,
+            assignment: Assignment::RandomFeasible,
+            seed: 42,
+            paragon: ParagonKnobs::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if j.as_obj().is_none() {
+            bail!("config root must be a JSON object");
+        }
+        if let Some(s) = j.get("trace").as_str() {
+            cfg.trace = TraceKind::from_name(s)
+                .with_context(|| format!("unknown trace {s:?}"))?;
+        }
+        if let Some(s) = j.get("trace_file").as_str() {
+            cfg.trace_file = Some(s.to_string());
+        }
+        if let Some(x) = j.get("mean_rate").as_f64() {
+            if x <= 0.0 {
+                bail!("mean_rate must be positive");
+            }
+            cfg.mean_rate = x;
+        }
+        if let Some(x) = j.get("duration_s").as_usize() {
+            if x == 0 {
+                bail!("duration_s must be positive");
+            }
+            cfg.duration_s = x;
+        }
+        if let Some(s) = j.get("vm_type").as_str() {
+            cfg.vm_type = vm_type(s).with_context(|| format!("unknown vm_type {s:?}"))?;
+        }
+        if let Some(s) = j.get("scheme").as_str() {
+            if crate::scheduler::by_name(s).is_none() {
+                bail!("unknown scheme {s:?} (one of {:?})", crate::scheduler::ALL_SCHEMES);
+            }
+            cfg.scheme = s.to_string();
+        }
+        if let Some(s) = j.get("workload").as_str() {
+            cfg.workload = match s {
+                "mixed-slo" => WorkloadKind::MixedSlo,
+                "constraints" => WorkloadKind::VarConstraints,
+                other => bail!("unknown workload {other:?}"),
+            };
+        }
+        if let Some(s) = j.get("selection").as_str() {
+            cfg.assignment = match s {
+                "random" => Assignment::RandomFeasible,
+                "naive" => Assignment::Policy(SelectionPolicy::Naive),
+                "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
+                other => bail!("unknown selection {other:?}"),
+            };
+        }
+        if let Some(x) = j.get("seed").as_f64() {
+            cfg.seed = x as u64;
+        }
+        let p = j.get("paragon");
+        if p.as_obj().is_some() {
+            if let Some(x) = p.get("p2m_gate").as_f64() {
+                if x < 1.0 {
+                    bail!("paragon.p2m_gate must be >= 1.0");
+                }
+                cfg.paragon.p2m_gate = x;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_str_json(text: &str) -> Result<ExperimentConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config parse: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Self::from_str_json(&text)
+    }
+
+    /// Serialize back to JSON (round-trippable; used by results metadata
+    /// so every results file records the exact experiment that made it).
+    pub fn to_json(&self) -> Json {
+        let sel = match self.assignment {
+            Assignment::RandomFeasible => "random",
+            Assignment::Policy(SelectionPolicy::Naive) => "naive",
+            Assignment::Policy(SelectionPolicy::Paragon) => "paragon",
+        };
+        let wl = match self.workload {
+            WorkloadKind::MixedSlo => "mixed-slo",
+            WorkloadKind::VarConstraints => "constraints",
+        };
+        let mut fields = vec![
+            ("trace", Json::from(self.trace.name())),
+            ("mean_rate", self.mean_rate.into()),
+            ("duration_s", self.duration_s.into()),
+            ("vm_type", self.vm_type.name.into()),
+            ("scheme", self.scheme.as_str().into()),
+            ("workload", wl.into()),
+            ("selection", sel.into()),
+            ("seed", (self.seed as usize).into()),
+            ("paragon", Json::obj(vec![("p2m_gate", self.paragon.p2m_gate.into())])),
+        ];
+        if let Some(f) = &self.trace_file {
+            fields.push(("trace_file", f.as_str().into()));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_gives_defaults() {
+        let c = ExperimentConfig::from_str_json("{}").unwrap();
+        assert_eq!(c.trace, TraceKind::Berkeley);
+        assert_eq!(c.scheme, "paragon");
+        assert_eq!(c.mean_rate, 100.0);
+        assert_eq!(c.vm_type.name, "m4.large");
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"trace":"twitter","mean_rate":150.5,"duration_s":1800,
+                "vm_type":"c5.large","scheme":"mixed","workload":"constraints",
+                "selection":"naive","seed":7,"paragon":{"p2m_gate":1.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.trace, TraceKind::Twitter);
+        assert_eq!(c.mean_rate, 150.5);
+        assert_eq!(c.duration_s, 1800);
+        assert_eq!(c.vm_type.name, "c5.large");
+        assert_eq!(c.scheme, "mixed");
+        assert_eq!(c.workload, WorkloadKind::VarConstraints);
+        assert!(matches!(c.assignment, Assignment::Policy(SelectionPolicy::Naive)));
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.paragon.p2m_gate, 1.5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            r#"{"trace":"nope"}"#,
+            r#"{"mean_rate":-3}"#,
+            r#"{"duration_s":0}"#,
+            r#"{"vm_type":"t2.nano"}"#,
+            r#"{"scheme":"bogus"}"#,
+            r#"{"workload":"wat"}"#,
+            r#"{"selection":"wat"}"#,
+            r#"{"paragon":{"p2m_gate":0.5}}"#,
+            r#"[1,2,3]"#,
+            r#"not json"#,
+        ] {
+            assert!(ExperimentConfig::from_str_json(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"trace":"wits","scheme":"exascale","seed":9,"selection":"paragon"}"#,
+        )
+        .unwrap();
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.trace, TraceKind::Wits);
+        assert_eq!(c2.scheme, "exascale");
+        assert_eq!(c2.seed, 9);
+        assert!(matches!(c2.assignment, Assignment::Policy(SelectionPolicy::Paragon)));
+    }
+}

@@ -1,0 +1,509 @@
+//! Figure-regeneration harness: one function per figure/table in the
+//! paper's evaluation, printing the same rows/series the paper reports and
+//! returning machine-readable JSON (written to `results/` by the CLI).
+//!
+//! Expected *shapes* (DESIGN.md per-experiment index):
+//!   fig2  model pool accuracy/latency envelope
+//!   fig3  ISO-latency (≤500 ms) and ISO-accuracy (≥80%) candidate sets
+//!   fig4  VMs always cheaper than lambdas at constant rates
+//!   fig5  util_aware/exascale 20-30% more VMs than reactive
+//!   fig6  mixed ≈ reactive cost with far fewer violations — except wiki
+//!   fig7  peak-to-median: wiki small, others > 1.5
+//!   fig8  lambda memory ↑ ⇒ time ↓ cost ↑, squeezenet flat past 2 GB
+//!   fig9  paragon ≈10% cheaper than mixed at similar SLO; selection -20%
+//!   fig10 PPO controller approaches the paragon heuristic's reward
+
+use crate::cloud::pricing::default_vm_type;
+use crate::models::{Registry, SelectionPolicy};
+use crate::scheduler;
+use crate::sim::{simulate, Assignment, SimConfig, SimReport};
+use crate::trace::{generators, synthesize_requests, TraceKind, WorkloadKind, ALL_TRACES};
+use crate::util::json::Json;
+
+/// Shared experiment knobs (figures sweep within these).
+#[derive(Debug, Clone)]
+pub struct FigConfig {
+    /// Trace duration, seconds (paper: 1-hour samples).
+    pub duration_s: usize,
+    /// Mean request rate, req/s.
+    pub mean_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for FigConfig {
+    fn default() -> Self {
+        FigConfig { duration_s: 3600, mean_rate: 100.0, seed: 42 }
+    }
+}
+
+impl FigConfig {
+    /// Smaller instance for tests / quick runs.
+    pub fn quick() -> Self {
+        FigConfig { duration_s: 900, mean_rate: 50.0, seed: 42 }
+    }
+}
+
+fn hline(w: usize) {
+    println!("{}", "-".repeat(w));
+}
+
+// ---------------------------------------------------------------- fig 2/3
+
+/// Fig 2: accuracy and latency of the model pool.
+pub fn fig2(reg: &Registry) -> Json {
+    println!("\nFigure 2: accuracy & latency of ML inference models");
+    hline(64);
+    println!("{:<16} {:>10} {:>14} {:>10}", "model", "acc (%)", "latency (ms)", "mem (MB)");
+    hline(64);
+    let mut rows = Vec::new();
+    for m in &reg.models {
+        println!("{:<16} {:>10.1} {:>14.1} {:>10.0}", m.name, m.accuracy, m.latency_ms, m.mem_mb);
+        rows.push(Json::obj(vec![
+            ("model", m.name.as_str().into()),
+            ("accuracy_pct", m.accuracy.into()),
+            ("latency_ms", m.latency_ms.into()),
+            ("mem_mb", m.mem_mb.into()),
+            ("acc_synth", m.acc_synth.into()),
+        ]));
+    }
+    Json::obj(vec![("figure", "fig2".into()), ("rows", Json::Arr(rows))])
+}
+
+/// Fig 3: candidate sets under ISO-latency (≤500 ms) and ISO-accuracy (≥80%).
+pub fn fig3(reg: &Registry) -> Json {
+    let iso_lat = reg.iso_latency(500.0);
+    let iso_acc = reg.iso_accuracy(80.0);
+    println!("\nFigure 3a: ISO-latency candidates (SLO 500 ms)");
+    hline(46);
+    for m in &iso_lat {
+        println!("  {:<16} acc {:>5.1}%  lat {:>6.1} ms", m.name, m.accuracy, m.latency_ms);
+    }
+    println!("Figure 3b: ISO-accuracy candidates (>= 80%)");
+    hline(46);
+    for m in &iso_acc {
+        println!("  {:<16} acc {:>5.1}%  lat {:>6.1} ms", m.name, m.accuracy, m.latency_ms);
+    }
+    let names = |v: &[&crate::models::ModelProfile]| {
+        Json::Arr(v.iter().map(|m| Json::Str(m.name.clone())).collect())
+    };
+    Json::obj(vec![
+        ("figure", "fig3".into()),
+        ("iso_latency_500ms", names(&iso_lat)),
+        ("iso_accuracy_80pct", names(&iso_acc)),
+    ])
+}
+
+// ------------------------------------------------------------------ fig 4
+
+/// Fig 4: VM vs serverless cost at constant request rates (1 hour).
+/// Analytic steady-state (constant load; the sim agrees — see tests).
+pub fn fig4(reg: &Registry) -> Json {
+    let vm = default_vm_type();
+    let rates = [10.0, 50.0, 100.0, 200.0];
+    let mut sections = Vec::new();
+    for (title, set) in [
+        ("4a ISO-latency models", reg.iso_latency(500.0)),
+        ("4b ISO-accuracy models", reg.iso_accuracy(80.0)),
+    ] {
+        println!("\nFigure {title}: cost over 1 h at constant rate (USD)");
+        hline(78);
+        println!("{:<16} {:>6} {:>12} {:>12} {:>8}", "model", "req/s", "VM ($)", "lambda ($)", "VM wins");
+        hline(78);
+        let mut rows = Vec::new();
+        for m in &set {
+            for &r in &rates {
+                let vms = ((r * m.service_time_s(vm)) / m.slots_on(vm) as f64).ceil().max(1.0);
+                let vm_cost = vms * vm.price.hourly_usd;
+                // Lambda sized to match the model's VM-grade latency.
+                let f = m
+                    .lambda_for_slo(m.latency_ms * 1.1)
+                    .unwrap_or_else(|| m.lambda_at(3.0));
+                let lam_cost = f.cost_for_queries((r * 3600.0) as u64);
+                println!(
+                    "{:<16} {:>6.0} {:>12.3} {:>12.3} {:>8}",
+                    m.name, r, vm_cost, lam_cost,
+                    if vm_cost < lam_cost { "yes" } else { "NO" }
+                );
+                rows.push(Json::obj(vec![
+                    ("model", m.name.as_str().into()),
+                    ("rate", r.into()),
+                    ("vm_usd", vm_cost.into()),
+                    ("lambda_usd", lam_cost.into()),
+                ]));
+            }
+        }
+        sections.push(Json::obj(vec![("section", title.into()), ("rows", Json::Arr(rows))]));
+    }
+    Json::obj(vec![("figure", "fig4".into()), ("sections", Json::Arr(sections))])
+}
+
+// --------------------------------------------------------------- fig 5/6
+
+fn run_trace_scheme(reg: &Registry, kind: TraceKind, scheme_name: &str,
+                    cfg: &FigConfig) -> SimReport {
+    let trace = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, cfg.seed ^ 0x51);
+    let mut scheme = scheduler::by_name(scheme_name).expect("unknown scheme");
+    simulate(scheme.as_mut(), reg, &reqs, kind.name(), &SimConfig {
+        seed: cfg.seed,
+        ..SimConfig::default()
+    })
+}
+
+/// Fig 5: over-provisioned VMs (mean fleet), normalized to reactive.
+pub fn fig5(reg: &Registry, cfg: &FigConfig) -> Json {
+    println!("\nFigure 5: VM over-provisioning vs reactive (mean fleet ratio)");
+    hline(60);
+    println!("{:<10} {:>12} {:>12}", "trace", "util_aware", "exascale");
+    hline(60);
+    let mut rows = Vec::new();
+    for kind in ALL_TRACES {
+        let base = run_trace_scheme(reg, kind, "reactive", cfg).mean_vms();
+        let ua = run_trace_scheme(reg, kind, "util_aware", cfg).mean_vms();
+        let ex = run_trace_scheme(reg, kind, "exascale", cfg).mean_vms();
+        let (rua, rex) = (ua / base, ex / base);
+        println!("{:<10} {:>12.2} {:>12.2}", kind.name(), rua, rex);
+        rows.push(Json::obj(vec![
+            ("trace", kind.name().into()),
+            ("util_aware_ratio", rua.into()),
+            ("exascale_ratio", rex.into()),
+            ("reactive_mean_vms", base.into()),
+        ]));
+    }
+    Json::obj(vec![("figure", "fig5".into()), ("rows", Json::Arr(rows))])
+}
+
+/// Fig 6: cost (normalized to reactive) and SLA violations per scheme/trace.
+pub fn fig6(reg: &Registry, cfg: &FigConfig) -> Json {
+    let schemes = ["reactive", "util_aware", "exascale", "mixed"];
+    println!("\nFigure 6: cost vs reactive (x) and SLO violations (%)");
+    hline(76);
+    println!("{:<10} {:>16} {:>16} {:>16} {:>14}", "trace",
+             "util_aware", "exascale", "mixed", "reactive viol%");
+    hline(76);
+    let mut rows = Vec::new();
+    for kind in ALL_TRACES {
+        let reps: Vec<SimReport> = schemes
+            .iter()
+            .map(|s| run_trace_scheme(reg, kind, s, cfg))
+            .collect();
+        let base_cost = reps[0].total_cost();
+        let fmt = |r: &SimReport| {
+            format!("{:.2}x/{:.1}%", r.total_cost() / base_cost, r.violation_pct())
+        };
+        println!("{:<10} {:>16} {:>16} {:>16} {:>14.1}",
+                 kind.name(), fmt(&reps[1]), fmt(&reps[2]), fmt(&reps[3]),
+                 reps[0].violation_pct());
+        let mut obj = vec![("trace", Json::from(kind.name()))];
+        for (s, r) in schemes.iter().zip(&reps) {
+            obj.push((*s, Json::obj(vec![
+                ("cost_ratio", (r.total_cost() / base_cost).into()),
+                ("violation_pct", r.violation_pct().into()),
+                ("cost_usd", r.total_cost().into()),
+                ("lambda_share_pct", r.lambda_share_pct().into()),
+            ])));
+        }
+        rows.push(Json::obj(obj));
+    }
+    Json::obj(vec![("figure", "fig6".into()), ("rows", Json::Arr(rows))])
+}
+
+// ------------------------------------------------------------------ fig 7
+
+/// Fig 7: peak-to-median request rate per trace.
+pub fn fig7(cfg: &FigConfig) -> Json {
+    println!("\nFigure 7: peak-to-median of request rates");
+    hline(36);
+    let mut rows = Vec::new();
+    for kind in ALL_TRACES {
+        let t = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+        let p2m = crate::trace::analysis::peak_to_median(&t.rates);
+        let bf = crate::trace::analysis::burst_fraction(&t.rates, 1.5);
+        println!("{:<10} p2m {:>5.2}   time>1.5xMed {:>5.1}%", kind.name(), p2m, bf * 100.0);
+        rows.push(Json::obj(vec![
+            ("trace", kind.name().into()),
+            ("peak_to_median", p2m.into()),
+            ("burst_fraction_1_5x", bf.into()),
+        ]));
+    }
+    Json::obj(vec![("figure", "fig7".into()), ("rows", Json::Arr(rows))])
+}
+
+// ------------------------------------------------------------------ fig 8
+
+/// Fig 8: serverless memory allocation vs compute time and cost
+/// (1M queries, three model classes).
+pub fn fig8(reg: &Registry) -> Json {
+    let models = ["squeezenet", "resnet18", "resnet50"];
+    let mems = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0];
+    println!("\nFigure 8: lambda memory vs compute time (s) and cost ($/1M queries)");
+    hline(70);
+    println!("{:<12} {:>8} {:>12} {:>14}", "model", "mem GB", "time (s)", "$ / 1M");
+    hline(70);
+    let mut rows = Vec::new();
+    for name in models {
+        let m = reg.by_name(name).expect("model in pool");
+        for &mem in &mems {
+            if mem * 1024.0 < m.mem_mb {
+                continue; // below the model's memory floor
+            }
+            let f = m.lambda_at(mem);
+            let t = f.compute_time_s();
+            let c = f.cost_for_queries(1_000_000);
+            println!("{:<12} {:>8.1} {:>12.3} {:>14.2}", name, mem, t, c);
+            rows.push(Json::obj(vec![
+                ("model", name.into()),
+                ("mem_gb", mem.into()),
+                ("compute_s", t.into()),
+                ("usd_per_1m", c.into()),
+            ]));
+        }
+    }
+    Json::obj(vec![("figure", "fig8".into()), ("rows", Json::Arr(rows))])
+}
+
+// ------------------------------------------------------------------ fig 9
+
+/// Fig 9a/b: the five schemes on Berkeley and WITS (workload-1: mixed
+/// strict/relaxed SLOs). Cost normalized to reactive; violations absolute.
+pub fn fig9ab(reg: &Registry, cfg: &FigConfig) -> Json {
+    let mut sections = Vec::new();
+    for kind in [TraceKind::Berkeley, TraceKind::Wits] {
+        println!("\nFigure 9 ({}): workload-1, five schemes", kind.name());
+        hline(64);
+        println!("{:<12} {:>12} {:>10} {:>12} {:>10}", "scheme", "cost vs R", "viol %",
+                 "lambda %", "mean VMs");
+        hline(64);
+        let mut rows = Vec::new();
+        let base = run_trace_scheme(reg, kind, "reactive", cfg);
+        for name in scheduler::ALL_SCHEMES {
+            let r = if name == "reactive" {
+                base.clone()
+            } else {
+                run_trace_scheme(reg, kind, name, cfg)
+            };
+            println!(
+                "{:<12} {:>11.2}x {:>9.1}% {:>11.1}% {:>10.1}",
+                name,
+                r.total_cost() / base.total_cost(),
+                r.violation_pct(),
+                r.lambda_share_pct(),
+                r.mean_vms()
+            );
+            rows.push(Json::obj(vec![
+                ("scheme", name.into()),
+                ("cost_ratio", (r.total_cost() / base.total_cost()).into()),
+                ("cost_usd", r.total_cost().into()),
+                ("violation_pct", r.violation_pct().into()),
+                ("lambda_share_pct", r.lambda_share_pct().into()),
+                ("mean_vms", r.mean_vms().into()),
+            ]));
+        }
+        sections.push(Json::obj(vec![
+            ("trace", kind.name().into()),
+            ("rows", Json::Arr(rows)),
+        ]));
+    }
+    Json::obj(vec![("figure", "fig9ab".into()), ("sections", Json::Arr(sections))])
+}
+
+/// Fig 9c: paragon vs naive model selection (workload-2: per-query
+/// accuracy+latency constraints), paragon procurement underneath.
+pub fn fig9c(reg: &Registry, cfg: &FigConfig) -> Json {
+    println!("\nFigure 9c: model selection, cost normalized to naive");
+    hline(56);
+    let mut rows = Vec::new();
+    for kind in [TraceKind::Berkeley, TraceKind::Wits] {
+        let trace = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+        let reqs = synthesize_requests(&trace, WorkloadKind::VarConstraints, cfg.seed ^ 0x9c);
+        let run = |policy| {
+            let mut scheme = scheduler::by_name("paragon").unwrap();
+            simulate(scheme.as_mut(), reg, &reqs, kind.name(), &SimConfig {
+                assignment: Assignment::Policy(policy),
+                seed: cfg.seed,
+                ..SimConfig::default()
+            })
+        };
+        let naive = run(SelectionPolicy::Naive);
+        let paragon = run(SelectionPolicy::Paragon);
+        let ratio = paragon.total_cost() / naive.total_cost();
+        println!(
+            "{:<10} naive ${:>8.2} -> paragon ${:>8.2}   ({:.0}% cheaper)",
+            kind.name(),
+            naive.total_cost(),
+            paragon.total_cost(),
+            (1.0 - ratio) * 100.0
+        );
+        rows.push(Json::obj(vec![
+            ("trace", kind.name().into()),
+            ("naive_usd", naive.total_cost().into()),
+            ("paragon_usd", paragon.total_cost().into()),
+            ("cost_ratio", ratio.into()),
+            ("naive_viol_pct", naive.violation_pct().into()),
+            ("paragon_viol_pct", paragon.violation_pct().into()),
+        ]));
+    }
+    Json::obj(vec![("figure", "fig9c".into()), ("rows", Json::Arr(rows))])
+}
+
+// ----------------------------------------------------------------- fig 10
+
+/// Fig 10 (§V): PPO learning curve vs heuristics on the serving env.
+/// Requires artifacts (the PPO graphs execute through PJRT).
+pub fn fig10(reg: &Registry, artifacts: &std::path::Path, iterations: usize,
+             cfg: &FigConfig) -> anyhow::Result<Json> {
+    use crate::rl::baselines::{run_episode, EnvPolicy, MixedPolicy, ParagonPolicy, RandomPolicy};
+    use crate::rl::env::ServeEnv;
+    use crate::rl::trainer::{train, TrainConfig};
+
+    let mk_trace = || generators::generate_with(TraceKind::Berkeley, cfg.seed,
+                                                1024, cfg.mean_rate);
+    println!("\nFigure 10: PPO self-managed controller (berkeley, model resnet18)");
+    hline(66);
+
+    // Baselines.
+    let mut baselines = Vec::new();
+    let mut policies: Vec<Box<dyn EnvPolicy>> = vec![
+        Box::new(ParagonPolicy),
+        Box::new(MixedPolicy),
+        Box::new(RandomPolicy::new(5)),
+    ];
+    for p in policies.iter_mut() {
+        let mut env = ServeEnv::new(reg, mk_trace(), 3, cfg.seed);
+        let (rew, cost, viol) = run_episode(&mut env, p.as_mut());
+        let per_step = rew / env.horizon() as f64;
+        println!("baseline {:<18} reward/step {:>8.4}  cost ${:>7.3}  viol {:>7.0}",
+                 p.name(), per_step, cost, viol);
+        baselines.push(Json::obj(vec![
+            ("policy", p.name().into()),
+            ("reward_per_step", per_step.into()),
+            ("episode_cost_usd", cost.into()),
+            ("episode_violations", viol.into()),
+        ]));
+    }
+
+    // PPO training.
+    let mut env = ServeEnv::new(reg, mk_trace(), 3, cfg.seed);
+    let mut agent = crate::rl::PpoAgent::load(artifacts, cfg.seed)?;
+    let curve = train(&mut env, &mut agent, &TrainConfig {
+        horizon: 1024,
+        epochs: 4,
+        iterations,
+    })?;
+    let mut curve_json = Vec::new();
+    for c in &curve {
+        println!("iter {:>3}  reward/step {:>8.4}  cost ${:>7.3}  viol/req {:>6.3}  kl {:>7.4}",
+                 c.iter, c.mean_reward, c.mean_cost_usd, c.mean_violation_rate, c.approx_kl);
+        curve_json.push(Json::obj(vec![
+            ("iter", c.iter.into()),
+            ("reward_per_step", c.mean_reward.into()),
+            ("episode_cost_usd", c.mean_cost_usd.into()),
+            ("violation_rate", c.mean_violation_rate.into()),
+            ("entropy", c.entropy.into()),
+            ("approx_kl", c.approx_kl.into()),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("figure", "fig10".into()),
+        ("baselines", Json::Arr(baselines)),
+        ("curve", Json::Arr(curve_json)),
+    ]))
+}
+
+/// Write a figure's JSON under `results/`.
+pub fn save(out_dir: &std::path::Path, name: &str, j: &Json) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        Registry::builtin()
+    }
+
+    #[test]
+    fn fig4_vms_always_cheaper_at_constant_rates() {
+        let j = fig4(&reg());
+        for section in j.get("sections").as_arr().unwrap() {
+            for row in section.get("rows").as_arr().unwrap() {
+                let vm = row.get("vm_usd").as_f64().unwrap();
+                let lam = row.get("lambda_usd").as_f64().unwrap();
+                assert!(vm < lam, "VM ${vm} not cheaper than lambda ${lam}: {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_wiki_low_others_high() {
+        let j = fig7(&FigConfig::quick());
+        for row in j.get("rows").as_arr().unwrap() {
+            let trace = row.get("trace").as_str().unwrap();
+            let p2m = row.get("peak_to_median").as_f64().unwrap();
+            if trace == "wiki" {
+                assert!(p2m < 1.5, "wiki p2m {p2m}");
+            } else {
+                assert!(p2m > 1.5, "{trace} p2m {p2m}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig8_time_monotone_cost_rising() {
+        let j = fig8(&reg());
+        let rows = j.get("rows").as_arr().unwrap();
+        for name in ["squeezenet", "resnet18", "resnet50"] {
+            let series: Vec<(f64, f64, f64)> = rows
+                .iter()
+                .filter(|r| r.get("model").as_str() == Some(name))
+                .map(|r| (
+                    r.get("mem_gb").as_f64().unwrap(),
+                    r.get("compute_s").as_f64().unwrap(),
+                    r.get("usd_per_1m").as_f64().unwrap(),
+                ))
+                .collect();
+            assert!(series.len() >= 3, "{name} series too short");
+            for w in series.windows(2) {
+                assert!(w[1].1 <= w[0].1 + 1e-9, "{name}: time not monotone");
+            }
+            assert!(series.last().unwrap().2 > series.first().unwrap().2,
+                    "{name}: max-mem not pricier than min-mem");
+        }
+        // squeezenet saturates at 2GB: identical times at 2.0/2.5/3.0.
+        let sq: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.get("model").as_str() == Some("squeezenet")
+                    && r.get("mem_gb").as_f64().unwrap() >= 2.0)
+            .map(|r| r.get("compute_s").as_f64().unwrap())
+            .collect();
+        for w in sq.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "squeezenet past saturation");
+        }
+    }
+
+    #[test]
+    fn fig5_overprovisioning_shape() {
+        let j = fig5(&reg(), &FigConfig::quick());
+        for row in j.get("rows").as_arr().unwrap() {
+            let ua = row.get("util_aware_ratio").as_f64().unwrap();
+            let ex = row.get("exascale_ratio").as_f64().unwrap();
+            assert!(ua > 1.0, "util_aware under-provisions vs reactive: {row}");
+            assert!(ex > 1.0, "exascale under-provisions vs reactive: {row}");
+            assert!(ua < 3.0 && ex < 3.0, "implausible over-provisioning: {row}");
+        }
+    }
+
+    #[test]
+    fn fig9c_paragon_selection_cheaper() {
+        let j = fig9c(&reg(), &FigConfig::quick());
+        for row in j.get("rows").as_arr().unwrap() {
+            let ratio = row.get("cost_ratio").as_f64().unwrap();
+            assert!(ratio < 0.95, "paragon selection not cheaper: {row}");
+        }
+    }
+}

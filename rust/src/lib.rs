@@ -1,0 +1,24 @@
+//! # Paragon — self-managed ML inference serving for public cloud
+//!
+//! Library crate for the reproduction of Gunasekaran et al., *Towards
+//! Designing a Self-Managed Machine Learning Inference Serving System in
+//! Public Cloud* (2020). See DESIGN.md for the architecture and the
+//! per-figure experiment index, and README.md for usage.
+//!
+//! Layer map (three-layer rust+JAX+Pallas stack, AOT via PJRT):
+//! - L3 (this crate): coordinator — routing, batching, the five
+//!   procurement schemes, cloud cost simulator, PPO driver, figures.
+//! - L2/L1 (python/compile): JAX model pool + PPO graphs over Pallas
+//!   kernels, lowered once to `artifacts/*.hlo.txt`.
+
+pub mod cloud;
+pub mod config;
+pub mod figures;
+pub mod models;
+pub mod runtime;
+pub mod rl;
+pub mod scheduler;
+pub mod serving;
+pub mod sim;
+pub mod trace;
+pub mod util;

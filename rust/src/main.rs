@@ -1,0 +1,225 @@
+//! `paragon` — CLI for the self-managed ML inference serving system.
+//!
+//! Subcommands:
+//!   figures    regenerate the paper's figures (tables + results/*.json)
+//!   simulate   run one (scheme, trace) simulation and print the report
+//!   profile    measure real PJRT latency of every pool model (needs artifacts)
+//!   train-rl   train the PPO controller through PJRT (needs artifacts)
+//!   traces     emit the four calibrated traces as CSV
+//!
+//! Examples:
+//!   paragon figures --fig all --out results
+//!   paragon simulate --scheme paragon --trace berkeley --rate 100
+//!   paragon train-rl --iters 20
+
+use paragon::figures;
+use paragon::models::{profiler, Registry, SelectionPolicy};
+use paragon::scheduler;
+use paragon::sim::{simulate, Assignment, SimConfig};
+use paragon::trace::{generators, loader, synthesize_requests, TraceKind, WorkloadKind,
+                     ALL_TRACES};
+use paragon::util::cli::Args;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn registry(args: &Args) -> Registry {
+    let dir = artifacts_dir(args);
+    if dir.join("manifest.json").exists() {
+        match Registry::from_manifest(&dir) {
+            Ok(reg) => return reg,
+            Err(e) => eprintln!("warning: manifest unusable ({e}); using builtin anchors"),
+        }
+    }
+    Registry::builtin()
+}
+
+fn fig_config(args: &Args) -> anyhow::Result<figures::FigConfig> {
+    Ok(if args.has("quick") {
+        figures::FigConfig::quick()
+    } else {
+        figures::FigConfig {
+            duration_s: args.get_usize("duration", 3600)?,
+            mean_rate: args.get_f64("rate", 100.0)?,
+            seed: args.get_u64("seed", 42)?,
+        }
+    })
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let reg = registry(args);
+    let cfg = fig_config(args)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let which = args.get_or("fig", "all");
+    let want = |f: &str| which == "all" || which == f;
+
+    if want("2") {
+        figures::save(&out, "fig2", &figures::fig2(&reg))?;
+    }
+    if want("3") {
+        figures::save(&out, "fig3", &figures::fig3(&reg))?;
+    }
+    if want("4") {
+        figures::save(&out, "fig4", &figures::fig4(&reg))?;
+    }
+    if want("5") {
+        figures::save(&out, "fig5", &figures::fig5(&reg, &cfg))?;
+    }
+    if want("6") {
+        figures::save(&out, "fig6", &figures::fig6(&reg, &cfg))?;
+    }
+    if want("7") {
+        figures::save(&out, "fig7", &figures::fig7(&cfg))?;
+    }
+    if want("8") {
+        figures::save(&out, "fig8", &figures::fig8(&reg))?;
+    }
+    if want("9") {
+        figures::save(&out, "fig9ab", &figures::fig9ab(&reg, &cfg))?;
+        figures::save(&out, "fig9c", &figures::fig9c(&reg, &cfg))?;
+    }
+    if want("10") {
+        let iters = args.get_usize("iters", 20)?;
+        let dir = artifacts_dir(args);
+        if dir.join("manifest.json").exists() {
+            figures::save(&out, "fig10", &figures::fig10(&reg, &dir, iters, &cfg)?)?;
+        } else {
+            eprintln!("fig10 skipped: artifacts/ not built (run `make artifacts`)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let reg = registry(args);
+    // Config-file path: the whole experiment from one JSON document.
+    if let Some(path) = args.get("config") {
+        let cfg = paragon::config::ExperimentConfig::from_file(std::path::Path::new(path))?;
+        let rep = paragon::sim::run_experiment(&reg, &cfg)?;
+        let mut j = rep.to_json();
+        if let paragon::util::json::Json::Obj(map) = &mut j {
+            map.insert("config".into(), cfg.to_json());
+        }
+        println!("{j}");
+        return Ok(());
+    }
+    let scheme_name = args.get_or("scheme", "paragon");
+    let trace_name = args.get_or("trace", "berkeley");
+    let cfg = fig_config(args)?;
+    let workload = match args.get_or("workload", "mixed-slo").as_str() {
+        "mixed-slo" => WorkloadKind::MixedSlo,
+        "constraints" => WorkloadKind::VarConstraints,
+        other => anyhow::bail!("unknown workload {other}"),
+    };
+    let selection = match args.get_or("selection", "random").as_str() {
+        "random" => Assignment::RandomFeasible,
+        "naive" => Assignment::Policy(SelectionPolicy::Naive),
+        "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
+        other => anyhow::bail!("unknown selection {other}"),
+    };
+
+    let trace = if let Some(path) = args.get("trace-file") {
+        loader::load_csv(std::path::Path::new(path))?
+            .scaled_to_mean(cfg.mean_rate)
+    } else {
+        let kind = TraceKind::from_name(&trace_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown trace {trace_name}"))?;
+        generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate)
+    };
+    let reqs = synthesize_requests(&trace, workload, cfg.seed ^ 0x51);
+    let mut scheme = scheduler::by_name(&scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name} (one of {:?})",
+                                       scheduler::ALL_SCHEMES))?;
+    let rep = simulate(scheme.as_mut(), &reg, &reqs, &trace.name, &SimConfig {
+        assignment: selection,
+        seed: cfg.seed,
+        ..SimConfig::default()
+    });
+    println!("{}", rep.to_json());
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    let mut reg = Registry::from_manifest(&dir)?;
+    let rt = paragon::runtime::Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    let iters = args.get_usize("iters", 10)?;
+    println!("{:<16} {:>6} {:>12} {:>12} {:>12}", "model", "batch", "mean ms", "p95 ms", "q/s");
+    let ms = profiler::profile_all(&rt, &mut reg, iters)?;
+    for m in &ms {
+        for &(b, mean, p95, tput) in &m.per_batch {
+            println!("{:<16} {:>6} {:>12.2} {:>12.2} {:>12.1}", m.name, b, mean, p95, tput);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train_rl(args: &Args) -> anyhow::Result<()> {
+    let reg = registry(args);
+    let cfg = fig_config(args)?;
+    let iters = args.get_usize("iters", 20)?;
+    let j = figures::fig10(&reg, &artifacts_dir(args), iters, &cfg)?;
+    let out = PathBuf::from(args.get_or("out", "results"));
+    figures::save(&out, "fig10", &j)?;
+    Ok(())
+}
+
+fn cmd_traces(args: &Args) -> anyhow::Result<()> {
+    let cfg = fig_config(args)?;
+    let out = PathBuf::from(args.get_or("out", "results/traces"));
+    for kind in ALL_TRACES {
+        let t = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+        let path = out.join(format!("{}.csv", kind.name()));
+        loader::save_csv(&t, &path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+const USAGE: &str = "\
+paragon — self-managed ML inference serving (paper reproduction)
+
+USAGE: paragon <subcommand> [flags]
+
+SUBCOMMANDS
+  figures     --fig all|2..10  --out results  [--quick|--duration S --rate R]
+  simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints]
+              [--selection random|naive|paragon] [--trace-file F.csv]
+  profile     --iters N          (needs artifacts/)
+  train-rl    --iters N          (needs artifacts/)
+  traces      --out DIR
+
+COMMON FLAGS
+  --artifacts DIR   artifacts directory (default: artifacts)
+  --seed N          experiment seed (default: 42)
+";
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("figures") => cmd_figures(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("train-rl") => cmd_train_rl(&args),
+        Some("traces") => cmd_traces(&args),
+        _ => {
+            print!("{USAGE}");
+            return if args.has("help") || args.subcommand.is_none() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            };
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

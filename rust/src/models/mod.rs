@@ -1,0 +1,10 @@
+//! Model pool: registry of serving profiles, constraint-aware selection,
+//! and the runtime profiler that replaces paper anchors with measured
+//! PJRT latencies.
+
+pub mod profiler;
+pub mod registry;
+pub mod selection;
+
+pub use registry::{ModelProfile, Registry};
+pub use selection::{select, SelectionPolicy};

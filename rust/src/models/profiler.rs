@@ -1,0 +1,76 @@
+//! Online model profiler (§IV-A: "by offline profiling, we estimate ...").
+//!
+//! Measures real PJRT execution latency per (model, batch) and can fold the
+//! measurements back into the registry, replacing the paper's anchors with
+//! this machine's truth. Figure 2's latency axis and the quickstart use it.
+
+use crate::models::Registry;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg;
+use anyhow::Result;
+
+/// Measured latency profile for one model.
+#[derive(Debug, Clone)]
+pub struct ModelMeasurement {
+    pub idx: usize,
+    pub name: String,
+    /// (batch, mean latency ms, p95 latency ms, throughput q/s)
+    pub per_batch: Vec<(usize, f64, f64, f64)>,
+}
+
+impl ModelMeasurement {
+    /// batch-1 mean latency.
+    pub fn latency_b1_ms(&self) -> f64 {
+        self.per_batch
+            .iter()
+            .find(|(b, ..)| *b == 1)
+            .map(|&(_, mean, ..)| mean)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Profile `model_idx` with `iters` timed runs per batch size
+/// (plus warmup, which also forces compilation).
+pub fn profile_model(rt: &Runtime, reg: &Registry, model_idx: usize,
+                     iters: usize) -> Result<ModelMeasurement> {
+    let loaded = rt.load_model(reg, model_idx)?;
+    let mut rng = Pcg::seeded(model_idx as u64 + 1);
+    let mut per_batch = Vec::new();
+    for &b in &reg.batch_sizes {
+        let input: Vec<f32> = (0..b * reg.input_dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        // Warmup (2 runs).
+        for _ in 0..2 {
+            rt.infer(&loaded, &input, b)?;
+        }
+        let mut lats = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let out = rt.infer(&loaded, &input, b)?;
+            lats.push(out.exec_ms);
+        }
+        let mean = lats.iter().sum::<f64>() / lats.len() as f64;
+        let p95 = crate::util::stats::percentile(&mut lats, 95.0);
+        let throughput = b as f64 / (mean / 1000.0);
+        per_batch.push((b, mean, p95, throughput));
+    }
+    Ok(ModelMeasurement {
+        idx: model_idx,
+        name: reg.models[model_idx].name.clone(),
+        per_batch,
+    })
+}
+
+/// Profile every model and overwrite the registry's latency anchors with
+/// measured batch-1 latencies (scaled so downstream cost math keeps the
+/// same units).
+pub fn profile_all(rt: &Runtime, reg: &mut Registry, iters: usize)
+                   -> Result<Vec<ModelMeasurement>> {
+    let mut out = Vec::new();
+    for idx in 0..reg.len() {
+        let m = profile_model(rt, reg, idx, iters)?;
+        reg.set_measured_latency(idx, m.latency_b1_ms());
+        out.push(m);
+    }
+    Ok(out)
+}

@@ -1,0 +1,293 @@
+//! The model pool registry: every figure and scheduler consumes models
+//! through the `(accuracy, latency, memory, $)` profiles kept here.
+//!
+//! Profiles come from two sources, combined per DESIGN.md §Substitutions:
+//!  * **anchors** — the paper's Fig 2 envelope (accuracy %, reference
+//!    latency on the profiling VM, model memory footprint), compiled in so
+//!    the simulator and figures run with no artifacts present;
+//!  * **manifest** — `artifacts/manifest.json` written by `make artifacts`,
+//!    which adds the AOT HLO file index and build-time-measured synthetic
+//!    accuracy, and lets the runtime profiler overwrite latency anchors
+//!    with real PJRT measurements.
+
+use crate::cloud::pricing::VmType;
+use crate::cloud::serverless::LambdaFn;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One pool model's serving profile.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    /// Index in the registry (stable across a run).
+    pub idx: usize,
+    pub name: String,
+    /// Classification accuracy, percent (paper Fig 2 anchor).
+    pub accuracy: f64,
+    /// Single-query latency on the reference (c4.large-class) VM, ms.
+    pub latency_ms: f64,
+    /// Model memory footprint, MB (minimum lambda allocation).
+    pub mem_mb: f64,
+    /// Lambda memory beyond which this model stops speeding up, GB.
+    pub saturation_gb: f64,
+    /// Build-time synthetic-task accuracy (manifest only; 0 if untrained).
+    pub acc_synth: f64,
+    pub param_count: usize,
+    /// Relative path (under artifacts/) of HLO text per batch size.
+    pub hlo_files: BTreeMap<usize, String>,
+    /// Relative path of the weights blob.
+    pub params_bin: Option<String>,
+    /// Parameter tensor shapes, in argument order.
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl ModelProfile {
+    /// Service time of one inference on `vm`, seconds.
+    pub fn service_time_s(&self, vm: &VmType) -> f64 {
+        self.latency_ms / 1000.0 / vm.speed
+    }
+
+    /// Concurrency slots a VM offers this model: one in-flight inference
+    /// per vCPU keeps per-query latency at the profiled value (paper
+    /// §II-B: determined by offline characterization).
+    pub fn slots_on(&self, vm: &VmType) -> u32 {
+        let by_mem = (vm.mem_gb * 1024.0 / self.mem_mb).floor() as u32;
+        vm.vcpus.min(by_mem.max(1))
+    }
+
+    /// Steady-state cost of serving one inference on a *fully utilized* VM
+    /// of this type, USD — the per-query cost floor model selection uses.
+    pub fn vm_cost_per_query(&self, vm: &VmType) -> f64 {
+        let throughput = self.slots_on(vm) as f64 / self.service_time_s(vm);
+        vm.price.per_second() / throughput
+    }
+
+    /// The cheapest lambda deployment meeting `slo_ms` for this model,
+    /// if any (§III-B4: right-size memory to the latency requirement).
+    pub fn lambda_for_slo(&self, slo_ms: f64) -> Option<LambdaFn> {
+        // Candidate memory settings: AWS allows 64MB steps; sweep a
+        // representative grid from the model's floor to the 3GB cap.
+        let floor = (self.mem_mb / 1024.0).max(0.5);
+        let mut mem = (floor * 16.0).ceil() / 16.0; // round up to 64MB
+        while mem <= 3.0 + 1e-9 {
+            let f = self.lambda_at(mem);
+            if f.invoke_latency_s(false) * 1000.0 <= slo_ms {
+                return Some(f);
+            }
+            mem += 0.0625;
+        }
+        None
+    }
+
+    /// Lambda deployment of this model at a given memory setting.
+    pub fn lambda_at(&self, mem_gb: f64) -> LambdaFn {
+        LambdaFn::new(mem_gb, self.latency_ms / 1000.0, self.saturation_gb, self.mem_mb)
+    }
+}
+
+/// The model pool.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub models: Vec<ModelProfile>,
+    /// Artifacts root (set when loaded from a manifest).
+    pub artifacts_dir: Option<PathBuf>,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub batch_sizes: Vec<usize>,
+}
+
+/// Paper Fig 2 anchors: (name, accuracy %, latency ms, mem MB, sat GB).
+/// Kept in sync with python/compile/model.py::POOL.
+const ANCHORS: &[(&str, f64, f64, f64, f64)] = &[
+    ("mobilenet_025", 52.0, 45.0, 512.0, 2.0),
+    ("squeezenet", 65.0, 90.0, 640.0, 2.0),
+    ("mobilenet_10", 72.0, 150.0, 896.0, 3.0),
+    ("resnet18", 79.5, 480.0, 1152.0, 3.0),
+    ("resnet50", 82.0, 620.0, 1536.0, 3.0),
+    ("densenet121", 85.0, 900.0, 1792.0, 3.0),
+    ("inception_v3", 87.0, 1400.0, 2048.0, 3.0),
+    ("resnet152", 89.0, 2200.0, 2560.0, 3.0),
+];
+
+impl Registry {
+    /// Anchor-only registry: used by the simulator, schedulers and figures
+    /// when no AOT artifacts are needed (or present).
+    pub fn builtin() -> Registry {
+        let models = ANCHORS
+            .iter()
+            .enumerate()
+            .map(|(idx, &(name, acc, lat, mem, sat))| ModelProfile {
+                idx,
+                name: name.to_string(),
+                accuracy: acc,
+                latency_ms: lat,
+                mem_mb: mem,
+                saturation_gb: sat,
+                acc_synth: 0.0,
+                param_count: 0,
+                hlo_files: BTreeMap::new(),
+                params_bin: None,
+                param_shapes: Vec::new(),
+            })
+            .collect();
+        Registry {
+            models,
+            artifacts_dir: None,
+            input_dim: 3072,
+            num_classes: 10,
+            batch_sizes: vec![1, 4, 8, 16],
+        }
+    }
+
+    /// Load from `artifacts/manifest.json`, merging with the anchors.
+    pub fn from_manifest(artifacts_dir: &Path) -> Result<Registry> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let mut reg = Registry::builtin();
+        reg.artifacts_dir = Some(artifacts_dir.to_path_buf());
+        reg.input_dim = j.req_usize("input_dim")?;
+        reg.num_classes = j.req_usize("num_classes")?;
+        reg.batch_sizes = j
+            .get("batch_sizes")
+            .as_arr()
+            .context("manifest missing batch_sizes")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+
+        let manifest_models = j.get("models").as_arr().context("manifest missing models")?;
+        for m in manifest_models {
+            let name = m.req_str("name")?;
+            let prof = reg
+                .models
+                .iter_mut()
+                .find(|p| p.name == name)
+                .with_context(|| format!("manifest model {name} not in anchor table"))?;
+            prof.acc_synth = m.req_f64("acc_synth")?;
+            prof.param_count = m.req_usize("param_count")?;
+            prof.params_bin = Some(m.req_str("params_bin")?);
+            if let Some(files) = m.get("files").as_obj() {
+                for (b, f) in files {
+                    let batch: usize = b.parse().context("bad batch key")?;
+                    prof.hlo_files.insert(batch, f.as_str().unwrap_or_default().to_string());
+                }
+            }
+            if let Some(shapes) = m.get("param_shapes").as_arr() {
+                prof.param_shapes = shapes
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect();
+            }
+        }
+        Ok(reg)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ModelProfile> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Models meeting a latency bound (Fig 3a's ISO-latency set).
+    pub fn iso_latency(&self, max_ms: f64) -> Vec<&ModelProfile> {
+        self.models.iter().filter(|m| m.latency_ms <= max_ms).collect()
+    }
+
+    /// Models meeting an accuracy bound (Fig 3b's ISO-accuracy set).
+    pub fn iso_accuracy(&self, min_acc: f64) -> Vec<&ModelProfile> {
+        self.models.iter().filter(|m| m.accuracy >= min_acc).collect()
+    }
+
+    /// Overwrite a latency anchor with a measured value (runtime profiler).
+    pub fn set_measured_latency(&mut self, idx: usize, ms: f64) {
+        self.models[idx].latency_ms = ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::{default_vm_type, vm_type};
+
+    #[test]
+    fn builtin_matches_fig3_cardinalities() {
+        let reg = Registry::builtin();
+        assert_eq!(reg.len(), 8);
+        assert_eq!(reg.iso_latency(500.0).len(), 4);
+        assert_eq!(reg.iso_accuracy(80.0).len(), 4);
+    }
+
+    #[test]
+    fn accuracy_latency_monotone() {
+        let reg = Registry::builtin();
+        for w in reg.models.windows(2) {
+            assert!(w[0].accuracy < w[1].accuracy);
+            assert!(w[0].latency_ms < w[1].latency_ms);
+        }
+    }
+
+    #[test]
+    fn slots_respect_vcpu_and_memory() {
+        let reg = Registry::builtin();
+        let m4 = default_vm_type(); // 2 vcpu, 8 GB
+        let sq = reg.by_name("squeezenet").unwrap();
+        assert_eq!(sq.slots_on(m4), 2);
+        let big = reg.by_name("resnet152").unwrap(); // 2560 MB
+        let c5l = vm_type("c5.large").unwrap(); // 2 vcpu, 4 GB
+        assert_eq!(big.slots_on(c5l), 1, "memory-bound to a single replica");
+    }
+
+    #[test]
+    fn faster_vm_lowers_service_time() {
+        let reg = Registry::builtin();
+        let m = reg.by_name("resnet18").unwrap();
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        assert!(m.service_time_s(c5) < m.service_time_s(m4));
+    }
+
+    #[test]
+    fn vm_cost_per_query_increases_with_model_size() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        let costs: Vec<f64> = reg.models.iter().map(|m| m.vm_cost_per_query(vm)).collect();
+        for w in costs.windows(2) {
+            assert!(w[0] < w[1], "costs not monotone: {costs:?}");
+        }
+    }
+
+    #[test]
+    fn lambda_for_slo_right_sizes_memory() {
+        let reg = Registry::builtin();
+        let m = reg.by_name("squeezenet").unwrap();
+        // A relaxed SLO should pick less memory than a strict one.
+        let relaxed = m.lambda_for_slo(2000.0).unwrap();
+        let strict = m.lambda_for_slo(150.0).unwrap();
+        assert!(strict.mem_gb > relaxed.mem_gb,
+                "strict {} <= relaxed {}", strict.mem_gb, relaxed.mem_gb);
+        // Both must actually meet their SLOs warm.
+        assert!(relaxed.invoke_latency_s(false) * 1000.0 <= 2000.0);
+        assert!(strict.invoke_latency_s(false) * 1000.0 <= 150.0);
+    }
+
+    #[test]
+    fn lambda_for_impossible_slo_is_none() {
+        let reg = Registry::builtin();
+        let big = reg.by_name("resnet152").unwrap(); // 2.2 s reference
+        assert!(big.lambda_for_slo(100.0).is_none());
+    }
+}

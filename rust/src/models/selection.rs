@@ -1,0 +1,177 @@
+//! Model selection (§III-A, Fig 9c): map a query's (accuracy, latency)
+//! constraints to a pool model.
+//!
+//! * `naive` — the paper's Fig 9c baseline: "oblivious to user
+//!   requirements and model characteristics" — a uniform pick over the
+//!   pool, blind to the query's constraints and to cost.
+//! * `paragon` — picks the *cheapest* model that satisfies both the
+//!   accuracy floor and the latency SLO ("jointly considers all three
+//!   parameters and chooses the least costing model").
+
+use super::registry::{ModelProfile, Registry};
+use crate::cloud::pricing::VmType;
+use crate::trace::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    Naive,
+    Paragon,
+}
+
+impl SelectionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Naive => "naive",
+            SelectionPolicy::Paragon => "paragon",
+        }
+    }
+}
+
+/// Pick a model index for `req` under `policy`. Falls back to the most
+/// accurate feasible-latency model (then the fastest model outright) when
+/// the constraint pair is infeasible, so no query is ever dropped.
+pub fn select(reg: &Registry, vm: &VmType, policy: SelectionPolicy, req: &Request) -> usize {
+    match policy {
+        SelectionPolicy::Naive => {
+            // Constraint-oblivious uniform pick (deterministic per request:
+            // a splitmix64 hash of the id, so runs reproduce bit-for-bit).
+            let mut z = req.id.wrapping_add(0x9e3779b97f4a7c15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            ((z ^ (z >> 31)) % reg.len() as u64) as usize
+        }
+        SelectionPolicy::Paragon => {
+            let feasible = |m: &&ModelProfile| {
+                m.accuracy >= req.min_accuracy
+                    && m.service_time_s(vm) * 1000.0 <= req.slo_ms
+            };
+            let best = reg
+                .models
+                .iter()
+                .filter(feasible)
+                .min_by(|a, b| {
+                    a.vm_cost_per_query(vm)
+                        .partial_cmp(&b.vm_cost_per_query(vm))
+                        .unwrap()
+                });
+            if let Some(m) = best {
+                return m.idx;
+            }
+            // Infeasible pair: honor latency first (SLO violations are
+            // what the figures count), maximizing accuracy within it.
+            reg.models
+                .iter()
+                .filter(|m| m.service_time_s(vm) * 1000.0 <= req.slo_ms)
+                .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                .map(|m| m.idx)
+                .unwrap_or(0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::default_vm_type;
+    use crate::trace::Strictness;
+
+    fn req(slo_ms: f64, min_acc: f64) -> Request {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            slo_ms,
+            min_accuracy: min_acc,
+            strictness: Strictness::Strict,
+        }
+    }
+
+    #[test]
+    fn naive_is_constraint_oblivious_and_covers_pool() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 0..200u64 {
+            let mut r = req(100.0, 0.0);
+            r.id = id;
+            let a = select(&reg, vm, SelectionPolicy::Naive, &r);
+            // Same id, wildly different constraints: same pick (oblivious).
+            let mut r2 = req(5000.0, 85.0);
+            r2.id = id;
+            assert_eq!(a, select(&reg, vm, SelectionPolicy::Naive, &r2));
+            seen.insert(a);
+        }
+        assert_eq!(seen.len(), reg.len(), "uniform pick should cover the pool");
+    }
+
+    #[test]
+    fn paragon_picks_cheapest_feasible() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        // Loose constraints: cheapest model overall (mobilenet_025).
+        let idx = select(&reg, vm, SelectionPolicy::Paragon, &req(10_000.0, 0.0));
+        assert_eq!(reg.models[idx].name, "mobilenet_025");
+        // Accuracy >= 80 forces at least resnet50; cheapest such is resnet50.
+        let idx = select(&reg, vm, SelectionPolicy::Paragon, &req(10_000.0, 80.0));
+        assert_eq!(reg.models[idx].name, "resnet50");
+    }
+
+    #[test]
+    fn paragon_honors_latency() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        // SLO 500ms excludes resnet50+; accuracy 75 requires resnet18.
+        let idx = select(&reg, vm, SelectionPolicy::Paragon, &req(500.0, 75.0));
+        assert_eq!(reg.models[idx].name, "resnet18");
+    }
+
+    #[test]
+    fn paragon_never_violates_when_feasible() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        let mut rng = crate::util::rng::Pcg::seeded(5);
+        for _ in 0..500 {
+            let r = req(rng.uniform(400.0, 6000.0), rng.uniform(50.0, 88.0));
+            let feasible_exists = reg.models.iter().any(|m| {
+                m.accuracy >= r.min_accuracy && m.service_time_s(vm) * 1000.0 <= r.slo_ms
+            });
+            let m = &reg.models[select(&reg, vm, SelectionPolicy::Paragon, &r)];
+            if feasible_exists {
+                assert!(m.accuracy >= r.min_accuracy, "{} < {}", m.accuracy, r.min_accuracy);
+                assert!(m.service_time_s(vm) * 1000.0 <= r.slo_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_pair_still_honors_latency() {
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        // 89% accuracy within 100ms is impossible: fall back to the most
+        // accurate model that still meets 100ms.
+        let idx = select(&reg, vm, SelectionPolicy::Paragon, &req(100.0, 89.0));
+        let m = &reg.models[idx];
+        assert!(m.service_time_s(vm) * 1000.0 <= 100.0);
+        assert_eq!(m.name, "squeezenet"); // 90ms on m4.large
+    }
+
+    #[test]
+    fn paragon_cheaper_than_naive_in_expectation() {
+        // Fig 9c's claim, in miniature: over a constraint distribution,
+        // paragon's per-query VM cost is well below naive's.
+        let reg = Registry::builtin();
+        let vm = default_vm_type();
+        let mut rng = crate::util::rng::Pcg::seeded(6);
+        let (mut c_naive, mut c_paragon) = (0.0, 0.0);
+        for _ in 0..1000 {
+            let r = req(rng.uniform(400.0, 6000.0), rng.uniform(50.0, 88.0));
+            c_naive += reg.models[select(&reg, vm, SelectionPolicy::Naive, &r)]
+                .vm_cost_per_query(vm);
+            c_paragon += reg.models[select(&reg, vm, SelectionPolicy::Paragon, &r)]
+                .vm_cost_per_query(vm);
+        }
+        assert!(
+            c_paragon < c_naive * 0.8,
+            "paragon {c_paragon} not ≥20% cheaper than naive {c_naive}"
+        );
+    }
+}

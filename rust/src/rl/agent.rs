@@ -1,0 +1,277 @@
+//! PPO agent driver: *training through PJRT*.
+//!
+//! The policy/value network, the clipped-surrogate loss and the Adam update
+//! all live in the AOT artifacts (`ppo/policy_fwd_b*.hlo.txt`,
+//! `ppo/train_step_b256.hlo.txt`) lowered from python/compile/ppo.py at
+//! build time. This driver owns the parameters as host vectors, keeps a
+//! device-buffer cache for acting, samples actions, and feeds minibatches
+//! through the train-step executable — rust-only at run time.
+
+use super::buffer::{MiniBatch, Rollout};
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// PPO section of artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct PpoManifest {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub minibatch: usize,
+    pub policy_fwd: Vec<(usize, String)>,
+    pub train_step: String,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub init_params_bin: String,
+}
+
+impl PpoManifest {
+    pub fn load(artifacts_dir: &Path) -> Result<PpoManifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let p = j.get("ppo");
+        if p.as_obj().is_none() {
+            bail!("manifest has no ppo section");
+        }
+        let mut policy_fwd = Vec::new();
+        if let Some(obj) = p.get("policy_fwd").as_obj() {
+            for (b, f) in obj {
+                policy_fwd.push((b.parse()?, f.as_str().unwrap_or_default().to_string()));
+            }
+        }
+        policy_fwd.sort();
+        Ok(PpoManifest {
+            obs_dim: p.req_usize("obs_dim")?,
+            act_dim: p.req_usize("act_dim")?,
+            minibatch: p.req_usize("minibatch")?,
+            policy_fwd,
+            train_step: p.req_str("train_step")?,
+            param_shapes: p
+                .get("param_shapes")
+                .as_arr()
+                .context("ppo.param_shapes")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|d| d.iter().filter_map(|x| x.as_usize()).collect())
+                        .unwrap_or_default()
+                })
+                .collect(),
+            init_params_bin: p.req_str("init_params_bin")?,
+        })
+    }
+}
+
+/// Aggregated stats over one `update` call.
+#[derive(Debug, Clone, Default)]
+pub struct UpdateStats {
+    pub loss: f64,
+    pub pi_loss: f64,
+    pub v_loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+    pub clip_frac: f64,
+    pub minibatches: usize,
+}
+
+pub struct PpoAgent {
+    rt: Runtime,
+    manifest: PpoManifest,
+    fwd1: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    /// host-resident parameters / Adam moments
+    params: Vec<Vec<f32>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Adam step counter
+    t: u64,
+    /// device cache of params for acting (invalidated by update)
+    param_bufs: Option<Vec<xla::PjRtBuffer>>,
+    rng: Pcg,
+    pub gamma: f32,
+    pub lam: f32,
+}
+
+impl PpoAgent {
+    pub fn load(artifacts_dir: &Path, seed: u64) -> Result<PpoAgent> {
+        let manifest = PpoManifest::load(artifacts_dir)?;
+        let rt = Runtime::new(artifacts_dir)?;
+        let fwd1_rel = &manifest
+            .policy_fwd
+            .iter()
+            .find(|(b, _)| *b == 1)
+            .context("no batch-1 policy_fwd artifact")?
+            .1;
+        let fwd1 = rt.compile(fwd1_rel)?;
+        let train = rt.compile(&manifest.train_step)?;
+
+        // Initial parameters from the build-time dump.
+        let bytes = std::fs::read(artifacts_dir.join(&manifest.init_params_bin))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut params = Vec::new();
+        let mut off = 0;
+        for shape in &manifest.param_shapes {
+            let n: usize = shape.iter().product();
+            if off + n > floats.len() {
+                bail!("init_params.bin too short");
+            }
+            params.push(floats[off..off + n].to_vec());
+            off += n;
+        }
+        let m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(PpoAgent {
+            rt,
+            manifest,
+            fwd1,
+            train,
+            params,
+            m,
+            v,
+            t: 0,
+            param_bufs: None,
+            rng: Pcg::new(seed, 0x990),
+            gamma: 0.99,
+            lam: 0.95,
+        })
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.manifest.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.manifest.act_dim
+    }
+
+    pub fn minibatch_size(&self) -> usize {
+        self.manifest.minibatch
+    }
+
+    fn ensure_param_bufs(&mut self) -> Result<()> {
+        if self.param_bufs.is_none() {
+            let mut bufs = Vec::with_capacity(self.params.len());
+            for (p, shape) in self.params.iter().zip(&self.manifest.param_shapes) {
+                bufs.push(self.rt.upload_f32(p, shape)?);
+            }
+            self.param_bufs = Some(bufs);
+        }
+        Ok(())
+    }
+
+    /// Policy forward for one observation: (probs, value).
+    pub fn policy(&mut self, obs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        if obs.len() != self.manifest.obs_dim {
+            bail!("obs len {} != {}", obs.len(), self.manifest.obs_dim);
+        }
+        self.ensure_param_bufs()?;
+        let x = self.rt.upload_f32(obs, &[1, self.manifest.obs_dim])?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.param_bufs.as_ref().unwrap().iter().collect();
+        args.push(&x);
+        let outs = self.rt.run_tuple(&self.fwd1, &args)?;
+        let probs = outs[0].to_vec::<f32>()?;
+        let value = outs[1].to_vec::<f32>()?[0];
+        Ok((probs, value))
+    }
+
+    /// Sample an action from the current policy.
+    /// Returns (action, log-prob, value).
+    pub fn act(&mut self, obs: &[f32]) -> Result<(usize, f32, f32)> {
+        let (probs, value) = self.policy(obs)?;
+        let a = self.rng.weighted(&probs.iter().map(|&p| p.max(0.0) as f64).collect::<Vec<_>>());
+        let logp = probs[a].max(1e-9).ln();
+        Ok((a, logp, value))
+    }
+
+    /// Greedy action (evaluation).
+    pub fn act_greedy(&mut self, obs: &[f32]) -> Result<usize> {
+        let (probs, _) = self.policy(obs)?;
+        Ok(probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// One PPO update over a finished rollout: `epochs` passes of shuffled
+    /// fixed-size minibatches through the AOT train step.
+    pub fn update(&mut self, rollout: &Rollout, epochs: usize) -> Result<UpdateStats> {
+        let bsz = self.manifest.minibatch;
+        let n = rollout.len();
+        if n < bsz {
+            bail!("rollout ({n}) smaller than minibatch ({bsz})");
+        }
+        if rollout.advantages.len() != n {
+            bail!("rollout not finished (call .finish first)");
+        }
+        let mut stats = UpdateStats::default();
+        let mut idx: Vec<usize> = (0..n).collect();
+        for _ in 0..epochs {
+            self.rng.shuffle(&mut idx);
+            for chunk in idx.chunks_exact(bsz) {
+                let mb = rollout.minibatch(chunk);
+                let s = self.train_minibatch(&mb)?;
+                stats.loss += s[0] as f64;
+                stats.pi_loss += s[1] as f64;
+                stats.v_loss += s[2] as f64;
+                stats.entropy += s[3] as f64;
+                stats.approx_kl += s[4] as f64;
+                stats.clip_frac += s[5] as f64;
+                stats.minibatches += 1;
+            }
+        }
+        let k = stats.minibatches.max(1) as f64;
+        stats.loss /= k;
+        stats.pi_loss /= k;
+        stats.v_loss /= k;
+        stats.entropy /= k;
+        stats.approx_kl /= k;
+        stats.clip_frac /= k;
+        // Parameters changed: acting cache is stale.
+        self.param_bufs = None;
+        Ok(stats)
+    }
+
+    fn train_minibatch(&mut self, mb: &MiniBatch) -> Result<[f32; 6]> {
+        let bsz = self.manifest.minibatch;
+        let od = self.manifest.obs_dim;
+        self.t += 1;
+        let t_buf = self.rt.upload_f32(&[self.t as f32], &[1])?;
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(1 + 24 + 5);
+        bufs.push(t_buf);
+        for set in [&self.params, &self.m, &self.v] {
+            for (p, shape) in set.iter().zip(&self.manifest.param_shapes) {
+                bufs.push(self.rt.upload_f32(p, shape)?);
+            }
+        }
+        bufs.push(self.rt.upload_f32(&mb.obs, &[bsz, od])?);
+        bufs.push(self.rt.upload_i32(&mb.actions, &[bsz])?);
+        bufs.push(self.rt.upload_f32(&mb.logp, &[bsz])?);
+        bufs.push(self.rt.upload_f32(&mb.advantages, &[bsz])?);
+        bufs.push(self.rt.upload_f32(&mb.returns, &[bsz])?);
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = self.rt.run_tuple(&self.train, &args)?;
+        if outs.len() != 25 {
+            bail!("train_step returned {} outputs, want 25", outs.len());
+        }
+        for (i, out) in outs[..8].iter().enumerate() {
+            self.params[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outs[8..16].iter().enumerate() {
+            self.m[i] = out.to_vec::<f32>()?;
+        }
+        for (i, out) in outs[16..24].iter().enumerate() {
+            self.v[i] = out.to_vec::<f32>()?;
+        }
+        let s = outs[24].to_vec::<f32>()?;
+        Ok([s[0], s[1], s[2], s[3], s[4], s[5]])
+    }
+}

@@ -1,0 +1,155 @@
+//! Rollout buffer with Generalized Advantage Estimation (GAE-λ).
+
+/// One on-policy rollout (fixed horizon, possibly spanning episodes).
+#[derive(Debug, Clone, Default)]
+pub struct Rollout {
+    pub obs: Vec<f32>, // flattened (n, obs_dim)
+    pub obs_dim: usize,
+    pub actions: Vec<i32>,
+    pub logp: Vec<f32>,
+    pub rewards: Vec<f32>,
+    pub values: Vec<f32>,
+    pub dones: Vec<bool>,
+    /// filled by `finish`
+    pub advantages: Vec<f32>,
+    pub returns: Vec<f32>,
+}
+
+impl Rollout {
+    pub fn new(obs_dim: usize) -> Rollout {
+        Rollout { obs_dim, ..Default::default() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.actions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.actions.is_empty()
+    }
+
+    pub fn push(&mut self, obs: &[f32], action: i32, logp: f32, reward: f32,
+                value: f32, done: bool) {
+        assert_eq!(obs.len(), self.obs_dim);
+        self.obs.extend_from_slice(obs);
+        self.actions.push(action);
+        self.logp.push(logp);
+        self.rewards.push(reward);
+        self.values.push(value);
+        self.dones.push(done);
+    }
+
+    /// Compute GAE advantages and returns. `last_value` bootstraps the
+    /// value beyond the final step (0.0 if it ended an episode).
+    pub fn finish(&mut self, last_value: f32, gamma: f32, lam: f32) {
+        let n = self.len();
+        self.advantages = vec![0.0; n];
+        self.returns = vec![0.0; n];
+        let mut gae = 0.0f32;
+        for i in (0..n).rev() {
+            let next_value = if i + 1 < n {
+                if self.dones[i] { 0.0 } else { self.values[i + 1] }
+            } else if self.dones[i] {
+                0.0
+            } else {
+                last_value
+            };
+            let not_done = if self.dones[i] { 0.0 } else { 1.0 };
+            let delta = self.rewards[i] + gamma * next_value - self.values[i];
+            gae = delta + gamma * lam * not_done * gae;
+            self.advantages[i] = gae;
+            self.returns[i] = gae + self.values[i];
+        }
+    }
+
+    /// Borrow minibatch `k` of `m` equal slices (caller shuffles indices).
+    pub fn minibatch(&self, idx: &[usize]) -> MiniBatch {
+        let mut mb = MiniBatch {
+            obs: Vec::with_capacity(idx.len() * self.obs_dim),
+            actions: Vec::with_capacity(idx.len()),
+            logp: Vec::with_capacity(idx.len()),
+            advantages: Vec::with_capacity(idx.len()),
+            returns: Vec::with_capacity(idx.len()),
+        };
+        for &i in idx {
+            mb.obs
+                .extend_from_slice(&self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]);
+            mb.actions.push(self.actions[i]);
+            mb.logp.push(self.logp[i]);
+            mb.advantages.push(self.advantages[i]);
+            mb.returns.push(self.returns[i]);
+        }
+        mb
+    }
+
+    pub fn clear(&mut self) {
+        let d = self.obs_dim;
+        *self = Rollout::new(d);
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MiniBatch {
+    pub obs: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub logp: Vec<f32>,
+    pub advantages: Vec<f32>,
+    pub returns: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize, reward: f32) -> Rollout {
+        let mut r = Rollout::new(2);
+        for i in 0..n {
+            r.push(&[i as f32, 0.0], 0, -1.0, reward, 0.0, i == n - 1);
+        }
+        r
+    }
+
+    #[test]
+    fn constant_reward_returns_discounted_sum() {
+        let mut r = mk(3, 1.0);
+        r.finish(0.0, 0.5, 1.0);
+        // values are 0 so returns = discounted reward sums:
+        // t2: 1; t1: 1 + .5; t0: 1 + .5 + .25
+        assert!((r.returns[2] - 1.0).abs() < 1e-6);
+        assert!((r.returns[1] - 1.5).abs() < 1e-6);
+        assert!((r.returns[0] - 1.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn perfect_value_function_zeroes_advantage() {
+        let mut r = Rollout::new(1);
+        // deterministic reward 1 each step, gamma=1: value-to-go = n-i
+        for i in 0..4 {
+            r.push(&[0.0], 0, 0.0, 1.0, (4 - i) as f32, i == 3);
+        }
+        r.finish(0.0, 1.0, 0.95);
+        for (i, a) in r.advantages.iter().enumerate() {
+            assert!(a.abs() < 1e-5, "adv[{i}]={a}");
+        }
+    }
+
+    #[test]
+    fn done_stops_bootstrap() {
+        let mut r = Rollout::new(1);
+        r.push(&[0.0], 0, 0.0, 0.0, 0.0, true);
+        r.push(&[0.0], 0, 0.0, 10.0, 0.0, true);
+        r.finish(99.0, 1.0, 1.0);
+        // Step 0 must not see step 1's reward across the episode boundary.
+        assert!((r.advantages[0] - 0.0).abs() < 1e-6);
+        assert!((r.advantages[1] - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minibatch_gathers_rows() {
+        let mut r = mk(5, 1.0);
+        r.finish(0.0, 0.9, 0.9);
+        let mb = r.minibatch(&[4, 0]);
+        assert_eq!(mb.obs, vec![4.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mb.actions.len(), 2);
+    }
+}

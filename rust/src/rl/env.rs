@@ -1,0 +1,374 @@
+//! RL environment (§V, Fig 10): the serving system as an MDP.
+//!
+//! The agent replaces the hand-tuned scheme: each second it observes load/
+//! fleet/cost state and picks a joint action (VM scale delta × offload
+//! policy). Dynamics are a fluid-flow (per-second aggregate) version of the
+//! discrete-event simulator — the standard fidelity/speed trade for RL
+//! training loops, and the request-level sim stays available for final
+//! evaluation of the learned policy.
+//!
+//! obs (16 dims, all roughly [0,1]-normalized) — matches
+//! python/compile/ppo.py::OBS_DIM:
+//!   0 rate_1s/rate_scale        8 queue/100
+//!   1 rate_ewma/rate_scale      9 lambda share (recent)
+//!   2 rate_pred/rate_scale     10 cost rate (norm)
+//!   3 peak_to_median/4         11 violations (recent, norm)
+//!   4 utilization              12 strict share of arrivals
+//!   5 vms_running/fleet_scale  13 sin(time of day)
+//!   6 vms_booting/fleet_scale  14 cos(time of day)
+//!   7 free_slots/(slots*fleet) 15 bias (1.0)
+//!
+//! act (9 = 3x3) — matches ACT_DIM:
+//!   vm_delta ∈ {-1, 0, +1} (in units of ~5% of fleet, min 1)
+//!   offload  ∈ {None, StrictOnly, All}
+
+use crate::cloud::pricing::VmType;
+use crate::cloud::serverless::LambdaFn;
+use crate::models::Registry;
+use crate::scheduler::{LoadMonitor, OffloadPolicy};
+use crate::trace::Trace;
+use crate::util::rng::Pcg;
+
+pub const OBS_DIM: usize = 16;
+pub const ACT_DIM: usize = 9;
+
+/// Penalty per SLO violation, in USD-equivalents (tunes the cost/SLO
+/// trade-off; the paper's reward couples cost with QoS).
+pub const VIOLATION_PENALTY_USD: f64 = 0.0005;
+
+pub fn decode_action(a: usize) -> (i32, OffloadPolicy) {
+    assert!(a < ACT_DIM);
+    let delta = (a / 3) as i32 - 1;
+    let off = match a % 3 {
+        0 => OffloadPolicy::None,
+        1 => OffloadPolicy::StrictOnly,
+        _ => OffloadPolicy::All,
+    };
+    (delta, off)
+}
+
+/// Fluid-flow serving environment over one trace.
+pub struct ServeEnv {
+    trace: Trace,
+    vm: &'static VmType,
+    /// service time of the representative model, seconds
+    service_s: f64,
+    slots: u32,
+    lambda: LambdaFn,
+    strict_share: f64,
+    rate_scale: f64,
+    fleet_scale: f64,
+
+    // dynamic state
+    t: usize,
+    running: u32,
+    /// boot countdowns, seconds remaining
+    booting: Vec<u32>,
+    queue_strict: f64,
+    queue_relaxed: f64,
+    monitor: LoadMonitor,
+    rng: Pcg,
+    recent_lambda: f64,
+    recent_viol: f64,
+    pub episode_cost: f64,
+    pub episode_violations: f64,
+    pub episode_requests: f64,
+}
+
+/// Per-step outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct StepResult {
+    pub reward: f64,
+    pub cost_usd: f64,
+    pub violations: f64,
+    pub done: bool,
+}
+
+const BOOT_S: u32 = 100;
+
+impl ServeEnv {
+    /// `model_idx` picks the representative pool model the workload runs.
+    pub fn new(reg: &Registry, trace: Trace, model_idx: usize, seed: u64) -> ServeEnv {
+        let vm = crate::cloud::default_vm_type();
+        let m = &reg.models[model_idx];
+        let mean = trace.mean_rate();
+        let service_s = m.service_time_s(vm);
+        let slots = m.slots_on(vm);
+        // Lambda sized for a sub-second strict SLO, else max memory.
+        let lambda = m.lambda_for_slo(1000.0).unwrap_or_else(|| m.lambda_at(3.0));
+        let fleet_scale = (mean * service_s / slots as f64).max(1.0) * 2.0;
+        ServeEnv {
+            trace,
+            vm,
+            service_s,
+            slots,
+            lambda,
+            strict_share: 0.5,
+            rate_scale: (mean * 2.0).max(1.0),
+            fleet_scale,
+            t: 0,
+            running: 0,
+            booting: Vec::new(),
+            queue_strict: 0.0,
+            queue_relaxed: 0.0,
+            monitor: LoadMonitor::new(),
+            rng: Pcg::new(seed, 0xe9f),
+            recent_lambda: 0.0,
+            recent_viol: 0.0,
+            episode_cost: 0.0,
+            episode_violations: 0.0,
+            episode_requests: 0.0,
+        }
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.trace.duration_s()
+    }
+
+    /// Reset to t=0 with a warm steady-state fleet.
+    pub fn reset(&mut self) -> [f32; OBS_DIM] {
+        self.t = 0;
+        let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
+        self.running = ((rate0 * self.service_s / self.slots as f64).ceil() as u32).max(1);
+        self.booting.clear();
+        self.queue_strict = 0.0;
+        self.queue_relaxed = 0.0;
+        self.monitor = LoadMonitor::new();
+        self.recent_lambda = 0.0;
+        self.recent_viol = 0.0;
+        self.episode_cost = 0.0;
+        self.episode_violations = 0.0;
+        self.episode_requests = 0.0;
+        self.observe(rate0, 0.0)
+    }
+
+    fn observe(&self, rate_now: f64, lambda_share: f64) -> [f32; OBS_DIM] {
+        let cap = self.running as f64 * self.slots as f64 / self.service_s;
+        let util = if cap > 0.0 { (rate_now / cap).min(1.5) } else { 1.5 };
+        let free = (cap - rate_now).max(0.0);
+        let tod = 2.0 * std::f64::consts::PI * self.t as f64
+            / self.trace.duration_s().max(1) as f64;
+        let queue = self.queue_strict + self.queue_relaxed;
+        [
+            (rate_now / self.rate_scale) as f32,
+            (self.monitor.rate_ewma() / self.rate_scale) as f32,
+            (self.monitor.rate_pred(BOOT_S as f64 / 2.0) / self.rate_scale) as f32,
+            (self.monitor.peak_to_median() / 4.0) as f32,
+            util as f32,
+            (self.running as f64 / self.fleet_scale) as f32,
+            (self.booting.len() as f64 / self.fleet_scale) as f32,
+            (free / (self.fleet_scale * self.slots as f64)) as f32,
+            (queue / 100.0).min(2.0) as f32,
+            lambda_share as f32,
+            (self.recent_viol).min(2.0) as f32,
+            self.recent_lambda as f32,
+            self.strict_share as f32,
+            tod.sin() as f32,
+            tod.cos() as f32,
+            1.0,
+        ]
+    }
+
+    /// Advance one second under action `a`.
+    pub fn step(&mut self, a: usize) -> ([f32; OBS_DIM], StepResult) {
+        let (delta, offload) = decode_action(a);
+        // Apply scaling action.
+        if delta > 0 {
+            let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
+            for _ in 0..step {
+                self.booting.push(BOOT_S);
+            }
+        } else if delta < 0 {
+            let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
+            // Cancel boots first, then drain running VMs.
+            let cancel = step.min(self.booting.len() as u32);
+            for _ in 0..cancel {
+                self.booting.pop();
+            }
+            self.running = self.running.saturating_sub(step - cancel).max(1);
+        }
+        // Boots progress.
+        for b in &mut self.booting {
+            *b -= 1;
+        }
+        let done_boots = self.booting.iter().filter(|&&b| b == 0).count() as u32;
+        self.booting.retain(|&b| b > 0);
+        self.running += done_boots;
+
+        // Arrivals this second.
+        let rate = self.trace.rates.get(self.t).copied().unwrap_or(0.0);
+        let arrivals = self.rng.poisson(rate) as f64;
+        for _ in 0..arrivals as u64 {
+            self.monitor.on_arrival();
+        }
+        self.monitor.tick();
+        let strict_arr = arrivals * self.strict_share;
+        let relaxed_arr = arrivals - strict_arr;
+        self.episode_requests += arrivals;
+
+        // VM service capacity this second (fluid).
+        let cap = self.running as f64 * self.slots as f64 / self.service_s;
+        let mut viol = 0.0;
+        let mut lambda_n = 0.0;
+
+        // Serve queued first (FIFO priority), then arrivals.
+        let mut remaining_cap = cap;
+        let serve = |q: &mut f64, cap: &mut f64| {
+            let s = q.min(*cap);
+            *q -= s;
+            *cap -= s;
+            s
+        };
+        serve(&mut self.queue_strict, &mut remaining_cap);
+        serve(&mut self.queue_relaxed, &mut remaining_cap);
+
+        let mut new_strict = strict_arr;
+        let mut new_relaxed = relaxed_arr;
+        serve(&mut new_strict, &mut remaining_cap);
+        serve(&mut new_relaxed, &mut remaining_cap);
+
+        // Overflow: offload per policy (the valve also drains the standing
+        // queue — once a scheme decides to use lambdas, queued requests go
+        // first), else queue.
+        match offload {
+            OffloadPolicy::All => {
+                lambda_n += new_strict + new_relaxed + self.queue_strict + self.queue_relaxed;
+                new_strict = 0.0;
+                new_relaxed = 0.0;
+                self.queue_strict = 0.0;
+                self.queue_relaxed = 0.0;
+            }
+            OffloadPolicy::StrictOnly => {
+                lambda_n += new_strict + self.queue_strict;
+                new_strict = 0.0;
+                self.queue_strict = 0.0;
+            }
+            OffloadPolicy::None => {}
+        }
+
+        // Newly-queued strict work violates its sub-second SLO by
+        // construction; newly-queued relaxed work violates when the queue's
+        // fluid wait (queue/capacity seconds) exceeds ~4 s. Counted once
+        // per request, at queueing time.
+        viol += new_strict;
+        let wait_s = if cap > 0.0 {
+            ((self.queue_relaxed + new_relaxed) / cap).min(600.0)
+        } else {
+            600.0
+        };
+        if wait_s > 4.0 {
+            viol += new_relaxed;
+        }
+        self.queue_strict += new_strict;
+        self.queue_relaxed += new_relaxed;
+
+        // Costs: per-second VM + per-invocation lambda (warm-dominated;
+        // fluid model folds cold starts into a 5% premium).
+        let vm_cost = (self.running as f64 + self.booting.len() as f64)
+            * self.vm.price.per_second();
+        let lambda_cost = lambda_n * self.lambda.invoke_cost(false) * 1.05;
+        let cost = vm_cost + lambda_cost;
+
+        self.recent_lambda = 0.9 * self.recent_lambda
+            + 0.1 * if arrivals > 0.0 { lambda_n / arrivals } else { 0.0 };
+        self.recent_viol = 0.9 * self.recent_viol
+            + 0.1 * if arrivals > 0.0 { viol / arrivals } else { 0.0 };
+        self.episode_cost += cost;
+        self.episode_violations += viol;
+
+        let reward = -(cost + viol * VIOLATION_PENALTY_USD) * 100.0;
+        self.t += 1;
+        let done = self.t >= self.trace.duration_s();
+        let obs = self.observe(rate, self.recent_lambda);
+        (obs, StepResult { reward, cost_usd: cost, violations: viol, done })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generators;
+
+    fn env() -> ServeEnv {
+        let reg = Registry::builtin();
+        let trace = generators::constant(50.0, 200);
+        ServeEnv::new(&reg, trace, 3, 7)
+    }
+
+    #[test]
+    fn action_decoding_covers_space() {
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..ACT_DIM {
+            seen.insert(format!("{:?}", decode_action(a)));
+        }
+        assert_eq!(seen.len(), ACT_DIM);
+        assert_eq!(decode_action(4), (0, OffloadPolicy::StrictOnly));
+    }
+
+    #[test]
+    fn reset_gives_normalized_obs() {
+        let mut e = env();
+        let obs = e.reset();
+        assert_eq!(obs.len(), OBS_DIM);
+        for (i, &x) in obs.iter().enumerate() {
+            assert!(x.is_finite() && x.abs() <= 4.0, "obs[{i}]={x}");
+        }
+        assert_eq!(obs[15], 1.0, "bias term");
+    }
+
+    #[test]
+    fn steady_policy_keeps_low_violations() {
+        let mut e = env();
+        e.reset();
+        let mut viol = 0.0;
+        let mut cost = 0.0;
+        for _ in 0..e.horizon() {
+            // hold fleet, offload strict overflow
+            let (_, r) = e.step(4);
+            viol += r.violations;
+            cost += r.cost_usd;
+        }
+        assert!(cost > 0.0);
+        assert!(
+            viol / e.episode_requests < 0.05,
+            "warm fleet on flat load should rarely violate: {}",
+            viol / e.episode_requests
+        );
+    }
+
+    #[test]
+    fn scaling_down_hard_causes_violations_or_lambda_cost() {
+        let mut shrink = env();
+        shrink.reset();
+        for _ in 0..shrink.horizon() {
+            shrink.step(0); // scale down, no offload
+        }
+        let mut hold = env();
+        hold.reset();
+        for _ in 0..hold.horizon() {
+            hold.step(4);
+        }
+        assert!(
+            shrink.episode_violations > hold.episode_violations * 2.0 + 1.0,
+            "draining the fleet must hurt SLOs: {} vs {}",
+            shrink.episode_violations,
+            hold.episode_violations
+        );
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut e = env();
+        e.reset();
+        let mut steps = 0;
+        loop {
+            let (_, r) = e.step(4);
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps <= e.horizon());
+        }
+        assert_eq!(steps, e.horizon());
+    }
+}

@@ -1,0 +1,18 @@
+//! Reinforcement-learning controller (paper §V, Fig 10).
+//!
+//! The paper sketches a PPO-based self-managing controller; this module is
+//! the complete implementation: a gym-style serving environment over the
+//! cloud substrate ([`env`]), GAE rollouts ([`buffer`]), heuristic
+//! yardsticks ([`baselines`]) and the PPO driver ([`agent`]) whose forward
+//! pass *and* train step execute AOT-compiled JAX/Pallas artifacts via
+//! PJRT — no Python at run time.
+
+pub mod agent;
+pub mod baselines;
+pub mod buffer;
+pub mod env;
+pub mod trainer;
+
+pub use agent::{PpoAgent, UpdateStats};
+pub use buffer::Rollout;
+pub use env::{ServeEnv, ACT_DIM, OBS_DIM};

@@ -1,0 +1,89 @@
+//! PPO training loop: collect fixed-horizon rollouts from the serving env,
+//! update through the AOT train step, track the learning curve (Fig 10).
+
+use super::agent::PpoAgent;
+use super::buffer::Rollout;
+use super::env::ServeEnv;
+use anyhow::Result;
+
+/// One training iteration's summary.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    pub mean_reward: f64,
+    pub mean_cost_usd: f64,
+    pub mean_violation_rate: f64,
+    pub loss: f64,
+    pub entropy: f64,
+    pub approx_kl: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// env steps per rollout (multiple of the AOT minibatch size).
+    pub horizon: usize,
+    pub epochs: usize,
+    pub iterations: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { horizon: 1024, epochs: 4, iterations: 20 }
+    }
+}
+
+/// Train `agent` on `env`; returns the per-iteration learning curve.
+/// Episodes restart inside the rollout whenever the env reaches its
+/// horizon (classic fixed-horizon PPO).
+pub fn train(env: &mut ServeEnv, agent: &mut PpoAgent, cfg: &TrainConfig)
+             -> Result<Vec<IterStats>> {
+    assert!(cfg.horizon % agent.minibatch_size() == 0,
+            "horizon must be a multiple of the AOT minibatch");
+    let mut curve = Vec::with_capacity(cfg.iterations);
+    let mut obs = env.reset().to_vec();
+    let mut ep_costs: Vec<f64> = Vec::new();
+    let mut ep_viols: Vec<f64> = Vec::new();
+    let mut ep_reqs: Vec<f64> = Vec::new();
+
+    for iter in 0..cfg.iterations {
+        let mut roll = Rollout::new(agent.obs_dim());
+        let mut reward_sum = 0.0;
+        ep_costs.clear();
+        ep_viols.clear();
+        ep_reqs.clear();
+        for _ in 0..cfg.horizon {
+            let (a, logp, value) = agent.act(&obs)?;
+            let (next, r) = env.step(a);
+            roll.push(&obs, a as i32, logp, r.reward as f32, value, r.done);
+            reward_sum += r.reward as f64;
+            if r.done {
+                ep_costs.push(env.episode_cost);
+                ep_viols.push(env.episode_violations);
+                ep_reqs.push(env.episode_requests);
+                obs = env.reset().to_vec();
+            } else {
+                obs = next.to_vec();
+            }
+        }
+        // Bootstrap value for the unfinished tail.
+        let (_, last_v) = agent.policy(&obs)?;
+        roll.finish(last_v, agent.gamma, agent.lam);
+        let stats = agent.update(&roll, cfg.epochs)?;
+
+        let n_ep = ep_costs.len().max(1) as f64;
+        curve.push(IterStats {
+            iter,
+            mean_reward: reward_sum / cfg.horizon as f64,
+            mean_cost_usd: ep_costs.iter().sum::<f64>() / n_ep,
+            mean_violation_rate: if ep_reqs.iter().sum::<f64>() > 0.0 {
+                ep_viols.iter().sum::<f64>() / ep_reqs.iter().sum::<f64>()
+            } else {
+                0.0
+            },
+            loss: stats.loss,
+            entropy: stats.entropy,
+            approx_kl: stats.approx_kl,
+        });
+    }
+    Ok(curve)
+}

@@ -1,0 +1,126 @@
+//! Inference engine thread: multi-threaded access to the (!Send) PJRT
+//! runtime.
+//!
+//! One dedicated thread owns the `Runtime` and every `LoadedModel`; serving
+//! workers hold a cheap, cloneable [`EngineHandle`] and submit batches over
+//! an mpsc channel. The PJRT CPU client parallelizes each execution across
+//! host cores internally, so a single execution thread is the right shape:
+//! concurrency is managed upstream by the batcher, not by racing executes.
+
+use super::{InferOutput, Runtime};
+use crate::models::Registry;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Cmd {
+    Infer {
+        model: usize,
+        input: Vec<f32>,
+        n: usize,
+        resp: mpsc::Sender<Result<InferOutput>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Cmd>,
+    /// models loaded in the engine: idx -> name
+    pub models: BTreeMap<usize, String>,
+    pub input_dim: usize,
+    pub num_classes: usize,
+}
+
+impl EngineHandle {
+    /// Blocking inference of `n` rows (row-major `n * input_dim`).
+    pub fn infer(&self, model: usize, input: Vec<f32>, n: usize) -> Result<InferOutput> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Infer { model, input, n, resp: tx })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().context("engine dropped response")?
+    }
+}
+
+/// The engine thread itself; dropping joins (after a Shutdown).
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start an engine serving `model_indices` from `artifacts_dir`.
+    pub fn start(artifacts_dir: PathBuf, reg: Registry,
+                 model_indices: Vec<usize>) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<BTreeMap<usize, String>>>();
+        let input_dim = reg.input_dim;
+        let num_classes = reg.num_classes;
+
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                // Build the runtime ON this thread (PjRtClient is !Send).
+                let rt = match Runtime::new(&artifacts_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut loaded = BTreeMap::new();
+                let mut names = BTreeMap::new();
+                for idx in model_indices {
+                    match rt.load_model(&reg, idx) {
+                        Ok(m) => {
+                            names.insert(idx, m.name.clone());
+                            loaded.insert(idx, m);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+                let _ = ready_tx.send(Ok(names));
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Shutdown => break,
+                        Cmd::Infer { model, input, n, resp } => {
+                            let out = match loaded.get(&model) {
+                                Some(m) => rt.infer(m, &input, n),
+                                None => Err(anyhow::anyhow!("model {model} not loaded")),
+                            };
+                            let _ = resp.send(out);
+                        }
+                    }
+                }
+            })
+            .context("spawning engine thread")?;
+
+        let models = ready_rx
+            .recv()
+            .context("engine thread died during init")??;
+        Ok(Engine {
+            handle: EngineHandle { tx, models, input_dim, num_classes },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only bridge between the rust request path and the build-time
+//! Python world: `make artifacts` lowers the JAX/Pallas graphs to
+//! `artifacts/*.hlo.txt`; this module compiles them once on the PJRT CPU
+//! client and executes them with device-resident weight buffers.
+//!
+//! Interchange is HLO *text* (see DESIGN.md): `HloModuleProto::from_text_file`
+//! reassigns instruction ids, sidestepping the 64-bit-id protos jax >= 0.5
+//! emits that xla_extension 0.5.1 rejects.
+//!
+//! Thread model: `xla::PjRtClient` is `Rc`-based (`!Send`), so a `Runtime`
+//! lives on one thread. Multi-threaded serving goes through
+//! [`engine::EngineHandle`], a channel-backed handle to a dedicated engine
+//! thread that owns the `Runtime` (the PJRT CPU client already parallelizes
+//! each execution across cores, so one execution thread sits at roughly
+//! hardware capacity).
+
+pub mod engine;
+
+use crate::models::Registry;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Output of one inference execution.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    /// Class probabilities, row-major (batch, num_classes).
+    pub probs: Vec<f32>,
+    pub batch: usize,
+    pub num_classes: usize,
+    /// Device execution time (excludes queueing), milliseconds.
+    pub exec_ms: f64,
+}
+
+/// A compiled artifact plus the device-resident weight buffers it needs.
+pub struct LoadedModel {
+    /// model index in the registry
+    pub idx: usize,
+    pub name: String,
+    /// executables per batch size
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// weight buffers, in artifact argument order
+    params: Vec<xla::PjRtBuffer>,
+    pub num_classes: usize,
+    pub input_dim: usize,
+}
+
+impl LoadedModel {
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch size >= n (requests are padded up to it).
+    pub fn batch_for(&self, n: usize) -> Option<usize> {
+        self.exes.keys().copied().find(|&b| b >= n)
+    }
+}
+
+/// Single-threaded PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Compile an HLO-text artifact (path relative to the artifacts dir).
+    pub fn compile(&self, rel_path: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts_dir.join(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {rel_path}"))
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Read a concatenated-f32-LE weights blob into per-tensor buffers.
+    pub fn upload_params_bin(&self, rel_path: &str, shapes: &[Vec<usize>])
+                             -> Result<Vec<xla::PjRtBuffer>> {
+        let path = self.artifacts_dir.join(rel_path);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        if floats.len() != total {
+            bail!("{path:?}: {} f32s but shapes want {total}", floats.len());
+        }
+        let mut bufs = Vec::with_capacity(shapes.len());
+        let mut off = 0;
+        for shape in shapes {
+            let n: usize = shape.iter().product();
+            bufs.push(self.upload_f32(&floats[off..off + n], shape)?);
+            off += n;
+        }
+        Ok(bufs)
+    }
+
+    /// Execute and unwrap the 1-level output tuple into literals.
+    /// All artifacts are lowered with `return_tuple=True`.
+    pub fn run_tuple(&self, exe: &xla::PjRtLoadedExecutable,
+                     args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = exe.execute_b(args).context("PJRT execute")?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Load one pool model: all batch-size executables + weights.
+    pub fn load_model(&self, reg: &Registry, idx: usize) -> Result<LoadedModel> {
+        let prof = &reg.models[idx];
+        if prof.hlo_files.is_empty() {
+            bail!("model {} has no artifacts — run `make artifacts`", prof.name);
+        }
+        let mut exes = BTreeMap::new();
+        for (&batch, rel) in &prof.hlo_files {
+            exes.insert(batch, self.compile(rel)?);
+        }
+        let params_bin = prof
+            .params_bin
+            .as_ref()
+            .with_context(|| format!("model {} missing params_bin", prof.name))?;
+        let params = self.upload_params_bin(params_bin, &prof.param_shapes)?;
+        Ok(LoadedModel {
+            idx,
+            name: prof.name.clone(),
+            exes,
+            params,
+            num_classes: reg.num_classes,
+            input_dim: reg.input_dim,
+        })
+    }
+
+    /// Run one padded batch through a loaded model. `input` is row-major
+    /// (n, input_dim) with n <= the largest compiled batch size.
+    pub fn infer(&self, model: &LoadedModel, input: &[f32], n: usize) -> Result<InferOutput> {
+        if n == 0 || input.len() != n * model.input_dim {
+            bail!("bad input: n={n} len={} input_dim={}", input.len(), model.input_dim);
+        }
+        let batch = model
+            .batch_for(n)
+            .with_context(|| format!("batch {n} exceeds compiled sizes {:?}",
+                                     model.batch_sizes()))?;
+        // Pad to the compiled batch with zeros.
+        let padded;
+        let data: &[f32] = if batch == n {
+            input
+        } else {
+            let mut p = vec![0.0f32; batch * model.input_dim];
+            p[..input.len()].copy_from_slice(input);
+            padded = p;
+            &padded
+        };
+        let x = self.upload_f32(data, &[batch, model.input_dim])?;
+        let mut args: Vec<&xla::PjRtBuffer> = model.params.iter().collect();
+        args.push(&x);
+        let t0 = Instant::now();
+        let exe = &model.exes[&batch];
+        let outs = self.run_tuple(exe, &args)?;
+        let exec_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let probs_all = outs[0].to_vec::<f32>()?;
+        Ok(InferOutput {
+            probs: probs_all[..n * model.num_classes].to_vec(),
+            batch,
+            num_classes: model.num_classes,
+            exec_ms,
+        })
+    }
+}

@@ -1,0 +1,142 @@
+//! Load monitor (§III-B2): tracks arrival rate, trend and peak-to-median
+//! over sampling windows; feeds every scheme's scaling decision and the
+//! mixed/paragon offload gate (Observation 4).
+
+use crate::util::stats::{linreg, Ewma, Window};
+
+/// Per-tick arrival-rate statistics.
+#[derive(Debug, Clone)]
+pub struct LoadMonitor {
+    /// per-second arrival counts, sliding window
+    window: Window,
+    ewma: Ewma,
+    /// arrivals since the last tick
+    pending: u64,
+    last_rate: f64,
+}
+
+/// Window length (seconds) for trend / peak-to-median estimation; roughly
+/// the VM provisioning horizon so predictions cover the blind spot.
+pub const MONITOR_WINDOW_S: usize = 120;
+
+impl Default for LoadMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LoadMonitor {
+    pub fn new() -> Self {
+        LoadMonitor {
+            window: Window::new(MONITOR_WINDOW_S),
+            ewma: Ewma::new(0.15),
+            pending: 0,
+            last_rate: 0.0,
+        }
+    }
+
+    /// Record one request arrival.
+    pub fn on_arrival(&mut self) {
+        self.pending += 1;
+    }
+
+    /// Close the current 1-second bucket. Call exactly once per sim second.
+    pub fn tick(&mut self) {
+        let rate = self.pending as f64;
+        self.pending = 0;
+        self.last_rate = rate;
+        self.window.push(rate);
+        self.ewma.push(rate);
+    }
+
+    /// Arrivals during the last closed second.
+    pub fn rate_1s(&self) -> f64 {
+        self.last_rate
+    }
+
+    /// Smoothed arrival rate.
+    pub fn rate_ewma(&self) -> f64 {
+        self.ewma.get()
+    }
+
+    /// Linear-trend forecast `lead_s` seconds ahead (clamped at >= 0);
+    /// what predictive provisioning (exascale) keys on.
+    pub fn rate_pred(&self, lead_s: f64) -> f64 {
+        let n = self.window.len();
+        if n < 10 {
+            return self.rate_ewma();
+        }
+        let xs: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let ys: Vec<f64> = self.window.iter().collect();
+        let (a, b) = linreg(&xs, &ys);
+        (a + b * ((n - 1) as f64 + lead_s)).max(0.0)
+    }
+
+    /// Peak-to-median over the sampling window (Observation 4's statistic).
+    pub fn peak_to_median(&self) -> f64 {
+        if self.window.len() < 10 {
+            return 1.0;
+        }
+        self.window.peak_to_median()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(m: &mut LoadMonitor, rates: &[u64]) {
+        for &r in rates {
+            for _ in 0..r {
+                m.on_arrival();
+            }
+            m.tick();
+        }
+    }
+
+    #[test]
+    fn rate_tracking() {
+        let mut m = LoadMonitor::new();
+        feed(&mut m, &[10, 10, 10]);
+        assert_eq!(m.rate_1s(), 10.0);
+        assert!((m.rate_ewma() - 10.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn prediction_extrapolates_ramp() {
+        let mut m = LoadMonitor::new();
+        let ramp: Vec<u64> = (0..60).map(|i| 10 + i).collect();
+        feed(&mut m, &ramp);
+        // rate is ~69 now, slope 1/s: 30s ahead should be ~99.
+        let pred = m.rate_pred(30.0);
+        assert!((pred - 99.0).abs() < 8.0, "pred={pred}");
+    }
+
+    #[test]
+    fn prediction_never_negative() {
+        let mut m = LoadMonitor::new();
+        let fall: Vec<u64> = (0..60).map(|i| 60u64.saturating_sub(i)).collect();
+        feed(&mut m, &fall);
+        assert!(m.rate_pred(300.0) >= 0.0);
+    }
+
+    #[test]
+    fn p2m_flat_vs_spiky() {
+        let mut flat = LoadMonitor::new();
+        feed(&mut flat, &vec![50; 60]);
+        assert!((flat.peak_to_median() - 1.0).abs() < 0.05);
+
+        let mut spiky = LoadMonitor::new();
+        let mut pattern = vec![50u64; 50];
+        pattern.extend([200; 10]);
+        feed(&mut spiky, &pattern);
+        assert!(spiky.peak_to_median() > 2.0);
+    }
+
+    #[test]
+    fn cold_start_defaults() {
+        let m = LoadMonitor::new();
+        assert_eq!(m.rate_1s(), 0.0);
+        assert_eq!(m.peak_to_median(), 1.0);
+    }
+}

@@ -1,0 +1,74 @@
+//! `mixed`: MArk/Spock-style procurement (paper §II-D, refs [12][13]) —
+//! VMs scale reactively for the base load; *any* request that cannot get a
+//! VM slot right now is offloaded to a serverless function, hiding the VM
+//! provisioning latency. Violations drop (≈exascale) at ≈reactive VM cost,
+//! but every overflow query pays lambda pricing — wasteful when the
+//! workload's peak-to-median is small (Observation 4, wiki trace), and
+//! wasteful for relaxed queries that could simply have waited (the gap
+//! Paragon closes).
+
+use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use std::collections::BTreeMap;
+
+const DRAIN_COOLDOWN_S: f64 = 60.0;
+
+pub struct Mixed {
+    surplus_since: BTreeMap<usize, Option<f64>>,
+}
+
+impl Mixed {
+    pub fn new() -> Self {
+        Mixed { surplus_since: BTreeMap::new() }
+    }
+}
+
+impl Default for Mixed {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for Mixed {
+    fn name(&self) -> &'static str {
+        "mixed"
+    }
+
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
+        // VM fleet: identical to reactive — lambdas absorb what boots miss.
+        let mut out = Vec::new();
+        for d in obs.demands {
+            let desired = if d.rate <= 0.0 && d.queued == 0 {
+                0
+            } else {
+                // Same stochastic margin + backlog catch-up as reactive.
+                (d.vms_for_rate(d.rate * 1.10) + d.backlog_vms(60.0)).max(1)
+            };
+            let since = self.surplus_since.entry(d.model).or_insert(None);
+            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+        }
+        out
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        OffloadPolicy::All
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::obs_fixture;
+
+    #[test]
+    fn vm_policy_matches_reactive() {
+        let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
+        let mut s = Mixed::new();
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        assert_eq!(s.tick(&obs), vec![Action::Spawn { model: 0, count: 3 }]);
+    }
+
+    #[test]
+    fn offloads_everything() {
+        assert_eq!(Mixed::new().offload(), OffloadPolicy::All);
+    }
+}

@@ -1,0 +1,188 @@
+//! Resource-procurement schemes — the paper's L3 coordination contribution.
+//!
+//! Five schemes, each modeled on the prior work the paper evaluates
+//! (§II-C/§II-D) plus the paper's own Paragon (§IV):
+//!
+//! | scheme      | models                    | VMs                       | serverless            |
+//! |-------------|---------------------------|---------------------------|-----------------------|
+//! | `reactive`  | baseline autoscaler       | scale to current demand   | never                 |
+//! | `util_aware`| threshold autoscalers [14]| scale at 80% utilization  | never                 |
+//! | `exascale`  | predictive w/ headroom [17]| provision above forecast | never                 |
+//! | `mixed`     | MArk [12] / Spock [13]    | reactive                  | offload all overflow  |
+//! | `paragon`   | this paper                | short-horizon predictive  | strict-SLO overflow only, gated by peak-to-median |
+
+pub mod exascale;
+pub mod load_monitor;
+pub mod mixed;
+pub mod paragon;
+pub mod reactive;
+pub mod util_aware;
+
+use crate::cloud::Cluster;
+pub use load_monitor::LoadMonitor;
+
+/// Which queued/overflow requests may be sent to serverless functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// VM-only (reactive / util_aware / exascale).
+    None,
+    /// Only strict-latency queries (paragon: relaxed queries can wait).
+    StrictOnly,
+    /// Any query that cannot get a VM slot now (mixed).
+    All,
+}
+
+/// Per-model-group demand snapshot handed to schemes each tick.
+#[derive(Debug, Clone)]
+pub struct ModelDemand {
+    pub model: usize,
+    /// Arrival rate attributed to this model, req/s (EWMA).
+    pub rate: f64,
+    /// Service time of one query on the configured VM type, seconds.
+    pub service_s: f64,
+    /// Concurrency slots one VM offers this model.
+    pub slots_per_vm: u32,
+    /// Requests currently queued for this model.
+    pub queued: usize,
+}
+
+impl ModelDemand {
+    /// VMs needed to serve `rate` in steady state at full utilization.
+    pub fn vms_for_rate(&self, rate: f64) -> usize {
+        let per_vm = self.slots_per_vm as f64 / self.service_s;
+        (rate / per_vm).ceil() as usize
+    }
+
+    /// Extra VMs needed to drain the current backlog within `drain_s`
+    /// seconds. Rate-only autoscalers never catch up after a ramp: once a
+    /// queue forms, desired == arrival rate keeps the backlog standing
+    /// forever. Every demand-based scheme adds this term.
+    pub fn backlog_vms(&self, drain_s: f64) -> usize {
+        if self.queued == 0 {
+            return 0;
+        }
+        let per_vm = self.slots_per_vm as f64 / self.service_s;
+        (self.queued as f64 / (per_vm * drain_s)).ceil() as usize
+    }
+}
+
+/// Everything a scheme may observe at a tick boundary.
+pub struct SchedObs<'a> {
+    pub now: f64,
+    pub monitor: &'a LoadMonitor,
+    pub demands: &'a [ModelDemand],
+    pub cluster: &'a Cluster,
+}
+
+/// Scaling actions a scheme emits. The simulator (or live serving loop)
+/// applies them; schemes never mutate the fleet directly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    Spawn { model: usize, count: usize },
+    Drain { model: usize, count: usize },
+}
+
+/// A resource-procurement scheme.
+pub trait Scheme {
+    fn name(&self) -> &'static str;
+    /// Called once per second with the current observation.
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action>;
+    /// Current offload policy (queried per overflow request).
+    fn offload(&self) -> OffloadPolicy;
+}
+
+/// Construct a scheme by name (CLI / figures).
+pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
+    match name {
+        "reactive" => Some(Box::new(reactive::Reactive::new())),
+        "util_aware" => Some(Box::new(util_aware::UtilAware::new())),
+        "exascale" => Some(Box::new(exascale::Exascale::new())),
+        "mixed" => Some(Box::new(mixed::Mixed::new())),
+        "paragon" => Some(Box::new(paragon::Paragon::new())),
+        _ => None,
+    }
+}
+
+pub const ALL_SCHEMES: [&str; 5] =
+    ["reactive", "util_aware", "exascale", "mixed", "paragon"];
+
+/// Shared helper: emit Spawn/Drain to move `model`'s fleet toward
+/// `desired`, draining only after `cooldown_s` of sustained surplus
+/// (tracked by the caller via `surplus_since`).
+pub(crate) fn converge(
+    obs: &SchedObs,
+    model: usize,
+    desired: usize,
+    surplus_since: &mut Option<f64>,
+    cooldown_s: f64,
+    out: &mut Vec<Action>,
+) {
+    let alive = obs.cluster.alive(model);
+    if alive < desired {
+        *surplus_since = None;
+        out.push(Action::Spawn { model, count: desired - alive });
+    } else if alive > desired {
+        let since = surplus_since.get_or_insert(obs.now);
+        if obs.now - *since >= cooldown_s {
+            out.push(Action::Drain { model, count: alive - desired });
+            *surplus_since = None;
+        }
+    } else {
+        *surplus_since = None;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::cloud::pricing::default_vm_type;
+
+    /// Build a one-model observation with the given EWMA rate and fleet.
+    pub fn obs_fixture(rate: f64, alive_vms: usize, booted: bool)
+                       -> (LoadMonitor, Vec<ModelDemand>, Cluster) {
+        let mut mon = LoadMonitor::new();
+        for _ in 0..30 {
+            for _ in 0..rate as u64 {
+                mon.on_arrival();
+            }
+            mon.tick();
+        }
+        let demands = vec![ModelDemand {
+            model: 0,
+            rate,
+            service_s: 0.1,
+            slots_per_vm: 2,
+            queued: 0,
+        }];
+        let mut cluster = Cluster::new(1);
+        for _ in 0..alive_vms {
+            cluster.spawn(default_vm_type(), 0, 2, 0.0);
+        }
+        if booted {
+            cluster.tick(1000.0, 0.0, 0.0);
+        }
+        (mon, demands, cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_all() {
+        for n in ALL_SCHEMES {
+            assert_eq!(by_name(n).unwrap().name(), n);
+        }
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn vms_for_rate_ceil() {
+        let d = ModelDemand { model: 0, rate: 0.0, service_s: 0.5, slots_per_vm: 2, queued: 0 };
+        // one VM serves 4 q/s; 9 q/s needs 3 VMs.
+        assert_eq!(d.vms_for_rate(9.0), 3);
+        assert_eq!(d.vms_for_rate(8.0), 2);
+        assert_eq!(d.vms_for_rate(0.0), 0);
+    }
+}

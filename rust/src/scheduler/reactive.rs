@@ -1,0 +1,103 @@
+//! `reactive`: the paper's normalization baseline — scale each model fleet
+//! to the *current* smoothed demand, no prediction, no headroom, no
+//! serverless. Cheap, but every ramp is absorbed as queueing (and SLO
+//! violations) while new VMs boot.
+
+use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use std::collections::BTreeMap;
+
+/// Seconds of sustained surplus before a drain is issued.
+const DRAIN_COOLDOWN_S: f64 = 60.0;
+/// Keep at least one VM per model group that has any demand.
+const MIN_VMS: usize = 1;
+/// Stochastic-headroom margin over the smoothed rate: Poisson arrivals at
+/// rate λ need a little more than λ·S/slots servers to keep queues bounded
+/// (Erlang-C); every production "reactive" autoscaler carries this.
+const MARGIN: f64 = 1.10;
+
+pub struct Reactive {
+    surplus_since: BTreeMap<usize, Option<f64>>,
+}
+
+impl Reactive {
+    pub fn new() -> Self {
+        Reactive { surplus_since: BTreeMap::new() }
+    }
+}
+
+impl Default for Reactive {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for Reactive {
+    fn name(&self) -> &'static str {
+        "reactive"
+    }
+
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
+        let mut out = Vec::new();
+        // Apportion the smoothed total rate across model groups by their
+        // observed shares; demand.rate already carries the per-model EWMA.
+        for d in obs.demands {
+            let desired = if d.rate <= 0.0 && d.queued == 0 {
+                0
+            } else {
+                (d.vms_for_rate(d.rate * MARGIN) + d.backlog_vms(60.0)).max(MIN_VMS)
+            };
+            let since = self.surplus_since.entry(d.model).or_insert(None);
+            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+        }
+        out
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        OffloadPolicy::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::obs_fixture;
+    use crate::scheduler::LoadMonitor;
+
+    #[test]
+    fn scales_to_current_demand_exactly() {
+        let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
+        let mut s = Reactive::new();
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let acts = s.tick(&obs);
+        // ceil(40 q/s * 1.1 margin * 0.1s / 2 slots) = 3 VMs.
+        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 3 }]);
+    }
+
+    #[test]
+    fn drains_only_after_cooldown() {
+        let (mon, demands, cluster) = obs_fixture(40.0, 5, true);
+        let mut s = Reactive::new();
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        assert!(s.tick(&mk(100.0)).is_empty(), "surplus observed, no drain yet");
+        assert!(s.tick(&mk(130.0)).is_empty(), "cooldown not elapsed");
+        let acts = s.tick(&mk(161.0));
+        assert_eq!(acts, vec![Action::Drain { model: 0, count: 2 }]);
+    }
+
+    #[test]
+    fn zero_demand_drops_to_zero() {
+        let (_, mut demands, cluster) = obs_fixture(0.0, 2, true);
+        demands[0].rate = 0.0;
+        let mon = LoadMonitor::new();
+        let mut s = Reactive::new();
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        s.tick(&mk(0.0));
+        let acts = s.tick(&mk(61.0));
+        assert_eq!(acts, vec![Action::Drain { model: 0, count: 2 }]);
+    }
+
+    #[test]
+    fn never_offloads() {
+        assert_eq!(Reactive::new().offload(), OffloadPolicy::None);
+    }
+}

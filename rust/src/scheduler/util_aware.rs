@@ -1,0 +1,139 @@
+//! `util_aware`: threshold autoscaling as in the paper's §II-C — "spawn
+//! VMs if the resource utilization of existing VMs reaches a certain
+//! threshold (80% in most cases)". Keeping the fleet below the threshold
+//! *is* structural headroom: steady-state utilization sits near the
+//! scale-up threshold, i.e. ~1/0.8 = 1.25x the VMs reactive would hold —
+//! the 20-30% over-provisioning of Fig 5.
+
+use super::{Action, OffloadPolicy, SchedObs, Scheme};
+use std::collections::BTreeMap;
+
+/// Scale up when mean utilization crosses this (the paper's "80%").
+const UTIL_HIGH: f64 = 0.80;
+/// Scale down only when utilization falls below this...
+const UTIL_LOW: f64 = 0.50;
+/// ...for this long (threshold autoscalers drain timidly).
+const DRAIN_COOLDOWN_S: f64 = 60.0;
+/// Per-step growth: a fraction of the current fleet (AWS-ASG-like).
+const GROW_STEP: f64 = 0.20;
+/// Minimum time between scale-up steps per model (ASG scale-up cooldown).
+/// Without this, the booting-blind 100% utilization reading would compound
+/// a +25% step every second of a 100 s boot — exactly the blow-up real
+/// ASGs prevent with cooldowns.
+const SPAWN_COOLDOWN_S: f64 = 60.0;
+
+pub struct UtilAware {
+    low_since: BTreeMap<usize, Option<f64>>,
+    last_spawn: BTreeMap<usize, f64>,
+}
+
+impl UtilAware {
+    pub fn new() -> Self {
+        UtilAware { low_since: BTreeMap::new(), last_spawn: BTreeMap::new() }
+    }
+}
+
+impl Default for UtilAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for UtilAware {
+    fn name(&self) -> &'static str {
+        "util_aware"
+    }
+
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
+        let mut out = Vec::new();
+        for d in obs.demands {
+            let alive = obs.cluster.alive(d.model);
+            let util = obs.cluster.utilization(d.model);
+            let low = self.low_since.entry(d.model).or_insert(None);
+            if alive == 0 {
+                if d.rate > 0.0 || d.queued > 0 {
+                    out.push(Action::Spawn { model: d.model, count: d.vms_for_rate(d.rate).max(1) });
+                    self.last_spawn.insert(d.model, obs.now);
+                }
+                *low = None;
+                continue;
+            }
+            let cooled = obs.now - self.last_spawn.get(&d.model).copied().unwrap_or(f64::NEG_INFINITY)
+                >= SPAWN_COOLDOWN_S;
+            if util >= UTIL_HIGH && cooled {
+                // Utilization is a lagging, booting-blind signal
+                // (Observation 3): the scheme can only add a fleet-
+                // proportional step and hope.
+                let step = ((alive as f64 * GROW_STEP).ceil() as usize).max(1);
+                out.push(Action::Spawn { model: d.model, count: step });
+                self.last_spawn.insert(d.model, obs.now);
+                *low = None;
+            } else if util <= UTIL_LOW && alive > 1 {
+                let since = low.get_or_insert(obs.now);
+                if obs.now - *since >= DRAIN_COOLDOWN_S {
+                    // Drain a fleet-proportional step (mirror of the grow
+                    // step), keeping utilization inside the dead band.
+                    let step = ((alive as f64 * 0.15).ceil() as usize).max(1);
+                    out.push(Action::Drain { model: d.model, count: step.min(alive - 1) });
+                    *low = None;
+                }
+            } else {
+                *low = None;
+            }
+        }
+        out
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        OffloadPolicy::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::testutil::obs_fixture;
+
+    #[test]
+    fn spawns_on_high_utilization() {
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 2, true);
+        // Saturate both VMs (4 slots total).
+        for _ in 0..4 {
+            cluster.route(0).unwrap();
+        }
+        let mut s = UtilAware::new();
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let acts = s.tick(&obs);
+        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 1 }]);
+    }
+
+    #[test]
+    fn holds_in_the_dead_band() {
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 2, true);
+        // 2 of 4 slots busy = 50% utilization: between LOW and HIGH.
+        cluster.route(0).unwrap();
+        cluster.route(0).unwrap();
+        let mut s = UtilAware::new();
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        assert!(s.tick(&obs).is_empty());
+    }
+
+    #[test]
+    fn drains_one_at_a_time_after_cooldown() {
+        let (mon, demands, cluster) = obs_fixture(1.0, 3, true); // idle fleet
+        let mut s = UtilAware::new();
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        assert!(s.tick(&mk(10.0)).is_empty());
+        let acts = s.tick(&mk(131.0));
+        assert_eq!(acts, vec![Action::Drain { model: 0, count: 1 }]);
+    }
+
+    #[test]
+    fn cold_start_spawns_for_demand() {
+        let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
+        let mut s = UtilAware::new();
+        let obs = SchedObs { now: 0.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let acts = s.tick(&obs);
+        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 2 }]);
+    }
+}

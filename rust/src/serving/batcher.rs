@@ -1,0 +1,161 @@
+//! Dynamic batcher: per-model queues flushed by size or timeout.
+//!
+//! Classic serving trade-off (Clipper/vLLM-style): larger batches amortize
+//! per-execution overhead and fill the MXU; the timeout bounds the queueing
+//! latency a lone request can suffer. Batches are capped at the largest
+//! AOT-compiled batch size (the runtime pads to the next compiled size).
+
+use super::LiveRequest;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A batch ready for execution.
+pub struct Batch {
+    pub model: usize,
+    pub requests: Vec<LiveRequest>,
+}
+
+/// Per-model pending queues + flush policy. Not thread-safe by itself; the
+/// server wraps it in a mutex and calls `poll` from the batcher loop.
+pub struct Batcher {
+    queues: Vec<VecDeque<LiveRequest>>,
+    max_batch: usize,
+    timeout_ms: f64,
+}
+
+impl Batcher {
+    pub fn new(n_models: usize, max_batch: usize, timeout_ms: f64) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher {
+            queues: (0..n_models).map(|_| VecDeque::new()).collect(),
+            max_batch,
+            timeout_ms,
+        }
+    }
+
+    pub fn push(&mut self, model: usize, req: LiveRequest) {
+        self.queues[model].push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Flush any model whose queue is full-batch-ready or — when
+    /// `allow_partial` — whose oldest request has waited past the timeout.
+    /// `allow_partial` should reflect downstream idleness: flushing a
+    /// timed-out partial batch at a busy executor only shrinks batches
+    /// (they would queue in front of the executor instead of coalescing
+    /// here). Returns at most one batch per call (callers loop); prefers
+    /// the model with the oldest head request so no queue starves.
+    pub fn poll(&mut self, now: Instant, allow_partial: bool) -> Option<Batch> {
+        let mut best: Option<(usize, f64)> = None; // (model, head wait ms)
+        for (m, q) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let wait_ms = now.duration_since(q[0].submitted).as_secs_f64() * 1000.0;
+            let ready = q.len() >= self.max_batch
+                || (allow_partial && wait_ms >= self.timeout_ms);
+            if ready && best.map(|(_, w)| wait_ms > w).unwrap_or(true) {
+                best = Some((m, wait_ms));
+            }
+        }
+        let (model, _) = best?;
+        let q = &mut self.queues[model];
+        let take = q.len().min(self.max_batch);
+        let requests: Vec<LiveRequest> = q.drain(..take).collect();
+        Some(Batch { model, requests })
+    }
+
+    /// Flush everything regardless of readiness (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (m, q) in self.queues.iter_mut().enumerate() {
+            while !q.is_empty() {
+                let take = q.len().min(self.max_batch);
+                out.push(Batch { model: m, requests: q.drain(..take).collect() });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn req(id: u64, submitted: Instant) -> LiveRequest {
+        let (tx, _rx) = mpsc::channel();
+        LiveRequest {
+            id,
+            input: vec![0.0; 4],
+            slo_ms: 1000.0,
+            min_accuracy: 0.0,
+            submitted,
+            resp: tx,
+        }
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let now = Instant::now();
+        let mut b = Batcher::new(2, 4, 100.0);
+        for i in 0..4 {
+            b.push(1, req(i, now));
+        }
+        let batch = b.poll(now, false).expect("full batch flushes immediately");
+        assert_eq!(batch.model, 1);
+        assert_eq!(batch.requests.len(), 4);
+        assert!(b.poll(now, true).is_none());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(1, 8, 5.0);
+        b.push(0, req(0, t0));
+        assert!(b.poll(t0, true).is_none(), "not full, not timed out");
+        let later = t0 + Duration::from_millis(6);
+        assert!(b.poll(later, false).is_none(), "partial flush gated on idle worker");
+        let batch = b.poll(later, true).expect("timeout flushes");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn caps_batch_at_max() {
+        let now = Instant::now();
+        let mut b = Batcher::new(1, 4, 0.0);
+        for i in 0..10 {
+            b.push(0, req(i, now));
+        }
+        let batch = b.poll(now + Duration::from_millis(1), true).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 6);
+    }
+
+    #[test]
+    fn oldest_queue_first() {
+        let t0 = Instant::now();
+        let mut b = Batcher::new(2, 4, 0.0);
+        b.push(1, req(0, t0)); // older
+        b.push(0, req(1, t0 + Duration::from_millis(2)));
+        let batch = b.poll(t0 + Duration::from_millis(5), true).unwrap();
+        assert_eq!(batch.model, 1);
+    }
+
+    #[test]
+    fn drain_all_splits_batches() {
+        let now = Instant::now();
+        let mut b = Batcher::new(1, 4, 1e9);
+        for i in 0..9 {
+            b.push(0, req(i, now));
+        }
+        let batches = b.drain_all();
+        let sizes: Vec<usize> = batches.iter().map(|x| x.requests.len()).collect();
+        assert_eq!(sizes, vec![4, 4, 1]);
+        assert_eq!(b.pending(), 0);
+    }
+}

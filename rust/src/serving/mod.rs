@@ -1,0 +1,49 @@
+//! The *real* serving path: threaded router → dynamic batcher → PJRT
+//! workers, with Python nowhere in sight.
+//!
+//! This is the live counterpart of the simulator: requests carry real
+//! feature vectors, model selection runs the same policy code, batches are
+//! formed dynamically (size- or timeout-triggered), and inference executes
+//! the AOT pallas/JAX artifacts through the PJRT engine thread. The
+//! end-to-end example (`examples/serve_trace.rs`) drives this under a
+//! scaled real-trace workload and reports latency/throughput.
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+
+pub use server::{Server, ServerConfig, ServerStats};
+
+use std::time::Instant;
+
+/// One live inference request.
+pub struct LiveRequest {
+    pub id: u64,
+    /// Flattened input features (input_dim).
+    pub input: Vec<f32>,
+    /// Latency SLO, ms.
+    pub slo_ms: f64,
+    /// Minimum accuracy constraint, percent (0 = unconstrained).
+    pub min_accuracy: f64,
+    pub submitted: Instant,
+    /// Response channel.
+    pub resp: std::sync::mpsc::Sender<LiveResponse>,
+}
+
+/// Response with timing breakdown.
+#[derive(Debug, Clone)]
+pub struct LiveResponse {
+    pub id: u64,
+    /// argmax class
+    pub class: usize,
+    pub probs: Vec<f32>,
+    pub model: usize,
+    /// Time spent queued in the batcher, ms.
+    pub queue_ms: f64,
+    /// Device execution time of the carrying batch, ms.
+    pub exec_ms: f64,
+    /// End-to-end latency (submit -> response ready), ms.
+    pub total_ms: f64,
+    /// Batch size this request rode in.
+    pub batch: usize,
+}

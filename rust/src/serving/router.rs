@@ -1,0 +1,118 @@
+//! Request router: maps each live request to a pool model using the same
+//! selection policies as the simulator (§III-A), restricted to the models
+//! actually loaded in the engine.
+
+use crate::models::{Registry, SelectionPolicy};
+use crate::trace::{Request, Strictness};
+
+/// Stateless routing decision logic (the hot path keeps this allocation-free).
+pub struct Router {
+    /// (model idx, accuracy, service_ms proxy, cost rank) for loaded models,
+    /// ascending cost.
+    candidates: Vec<Candidate>,
+    policy: SelectionPolicy,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Candidate {
+    idx: usize,
+    accuracy: f64,
+    latency_ms: f64,
+    cost: f64,
+}
+
+impl Router {
+    /// `loaded` = model indices available in the engine.
+    pub fn new(reg: &Registry, loaded: &[usize], policy: SelectionPolicy) -> Router {
+        let vm = crate::cloud::default_vm_type();
+        let mut candidates: Vec<Candidate> = loaded
+            .iter()
+            .map(|&idx| {
+                let m = &reg.models[idx];
+                Candidate {
+                    idx,
+                    accuracy: m.accuracy,
+                    latency_ms: m.latency_ms,
+                    cost: m.vm_cost_per_query(vm),
+                }
+            })
+            .collect();
+        candidates.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
+        Router { candidates, policy }
+    }
+
+    /// Pick a model for constraints (slo_ms, min_accuracy).
+    pub fn route(&self, slo_ms: f64, min_accuracy: f64) -> usize {
+        match self.policy {
+            SelectionPolicy::Naive => {
+                // Constraint-oblivious: biggest model loaded.
+                self.candidates
+                    .iter()
+                    .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                    .expect("router has no models")
+                    .idx
+            }
+            SelectionPolicy::Paragon => {
+                // Cheapest candidate meeting both constraints (candidates
+                // are cost-ascending, so first hit wins)...
+                for c in &self.candidates {
+                    if c.accuracy >= min_accuracy && c.latency_ms <= slo_ms {
+                        return c.idx;
+                    }
+                }
+                // ...else most accurate within latency, else fastest.
+                self.candidates
+                    .iter()
+                    .filter(|c| c.latency_ms <= slo_ms)
+                    .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                    .or_else(|| {
+                        self.candidates
+                            .iter()
+                            .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+                    })
+                    .expect("router has no models")
+                    .idx
+            }
+        }
+    }
+
+    /// Convenience for trace-driven load: route a synthesized request.
+    pub fn route_request(&self, r: &Request) -> usize {
+        let _ = matches!(r.strictness, Strictness::Strict);
+        self.route(r.slo_ms, r.min_accuracy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(policy: SelectionPolicy) -> Router {
+        let reg = Registry::builtin();
+        Router::new(&reg, &[0, 1, 3, 4], policy)
+    }
+
+    #[test]
+    fn naive_routes_to_biggest_loaded() {
+        let r = router(SelectionPolicy::Naive);
+        assert_eq!(r.route(100.0, 0.0), 4); // resnet50: biggest loaded
+    }
+
+    #[test]
+    fn paragon_routes_cheapest_feasible() {
+        let r = router(SelectionPolicy::Paragon);
+        assert_eq!(r.route(10_000.0, 0.0), 0);
+        assert_eq!(r.route(10_000.0, 75.0), 3); // resnet18 cheapest >=75
+        assert_eq!(r.route(10_000.0, 80.0), 4); // resnet50
+    }
+
+    #[test]
+    fn paragon_falls_back_gracefully() {
+        let r = router(SelectionPolicy::Paragon);
+        // Impossible accuracy: fall back to most accurate within SLO.
+        let idx = r.route(500.0, 99.0);
+        assert_eq!(idx, 3, "resnet18 is the best <=500ms model loaded");
+        // Impossible latency too: fastest model.
+        assert_eq!(r.route(1.0, 99.0), 0);
+    }
+}

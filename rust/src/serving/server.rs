@@ -1,0 +1,289 @@
+//! The serving front: accepts live requests, routes, batches, executes.
+//!
+//! Topology (all std threads + mpsc — no async runtime in the vendor set,
+//! and none needed at this scale):
+//!
+//! ```text
+//!   clients ──submit──► [ingress mpsc] ──► batcher loop ──► [batch mpsc]
+//!                                                             │
+//!                                              dispatch workers (N)
+//!                                                             │
+//!                                              EngineHandle (PJRT thread)
+//!                                                             │
+//!                                              per-request response mpsc
+//! ```
+//!
+//! The batcher loop owns the router + batcher state; dispatch workers
+//! gather batch inputs, call the engine, and fan results back out.
+
+use super::batcher::{Batch, Batcher};
+use super::router::Router;
+use super::{LiveRequest, LiveResponse};
+use crate::models::{Registry, SelectionPolicy};
+use crate::runtime::engine::EngineHandle;
+use crate::util::stats::LogHistogram;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Largest dynamic batch (<= largest AOT batch size).
+    pub max_batch: usize,
+    /// Batch flush timeout, ms.
+    pub batch_timeout_ms: f64,
+    /// Dispatch workers pulling flushed batches.
+    pub workers: usize,
+    pub selection: SelectionPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 16,
+            batch_timeout_ms: 10.0,
+            workers: 2,
+            selection: SelectionPolicy::Paragon,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    errors: AtomicU64,
+    /// dispatch workers currently blocked waiting for a batch — the
+    /// batcher only flushes timed-out *partial* batches when someone is
+    /// free to run them (full batches always flush).
+    idle_workers: AtomicUsize,
+}
+
+/// Point-in-time server statistics.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch: f64,
+    pub latency_mean_ms: f64,
+    pub latency_p99_ms: f64,
+}
+
+pub struct Server {
+    ingress: mpsc::Sender<LiveRequest>,
+    counters: Arc<Counters>,
+    latency: Arc<Mutex<LogHistogram>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    input_dim: usize,
+}
+
+impl Server {
+    pub fn start(engine: EngineHandle, reg: &Registry, cfg: ServerConfig) -> Server {
+        let loaded: Vec<usize> = engine.models.keys().copied().collect();
+        assert!(!loaded.is_empty(), "engine has no models loaded");
+        let router = Router::new(reg, &loaded, cfg.selection);
+        let n_models = reg.len();
+
+        let (ingress_tx, ingress_rx) = mpsc::channel::<LiveRequest>();
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let counters = Arc::new(Counters::default());
+        let latency = Arc::new(Mutex::new(LogHistogram::latency_ms()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // --- batcher loop -------------------------------------------------
+        {
+            let counters = counters.clone();
+            let stop = stop.clone();
+            let timeout = cfg.batch_timeout_ms;
+            let max_batch = cfg.max_batch;
+            threads.push(
+                std::thread::Builder::new()
+                    .name("batcher".into())
+                    .spawn(move || {
+                        let mut batcher = Batcher::new(n_models, max_batch, timeout);
+                        loop {
+                            // Pull what's arrived (bounded wait keeps the
+                            // timeout flush timely).
+                            match ingress_rx.recv_timeout(Duration::from_millis(1)) {
+                                Ok(req) => {
+                                    let model = router.route(req.slo_ms, req.min_accuracy);
+                                    batcher.push(model, req);
+                                    // Drain any burst without waiting.
+                                    while let Ok(r) = ingress_rx.try_recv() {
+                                        let m = router.route(r.slo_ms, r.min_accuracy);
+                                        batcher.push(m, r);
+                                    }
+                                }
+                                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    for b in batcher.drain_all() {
+                                        let _ = batch_tx.send(b);
+                                    }
+                                    break;
+                                }
+                            }
+                            let now = Instant::now();
+                            let idle = counters.idle_workers.load(Ordering::Relaxed);
+                            let mut flushed = 0usize;
+                            while let Some(b) = batcher.poll(now, flushed < idle) {
+                                flushed += 1;
+                                counters.batches.fetch_add(1, Ordering::Relaxed);
+                                counters
+                                    .batched_requests
+                                    .fetch_add(b.requests.len() as u64, Ordering::Relaxed);
+                                if batch_tx.send(b).is_err() {
+                                    return;
+                                }
+                            }
+                            if stop.load(Ordering::Relaxed) && batcher.pending() == 0 {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // --- dispatch workers ----------------------------------------------
+        for w in 0..cfg.workers {
+            let rx = batch_rx.clone();
+            let engine = engine.clone();
+            let counters = counters.clone();
+            let latency = latency.clone();
+            let input_dim = engine.input_dim;
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("dispatch-{w}"))
+                    .spawn(move || loop {
+                        counters.idle_workers.fetch_add(1, Ordering::Relaxed);
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        counters.idle_workers.fetch_sub(1, Ordering::Relaxed);
+                        let Ok(batch) = batch else { break };
+                        let n = batch.requests.len();
+                        let mut input = Vec::with_capacity(n * input_dim);
+                        for r in &batch.requests {
+                            input.extend_from_slice(&r.input);
+                        }
+                        let t0 = Instant::now();
+                        match engine.infer(batch.model, input, n) {
+                            Ok(out) => {
+                                let done = Instant::now();
+                                for (i, r) in batch.requests.into_iter().enumerate() {
+                                    let probs = out.probs
+                                        [i * out.num_classes..(i + 1) * out.num_classes]
+                                        .to_vec();
+                                    let class = probs
+                                        .iter()
+                                        .enumerate()
+                                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                                        .map(|(c, _)| c)
+                                        .unwrap_or(0);
+                                    let total_ms =
+                                        done.duration_since(r.submitted).as_secs_f64() * 1000.0;
+                                    let queue_ms =
+                                        t0.duration_since(r.submitted).as_secs_f64() * 1000.0;
+                                    latency.lock().unwrap().record(total_ms);
+                                    counters.completed.fetch_add(1, Ordering::Relaxed);
+                                    let _ = r.resp.send(LiveResponse {
+                                        id: r.id,
+                                        class,
+                                        probs,
+                                        model: batch.model,
+                                        queue_ms,
+                                        exec_ms: out.exec_ms,
+                                        total_ms,
+                                        batch: n,
+                                    });
+                                }
+                            }
+                            Err(_) => {
+                                counters.errors.fetch_add(n as u64, Ordering::Relaxed);
+                            }
+                        }
+                    })
+                    .expect("spawn dispatch"),
+            );
+        }
+
+        Server {
+            ingress: ingress_tx,
+            counters,
+            latency,
+            stop,
+            threads,
+            next_id: AtomicU64::new(0),
+            input_dim: engine.input_dim,
+        }
+    }
+
+    /// Submit one request; returns the response receiver.
+    pub fn submit(&self, input: Vec<f32>, slo_ms: f64, min_accuracy: f64)
+                  -> mpsc::Receiver<LiveResponse> {
+        assert_eq!(input.len(), self.input_dim, "bad input width");
+        let (tx, rx) = mpsc::channel();
+        let req = LiveRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            input,
+            slo_ms,
+            min_accuracy,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.ingress.send(req).expect("server stopped");
+        rx
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let lat = self.latency.lock().unwrap();
+        let batches = self.counters.batches.load(Ordering::Relaxed);
+        let batched = self.counters.batched_requests.load(Ordering::Relaxed);
+        ServerStats {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            completed: self.counters.completed.load(Ordering::Relaxed),
+            batches,
+            errors: self.counters.errors.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+            latency_mean_ms: lat.mean(),
+            latency_p99_ms: lat.quantile(99.0),
+        }
+    }
+
+    /// Graceful shutdown: flush pending batches, join all threads.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.stop.store(true, Ordering::Relaxed);
+        let stats_ref = (self.counters.clone(), self.latency.clone());
+        // Closing ingress wakes the batcher's Disconnected arm.
+        drop(std::mem::replace(&mut self.ingress, {
+            let (tx, _) = mpsc::channel();
+            tx
+        }));
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let lat = stats_ref.1.lock().unwrap();
+        let batches = stats_ref.0.batches.load(Ordering::Relaxed);
+        let batched = stats_ref.0.batched_requests.load(Ordering::Relaxed);
+        ServerStats {
+            submitted: stats_ref.0.submitted.load(Ordering::Relaxed),
+            completed: stats_ref.0.completed.load(Ordering::Relaxed),
+            batches,
+            errors: stats_ref.0.errors.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+            latency_mean_ms: lat.mean(),
+            latency_p99_ms: lat.quantile(99.0),
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! The discrete-event engine.
+//!
+//! Three event sources are merged in time order: request arrivals
+//! (pre-synthesized), inference completions (binary heap), and 1 Hz
+//! scheduler ticks. VMs are model-pinned with slot concurrency; overflow
+//! goes to a per-model FIFO queue or — policy permitting — to a serverless
+//! warm pool with cold-start and GB-second billing.
+
+use crate::cloud::pricing::VmType;
+use crate::cloud::serverless::LambdaFn;
+use crate::cloud::Cluster;
+use crate::models::{select, Registry, SelectionPolicy};
+use crate::scheduler::{Action, ModelDemand, OffloadPolicy, SchedObs, Scheme};
+use crate::trace::{Request, Strictness};
+use crate::util::rng::Pcg;
+use crate::util::stats::{LogHistogram, Ewma};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::metrics::SimReport;
+
+/// How each request is mapped to a pool model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Assignment {
+    /// Paper §II-C: "randomly picked from our model pool", restricted to
+    /// models whose VM service time fits the query's SLO.
+    RandomFeasible,
+    /// Model-selection policy (workload-2, Fig 9c).
+    Policy(SelectionPolicy),
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub vm_type: &'static VmType,
+    pub assignment: Assignment,
+    pub seed: u64,
+    /// Start the fleet pre-provisioned for the first second's rate
+    /// (the paper's runs begin from a warm deployment).
+    pub warm_start: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            vm_type: crate::cloud::default_vm_type(),
+            assignment: Assignment::RandomFeasible,
+            seed: 42,
+            warm_start: true,
+        }
+    }
+}
+
+/// f64 time key with total order for the completion heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Debug)]
+struct Completion {
+    at: T,
+    vm_id: u64,
+    model: usize,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.cmp(&other.at)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Queued {
+    slo_ms: f64,
+    arrival: f64,
+    strict: bool,
+}
+
+/// Assign a model to every request up front (deterministic given seed).
+pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<usize> {
+    let mut rng = Pcg::new(cfg.seed, 0xa551);
+    reqs.iter()
+        .map(|r| match cfg.assignment {
+            Assignment::Policy(p) => select(reg, cfg.vm_type, p, r),
+            Assignment::RandomFeasible => {
+                let feasible: Vec<usize> = reg
+                    .models
+                    .iter()
+                    .filter(|m| m.service_time_s(cfg.vm_type) * 1000.0 <= r.slo_ms)
+                    .map(|m| m.idx)
+                    .collect();
+                if feasible.is_empty() {
+                    0
+                } else {
+                    feasible[rng.below(feasible.len() as u64) as usize]
+                }
+            }
+        })
+        .collect()
+}
+
+/// Run `scheme` over the request stream. Requests must be arrival-sorted.
+pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
+                trace_name: &str, cfg: &SimConfig) -> SimReport {
+    let models = assign_models(reqs, reg, cfg);
+    let n_models = reg.len();
+    let service: Vec<f64> = reg.models.iter().map(|m| m.service_time_s(cfg.vm_type)).collect();
+    let slots: Vec<u32> = reg.models.iter().map(|m| m.slots_on(cfg.vm_type)).collect();
+
+    let mut cluster = Cluster::new(cfg.seed ^ 0xc11);
+    let mut monitor = crate::scheduler::LoadMonitor::new();
+    let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
+    let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
+    // Lambda warm pools per (model, memory-tier-bucket). Bucket = mem/0.25.
+    let mut pools: std::collections::BTreeMap<(usize, u32), crate::cloud::WarmPool> =
+        std::collections::BTreeMap::new();
+
+    let mut per_model_rate: Vec<Ewma> = (0..n_models).map(|_| Ewma::new(0.15)).collect();
+    let mut per_model_count: Vec<u64> = vec![0; n_models];
+
+    let mut rep = SimReport {
+        scheme: scheme.name().to_string(),
+        trace: trace_name.to_string(),
+        ..Default::default()
+    };
+    let mut lat_hist = LogHistogram::latency_ms();
+    let mut lat_samples: Vec<f64> = Vec::with_capacity(reqs.len());
+
+    // Warm start: provision the steady-state fleet for the first second.
+    if cfg.warm_start && !reqs.is_empty() {
+        let t_end = reqs.last().unwrap().arrival_s;
+        let first_rate = reqs.iter().take_while(|r| r.arrival_s < 5.0).count() as f64 / 5.0;
+        for m in 0..n_models {
+            let share = models.iter().take(64).filter(|&&x| x == m).count() as f64
+                / models.len().min(64) as f64;
+            let rate_m = first_rate * share;
+            let per_vm = slots[m] as f64 / service[m];
+            let need = (rate_m / per_vm).ceil() as usize;
+            for _ in 0..need {
+                let id = cluster.spawn(cfg.vm_type, m, slots[m], -200.0);
+                let _ = id;
+            }
+        }
+        let _ = t_end;
+        cluster.tick(0.0, 0.0, 0.0); // boots complete before t=0
+    }
+
+    let record = |rep: &mut SimReport, lat_hist: &mut LogHistogram,
+                      lat_samples: &mut Vec<f64>, latency_ms: f64, slo_ms: f64,
+                      strict: bool| {
+        lat_hist.record(latency_ms);
+        lat_samples.push(latency_ms);
+        if latency_ms > slo_ms {
+            rep.violations += 1;
+            if strict {
+                rep.violations_strict += 1;
+            } else {
+                rep.violations_relaxed += 1;
+            }
+        }
+    };
+
+    let mut next_tick = 1.0f64;
+    let mut req_i = 0usize;
+    let horizon = reqs.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+    loop {
+        let t_arr = reqs.get(req_i).map(|r| r.arrival_s).unwrap_or(f64::INFINITY);
+        let t_cmp = completions.peek().map(|Reverse(c)| c.at.0).unwrap_or(f64::INFINITY);
+        let queued_any = queues.iter().any(|q| !q.is_empty());
+        let t_tick = if next_tick <= horizon + 2.0 || queued_any || t_cmp.is_finite() {
+            next_tick
+        } else {
+            f64::INFINITY
+        };
+
+        let now = t_arr.min(t_cmp).min(t_tick);
+        if now.is_infinite() {
+            break;
+        }
+
+        if t_cmp <= t_arr && t_cmp <= t_tick {
+            // --- completion: free the slot, pull from this model's queue.
+            let Reverse(c) = completions.pop().unwrap();
+            cluster.release(c.vm_id, now);
+            if let Some(q) = queues[c.model].pop_front() {
+                if let Some(vm_id) = cluster.route(c.model) {
+                    let done = now + service[c.model];
+                    let latency_ms = (done - q.arrival) * 1000.0;
+                    record(&mut rep, &mut lat_hist, &mut lat_samples,
+                           latency_ms, q.slo_ms, q.strict);
+                    rep.served_vm += 1;
+                    completions.push(Reverse(Completion { at: T(done), vm_id, model: c.model }));
+                } else {
+                    queues[c.model].push_front(q);
+                }
+            }
+        } else if t_arr <= t_tick {
+            // --- arrival
+            let r = &reqs[req_i];
+            let m = models[req_i];
+            req_i += 1;
+            monitor.on_arrival();
+            per_model_count[m] += 1;
+            rep.requests += 1;
+
+            if let Some(vm_id) = cluster.route(m) {
+                let done = now + service[m];
+                record(&mut rep, &mut lat_hist, &mut lat_samples,
+                       service[m] * 1000.0, r.slo_ms, r.strictness == Strictness::Strict);
+                rep.served_vm += 1;
+                completions.push(Reverse(Completion { at: T(done), vm_id, model: m }));
+            } else {
+                let eligible = match scheme.offload() {
+                    OffloadPolicy::All => true,
+                    OffloadPolicy::StrictOnly => r.strictness == Strictness::Strict,
+                    OffloadPolicy::None => false,
+                };
+                let lambda: Option<LambdaFn> = if eligible {
+                    reg.models[m]
+                        .lambda_for_slo(r.slo_ms)
+                        .or_else(|| Some(reg.models[m].lambda_at(3.0)))
+                } else {
+                    None
+                };
+                if let Some(f) = lambda {
+                    let bucket = (f.mem_gb / 0.25).round() as u32;
+                    let pool = pools.entry((m, bucket)).or_default();
+                    let dur = f.compute_time_s();
+                    let cold = pool.invoke(now, dur, f.cold_start_s());
+                    let latency_ms = f.invoke_latency_s(cold) * 1000.0;
+                    rep.cost_lambda += f.invoke_cost(cold);
+                    rep.served_lambda += 1;
+                    if cold {
+                        rep.lambda_cold_starts += 1;
+                    }
+                    record(&mut rep, &mut lat_hist, &mut lat_samples,
+                           latency_ms, r.slo_ms, r.strictness == Strictness::Strict);
+                } else {
+                    queues[m].push_back(Queued {
+                        slo_ms: r.slo_ms,
+                        arrival: now,
+                        strict: r.strictness == Strictness::Strict,
+                    });
+                }
+            }
+        } else {
+            // --- scheduler tick (1 Hz)
+            monitor.tick();
+            let mut needed_slots = 0.0;
+            let mut demands = Vec::with_capacity(n_models);
+            for m in 0..n_models {
+                let rate = per_model_rate[m].push(per_model_count[m] as f64);
+                per_model_count[m] = 0;
+                needed_slots += rate * service[m];
+                demands.push(ModelDemand {
+                    model: m,
+                    rate,
+                    service_s: service[m],
+                    slots_per_vm: slots[m],
+                    queued: queues[m].len(),
+                });
+            }
+            {
+                let obs = SchedObs { now, monitor: &monitor, demands: &demands, cluster: &cluster };
+                let actions = scheme.tick(&obs);
+                for a in actions {
+                    match a {
+                        Action::Spawn { model, count } => {
+                            // Account-level instance cap (EC2 quotas): also a
+                            // backstop against runaway scheme feedback loops.
+                            let cap = 5000usize.saturating_sub(cluster.total_alive());
+                            for _ in 0..count.min(cap) {
+                                cluster.spawn(cfg.vm_type, model, slots[model], now);
+                            }
+                        }
+                        Action::Drain { model, count } => {
+                            cluster.scale_down(model, count, now);
+                        }
+                    }
+                }
+            }
+            cluster.tick(now, 1.0, needed_slots);
+            rep.peak_vms = rep.peak_vms.max(cluster.total_alive());
+            // Newly-booted VMs can absorb queued work.
+            for m in 0..n_models {
+                while !queues[m].is_empty() {
+                    match cluster.route(m) {
+                        Some(vm_id) => {
+                            let q = queues[m].pop_front().unwrap();
+                            let done = now + service[m];
+                            let latency_ms = (done - q.arrival) * 1000.0;
+                            record(&mut rep, &mut lat_hist, &mut lat_samples,
+                                   latency_ms, q.slo_ms, q.strict);
+                            rep.served_vm += 1;
+                            completions.push(Reverse(Completion { at: T(done), vm_id, model: m }));
+                        }
+                        None => break,
+                    }
+                }
+            }
+            if (now as u64) % 60 == 0 {
+                cluster.compact(now);
+            }
+            next_tick += 1.0;
+        }
+    }
+
+    let end = next_tick.max(horizon);
+    // Terminate the remaining fleet and settle the bill.
+    for m in 0..n_models {
+        cluster.scale_down(m, usize::MAX, end);
+    }
+    rep.cost_vm = cluster.total_cost(end);
+    rep.alive_vm_seconds = cluster.alive_vm_seconds;
+    rep.boot_seconds = cluster.boot_seconds;
+    rep.provisioned_slot_seconds = cluster.provisioned_slot_seconds;
+    rep.excess_slot_seconds = cluster.excess_slot_seconds;
+    rep.duration_s = end;
+    rep.latency_mean_ms = lat_hist.mean();
+    rep.latency_p50_ms = crate::util::stats::percentile(&mut lat_samples, 50.0);
+    rep.latency_p99_ms = crate::util::stats::percentile(&mut lat_samples, 99.0);
+    debug_assert_eq!(rep.served_vm + rep.served_lambda, lat_samples.len() as u64 + 0);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler;
+    use crate::trace::{generators, synthesize_requests, WorkloadKind};
+
+    fn run_scheme(name: &str, rate: f64) -> SimReport {
+        let reg = Registry::builtin();
+        let trace = generators::constant(rate, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let mut scheme = scheduler::by_name(name).unwrap();
+        let cfg = SimConfig::default();
+        simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg)
+    }
+
+    #[test]
+    fn conservation_all_requests_finish() {
+        for name in scheduler::ALL_SCHEMES {
+            let rep = run_scheme(name, 20.0);
+            assert_eq!(
+                rep.served_vm + rep.served_lambda,
+                rep.requests,
+                "{name}: requests lost"
+            );
+            assert!(rep.requests > 10_000, "{name}: too few requests");
+        }
+    }
+
+    #[test]
+    fn costs_positive_and_sane() {
+        let rep = run_scheme("reactive", 20.0);
+        assert!(rep.cost_vm > 0.0);
+        assert!(rep.cost_lambda == 0.0, "reactive never offloads");
+        // 20 q/s mixed over models: sane fleet bound (< 200 m4.large).
+        assert!(rep.mean_vms() > 0.5 && rep.mean_vms() < 200.0,
+                "mean_vms={}", rep.mean_vms());
+    }
+
+    #[test]
+    fn flat_load_low_violations_for_all_schemes() {
+        for name in scheduler::ALL_SCHEMES {
+            let rep = run_scheme(name, 20.0);
+            assert!(
+                rep.violation_pct() < 15.0,
+                "{name}: {}% violations on flat load",
+                rep.violation_pct()
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_offloads_on_bursty_load_reactive_queues() {
+        let reg = Registry::builtin();
+        let trace = generators::generate_with(crate::trace::TraceKind::Twitter, 3, 1200, 60.0);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig::default();
+
+        let mut mixed = scheduler::by_name("mixed").unwrap();
+        let rep_m = simulate(mixed.as_mut(), &reg, &reqs, "twitter", &cfg);
+        assert!(rep_m.served_lambda > 0, "mixed should offload on bursts");
+
+        let mut reactive = scheduler::by_name("reactive").unwrap();
+        let rep_r = simulate(reactive.as_mut(), &reg, &reqs, "twitter", &cfg);
+        assert_eq!(rep_r.served_lambda, 0);
+        assert!(
+            rep_m.violation_pct() < rep_r.violation_pct(),
+            "mixed {} should violate less than reactive {}",
+            rep_m.violation_pct(),
+            rep_r.violation_pct()
+        );
+    }
+
+    #[test]
+    fn paragon_lambda_usage_below_mixed() {
+        let reg = Registry::builtin();
+        let trace = generators::generate_with(crate::trace::TraceKind::Berkeley, 3, 1200, 60.0);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig::default();
+        let mut mixed = scheduler::by_name("mixed").unwrap();
+        let rep_m = simulate(mixed.as_mut(), &reg, &reqs, "berkeley", &cfg);
+        let mut paragon = scheduler::by_name("paragon").unwrap();
+        let rep_p = simulate(paragon.as_mut(), &reg, &reqs, "berkeley", &cfg);
+        assert!(
+            rep_p.served_lambda <= rep_m.served_lambda,
+            "paragon {} > mixed {} lambda requests",
+            rep_p.served_lambda,
+            rep_m.served_lambda
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_scheme("paragon", 15.0);
+        let b = run_scheme("paragon", 15.0);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.violations, b.violations);
+        assert!((a.total_cost() - b.total_cost()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assignment_random_feasible_respects_slo() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(10.0, 60);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 1);
+        let cfg = SimConfig::default();
+        let assigned = assign_models(&reqs, &reg, &cfg);
+        for (r, &m) in reqs.iter().zip(&assigned) {
+            let svc = reg.models[m].service_time_s(cfg.vm_type) * 1000.0;
+            assert!(svc <= r.slo_ms, "model {m} ({svc}ms) assigned to slo {}", r.slo_ms);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Simulation outcome: the quantities the paper's figures report.
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub scheme: String,
+    pub trace: String,
+    pub requests: u64,
+    /// Requests whose end-to-end latency exceeded their SLO.
+    pub violations: u64,
+    pub violations_strict: u64,
+    pub violations_relaxed: u64,
+    /// Requests served on VMs / on serverless.
+    pub served_vm: u64,
+    pub served_lambda: u64,
+    pub lambda_cold_starts: u64,
+    /// Billed cost, USD.
+    pub cost_vm: f64,
+    pub cost_lambda: f64,
+    /// Latency stats, ms.
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    /// Fleet metrics (Fig 5).
+    pub alive_vm_seconds: f64,
+    pub boot_seconds: f64,
+    pub provisioned_slot_seconds: f64,
+    pub excess_slot_seconds: f64,
+    /// Peak alive VMs at any tick.
+    pub peak_vms: usize,
+    pub duration_s: f64,
+}
+
+impl SimReport {
+    pub fn total_cost(&self) -> f64 {
+        self.cost_vm + self.cost_lambda
+    }
+
+    pub fn violation_pct(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.violations as f64 / self.requests as f64 * 100.0
+        }
+    }
+
+    /// Mean alive VMs over the run — Fig 5's over-provisioning unit.
+    pub fn mean_vms(&self) -> f64 {
+        if self.duration_s == 0.0 { 0.0 } else { self.alive_vm_seconds / self.duration_s }
+    }
+
+    pub fn lambda_share_pct(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.served_lambda as f64 / self.requests as f64 * 100.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", self.scheme.as_str().into()),
+            ("trace", self.trace.as_str().into()),
+            ("requests", (self.requests as usize).into()),
+            ("violations", (self.violations as usize).into()),
+            ("violation_pct", self.violation_pct().into()),
+            ("served_vm", (self.served_vm as usize).into()),
+            ("served_lambda", (self.served_lambda as usize).into()),
+            ("lambda_cold_starts", (self.lambda_cold_starts as usize).into()),
+            ("cost_vm_usd", self.cost_vm.into()),
+            ("cost_lambda_usd", self.cost_lambda.into()),
+            ("cost_total_usd", self.total_cost().into()),
+            ("latency_mean_ms", self.latency_mean_ms.into()),
+            ("latency_p50_ms", self.latency_p50_ms.into()),
+            ("latency_p99_ms", self.latency_p99_ms.into()),
+            ("mean_vms", self.mean_vms().into()),
+            ("peak_vms", self.peak_vms.into()),
+            ("boot_seconds", self.boot_seconds.into()),
+            ("duration_s", self.duration_s.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities() {
+        let r = SimReport {
+            requests: 200,
+            violations: 10,
+            served_lambda: 50,
+            cost_vm: 1.5,
+            cost_lambda: 0.5,
+            alive_vm_seconds: 7200.0,
+            duration_s: 3600.0,
+            ..Default::default()
+        };
+        assert!((r.violation_pct() - 5.0).abs() < 1e-12);
+        assert!((r.total_cost() - 2.0).abs() < 1e-12);
+        assert!((r.mean_vms() - 2.0).abs() < 1e-12);
+        assert!((r.lambda_share_pct() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = SimReport::default();
+        assert_eq!(r.violation_pct(), 0.0);
+        assert_eq!(r.mean_vms(), 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,42 @@
+//! Discrete-event simulation of the serving system on the cloud substrate.
+//!
+//! Drives a [`Scheme`](crate::scheduler::Scheme) against a request stream:
+//! VM routing/queueing/booting, serverless offload with warm pools and cold
+//! starts, per-second scheduler ticks, and full cost + SLO accounting. All
+//! scheme-comparison figures (5, 6, 9) run through [`engine::simulate`].
+
+pub mod engine;
+pub mod metrics;
+
+pub use engine::{simulate, Assignment, SimConfig};
+pub use metrics::SimReport;
+
+use crate::config::ExperimentConfig;
+use crate::models::Registry;
+use crate::trace::{generators, loader, synthesize_requests};
+use anyhow::Result;
+
+/// Run one experiment exactly as described by a typed config: build the
+/// trace (synthetic or CSV), synthesize the workload, construct the scheme
+/// (honoring scheme knobs), simulate.
+pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimReport> {
+    let trace = match &cfg.trace_file {
+        Some(path) => loader::load_csv(std::path::Path::new(path))?
+            .scaled_to_mean(cfg.mean_rate),
+        None => generators::generate_with(cfg.trace, cfg.seed, cfg.duration_s,
+                                          cfg.mean_rate),
+    };
+    let reqs = synthesize_requests(&trace, cfg.workload, cfg.seed ^ 0x51);
+    let mut scheme: Box<dyn crate::scheduler::Scheme> = if cfg.scheme == "paragon" {
+        Box::new(crate::scheduler::paragon::Paragon::with_gate(cfg.paragon.p2m_gate))
+    } else {
+        crate::scheduler::by_name(&cfg.scheme)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheme {}", cfg.scheme))?
+    };
+    Ok(simulate(scheme.as_mut(), reg, &reqs, &trace.name, &SimConfig {
+        vm_type: cfg.vm_type,
+        assignment: cfg.assignment,
+        seed: cfg.seed,
+        warm_start: true,
+    }))
+}

@@ -1,0 +1,102 @@
+//! Trace statistics: the quantities the paper's load-monitor design (§III-B2)
+//! and Fig 7 consume.
+
+use crate::util::stats::{median, percentile};
+
+/// Peak-to-median ratio over the full trace (Fig 7). "Peak" is the p99.5
+/// rate rather than the single max bucket so one outlier second does not
+/// define the statistic.
+pub fn peak_to_median(rates: &[f64]) -> f64 {
+    if rates.is_empty() {
+        return 0.0;
+    }
+    let mut v = rates.to_vec();
+    let med = median(&mut v);
+    let peak = percentile(&mut v, 99.5);
+    if med <= 0.0 { 0.0 } else { peak / med }
+}
+
+/// Coefficient of variation of the per-second rates.
+pub fn coeff_of_variation(rates: &[f64]) -> f64 {
+    if rates.len() < 2 {
+        return 0.0;
+    }
+    let n = rates.len() as f64;
+    let mean = rates.iter().sum::<f64>() / n;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = rates.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / (n - 1.0);
+    var.sqrt() / mean
+}
+
+/// Windowed peak-to-median series: the sampling-window statistic the paper
+/// proposes the load monitor compute online (§III-B2).
+pub fn windowed_peak_to_median(rates: &[f64], window_s: usize) -> Vec<f64> {
+    assert!(window_s > 0);
+    rates
+        .chunks(window_s)
+        .map(peak_to_median)
+        .collect()
+}
+
+/// Fraction of total time spent above `k` times the median rate — how much
+/// of the trace is "peak", which decides whether serverless offload pays.
+pub fn burst_fraction(rates: &[f64], k: f64) -> f64 {
+    if rates.is_empty() {
+        return 0.0;
+    }
+    let mut v = rates.to_vec();
+    let med = median(&mut v);
+    if med <= 0.0 {
+        return 0.0;
+    }
+    rates.iter().filter(|&&r| r > k * med).count() as f64 / rates.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_trace_stats() {
+        let flat = vec![10.0; 100];
+        assert!((peak_to_median(&flat) - 1.0).abs() < 1e-12);
+        assert_eq!(coeff_of_variation(&flat), 0.0);
+        assert_eq!(burst_fraction(&flat, 1.5), 0.0);
+    }
+
+    #[test]
+    fn spiky_trace_stats() {
+        let mut r = vec![10.0; 200];
+        for i in 100..110 {
+            r[i] = 50.0;
+        }
+        assert!(peak_to_median(&r) > 4.0);
+        assert!(burst_fraction(&r, 2.0) > 0.04);
+        assert!(coeff_of_variation(&r) > 0.5);
+    }
+
+    #[test]
+    fn single_outlier_does_not_define_peak() {
+        let mut r = vec![10.0; 1000];
+        r[500] = 10_000.0; // one bad second
+        let p2m = peak_to_median(&r);
+        assert!(p2m < 2.0, "p99.5 peak should shrug off one outlier: {p2m}");
+    }
+
+    #[test]
+    fn windowed_series_len() {
+        let r = vec![1.0; 350];
+        let w = windowed_peak_to_median(&r, 100);
+        assert_eq!(w.len(), 4); // 100,100,100,50
+        assert!(w.iter().all(|&x| (x - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(peak_to_median(&[]), 0.0);
+        assert_eq!(coeff_of_variation(&[]), 0.0);
+        assert_eq!(burst_fraction(&[], 2.0), 0.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! CSV persistence for traces: regenerated figures write the exact traces
+//! they used, and users can replay *real* trace files with the same schema
+//! (`second,rate` header then one row per second).
+
+use super::Trace;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub fn save_csv(trace: &Trace, path: &Path) -> Result<()> {
+    let mut s = String::with_capacity(trace.rates.len() * 12 + 16);
+    s.push_str("second,rate\n");
+    for (i, r) in trace.rates.iter().enumerate() {
+        s.push_str(&format!("{i},{r:.6}\n"));
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s).with_context(|| format!("writing {path:?}"))
+}
+
+pub fn load_csv(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "trace".to_string());
+    let mut rates = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || (lineno == 0 && line.starts_with("second")) {
+            continue;
+        }
+        let mut parts = line.split(',');
+        let sec: usize = parts
+            .next()
+            .and_then(|p| p.trim().parse().ok())
+            .with_context(|| format!("{path:?}:{}: bad second", lineno + 1))?;
+        let rate: f64 = parts
+            .next()
+            .and_then(|p| p.trim().parse().ok())
+            .with_context(|| format!("{path:?}:{}: bad rate", lineno + 1))?;
+        if rate < 0.0 || !rate.is_finite() {
+            bail!("{path:?}:{}: negative/invalid rate {rate}", lineno + 1);
+        }
+        if sec != rates.len() {
+            bail!("{path:?}:{}: non-contiguous second {sec} (expected {})",
+                  lineno + 1, rates.len());
+        }
+        rates.push(rate);
+    }
+    if rates.is_empty() {
+        bail!("{path:?}: empty trace");
+    }
+    Ok(Trace { name, rates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::generators;
+    use crate::trace::TraceKind;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("paragon-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = generators::generate_with(TraceKind::Wiki, 1, 120, 30.0);
+        let p = tmpdir().join("wiki_rt.csv");
+        save_csv(&t, &p).unwrap();
+        let t2 = load_csv(&p).unwrap();
+        assert_eq!(t2.rates.len(), t.rates.len());
+        for (a, b) in t.rates.iter().zip(&t2.rates) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let p = tmpdir().join("bad.csv");
+        std::fs::write(&p, "second,rate\n0,1.0\n2,1.0\n").unwrap();
+        assert!(load_csv(&p).is_err(), "non-contiguous seconds");
+        std::fs::write(&p, "second,rate\n0,-5\n").unwrap();
+        assert!(load_csv(&p).is_err(), "negative rate");
+        std::fs::write(&p, "").unwrap();
+        assert!(load_csv(&p).is_err(), "empty");
+    }
+}

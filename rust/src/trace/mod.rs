@@ -1,0 +1,216 @@
+//! Request-arrival traces: the four real-world workloads the paper replays
+//! (Berkeley Home-IP, Wikipedia, WITS, Twitter) rebuilt as calibrated
+//! synthetic generators, plus per-request workload synthesis (each request
+//! carries the ML query constraints of the paper's two workload types).
+
+pub mod analysis;
+pub mod generators;
+pub mod loader;
+
+use crate::util::rng::Pcg;
+
+/// Which named trace to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TraceKind {
+    Berkeley,
+    Wiki,
+    Wits,
+    Twitter,
+}
+
+pub const ALL_TRACES: [TraceKind; 4] =
+    [TraceKind::Berkeley, TraceKind::Wiki, TraceKind::Wits, TraceKind::Twitter];
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Berkeley => "berkeley",
+            TraceKind::Wiki => "wiki",
+            TraceKind::Wits => "wits",
+            TraceKind::Twitter => "twitter",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TraceKind> {
+        ALL_TRACES.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// A trace: request rate (req/s) per one-second bucket.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub rates: Vec<f64>,
+}
+
+impl Trace {
+    pub fn duration_s(&self) -> usize {
+        self.rates.len()
+    }
+
+    pub fn total_requests(&self) -> f64 {
+        self.rates.iter().sum()
+    }
+
+    pub fn mean_rate(&self) -> f64 {
+        if self.rates.is_empty() { 0.0 } else { self.total_requests() / self.rates.len() as f64 }
+    }
+
+    /// Rescale so the mean rate becomes `target` (figures sweep load scale).
+    pub fn scaled_to_mean(&self, target: f64) -> Trace {
+        let m = self.mean_rate();
+        let k = if m > 0.0 { target / m } else { 0.0 };
+        Trace {
+            name: self.name.clone(),
+            rates: self.rates.iter().map(|r| r * k).collect(),
+        }
+    }
+}
+
+/// SLO class of a query (the paper's workload-1 mixes both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strictness {
+    /// Must meet its latency SLO; eligible for serverless offload under load.
+    Strict,
+    /// Tolerates queueing; paragon keeps these off lambdas (its key edge).
+    Relaxed,
+}
+
+/// One inference query: Poisson arrival within its trace second plus the
+/// application constraints used by model selection and the schedulers.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    /// Response-latency SLO, milliseconds.
+    pub slo_ms: f64,
+    /// Minimum acceptable accuracy, percent (workload-2; 0.0 = unconstrained).
+    pub min_accuracy: f64,
+    pub strictness: Strictness,
+}
+
+/// Paper workload types (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Workload-1: mixed strict/relaxed latency SLOs, no accuracy demands.
+    MixedSlo,
+    /// Workload-2: per-query (accuracy, latency) constraints.
+    VarConstraints,
+}
+
+/// Expand a rate trace into a concrete request stream (Poisson arrivals
+/// within each second; constraints drawn per `kind`).
+pub fn synthesize_requests(trace: &Trace, kind: WorkloadKind, seed: u64) -> Vec<Request> {
+    let mut rng = Pcg::new(seed, 0x7ace);
+    let mut out = Vec::with_capacity(trace.total_requests() as usize + 16);
+    let mut id = 0u64;
+    for (sec, &rate) in trace.rates.iter().enumerate() {
+        let n = rng.poisson(rate);
+        for _ in 0..n {
+            let arrival = sec as f64 + rng.f64();
+            let (slo_ms, min_acc, strict) = match kind {
+                WorkloadKind::MixedSlo => {
+                    // Half strict (sub-second, interactive), half relaxed
+                    // (tens of seconds: near-line analytics, notification
+                    // scoring, batch-ish work). Relaxed queries being able
+                    // to ride out a VM boot is exactly the slack Paragon's
+                    // latency-class-aware offload exploits (§IV-C1).
+                    if rng.bool(0.5) {
+                        (rng.uniform(300.0, 1000.0), 0.0, Strictness::Strict)
+                    } else {
+                        (rng.uniform(20_000.0, 120_000.0), 0.0, Strictness::Relaxed)
+                    }
+                }
+                WorkloadKind::VarConstraints => {
+                    // Per-query accuracy and latency demands spanning the
+                    // pool's feasible envelope (Fig 2).
+                    let acc = rng.uniform(50.0, 88.0);
+                    let slo = rng.uniform(400.0, 6000.0);
+                    let strict = if slo < 1000.0 { Strictness::Strict } else { Strictness::Relaxed };
+                    (slo, acc, strict)
+                }
+            };
+            out.push(Request {
+                id,
+                arrival_s: arrival,
+                slo_ms,
+                min_accuracy: min_acc,
+                strictness: strict,
+            });
+            id += 1;
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_trace(rate: f64, secs: usize) -> Trace {
+        Trace { name: "flat".into(), rates: vec![rate; secs] }
+    }
+
+    #[test]
+    fn scaling_hits_target_mean() {
+        let t = flat_trace(10.0, 100).scaled_to_mean(55.0);
+        assert!((t.mean_rate() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthesis_count_close_to_rate_integral() {
+        let t = flat_trace(50.0, 200);
+        let reqs = synthesize_requests(&t, WorkloadKind::MixedSlo, 1);
+        let expect = t.total_requests();
+        assert!(
+            (reqs.len() as f64 - expect).abs() < expect * 0.05,
+            "got {} want ~{}",
+            reqs.len(),
+            expect
+        );
+    }
+
+    #[test]
+    fn synthesis_sorted_and_in_range() {
+        let t = flat_trace(20.0, 50);
+        let reqs = synthesize_requests(&t, WorkloadKind::VarConstraints, 2);
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        for r in &reqs {
+            assert!(r.arrival_s >= 0.0 && r.arrival_s < 50.0);
+            assert!(r.min_accuracy >= 50.0 && r.min_accuracy <= 88.0);
+        }
+    }
+
+    #[test]
+    fn mixed_slo_has_both_classes() {
+        let t = flat_trace(30.0, 100);
+        let reqs = synthesize_requests(&t, WorkloadKind::MixedSlo, 3);
+        let strict = reqs.iter().filter(|r| r.strictness == Strictness::Strict).count();
+        let frac = strict as f64 / reqs.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "strict fraction {frac}");
+        assert!(reqs
+            .iter()
+            .filter(|r| r.strictness == Strictness::Strict)
+            .all(|r| r.slo_ms <= 1000.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let t = flat_trace(15.0, 60);
+        let a = synthesize_requests(&t, WorkloadKind::MixedSlo, 9);
+        let b = synthesize_requests(&t, WorkloadKind::MixedSlo, 9);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival_s == y.arrival_s));
+    }
+
+    #[test]
+    fn trace_kind_names_roundtrip() {
+        for t in ALL_TRACES {
+            assert_eq!(TraceKind::from_name(t.name()), Some(t));
+        }
+        assert_eq!(TraceKind::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal benchmark harness (criterion is absent from the offline vendor
+//! set). Used by every `cargo bench` target: warmup, timed iterations,
+//! mean/p50/p95 reporting, and a throughput variant.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs. The closure's
+/// return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: super::stats::percentile_sorted(&samples, 50.0),
+        p95_ns: super::stats::percentile_sorted(&samples, 95.0),
+    };
+    r.print();
+    r
+}
+
+/// Convenience: report items/second for a batch-style workload.
+pub fn bench_throughput<T>(name: &str, warmup: usize, iters: usize, items_per_iter: f64,
+                           f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, warmup, iters, f);
+    let per_s = items_per_iter / (r.mean_ns / 1e9);
+    println!("{:<44} {:>10}  {:>14.0} items/s", "", "", per_s);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let r = bench("noop-spin", 2, 16, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert_eq!(r.iters, 16);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_ns(2e9), "2.000 s");
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny CLI argument parser (no `clap` offline).
+//!
+//! Supports `binary <subcommand> --key value --flag positional...` which is
+//! all the coordinator, examples and benches need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// Sentinel stored for value-less flags (`--verbose`).
+pub const FLAG_SET: &str = "";
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). The first non-flag token becomes
+    /// the subcommand; `--key value` and `--key=value` both work; a `--key`
+    /// followed by another flag (or end) is boolean.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = raw.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), FLAG_SET.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate pos1 --trace wiki --scale 2.5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("trace"), Some("wiki"));
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 2.5);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("figures --fig=9 --out=results");
+        assert_eq!(a.get_usize("fig", 0).unwrap(), 9);
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("serve --quiet --port 8080");
+        assert!(a.has("quiet"));
+        assert_eq!(a.get_usize("port", 0).unwrap(), 8080);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates built in-repo (the offline vendor set carries
+//! only the `xla` crate's closure — no serde/clap/rand/proptest/criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,93 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property under many deterministic
+//! seeds; on failure it re-runs the failing seed to confirm, then panics
+//! with the seed so the case is reproducible with `check_seed`.
+
+use super::rng::Pcg;
+
+pub const DEFAULT_CASES: u64 = 256;
+
+/// Run `prop` for `cases` deterministic seeds. `prop` returns
+/// `Err(description)` (or panics) to signal a counterexample.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x9e3779b97f4a7c15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(name.len() as u64);
+        let mut rng = Pcg::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::prop::check_seed({seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing seed (debugging aid).
+pub fn check_seed<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    let mut rng = Pcg::seeded(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed on seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helper producing `Result<(), String>` for use inside `check`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 32, |rng| {
+            n += 1;
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 8, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("record", 4, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("record", 4, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

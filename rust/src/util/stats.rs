@@ -1,0 +1,375 @@
+//! Statistics substrate: running moments, percentile summaries, latency
+//! histograms, EWMA and windowed predictors used by the load monitor,
+//! and ordinary least squares for the trend estimator.
+
+/// Numerically-stable running mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Percentile over a sample set (exact, sorts on demand).
+/// `q` in [0, 100]; linear interpolation between closest ranks.
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(samples, q)
+}
+
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+pub fn median(samples: &mut [f64]) -> f64 {
+    percentile(samples, 50.0)
+}
+
+/// Log-bucketed latency histogram: fixed memory, ~4% relative error,
+/// O(1) record — suitable for the serving hot path.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i covers [min * g^i, min * g^(i+1))
+    buckets: Vec<u64>,
+    min_value: f64,
+    growth: f64,
+    count: u64,
+    sum: f64,
+    overflow: u64,
+}
+
+impl LogHistogram {
+    /// Covers [min_value, max_value] with buckets growing by `growth`.
+    pub fn new(min_value: f64, max_value: f64, growth: f64) -> Self {
+        assert!(min_value > 0.0 && max_value > min_value && growth > 1.0);
+        let n = ((max_value / min_value).ln() / growth.ln()).ceil() as usize + 1;
+        LogHistogram {
+            buckets: vec![0; n],
+            min_value,
+            growth,
+            count: 0,
+            sum: 0.0,
+            overflow: 0,
+        }
+    }
+
+    /// Default latency histogram: 0.1 ms .. 1000 s, ~8% resolution.
+    pub fn latency_ms() -> Self {
+        Self::new(0.1, 1_000_000.0, 1.08)
+    }
+
+    fn index(&self, v: f64) -> Option<usize> {
+        if v < self.min_value {
+            return Some(0);
+        }
+        let i = ((v / self.min_value).ln() / self.growth.ln()) as usize;
+        if i < self.buckets.len() { Some(i) } else { None }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        match self.index(v) {
+            Some(i) => self.buckets[i] += 1,
+            None => self.overflow += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.count as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                let lo = self.min_value * self.growth.powi(i as i32);
+                return lo * (1.0 + self.growth) / 2.0;
+            }
+        }
+        self.min_value * self.growth.powi(self.buckets.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.overflow += other.overflow;
+    }
+}
+
+/// Exponentially-weighted moving average.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Fixed-capacity sliding window with O(1) push and O(n) aggregate queries;
+/// the load monitor keeps a few hundred samples, so linear scans are cheap.
+#[derive(Debug, Clone)]
+pub struct Window {
+    buf: Vec<f64>,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+impl Window {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Window { buf: vec![0.0; cap], cap, head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = f64> + '_ {
+        (0..self.len).map(move |i| {
+            let idx = (self.head + self.cap - self.len + i) % self.cap;
+            self.buf[idx]
+        })
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.len == 0 { 0.0 } else { self.iter().sum::<f64>() / self.len as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.iter().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut v: Vec<f64> = self.iter().collect();
+        median(&mut v)
+    }
+
+    /// Peak-to-median ratio over the window — the paper's Fig 7 statistic
+    /// and the mixed/paragon schemes' offload trigger.
+    pub fn peak_to_median(&self) -> f64 {
+        let med = self.median();
+        if med <= 0.0 { 0.0 } else { self.max() / med }
+    }
+}
+
+/// Ordinary least squares y = a + b*x over paired samples.
+/// Returns (intercept, slope).
+pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    let slope = if den == 0.0 { 0.0 } else { num / den };
+    (my - slope * mx, slope)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.std() - 2.138089935299395).abs() < 1e-9);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn percentile_exact() {
+        let mut v = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+        assert_eq!(percentile(&mut v, 50.0), 3.0);
+        assert_eq!(percentile(&mut v, 100.0), 5.0);
+        assert_eq!(percentile(&mut v, 25.0), 2.0);
+        assert_eq!(percentile(&mut [].as_mut_slice(), 50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_close_to_exact() {
+        let mut h = LogHistogram::latency_ms();
+        let mut exact: Vec<f64> = Vec::new();
+        let mut rng = crate::util::rng::Pcg::seeded(1);
+        for _ in 0..20_000 {
+            let v = rng.exp(0.01); // mean 100ms
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [50.0, 90.0, 99.0] {
+            let approx = h.quantile(q);
+            let truth = percentile_sorted(&exact, q);
+            assert!(
+                (approx - truth).abs() / truth < 0.10,
+                "q{q}: approx={approx} truth={truth}"
+            );
+        }
+        assert!((h.mean() - 100.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::latency_ms();
+        let mut b = LogHistogram::latency_ms();
+        a.record(10.0);
+        b.record(20.0);
+        b.record(30.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        e.push(0.0);
+        for _ in 0..20 {
+            e.push(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn window_wraps_and_aggregates() {
+        let mut w = Window::new(4);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            w.push(x);
+        }
+        assert_eq!(w.len(), 4);
+        let got: Vec<f64> = w.iter().collect();
+        assert_eq!(got, vec![3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(w.mean(), 4.5);
+        assert_eq!(w.max(), 6.0);
+        assert_eq!(w.median(), 4.5);
+    }
+
+    #[test]
+    fn peak_to_median_flat_is_one() {
+        let mut w = Window::new(8);
+        for _ in 0..8 {
+            w.push(100.0);
+        }
+        assert!((w.peak_to_median() - 1.0).abs() < 1e-12);
+        let mut spiky = Window::new(8);
+        for x in [100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 100.0, 320.0] {
+            spiky.push(x);
+        }
+        assert!(spiky.peak_to_median() > 3.0);
+    }
+
+    #[test]
+    fn linreg_recovers_line() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 + 2.0 * x).collect();
+        let (a, b) = linreg(&xs, &ys);
+        assert!((a - 3.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+}

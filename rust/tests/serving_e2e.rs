@@ -1,0 +1,102 @@
+//! Integration: the live serving path (router → batcher → PJRT engine)
+//! under concurrent load with real AOT artifacts. Self-skips when
+//! artifacts/ is absent.
+
+use paragon::models::{Registry, SelectionPolicy};
+use paragon::runtime::engine::Engine;
+use paragon::serving::{Server, ServerConfig};
+use paragon::util::rng::Pcg;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+fn start(selection: SelectionPolicy, models: Vec<usize>) -> Option<(Engine, Server, Registry)> {
+    let dir = artifacts_dir()?;
+    let reg = Registry::from_manifest(&dir).unwrap();
+    let engine = Engine::start(dir, reg.clone(), models).unwrap();
+    let server = Server::start(engine.handle(), &reg, ServerConfig {
+        max_batch: 8,
+        batch_timeout_ms: 4.0,
+        workers: 2,
+        selection,
+    });
+    Some((engine, server, reg))
+}
+
+#[test]
+fn concurrent_load_all_requests_complete() {
+    let Some((_engine, server, reg)) = start(SelectionPolicy::Paragon, vec![0, 1]) else {
+        return;
+    };
+    let mut rng = Pcg::seeded(9);
+    let n = 120;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
+        let slo = if i % 2 == 0 { 500.0 } else { 5000.0 };
+        rxs.push(server.submit(input, slo, 0.0));
+    }
+    let mut classes = std::collections::BTreeSet::new();
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.probs.len(), reg.num_classes);
+        let sum: f32 = resp.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3);
+        assert!(resp.total_ms >= resp.exec_ms * 0.0); // timing sanity
+        classes.insert(resp.class);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.submitted, n as u64);
+    assert_eq!(stats.completed, n as u64);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.mean_batch >= 1.0);
+}
+
+#[test]
+fn batching_amortizes_under_burst() {
+    let Some((_engine, server, reg)) = start(SelectionPolicy::Paragon, vec![0]) else {
+        return;
+    };
+    let mut rng = Pcg::seeded(10);
+    // Fire a burst far faster than single-query execution.
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
+        rxs.push(server.submit(input, 10_000.0, 0.0));
+    }
+    let mut max_batch_seen = 0;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        max_batch_seen = max_batch_seen.max(r.batch);
+    }
+    let stats = server.shutdown();
+    assert!(
+        max_batch_seen >= 4,
+        "burst of 64 should form real batches, saw max {max_batch_seen}"
+    );
+    assert!(stats.mean_batch > 1.5, "mean batch {}", stats.mean_batch);
+}
+
+#[test]
+fn router_respects_accuracy_constraints_live() {
+    let Some((_engine, server, reg)) = start(SelectionPolicy::Paragon, vec![0, 3]) else {
+        return;
+    };
+    let mut rng = Pcg::seeded(11);
+    let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
+    // min_accuracy 75 forces resnet18 (idx 3) over mobilenet_025 (idx 0).
+    let r = server.submit(input.clone(), 10_000.0, 75.0).recv().unwrap();
+    assert_eq!(r.model, 3, "accuracy constraint ignored");
+    // Unconstrained goes to the cheapest model.
+    let r = server.submit(input, 10_000.0, 0.0).recv().unwrap();
+    assert_eq!(r.model, 0);
+    server.shutdown();
+}
