@@ -54,4 +54,14 @@ fn main() {
             simulate(scheme.as_mut(), &reg, &reqs, "bench", &SimConfig::default())
         });
     }
+
+    println!("\n== heterogeneous palette (same trace, all 7 types) ==");
+    let het = SimConfig {
+        vm_types: paragon::cloud::VM_TYPES.iter().collect(),
+        ..SimConfig::default()
+    };
+    bench_throughput("simulate[paragon x 7-type palette]", 1, 5, n_events, || {
+        let mut scheme = scheduler::by_name("paragon").unwrap();
+        simulate(scheme.as_mut(), &reg, &reqs, "bench-het", &het)
+    });
 }

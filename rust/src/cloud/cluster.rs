@@ -1,10 +1,16 @@
 //! Fleet state: every VM procured during a run, with aggregate queries the
 //! schedulers consume (utilization, free slots, boot inventory) and the cost
 //! accounting the figures consume.
+//!
+//! The fleet is heterogeneous: each VM carries its own [`VmType`], so the
+//! cluster really is a set of per-`(model, vm_type)` sub-fleets. The
+//! `*_typed` queries address one sub-fleet; the untyped originals aggregate
+//! across types (and equal the typed ones on a single-type palette).
 
 use super::pricing::VmType;
-use super::vm::{Vm, VmState, PROVISION_JITTER_S, PROVISION_MEAN_S};
+use super::vm::{Vm, VmState};
 use crate::util::rng::Pcg;
+use std::collections::BTreeMap;
 
 #[derive(Debug)]
 pub struct Cluster {
@@ -20,6 +26,9 @@ pub struct Cluster {
     pub provisioned_slot_seconds: f64,
     /// Integral of alive (Running + Booting) VM count over time.
     pub alive_vm_seconds: f64,
+    /// VMs launched per instance-type name over the whole run (census —
+    /// the heterogeneous figures report the realized fleet mix).
+    pub spawned_by_type: BTreeMap<&'static str, u64>,
 }
 
 impl Cluster {
@@ -33,18 +42,21 @@ impl Cluster {
             excess_slot_seconds: 0.0,
             provisioned_slot_seconds: 0.0,
             alive_vm_seconds: 0.0,
+            spawned_by_type: BTreeMap::new(),
         }
     }
 
     /// Launch a VM for `model` with `slots` concurrency; returns its id.
-    /// Boot latency is sampled around the published EC2 mean.
+    /// Boot latency is sampled around the *type's* published mean (the m4
+    /// era's ~100 s; newer families faster).
     pub fn spawn(&mut self, vm_type: &'static VmType, model: usize, slots: u32,
                  now: f64) -> u64 {
-        let jitter = self.rng.uniform(-PROVISION_JITTER_S, PROVISION_JITTER_S);
-        let boot = (PROVISION_MEAN_S + jitter).max(1.0);
+        let jitter = self.rng.uniform(-vm_type.boot_jitter_s, vm_type.boot_jitter_s);
+        let boot = (vm_type.boot_mean_s + jitter).max(1.0);
         let id = self.next_id;
         self.next_id += 1;
         self.vms.push(Vm::new(id, vm_type, model, slots, now, boot));
+        *self.spawned_by_type.entry(vm_type.name).or_insert(0) += 1;
         id
     }
 
@@ -84,6 +96,17 @@ impl Cluster {
         Some(cand.id)
     }
 
+    /// [`Self::route`] restricted to the `(model, vm_type)` sub-fleet.
+    pub fn route_typed(&mut self, model: usize, vm_type: &VmType) -> Option<u64> {
+        let cand = self
+            .vms
+            .iter_mut()
+            .filter(|v| v.model == model && v.vm_type == vm_type && v.can_accept())
+            .max_by_key(|v| v.busy)?;
+        cand.busy += 1;
+        Some(cand.id)
+    }
+
     pub fn release(&mut self, id: u64, now: f64) {
         if let Some(vm) = self.get_mut(id) {
             vm.release(now);
@@ -92,9 +115,19 @@ impl Cluster {
 
     /// Drain the `n` emptiest running VMs serving `model`.
     pub fn scale_down(&mut self, model: usize, n: usize, now: f64) {
+        self.scale_down_where(n, now, |v| v.model == model);
+    }
+
+    /// [`Self::scale_down`] restricted to the `(model, vm_type)` sub-fleet.
+    pub fn scale_down_typed(&mut self, model: usize, vm_type: &VmType, n: usize,
+                            now: f64) {
+        self.scale_down_where(n, now, |v| v.model == model && v.vm_type == vm_type);
+    }
+
+    fn scale_down_where(&mut self, n: usize, now: f64, keep: impl Fn(&Vm) -> bool) {
         let mut idx: Vec<usize> = (0..self.vms.len())
             .filter(|&i| {
-                self.vms[i].model == model
+                keep(&self.vms[i])
                     && matches!(self.vms[i].state, VmState::Running | VmState::Booting)
             })
             .collect();
@@ -117,14 +150,35 @@ impl Cluster {
             .count()
     }
 
+    pub fn count_typed(&self, model: usize, vm_type: &VmType, state: VmState) -> usize {
+        self.vms
+            .iter()
+            .filter(|v| v.model == model && v.vm_type == vm_type && v.state == state)
+            .count()
+    }
+
     pub fn alive(&self, model: usize) -> usize {
         self.count(model, VmState::Running) + self.count(model, VmState::Booting)
+    }
+
+    /// Alive (Running + Booting) VMs in the `(model, vm_type)` sub-fleet.
+    pub fn alive_typed(&self, model: usize, vm_type: &VmType) -> usize {
+        self.count_typed(model, vm_type, VmState::Running)
+            + self.count_typed(model, vm_type, VmState::Booting)
     }
 
     pub fn free_slots(&self, model: usize) -> u32 {
         self.vms
             .iter()
             .filter(|v| v.model == model)
+            .map(|v| v.free_slots())
+            .sum()
+    }
+
+    pub fn free_slots_typed(&self, model: usize, vm_type: &VmType) -> u32 {
+        self.vms
+            .iter()
+            .filter(|v| v.model == model && v.vm_type == vm_type)
             .map(|v| v.free_slots())
             .sum()
     }
@@ -265,5 +319,46 @@ mod tests {
     fn empty_fleet_reads_saturated() {
         let c = Cluster::new(6);
         assert_eq!(c.utilization(0), 1.0);
+    }
+
+    #[test]
+    fn typed_queries_address_one_subfleet() {
+        use crate::cloud::pricing::vm_type;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.xlarge").unwrap();
+        let mut c = Cluster::new(7);
+        c.spawn(m4, 0, 2, 0.0);
+        c.spawn(c5, 0, 4, 0.0);
+        c.tick(500.0, 0.0, 0.0);
+        assert_eq!(c.alive(0), 2);
+        assert_eq!(c.alive_typed(0, m4), 1);
+        assert_eq!(c.alive_typed(0, c5), 1);
+        assert_eq!(c.free_slots_typed(0, c5), 4);
+
+        // Typed routing never crosses into the other sub-fleet.
+        for _ in 0..4 {
+            assert!(c.route_typed(0, c5).is_some());
+        }
+        assert!(c.route_typed(0, c5).is_none(), "c5 sub-fleet saturated");
+        assert!(c.route_typed(0, m4).is_some(), "m4 sub-fleet still free");
+
+        // Typed drain spares the other sub-fleet.
+        c.scale_down_typed(0, m4, 8, 501.0);
+        assert_eq!(c.alive_typed(0, c5), 1);
+        assert_eq!(c.spawned_by_type.get("m4.large"), Some(&1));
+        assert_eq!(c.spawned_by_type.get("c5.xlarge"), Some(&1));
+    }
+
+    #[test]
+    fn boot_latency_follows_type_profile() {
+        use crate::cloud::pricing::vm_type;
+        let c5 = vm_type("c5.large").unwrap();
+        let mut c = Cluster::new(8);
+        c.spawn(c5, 0, 2, 0.0);
+        let boot = c.vms[0].ready_at - c.vms[0].launched_at;
+        assert!(
+            (boot - c5.boot_mean_s).abs() <= c5.boot_jitter_s,
+            "boot {boot}s outside c5 profile"
+        );
     }
 }

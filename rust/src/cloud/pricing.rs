@@ -55,10 +55,11 @@ impl LambdaPricing {
     }
 }
 
-/// An EC2 instance type. `capacity_factor` scales how many concurrent
-/// inference slots the box offers relative to vCPU count (profiled offline,
-/// §IV-A: "by offline profiling, we estimate the number of model instances
-/// each VM can execute in parallel").
+/// An EC2 instance type. Slots per model are derived from `vcpus`/`mem_gb`
+/// by offline profiling (§IV-A: "by offline profiling, we estimate the
+/// number of model instances each VM can execute in parallel"); boot
+/// latency is per-type — newer-generation (nitro) families provision
+/// materially faster than the m4-era ~100 s the paper measured.
 #[derive(Debug, Clone, PartialEq)]
 pub struct VmType {
     pub name: &'static str,
@@ -67,23 +68,52 @@ pub struct VmType {
     pub price: VmPrice,
     /// Single-thread speed relative to the paper's c4.large profiling box.
     pub speed: f64,
+    /// Mean provisioning (launch-to-serving) latency, seconds.
+    pub boot_mean_s: f64,
+    /// Uniform jitter half-width around the boot mean, seconds.
+    pub boot_jitter_s: f64,
 }
 
 /// The instance types used in the paper's evaluation (§IV-A: "all the c5
 /// and m5 instances", §II-B: m4.large). Prices: AWS on-demand us-east-1,
 /// 2020. Linearity in size is visible within each family.
 pub const VM_TYPES: &[VmType] = &[
-    VmType { name: "m4.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.10 },  speed: 1.0 },
-    VmType { name: "m5.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.096 }, speed: 1.1 },
-    VmType { name: "m5.xlarge",  vcpus: 4, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.192 }, speed: 1.1 },
-    VmType { name: "m5.2xlarge", vcpus: 8, mem_gb: 32.0, price: VmPrice { hourly_usd: 0.384 }, speed: 1.1 },
-    VmType { name: "c5.large",   vcpus: 2, mem_gb: 4.0,  price: VmPrice { hourly_usd: 0.085 }, speed: 1.25 },
-    VmType { name: "c5.xlarge",  vcpus: 4, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.17 },  speed: 1.25 },
-    VmType { name: "c5.2xlarge", vcpus: 8, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.34 },  speed: 1.25 },
+    VmType { name: "m4.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.10 },
+             speed: 1.0,  boot_mean_s: 100.0, boot_jitter_s: 20.0 },
+    VmType { name: "m5.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.096 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+    VmType { name: "m5.xlarge",  vcpus: 4, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.192 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+    VmType { name: "m5.2xlarge", vcpus: 8, mem_gb: 32.0, price: VmPrice { hourly_usd: 0.384 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+    VmType { name: "c5.large",   vcpus: 2, mem_gb: 4.0,  price: VmPrice { hourly_usd: 0.085 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
+    VmType { name: "c5.xlarge",  vcpus: 4, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.17 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
+    VmType { name: "c5.2xlarge", vcpus: 8, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.34 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
 ];
 
 pub fn vm_type(name: &str) -> Option<&'static VmType> {
     VM_TYPES.iter().find(|t| t.name == name)
+}
+
+/// Parse a comma-separated list of type names (`--vm-types m4.large,c5.xlarge`,
+/// config `"vm_types"`). The first entry is the palette's *primary* type:
+/// homogeneous schemes pin it, and warm starts provision on it.
+pub fn parse_vm_type_list(spec: &str) -> anyhow::Result<Vec<&'static VmType>> {
+    let mut out = Vec::new();
+    for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let t = vm_type(name).ok_or_else(|| {
+            let known: Vec<&str> = VM_TYPES.iter().map(|t| t.name).collect();
+            anyhow::anyhow!("unknown vm type {name:?} (one of {known:?})")
+        })?;
+        out.push(t);
+    }
+    if out.is_empty() {
+        anyhow::bail!("empty vm type list {spec:?}");
+    }
+    Ok(out)
 }
 
 /// Default worker type for the schemes (paper §II-B uses m4.large).
@@ -137,5 +167,27 @@ mod tests {
         assert!(vm_type("m4.large").is_some());
         assert!(vm_type("t2.nano").is_none());
         assert_eq!(default_vm_type().name, "m4.large");
+    }
+
+    #[test]
+    fn parse_type_lists() {
+        let one = parse_vm_type_list("m4.large").unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].name, "m4.large");
+        let many = parse_vm_type_list(" m4.large, c5.xlarge ,m5.large").unwrap();
+        assert_eq!(
+            many.iter().map(|t| t.name).collect::<Vec<_>>(),
+            vec!["m4.large", "c5.xlarge", "m5.large"]
+        );
+        assert!(parse_vm_type_list("t2.nano").is_err());
+        assert!(parse_vm_type_list("  ,").is_err());
+    }
+
+    #[test]
+    fn newer_generations_boot_faster() {
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        assert!(c5.boot_mean_s < m4.boot_mean_s);
+        assert_eq!(m4.boot_mean_s, 100.0, "paper-era anchor preserved");
     }
 }

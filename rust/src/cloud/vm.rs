@@ -8,7 +8,9 @@ use super::pricing::VmType;
 
 /// Mean VM provisioning (boot-to-serving) latency, seconds. Mao & Humphrey
 /// (CLOUD'12) measure 96.9 s for EC2 Linux on-demand; the paper says "a few
-/// hundred seconds" (§III-B3).
+/// hundred seconds" (§III-B3). Actual boot sampling is per-type
+/// ([`VmType::boot_mean_s`]); these m4-era anchors remain the conservative
+/// planning horizon predictive schemes provision against.
 pub const PROVISION_MEAN_S: f64 = 100.0;
 /// Uniform jitter half-width around the mean.
 pub const PROVISION_JITTER_S: f64 = 20.0;

@@ -12,6 +12,9 @@
 //!   "mean_rate": 150.0,
 //!   "duration_s": 1800,
 //!   "vm_type": "c5.large",
+//!   "vm_types": ["m4.large", "c5.xlarge"],
+//!   "instance_cap": 2000,
+//!   "queue_timeout_s": 120.0,
 //!   "scheme": "paragon",
 //!   "selection": "paragon",
 //!   "workload": "constraints",
@@ -19,6 +22,9 @@
 //!   "paragon": { "p2m_gate": 1.5 }
 //! }
 //! ```
+//!
+//! `vm_type` configures a homogeneous run; `vm_types` (a list, first entry
+//! primary) opens a heterogeneous palette and overrides `vm_type`.
 
 use crate::cloud::pricing::{vm_type, VmType};
 use crate::models::SelectionPolicy;
@@ -50,12 +56,28 @@ pub struct ExperimentConfig {
     pub trace_file: Option<String>,
     pub mean_rate: f64,
     pub duration_s: usize,
-    pub vm_type: &'static VmType,
+    /// Instance-type palette; head entry is the primary type. One entry
+    /// reproduces the paper's homogeneous runs.
+    pub vm_types: Vec<&'static VmType>,
+    /// Account-level instance quota (simulated EC2 service quota).
+    pub instance_cap: usize,
+    /// Queued requests older than this are dropped (SimReport::dropped).
+    pub queue_timeout_s: f64,
     pub scheme: String,
     pub workload: WorkloadKind,
     pub assignment: Assignment,
     pub seed: u64,
     pub paragon: ParagonKnobs,
+}
+
+impl ExperimentConfig {
+    /// The palette head (the pinned type of homogeneous schemes).
+    pub fn primary_vm_type(&self) -> &'static VmType {
+        self.vm_types
+            .first()
+            .copied()
+            .unwrap_or_else(crate::cloud::default_vm_type)
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -65,7 +87,9 @@ impl Default for ExperimentConfig {
             trace_file: None,
             mean_rate: 100.0,
             duration_s: 3600,
-            vm_type: crate::cloud::default_vm_type(),
+            vm_types: vec![crate::cloud::default_vm_type()],
+            instance_cap: 5000,
+            queue_timeout_s: 300.0,
             scheme: "paragon".to_string(),
             workload: WorkloadKind::MixedSlo,
             assignment: Assignment::RandomFeasible,
@@ -101,7 +125,33 @@ impl ExperimentConfig {
             cfg.duration_s = x;
         }
         if let Some(s) = j.get("vm_type").as_str() {
-            cfg.vm_type = vm_type(s).with_context(|| format!("unknown vm_type {s:?}"))?;
+            cfg.vm_types =
+                vec![vm_type(s).with_context(|| format!("unknown vm_type {s:?}"))?];
+        }
+        if let Some(list) = j.get("vm_types").as_arr() {
+            let mut types = Vec::new();
+            for v in list {
+                let name = v.as_str().context("vm_types entries must be strings")?;
+                types.push(
+                    vm_type(name).with_context(|| format!("unknown vm_type {name:?}"))?,
+                );
+            }
+            if types.is_empty() {
+                bail!("vm_types must not be empty");
+            }
+            cfg.vm_types = types;
+        }
+        if let Some(x) = j.get("instance_cap").as_usize() {
+            if x == 0 {
+                bail!("instance_cap must be positive");
+            }
+            cfg.instance_cap = x;
+        }
+        if let Some(x) = j.get("queue_timeout_s").as_f64() {
+            if x <= 0.0 {
+                bail!("queue_timeout_s must be positive");
+            }
+            cfg.queue_timeout_s = x;
         }
         if let Some(s) = j.get("scheme").as_str() {
             if crate::scheduler::by_name(s).is_none() {
@@ -166,7 +216,12 @@ impl ExperimentConfig {
             ("trace", Json::from(self.trace.name())),
             ("mean_rate", self.mean_rate.into()),
             ("duration_s", self.duration_s.into()),
-            ("vm_type", self.vm_type.name.into()),
+            ("vm_type", self.primary_vm_type().name.into()),
+            ("vm_types", Json::Arr(
+                self.vm_types.iter().map(|t| Json::from(t.name)).collect(),
+            )),
+            ("instance_cap", self.instance_cap.into()),
+            ("queue_timeout_s", self.queue_timeout_s.into()),
             ("scheme", self.scheme.as_str().into()),
             ("workload", wl.into()),
             ("selection", sel.into()),
@@ -190,7 +245,10 @@ mod tests {
         assert_eq!(c.trace, TraceKind::Berkeley);
         assert_eq!(c.scheme, "paragon");
         assert_eq!(c.mean_rate, 100.0);
-        assert_eq!(c.vm_type.name, "m4.large");
+        assert_eq!(c.primary_vm_type().name, "m4.large");
+        assert_eq!(c.vm_types.len(), 1);
+        assert_eq!(c.instance_cap, 5000);
+        assert_eq!(c.queue_timeout_s, 300.0);
     }
 
     #[test]
@@ -204,12 +262,38 @@ mod tests {
         assert_eq!(c.trace, TraceKind::Twitter);
         assert_eq!(c.mean_rate, 150.5);
         assert_eq!(c.duration_s, 1800);
-        assert_eq!(c.vm_type.name, "c5.large");
+        assert_eq!(c.primary_vm_type().name, "c5.large");
         assert_eq!(c.scheme, "mixed");
         assert_eq!(c.workload, WorkloadKind::VarConstraints);
         assert!(matches!(c.assignment, Assignment::Policy(SelectionPolicy::Naive)));
         assert_eq!(c.seed, 7);
         assert_eq!(c.paragon.p2m_gate, 1.5);
+    }
+
+    #[test]
+    fn heterogeneous_palette_parses() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"vm_types":["m4.large","c5.xlarge"],"instance_cap":2000,
+                "queue_timeout_s":120.0}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.vm_types.iter().map(|t| t.name).collect::<Vec<_>>(),
+            vec!["m4.large", "c5.xlarge"]
+        );
+        assert_eq!(c.primary_vm_type().name, "m4.large");
+        assert_eq!(c.instance_cap, 2000);
+        assert_eq!(c.queue_timeout_s, 120.0);
+    }
+
+    #[test]
+    fn vm_types_overrides_vm_type() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"vm_type":"c5.large","vm_types":["m5.large","m5.xlarge"]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.primary_vm_type().name, "m5.large");
+        assert_eq!(c.vm_types.len(), 2);
     }
 
     #[test]
@@ -219,6 +303,11 @@ mod tests {
             r#"{"mean_rate":-3}"#,
             r#"{"duration_s":0}"#,
             r#"{"vm_type":"t2.nano"}"#,
+            r#"{"vm_types":[]}"#,
+            r#"{"vm_types":["t2.nano"]}"#,
+            r#"{"vm_types":[42]}"#,
+            r#"{"instance_cap":0}"#,
+            r#"{"queue_timeout_s":0}"#,
             r#"{"scheme":"bogus"}"#,
             r#"{"workload":"wat"}"#,
             r#"{"selection":"wat"}"#,
@@ -233,7 +322,8 @@ mod tests {
     #[test]
     fn roundtrips_through_json() {
         let c = ExperimentConfig::from_str_json(
-            r#"{"trace":"wits","scheme":"exascale","seed":9,"selection":"paragon"}"#,
+            r#"{"trace":"wits","scheme":"exascale","seed":9,"selection":"paragon",
+                "vm_types":["c5.large","m4.large"],"instance_cap":777}"#,
         )
         .unwrap();
         let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
@@ -241,5 +331,10 @@ mod tests {
         assert_eq!(c2.scheme, "exascale");
         assert_eq!(c2.seed, 9);
         assert!(matches!(c2.assignment, Assignment::Policy(SelectionPolicy::Paragon)));
+        assert_eq!(
+            c2.vm_types.iter().map(|t| t.name).collect::<Vec<_>>(),
+            vec!["c5.large", "m4.large"]
+        );
+        assert_eq!(c2.instance_cap, 777);
     }
 }

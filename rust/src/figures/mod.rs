@@ -12,8 +12,10 @@
 //!   fig8  lambda memory ↑ ⇒ time ↓ cost ↑, squeezenet flat past 2 GB
 //!   fig9  paragon ≈10% cheaper than mixed at similar SLO; selection -20%
 //!   fig10 PPO controller approaches the paragon heuristic's reward
+//!   fig_het heterogeneous palette ≤ best single type at equal-or-fewer
+//!           violations (type-aware paragon, this repo's extension)
 
-use crate::cloud::pricing::default_vm_type;
+use crate::cloud::pricing::{default_vm_type, VmType, VM_TYPES};
 use crate::models::{Registry, SelectionPolicy};
 use crate::scheduler;
 use crate::sim::{simulate, Assignment, SimConfig, SimReport};
@@ -141,10 +143,18 @@ pub fn fig4(reg: &Registry) -> Json {
 
 fn run_trace_scheme(reg: &Registry, kind: TraceKind, scheme_name: &str,
                     cfg: &FigConfig) -> SimReport {
+    run_trace_scheme_palette(reg, kind, scheme_name, cfg,
+                             vec![default_vm_type()])
+}
+
+fn run_trace_scheme_palette(reg: &Registry, kind: TraceKind, scheme_name: &str,
+                            cfg: &FigConfig, vm_types: Vec<&'static VmType>)
+                            -> SimReport {
     let trace = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
     let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, cfg.seed ^ 0x51);
     let mut scheme = scheduler::by_name(scheme_name).expect("unknown scheme");
     simulate(scheme.as_mut(), reg, &reqs, kind.name(), &SimConfig {
+        vm_types,
         seed: cfg.seed,
         ..SimConfig::default()
     })
@@ -346,6 +356,74 @@ pub fn fig9c(reg: &Registry, cfg: &FigConfig) -> Json {
     Json::obj(vec![("figure", "fig9c".into()), ("rows", Json::Arr(rows))])
 }
 
+// ---------------------------------------------------------------- fig het
+
+/// Heterogeneous vs homogeneous procurement (this repo's extension of §IV):
+/// type-aware paragon over the full 7-type palette against paragon pinned
+/// to each single type. The claim mirrored from INFaaS/Cocktail: with a
+/// per-model greedy type pick, the mixed fleet's cost at equal-or-fewer
+/// violations is at most the best single-type configuration's.
+pub fn fig_het(reg: &Registry, cfg: &FigConfig) -> Json {
+    println!("\nFigure het: heterogeneous palette vs single-type fleets (paragon)");
+    hline(78);
+    println!("{:<10} {:<14} {:>10} {:>9} {:>10} {:>10}", "trace", "fleet",
+             "cost $", "viol %", "mean VMs", "dropped");
+    hline(78);
+    let mut rows = Vec::new();
+    let mut summary = Vec::new();
+    for kind in [TraceKind::Berkeley, TraceKind::Twitter] {
+        let mut best_single: Option<(&'static str, SimReport)> = None;
+        let print_row = |label: &str, r: &SimReport, rows: &mut Vec<Json>| {
+            println!("{:<10} {:<14} {:>10.3} {:>8.1}% {:>10.1} {:>10}",
+                     kind.name(), label, r.total_cost(), r.violation_pct(),
+                     r.mean_vms(), r.dropped);
+            rows.push(Json::obj(vec![
+                ("trace", kind.name().into()),
+                ("fleet", label.into()),
+                ("cost_usd", r.total_cost().into()),
+                ("violation_pct", r.violation_pct().into()),
+                ("mean_vms", r.mean_vms().into()),
+                ("dropped", (r.dropped as usize).into()),
+                ("lambda_share_pct", r.lambda_share_pct().into()),
+            ]));
+        };
+        for t in VM_TYPES {
+            let r = run_trace_scheme_palette(reg, kind, "paragon", cfg, vec![t]);
+            print_row(t.name, &r, &mut rows);
+            let better = match &best_single {
+                Some((_, b)) => r.total_cost() < b.total_cost(),
+                None => true,
+            };
+            if better {
+                best_single = Some((t.name, r));
+            }
+        }
+        let palette: Vec<&'static VmType> = VM_TYPES.iter().collect();
+        let het = run_trace_scheme_palette(reg, kind, "paragon", cfg, palette);
+        print_row("heterogeneous", &het, &mut rows);
+        let (best_name, best) = best_single.expect("at least one type");
+        let het_wins = het.total_cost() <= best.total_cost()
+            && het.violation_pct() <= best.violation_pct() + 0.5;
+        println!("{:<10} best single: {} (${:.3}); heterogeneous {}",
+                 kind.name(), best_name, best.total_cost(),
+                 if het_wins { "WINS" } else { "does not win" });
+        summary.push(Json::obj(vec![
+            ("trace", kind.name().into()),
+            ("best_single", best_name.into()),
+            ("best_single_cost_usd", best.total_cost().into()),
+            ("best_single_violation_pct", best.violation_pct().into()),
+            ("het_cost_usd", het.total_cost().into()),
+            ("het_violation_pct", het.violation_pct().into()),
+            ("het_wins", Json::Bool(het_wins)),
+        ]));
+    }
+    Json::obj(vec![
+        ("figure", "fig_het".into()),
+        ("rows", Json::Arr(rows)),
+        ("summary", Json::Arr(summary)),
+    ])
+}
+
 // ----------------------------------------------------------------- fig 10
 
 /// Fig 10 (§V): PPO learning curve vs heuristics on the serving env.
@@ -496,6 +574,30 @@ mod tests {
             assert!(ex > 1.0, "exascale under-provisions vs reactive: {row}");
             assert!(ua < 3.0 && ex < 3.0, "implausible over-provisioning: {row}");
         }
+    }
+
+    #[test]
+    fn fig_het_mixed_fleet_competitive_with_best_single_type() {
+        let j = fig_het(&reg(), &FigConfig::quick());
+        let summary = j.get("summary").as_arr().unwrap();
+        assert_eq!(summary.len(), 2);
+        let mut wins = 0;
+        for row in summary {
+            let best = row.get("best_single_cost_usd").as_f64().unwrap();
+            let het = row.get("het_cost_usd").as_f64().unwrap();
+            assert!(
+                het <= best * 1.15,
+                "heterogeneous fleet not competitive: {row}"
+            );
+            if row.get("het_wins").as_bool() == Some(true) {
+                wins += 1;
+            }
+        }
+        assert!(
+            wins >= 1,
+            "heterogeneous paragon must beat the best single type on at \
+             least one calibrated trace: {j}"
+        );
     }
 
     #[test]

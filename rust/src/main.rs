@@ -12,6 +12,7 @@
 //!   paragon simulate --scheme paragon --trace berkeley --rate 100
 //!   paragon train-rl --iters 20
 
+use paragon::cloud::pricing::parse_vm_type_list;
 use paragon::figures;
 use paragon::models::{profiler, Registry, SelectionPolicy};
 use paragon::scheduler;
@@ -81,6 +82,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
         figures::save(&out, "fig9ab", &figures::fig9ab(&reg, &cfg))?;
         figures::save(&out, "fig9c", &figures::fig9c(&reg, &cfg))?;
     }
+    if want("het") {
+        figures::save(&out, "fig_het", &figures::fig_het(&reg, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -133,9 +137,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut scheme = scheduler::by_name(&scheme_name)
         .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name} (one of {:?})",
                                        scheduler::ALL_SCHEMES))?;
+    // Heterogeneous palette: `--vm-types m4.large,c5.xlarge` (first entry
+    // primary). Default: the paper's homogeneous m4.large fleet.
+    let vm_types = match args.get("vm-types") {
+        Some(spec) => parse_vm_type_list(spec)?,
+        None => SimConfig::default().vm_types,
+    };
     let rep = simulate(scheme.as_mut(), &reg, &reqs, &trace.name, &SimConfig {
+        vm_types,
         assignment: selection,
         seed: cfg.seed,
+        instance_cap: args.get_usize("instance-cap", 5000)?,
         ..SimConfig::default()
     });
     println!("{}", rep.to_json());
@@ -186,9 +198,10 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10  --out results  [--quick|--duration S --rate R]
+  figures     --fig all|2..10|het  --out results  [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints]
               [--selection random|naive|paragon] [--trace-file F.csv]
+              [--vm-types m4.large,c5.xlarge] [--instance-cap N]
   profile     --iters N          (needs artifacts/)
   train-rl    --iters N          (needs artifacts/)
   traces      --out DIR

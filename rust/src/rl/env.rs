@@ -26,6 +26,7 @@ use crate::cloud::pricing::VmType;
 use crate::cloud::serverless::LambdaFn;
 use crate::models::Registry;
 use crate::scheduler::{LoadMonitor, OffloadPolicy};
+use crate::sim::core::SimCore;
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
 
@@ -62,8 +63,8 @@ pub struct ServeEnv {
     // dynamic state
     t: usize,
     running: u32,
-    /// boot countdowns, seconds remaining
-    booting: Vec<u32>,
+    /// in-flight VM boots, as events on the shared SimCore engine
+    boots: SimCore<()>,
     queue_strict: f64,
     queue_relaxed: f64,
     monitor: LoadMonitor,
@@ -108,7 +109,7 @@ impl ServeEnv {
             fleet_scale,
             t: 0,
             running: 0,
-            booting: Vec::new(),
+            boots: SimCore::new(),
             queue_strict: 0.0,
             queue_relaxed: 0.0,
             monitor: LoadMonitor::new(),
@@ -130,7 +131,7 @@ impl ServeEnv {
         self.t = 0;
         let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
         self.running = ((rate0 * self.service_s / self.slots as f64).ceil() as u32).max(1);
-        self.booting.clear();
+        self.boots = SimCore::new();
         self.queue_strict = 0.0;
         self.queue_relaxed = 0.0;
         self.monitor = LoadMonitor::new();
@@ -156,7 +157,7 @@ impl ServeEnv {
             (self.monitor.peak_to_median() / 4.0) as f32,
             util as f32,
             (self.running as f64 / self.fleet_scale) as f32,
-            (self.booting.len() as f64 / self.fleet_scale) as f32,
+            (self.boots.pending() as f64 / self.fleet_scale) as f32,
             (free / (self.fleet_scale * self.slots as f64)) as f32,
             (queue / 100.0).min(2.0) as f32,
             lambda_share as f32,
@@ -172,28 +173,27 @@ impl ServeEnv {
     /// Advance one second under action `a`.
     pub fn step(&mut self, a: usize) -> ([f32; OBS_DIM], StepResult) {
         let (delta, offload) = decode_action(a);
-        // Apply scaling action.
+        // Apply scaling action: boots are events on the SimCore heap.
         if delta > 0 {
             let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
             for _ in 0..step {
-                self.booting.push(BOOT_S);
+                self.boots.schedule_at((self.t + BOOT_S as usize) as f64, ());
             }
         } else if delta < 0 {
             let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
-            // Cancel boots first, then drain running VMs.
-            let cancel = step.min(self.booting.len() as u32);
-            for _ in 0..cancel {
-                self.booting.pop();
+            // Cancel the newest boots first, then drain running VMs.
+            let mut cancel = step.min(self.boots.pending() as u32);
+            let drained = step - cancel;
+            while cancel > 0 {
+                self.boots.cancel_latest();
+                cancel -= 1;
             }
-            self.running = self.running.saturating_sub(step - cancel).max(1);
+            self.running = self.running.saturating_sub(drained).max(1);
         }
-        // Boots progress.
-        for b in &mut self.booting {
-            *b -= 1;
+        // Boots due by this step come online.
+        while self.boots.pop_due(self.t as f64).is_some() {
+            self.running += 1;
         }
-        let done_boots = self.booting.iter().filter(|&&b| b == 0).count() as u32;
-        self.booting.retain(|&b| b > 0);
-        self.running += done_boots;
 
         // Arrivals this second.
         let rate = self.trace.rates.get(self.t).copied().unwrap_or(0.0);
@@ -264,7 +264,7 @@ impl ServeEnv {
 
         // Costs: per-second VM + per-invocation lambda (warm-dominated;
         // fluid model folds cold starts into a 5% premium).
-        let vm_cost = (self.running as f64 + self.booting.len() as f64)
+        let vm_cost = (self.running as f64 + self.boots.pending() as f64)
             * self.vm.price.per_second();
         let lambda_cost = lambda_n * self.lambda.invoke_cost(false) * 1.05;
         let cost = vm_cost + lambda_cost;

@@ -47,6 +47,8 @@ impl Scheme for Exascale {
             .rate_pred(PROVISION_MEAN_S)
             .min(obs.monitor.rate_ewma() * FORECAST_CLAMP);
         let mut out = Vec::new();
+        // Homogeneous predictive scheme: pins the primary type.
+        let ty = obs.primary();
         for d in obs.demands {
             let share = if total_now > 0.0 { d.rate / total_now } else { 0.0 };
             let pred = (pred_total * share).max(d.rate); // never below current
@@ -56,7 +58,7 @@ impl Scheme for Exascale {
                 (d.vms_for_rate(pred * HEADROOM) + d.backlog_vms(60.0)).max(1)
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
-            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
         }
         out
     }
@@ -69,7 +71,8 @@ impl Scheme for Exascale {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::testutil::obs_fixture;
+    use crate::cloud::default_vm_type;
+    use crate::scheduler::testutil::{obs_fixture, palette};
     use crate::scheduler::{LoadMonitor, ModelDemand, SchedObs};
     use crate::cloud::Cluster;
 
@@ -77,10 +80,14 @@ mod tests {
     fn provisions_headroom_above_demand() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Exascale::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
         // reactive would want 2 VMs; exascale wants ceil(40*1.3*0.1/2)=3.
-        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 3 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 3 }]
+        );
     }
 
     #[test]
@@ -96,10 +103,12 @@ mod tests {
         }
         let demands = vec![ModelDemand {
             model: 0, rate: 69.0, service_s: 0.1, slots_per_vm: 2, queued: 0,
+            types: vec![],
         }];
         let cluster = Cluster::new(1);
         let mut s = Exascale::new();
-        let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
         match &acts[0] {
             Action::Spawn { count, .. } => {
@@ -115,7 +124,8 @@ mod tests {
     fn slow_drain() {
         let (mon, demands, cluster) = obs_fixture(40.0, 8, true);
         let mut s = Exascale::new();
-        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
+                                  cluster: &cluster, vm_types: palette() };
         assert!(s.tick(&mk(100.0)).is_empty());
         assert!(s.tick(&mk(190.0)).is_empty(), "cooldown 120s not elapsed");
         let acts = s.tick(&mk(221.0));

@@ -36,6 +36,7 @@ impl Scheme for Mixed {
     fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
         // VM fleet: identical to reactive — lambdas absorb what boots miss.
         let mut out = Vec::new();
+        let ty = obs.primary();
         for d in obs.demands {
             let desired = if d.rate <= 0.0 && d.queued == 0 {
                 0
@@ -44,7 +45,7 @@ impl Scheme for Mixed {
                 (d.vms_for_rate(d.rate * 1.10) + d.backlog_vms(60.0)).max(1)
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
-            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
         }
         out
     }
@@ -57,14 +58,19 @@ impl Scheme for Mixed {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::testutil::obs_fixture;
+    use crate::cloud::default_vm_type;
+    use crate::scheduler::testutil::{obs_fixture, palette};
 
     #[test]
     fn vm_policy_matches_reactive() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Mixed::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
-        assert_eq!(s.tick(&obs), vec![Action::Spawn { model: 0, count: 3 }]);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
+        assert_eq!(
+            s.tick(&obs),
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 3 }]
+        );
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Resource-procurement schemes — the paper's L3 coordination contribution.
 //!
 //! Five schemes, each modeled on the prior work the paper evaluates
-//! (§II-C/§II-D) plus the paper's own Paragon (§IV):
+//! (§II-C/§II-D) plus the paper's own Paragon (§IV). Actions are
+//! *type-aware*: every Spawn/Drain names the instance type it targets, so
+//! a scheme can exploit resource heterogeneity (INFaaS/Cocktail-style)
+//! on a multi-type palette.
 //!
-//! | scheme      | models                    | VMs                       | serverless            |
-//! |-------------|---------------------------|---------------------------|-----------------------|
-//! | `reactive`  | baseline autoscaler       | scale to current demand   | never                 |
-//! | `util_aware`| threshold autoscalers [14]| scale at 80% utilization  | never                 |
-//! | `exascale`  | predictive w/ headroom [17]| provision above forecast | never                 |
-//! | `mixed`     | MArk [12] / Spock [13]    | reactive                  | offload all overflow  |
-//! | `paragon`   | this paper                | short-horizon predictive  | strict-SLO overflow only, gated by peak-to-median |
+//! | scheme      | models                    | VMs                       | vm types                   | serverless            |
+//! |-------------|---------------------------|---------------------------|----------------------------|-----------------------|
+//! | `reactive`  | baseline autoscaler       | scale to current demand   | pins the primary type      | never                 |
+//! | `util_aware`| threshold autoscalers [14]| scale at 80% utilization  | pins the primary type      | never                 |
+//! | `exascale`  | predictive w/ headroom [17]| provision above forecast | pins the primary type      | never                 |
+//! | `mixed`     | MArk [12] / Spock [13]    | reactive                  | pins the primary type      | offload all overflow  |
+//! | `paragon`   | this paper                | short-horizon predictive  | greedy cheapest-per-slot-second per model | strict-SLO overflow only, gated by peak-to-median |
 
 pub mod exascale;
 pub mod load_monitor;
@@ -18,6 +21,7 @@ pub mod paragon;
 pub mod reactive;
 pub mod util_aware;
 
+use crate::cloud::pricing::VmType;
 use crate::cloud::Cluster;
 pub use load_monitor::LoadMonitor;
 
@@ -32,18 +36,83 @@ pub enum OffloadPolicy {
     All,
 }
 
+/// What one VM of a given type offers one model: the per-`(model, vm_type)`
+/// capacity axis of a heterogeneous palette.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TypeCap {
+    pub vm_type: &'static VmType,
+    /// Service time of one query on this type, seconds.
+    pub service_s: f64,
+    /// Concurrency slots one VM of this type offers the model.
+    pub slots_per_vm: u32,
+}
+
+impl TypeCap {
+    /// VMs of this type needed to serve `rate` at full utilization.
+    pub fn vms_for_rate(&self, rate: f64) -> usize {
+        let per_vm = self.slots_per_vm as f64 / self.service_s;
+        (rate / per_vm).ceil() as usize
+    }
+
+    /// Extra VMs of this type to drain `queued` requests within `drain_s`.
+    pub fn backlog_vms(&self, queued: usize, drain_s: f64) -> usize {
+        if queued == 0 {
+            return 0;
+        }
+        let per_vm = self.slots_per_vm as f64 / self.service_s;
+        (queued as f64 / (per_vm * drain_s)).ceil() as usize
+    }
+
+    /// Price of one concurrency slot for one second, USD.
+    pub fn cost_per_slot_second(&self) -> f64 {
+        self.vm_type.price.per_second() / self.slots_per_vm as f64
+    }
+
+    /// Effective price of one served query at full utilization, USD —
+    /// cost-per-slot-second weighted by how long a query holds the slot.
+    pub fn cost_per_query(&self) -> f64 {
+        self.cost_per_slot_second() * self.service_s
+    }
+}
+
+/// Index of the cheapest palette entry by effective cost per query
+/// (slot-second price x service time). Stable: ties keep the earliest
+/// entry, so a palette of identical types behaves exactly like a
+/// single-type palette. Single source of the metric — the tick-time
+/// pick ([`cheapest_cap`]) and warm-start pick
+/// ([`Scheme::preferred_type`]) must always agree.
+pub fn cheapest_cap_index(types: &[TypeCap]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, t) in types.iter().enumerate() {
+        match best {
+            Some(b) if t.cost_per_query() >= types[b].cost_per_query() => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
+/// See [`cheapest_cap_index`].
+pub fn cheapest_cap(types: &[TypeCap]) -> Option<&TypeCap> {
+    cheapest_cap_index(types).map(|i| &types[i])
+}
+
 /// Per-model-group demand snapshot handed to schemes each tick.
 #[derive(Debug, Clone)]
 pub struct ModelDemand {
     pub model: usize,
     /// Arrival rate attributed to this model, req/s (EWMA).
     pub rate: f64,
-    /// Service time of one query on the configured VM type, seconds.
+    /// Service time of one query on the *primary* VM type, seconds.
     pub service_s: f64,
-    /// Concurrency slots one VM offers this model.
+    /// Concurrency slots one primary-type VM offers this model.
     pub slots_per_vm: u32,
     /// Requests currently queued for this model.
     pub queued: usize,
+    /// Full palette capacities for this model, in palette order (empty in
+    /// legacy single-type observations: schemes then fall back to the
+    /// primary-type fields above).
+    pub types: Vec<TypeCap>,
 }
 
 impl ModelDemand {
@@ -72,14 +141,28 @@ pub struct SchedObs<'a> {
     pub monitor: &'a LoadMonitor,
     pub demands: &'a [ModelDemand],
     pub cluster: &'a Cluster,
+    /// The instance-type palette this run may procure from; the first
+    /// entry is the *primary* type homogeneous schemes pin.
+    pub vm_types: &'a [&'static VmType],
 }
 
-/// Scaling actions a scheme emits. The simulator (or live serving loop)
-/// applies them; schemes never mutate the fleet directly.
+impl<'a> SchedObs<'a> {
+    /// The pinned type for homogeneous schemes (palette head).
+    pub fn primary(&self) -> &'static VmType {
+        self.vm_types
+            .first()
+            .copied()
+            .unwrap_or_else(crate::cloud::default_vm_type)
+    }
+}
+
+/// Scaling actions a scheme emits, each targeting one `(model, vm_type)`
+/// sub-fleet. The simulator (or live serving loop) applies them; schemes
+/// never mutate the fleet directly.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Action {
-    Spawn { model: usize, count: usize },
-    Drain { model: usize, count: usize },
+    Spawn { model: usize, vm_type: &'static VmType, count: usize },
+    Drain { model: usize, vm_type: &'static VmType, count: usize },
 }
 
 /// A resource-procurement scheme.
@@ -89,6 +172,14 @@ pub trait Scheme {
     fn tick(&mut self, obs: &SchedObs) -> Vec<Action>;
     /// Current offload policy (queried per overflow request).
     fn offload(&self) -> OffloadPolicy;
+    /// Which palette entry this scheme provisions for a model with the
+    /// given per-type capacities (index into `types`). The simulator's
+    /// warm start provisions on this type so a type-aware scheme does not
+    /// pay a spurious migration at t=0. Default: the pinned primary.
+    fn preferred_type(&self, types: &[TypeCap]) -> usize {
+        let _ = types;
+        0
+    }
 }
 
 /// Construct a scheme by name (CLI / figures).
@@ -106,25 +197,26 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
 pub const ALL_SCHEMES: [&str; 5] =
     ["reactive", "util_aware", "exascale", "mixed", "paragon"];
 
-/// Shared helper: emit Spawn/Drain to move `model`'s fleet toward
-/// `desired`, draining only after `cooldown_s` of sustained surplus
-/// (tracked by the caller via `surplus_since`).
+/// Shared helper: emit Spawn/Drain to move the `(model, vm_type)`
+/// sub-fleet toward `desired`, draining only after `cooldown_s` of
+/// sustained surplus (tracked by the caller via `surplus_since`).
 pub(crate) fn converge(
     obs: &SchedObs,
     model: usize,
+    vm_type: &'static VmType,
     desired: usize,
     surplus_since: &mut Option<f64>,
     cooldown_s: f64,
     out: &mut Vec<Action>,
 ) {
-    let alive = obs.cluster.alive(model);
+    let alive = obs.cluster.alive_typed(model, vm_type);
     if alive < desired {
         *surplus_since = None;
-        out.push(Action::Spawn { model, count: desired - alive });
+        out.push(Action::Spawn { model, vm_type, count: desired - alive });
     } else if alive > desired {
         let since = surplus_since.get_or_insert(obs.now);
         if obs.now - *since >= cooldown_s {
-            out.push(Action::Drain { model, count: alive - desired });
+            out.push(Action::Drain { model, vm_type, count: alive - desired });
             *surplus_since = None;
         }
     } else {
@@ -136,6 +228,12 @@ pub(crate) fn converge(
 pub(crate) mod testutil {
     use super::*;
     use crate::cloud::pricing::default_vm_type;
+
+    /// Single-primary-type palette for scheme unit tests.
+    pub fn palette() -> &'static [&'static VmType] {
+        static P: std::sync::OnceLock<Vec<&'static VmType>> = std::sync::OnceLock::new();
+        P.get_or_init(|| vec![default_vm_type()]).as_slice()
+    }
 
     /// Build a one-model observation with the given EWMA rate and fleet.
     pub fn obs_fixture(rate: f64, alive_vms: usize, booted: bool)
@@ -153,6 +251,11 @@ pub(crate) mod testutil {
             service_s: 0.1,
             slots_per_vm: 2,
             queued: 0,
+            types: vec![TypeCap {
+                vm_type: default_vm_type(),
+                service_s: 0.1,
+                slots_per_vm: 2,
+            }],
         }];
         let mut cluster = Cluster::new(1);
         for _ in 0..alive_vms {
@@ -168,6 +271,7 @@ pub(crate) mod testutil {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::vm_type;
 
     #[test]
     fn by_name_covers_all() {
@@ -179,10 +283,40 @@ mod tests {
 
     #[test]
     fn vms_for_rate_ceil() {
-        let d = ModelDemand { model: 0, rate: 0.0, service_s: 0.5, slots_per_vm: 2, queued: 0 };
+        let d = ModelDemand {
+            model: 0, rate: 0.0, service_s: 0.5, slots_per_vm: 2, queued: 0,
+            types: vec![],
+        };
         // one VM serves 4 q/s; 9 q/s needs 3 VMs.
         assert_eq!(d.vms_for_rate(9.0), 3);
         assert_eq!(d.vms_for_rate(8.0), 2);
         assert_eq!(d.vms_for_rate(0.0), 0);
+    }
+
+    #[test]
+    fn cheapest_cap_picks_lowest_cost_per_query() {
+        // resnet-50-like profile: 0.62 s on m4.large (speed 1.0), 2 slots;
+        // c5.large is faster and cheaper per slot-second for it.
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let caps = [
+            TypeCap { vm_type: m4, service_s: 0.62, slots_per_vm: 2 },
+            TypeCap { vm_type: c5, service_s: 0.62 / 1.25, slots_per_vm: 2 },
+        ];
+        let best = cheapest_cap(&caps).unwrap();
+        assert_eq!(best.vm_type.name, "c5.large");
+        assert!(best.cost_per_query() < caps[0].cost_per_query());
+    }
+
+    #[test]
+    fn cheapest_cap_tie_keeps_palette_order() {
+        let m4 = vm_type("m4.large").unwrap();
+        let caps = [
+            TypeCap { vm_type: m4, service_s: 0.1, slots_per_vm: 2 },
+            TypeCap { vm_type: m4, service_s: 0.1, slots_per_vm: 2 },
+        ];
+        let best = cheapest_cap(&caps).unwrap();
+        assert!(std::ptr::eq(best, &caps[0]), "tie must keep the first entry");
+        assert!(cheapest_cap(&[]).is_none());
     }
 }

@@ -1,5 +1,5 @@
 //! `paragon`: the paper's scheme (§IV) — request-constraint-aware mixed
-//! procurement. Three differences from `mixed`:
+//! procurement. Four differences from `mixed`:
 //!
 //! 1. **Latency-class awareness** — only *strict*-SLO queries may be
 //!    offloaded to serverless; relaxed queries wait for VM capacity ("the
@@ -14,8 +14,15 @@
 //!    stochastic margin) plus a fast backlog-drain term sized to the
 //!    relaxed class's tolerance; no standing predictive headroom like
 //!    exascale's.
+//! 4. **Resource heterogeneity** — on a multi-type palette, each model
+//!    group is provisioned on the type with the lowest cost per
+//!    slot-second of service capacity (greedy, INFaaS/Cocktail-style);
+//!    sub-fleets on other types are retired once the chosen type's
+//!    running capacity alone covers demand, so a migration never opens
+//!    a serving gap while replacements boot.
 
-use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use super::{cheapest_cap, converge, Action, OffloadPolicy, SchedObs, Scheme, TypeCap};
+use crate::cloud::VmState;
 use std::collections::BTreeMap;
 
 /// Offload opens only above this windowed peak-to-median (Observation 4).
@@ -31,7 +38,8 @@ const BACKLOG_DRAIN_S: f64 = 70.0;
 const DRAIN_COOLDOWN_S: f64 = 60.0;
 
 pub struct Paragon {
-    surplus_since: BTreeMap<usize, Option<f64>>,
+    /// Surplus clocks per (model, instance-type name) sub-fleet.
+    surplus_since: BTreeMap<(usize, &'static str), Option<f64>>,
     gate_open: bool,
     p2m_gate: f64,
 }
@@ -44,6 +52,17 @@ impl Paragon {
     /// Construct with a non-default offload gate (config / ablations).
     pub fn with_gate(p2m_gate: f64) -> Self {
         Paragon { surplus_since: BTreeMap::new(), gate_open: false, p2m_gate }
+    }
+
+    /// The palette entry this model group should run on: cheapest cost per
+    /// slot-second of service capacity. Falls back to the primary type when
+    /// the observation carries no palette (legacy single-type callers).
+    fn pick_cap(obs: &SchedObs, d: &crate::scheduler::ModelDemand) -> TypeCap {
+        cheapest_cap(&d.types).copied().unwrap_or_else(|| TypeCap {
+            vm_type: obs.primary(),
+            service_s: d.service_s,
+            slots_per_vm: d.slots_per_vm,
+        })
     }
 }
 
@@ -62,13 +81,35 @@ impl Scheme for Paragon {
         self.gate_open = obs.monitor.peak_to_median() >= self.p2m_gate;
         let mut out = Vec::new();
         for d in obs.demands {
+            let cap = Self::pick_cap(obs, d);
             let desired = if d.rate <= 0.0 && d.queued == 0 {
                 0
             } else {
-                (d.vms_for_rate(d.rate * MARGIN) + d.backlog_vms(BACKLOG_DRAIN_S)).max(1)
+                (cap.vms_for_rate(d.rate * MARGIN)
+                    + cap.backlog_vms(d.queued, BACKLOG_DRAIN_S))
+                .max(1)
             };
-            let since = self.surplus_since.entry(d.model).or_insert(None);
-            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            let since = self
+                .surplus_since
+                .entry((d.model, cap.vm_type.name))
+                .or_insert(None);
+            converge(obs, d.model, cap.vm_type, desired, since, DRAIN_COOLDOWN_S,
+                     &mut out);
+            // Migration: retire sub-fleets on non-chosen types, but only
+            // once the chosen type's *running* capacity alone covers the
+            // desired fleet — never trade serving capacity for cost while
+            // replacements are still booting.
+            if obs.cluster.count_typed(d.model, cap.vm_type, VmState::Running) >= desired {
+                for &ty in obs.vm_types {
+                    if ty.name == cap.vm_type.name {
+                        continue;
+                    }
+                    let stale = obs.cluster.alive_typed(d.model, ty);
+                    if stale > 0 {
+                        out.push(Action::Drain { model: d.model, vm_type: ty, count: stale });
+                    }
+                }
+            }
         }
         out
     }
@@ -80,20 +121,29 @@ impl Scheme for Paragon {
             OffloadPolicy::None
         }
     }
+
+    /// Warm starts land directly on the greedy pick — the same
+    /// [`crate::scheduler::cheapest_cap_index`] the tick uses, so the
+    /// two can never disagree.
+    fn preferred_type(&self, types: &[TypeCap]) -> usize {
+        crate::scheduler::cheapest_cap_index(types).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::vm_type;
     use crate::cloud::Cluster;
-    use crate::scheduler::testutil::obs_fixture;
+    use crate::scheduler::testutil::{obs_fixture, palette};
     use crate::scheduler::{LoadMonitor, ModelDemand, SchedObs};
 
     #[test]
     fn gate_closed_on_flat_load() {
         let (mon, demands, cluster) = obs_fixture(40.0, 2, true);
         let mut s = Paragon::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         s.tick(&obs);
         // Flat load: peak-to-median ~1.0 < gate; lambda valve shut.
         assert_eq!(s.offload(), OffloadPolicy::None);
@@ -111,10 +161,12 @@ mod tests {
         }
         let demands = vec![ModelDemand {
             model: 0, rate: 80.0, service_s: 0.1, slots_per_vm: 2, queued: 0,
+            types: vec![],
         }];
         let cluster = Cluster::new(1);
         let mut s = Paragon::new();
-        let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         s.tick(&obs);
         assert_eq!(s.offload(), OffloadPolicy::StrictOnly);
     }
@@ -123,7 +175,8 @@ mod tests {
     fn provisions_with_slim_margin() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Paragon::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
         // Flat 40 q/s: forecast = rate, margin 1.05 -> ceil(42*0.05)= 3 VMs
         // (reactive: 2, exascale: 3 with much bigger margin on ramps).
@@ -131,5 +184,70 @@ mod tests {
             Action::Spawn { count, .. } => assert!(*count <= 3),
             other => panic!("expected spawn, got {other:?}"),
         }
+    }
+
+    /// On a two-type palette, the greedy picker provisions the type with
+    /// the lowest cost per slot-second of capacity.
+    #[test]
+    fn heterogeneous_palette_spawns_cheapest_type() {
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let types = vec![
+            TypeCap { vm_type: m4, service_s: 0.10, slots_per_vm: 2 },
+            // 1.25x faster at a lower hourly price: strictly cheaper/query.
+            TypeCap { vm_type: c5, service_s: 0.08, slots_per_vm: 2 },
+        ];
+        let (mon, mut demands, cluster) = obs_fixture(40.0, 0, false);
+        demands[0].types = types;
+        let vm_types = [m4, c5];
+        let mut s = Paragon::new();
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: &vm_types };
+        let acts = s.tick(&obs);
+        match &acts[0] {
+            Action::Spawn { vm_type, .. } => assert_eq!(vm_type.name, "c5.large"),
+            other => panic!("expected spawn, got {other:?}"),
+        }
+    }
+
+    /// A warm fleet on a pricier type is retired only after the chosen
+    /// type's running capacity covers demand.
+    #[test]
+    fn migrates_off_stale_type_without_serving_gap() {
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let mk_types = || vec![
+            TypeCap { vm_type: m4, service_s: 0.10, slots_per_vm: 2 },
+            TypeCap { vm_type: c5, service_s: 0.08, slots_per_vm: 2 },
+        ];
+        let (mon, mut demands, mut cluster) = obs_fixture(40.0, 3, true);
+        demands[0].types = mk_types(); // fixture fleet is m4 (primary)
+        let vm_types = [m4, c5];
+        let mut s = Paragon::new();
+        let acts = {
+            let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                                 cluster: &cluster, vm_types: &vm_types };
+            s.tick(&obs)
+        };
+        // c5 fleet is empty: spawn c5, but do NOT drain the serving m4s.
+        assert!(acts.iter().any(|a| matches!(
+            a, Action::Spawn { vm_type, .. } if vm_type.name == "c5.large")));
+        assert!(!acts.iter().any(|a| matches!(a, Action::Drain { .. })),
+                "must not drain the only serving fleet: {acts:?}");
+
+        // Boot enough c5 VMs; now the stale m4 sub-fleet must drain.
+        for _ in 0..4 {
+            cluster.spawn(c5, 0, 2, 31.0);
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        let acts = {
+            let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
+                                 cluster: &cluster, vm_types: &vm_types };
+            s.tick(&obs)
+        };
+        assert!(acts.iter().any(|a| matches!(
+            a, Action::Drain { vm_type, count, .. }
+                if vm_type.name == "m4.large" && *count == 3)),
+            "stale m4 fleet not retired: {acts:?}");
     }
 }

@@ -38,6 +38,8 @@ impl Scheme for Reactive {
 
     fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
         let mut out = Vec::new();
+        // Homogeneous baseline: every action targets the pinned primary type.
+        let ty = obs.primary();
         // Apportion the smoothed total rate across model groups by their
         // observed shares; demand.rate already carries the per-model EWMA.
         for d in obs.demands {
@@ -47,7 +49,7 @@ impl Scheme for Reactive {
                 (d.vms_for_rate(d.rate * MARGIN) + d.backlog_vms(60.0)).max(MIN_VMS)
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
-            converge(obs, d.model, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
         }
         out
     }
@@ -60,28 +62,37 @@ impl Scheme for Reactive {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::testutil::obs_fixture;
+    use crate::cloud::default_vm_type;
+    use crate::scheduler::testutil::{obs_fixture, palette};
     use crate::scheduler::LoadMonitor;
 
     #[test]
     fn scales_to_current_demand_exactly() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Reactive::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
         // ceil(40 q/s * 1.1 margin * 0.1s / 2 slots) = 3 VMs.
-        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 3 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 3 }]
+        );
     }
 
     #[test]
     fn drains_only_after_cooldown() {
         let (mon, demands, cluster) = obs_fixture(40.0, 5, true);
         let mut s = Reactive::new();
-        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
+                                  cluster: &cluster, vm_types: palette() };
         assert!(s.tick(&mk(100.0)).is_empty(), "surplus observed, no drain yet");
         assert!(s.tick(&mk(130.0)).is_empty(), "cooldown not elapsed");
         let acts = s.tick(&mk(161.0));
-        assert_eq!(acts, vec![Action::Drain { model: 0, count: 2 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Drain { model: 0, vm_type: default_vm_type(), count: 2 }]
+        );
     }
 
     #[test]
@@ -90,10 +101,14 @@ mod tests {
         demands[0].rate = 0.0;
         let mon = LoadMonitor::new();
         let mut s = Reactive::new();
-        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
+                                  cluster: &cluster, vm_types: palette() };
         s.tick(&mk(0.0));
         let acts = s.tick(&mk(61.0));
-        assert_eq!(acts, vec![Action::Drain { model: 0, count: 2 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Drain { model: 0, vm_type: default_vm_type(), count: 2 }]
+        );
     }
 
     #[test]

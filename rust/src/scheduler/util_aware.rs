@@ -46,13 +46,19 @@ impl Scheme for UtilAware {
 
     fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
         let mut out = Vec::new();
+        // Homogeneous threshold autoscaler: pins the primary type.
+        let ty = obs.primary();
         for d in obs.demands {
             let alive = obs.cluster.alive(d.model);
             let util = obs.cluster.utilization(d.model);
             let low = self.low_since.entry(d.model).or_insert(None);
             if alive == 0 {
                 if d.rate > 0.0 || d.queued > 0 {
-                    out.push(Action::Spawn { model: d.model, count: d.vms_for_rate(d.rate).max(1) });
+                    out.push(Action::Spawn {
+                        model: d.model,
+                        vm_type: ty,
+                        count: d.vms_for_rate(d.rate).max(1),
+                    });
                     self.last_spawn.insert(d.model, obs.now);
                 }
                 *low = None;
@@ -65,7 +71,7 @@ impl Scheme for UtilAware {
                 // (Observation 3): the scheme can only add a fleet-
                 // proportional step and hope.
                 let step = ((alive as f64 * GROW_STEP).ceil() as usize).max(1);
-                out.push(Action::Spawn { model: d.model, count: step });
+                out.push(Action::Spawn { model: d.model, vm_type: ty, count: step });
                 self.last_spawn.insert(d.model, obs.now);
                 *low = None;
             } else if util <= UTIL_LOW && alive > 1 {
@@ -74,7 +80,11 @@ impl Scheme for UtilAware {
                     // Drain a fleet-proportional step (mirror of the grow
                     // step), keeping utilization inside the dead band.
                     let step = ((alive as f64 * 0.15).ceil() as usize).max(1);
-                    out.push(Action::Drain { model: d.model, count: step.min(alive - 1) });
+                    out.push(Action::Drain {
+                        model: d.model,
+                        vm_type: ty,
+                        count: step.min(alive - 1),
+                    });
                     *low = None;
                 }
             } else {
@@ -92,7 +102,8 @@ impl Scheme for UtilAware {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::testutil::obs_fixture;
+    use crate::cloud::default_vm_type;
+    use crate::scheduler::testutil::{obs_fixture, palette};
 
     #[test]
     fn spawns_on_high_utilization() {
@@ -102,9 +113,13 @@ mod tests {
             cluster.route(0).unwrap();
         }
         let mut s = UtilAware::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
-        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 1 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 1 }]
+        );
     }
 
     #[test]
@@ -114,7 +129,8 @@ mod tests {
         cluster.route(0).unwrap();
         cluster.route(0).unwrap();
         let mut s = UtilAware::new();
-        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         assert!(s.tick(&obs).is_empty());
     }
 
@@ -122,18 +138,26 @@ mod tests {
     fn drains_one_at_a_time_after_cooldown() {
         let (mon, demands, cluster) = obs_fixture(1.0, 3, true); // idle fleet
         let mut s = UtilAware::new();
-        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
+                                  cluster: &cluster, vm_types: palette() };
         assert!(s.tick(&mk(10.0)).is_empty());
         let acts = s.tick(&mk(131.0));
-        assert_eq!(acts, vec![Action::Drain { model: 0, count: 1 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Drain { model: 0, vm_type: default_vm_type(), count: 1 }]
+        );
     }
 
     #[test]
     fn cold_start_spawns_for_demand() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = UtilAware::new();
-        let obs = SchedObs { now: 0.0, monitor: &mon, demands: &demands, cluster: &cluster };
+        let obs = SchedObs { now: 0.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: palette() };
         let acts = s.tick(&obs);
-        assert_eq!(acts, vec![Action::Spawn { model: 0, count: 2 }]);
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 2 }]
+        );
     }
 }

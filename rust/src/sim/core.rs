@@ -1,0 +1,251 @@
+//! SimCore: the reusable discrete-event substrate.
+//!
+//! A generic time-ordered event heap (in the spirit of golem-des's
+//! `Engine<Payload>`) plus a monotone clock. Two layers build on it: the
+//! request-level simulator ([`super::engine::simulate`]) schedules inference
+//! completions through it, and the RL environment
+//! ([`crate::rl::env::ServeEnv`]) schedules VM boot completions. Events at
+//! equal times pop in insertion order (a per-event sequence number breaks
+//! ties), so every consumer is deterministic by construction — `BinaryHeap`
+//! alone makes no ordering promise for equal keys.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Entry<P> {
+    at: f64,
+    seq: u64,
+    payload: P,
+}
+
+impl<P> PartialEq for Entry<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<P> Eq for Entry<P> {}
+
+impl<P> PartialOrd for Entry<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Entry<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first with
+        // FIFO among equal times.
+        other
+            .at
+            .total_cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A min-heap of `(time, payload)` events with stable FIFO tie-breaking.
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Entry<P>>,
+    seq: u64,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: f64, payload: P) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { at, seq, payload });
+    }
+
+    /// Time of the earliest pending event.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, P)> {
+        self.heap.pop().map(|e| (e.at, e.payload))
+    }
+
+    /// Remove the most recently pushed pending event (LIFO cancellation —
+    /// e.g. aborting the newest of several in-flight VM boots). O(n).
+    pub fn remove_latest(&mut self) -> Option<P> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let mut entries: Vec<Entry<P>> = std::mem::take(&mut self.heap).into_vec();
+        let mut newest = 0;
+        for (i, e) in entries.iter().enumerate() {
+            if e.seq > entries[newest].seq {
+                newest = i;
+            }
+        }
+        let e = entries.swap_remove(newest);
+        self.heap = entries.into();
+        Some(e.payload)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+/// Event queue plus a monotone clock: the minimal discrete-event engine.
+///
+/// `schedule` books an event `delay` ahead of the clock; `next` pops the
+/// earliest event and advances the clock to it. Consumers that merge other
+/// event sources (request arrivals, fixed-rate ticks) read `next_time()`
+/// and call `advance_to` with whichever source fires first.
+pub struct SimCore<P> {
+    now: f64,
+    events: EventQueue<P>,
+}
+
+impl<P> Default for SimCore<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> SimCore<P> {
+    pub fn new() -> Self {
+        SimCore { now: 0.0, events: EventQueue::new() }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Book an event `delay` seconds from now.
+    pub fn schedule(&mut self, delay: f64, payload: P) {
+        self.events.push(self.now + delay, payload);
+    }
+
+    /// Book an event at an absolute time (may be in the past: it then pops
+    /// immediately without moving the clock backwards).
+    pub fn schedule_at(&mut self, at: f64, payload: P) {
+        self.events.push(at, payload);
+    }
+
+    pub fn next_time(&self) -> Option<f64> {
+        self.events.peek_time()
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn next(&mut self) -> Option<(f64, P)> {
+        let (at, p) = self.events.pop()?;
+        self.now = self.now.max(at);
+        Some((at, p))
+    }
+
+    /// Pop the earliest event only if it fires at or before `until`.
+    pub fn pop_due(&mut self, until: f64) -> Option<(f64, P)> {
+        match self.events.peek_time() {
+            Some(at) if at <= until => self.next(),
+            _ => None,
+        }
+    }
+
+    /// Move the clock forward without consuming an event.
+    pub fn advance_to(&mut self, t: f64) {
+        self.now = self.now.max(t);
+    }
+
+    /// Cancel the most recently scheduled pending event.
+    pub fn cancel_latest(&mut self) -> Option<P> {
+        self.events.remove_latest()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        q.push(3.0, "c");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn equal_times_pop_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((5.0, i)), "insertion order broken at {i}");
+        }
+    }
+
+    #[test]
+    fn remove_latest_is_lifo() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "old");
+        q.push(9.0, "mid");
+        q.push(4.0, "new");
+        assert_eq!(q.remove_latest(), Some("new"));
+        assert_eq!(q.remove_latest(), Some("mid"));
+        assert_eq!(q.pop(), Some((1.0, "old")));
+        assert_eq!(q.remove_latest(), None);
+    }
+
+    #[test]
+    fn core_clock_advances_monotonically() {
+        let mut core = SimCore::new();
+        core.schedule(2.0, 1u32);
+        core.schedule(0.5, 2u32);
+        assert_eq!(core.next(), Some((0.5, 2)));
+        assert_eq!(core.now(), 0.5);
+        core.schedule_at(0.1, 3u32); // in the past
+        assert_eq!(core.next(), Some((0.1, 3)));
+        assert_eq!(core.now(), 0.5, "clock never rewinds");
+        assert_eq!(core.next(), Some((2.0, 1)));
+        assert_eq!(core.now(), 2.0);
+    }
+
+    #[test]
+    fn pop_due_respects_bound() {
+        let mut core = SimCore::new();
+        core.schedule_at(10.0, "later");
+        assert!(core.pop_due(9.9).is_none());
+        assert_eq!(core.pop_due(10.0), Some((10.0, "later")));
+        assert_eq!(core.pending(), 0);
+    }
+
+    #[test]
+    fn cancel_latest_unbooks() {
+        let mut core = SimCore::new();
+        core.schedule(1.0, "a");
+        core.schedule(2.0, "b");
+        assert_eq!(core.cancel_latest(), Some("b"));
+        assert_eq!(core.pending(), 1);
+        assert_eq!(core.next(), Some((1.0, "a")));
+    }
+}

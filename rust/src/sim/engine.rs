@@ -1,23 +1,24 @@
 //! The discrete-event engine.
 //!
 //! Three event sources are merged in time order: request arrivals
-//! (pre-synthesized), inference completions (binary heap), and 1 Hz
-//! scheduler ticks. VMs are model-pinned with slot concurrency; overflow
-//! goes to a per-model FIFO queue or — policy permitting — to a serverless
-//! warm pool with cold-start and GB-second billing.
+//! (pre-synthesized), inference completions (a [`SimCore`] event heap), and
+//! 1 Hz scheduler ticks. VMs are model-pinned with slot concurrency and may
+//! span a *heterogeneous* palette of instance types; each request routes to
+//! the cheapest feasible `(model, vm_type)` sub-fleet. Overflow goes to a
+//! per-model FIFO queue (bounded by a wait timeout) or — policy permitting —
+//! to a serverless warm pool with cold-start and GB-second billing.
 
+use super::core::SimCore;
+use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
 use crate::cloud::serverless::LambdaFn;
 use crate::cloud::Cluster;
 use crate::models::{select, Registry, SelectionPolicy};
-use crate::scheduler::{Action, ModelDemand, OffloadPolicy, SchedObs, Scheme};
+use crate::scheduler::{Action, ModelDemand, OffloadPolicy, SchedObs, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
-use crate::util::stats::{LogHistogram, Ewma};
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
-
-use super::metrics::SimReport;
+use crate::util::stats::{Ewma, LogHistogram};
+use std::collections::VecDeque;
 
 /// How each request is mapped to a pool model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,62 +32,59 @@ pub enum Assignment {
 
 #[derive(Debug, Clone)]
 pub struct SimConfig {
-    pub vm_type: &'static VmType,
+    /// Instance-type palette the run may procure from. The head entry is
+    /// the *primary* type: homogeneous schemes pin it, warm starts
+    /// provision on it, and model assignment judges SLO feasibility
+    /// against it. A one-entry palette is exactly the homogeneous
+    /// simulator the paper evaluates.
+    pub vm_types: Vec<&'static VmType>,
     pub assignment: Assignment,
     pub seed: u64,
-    /// Start the fleet pre-provisioned for the first second's rate
+    /// Start the fleet pre-provisioned for the first seconds' rate
     /// (the paper's runs begin from a warm deployment).
     pub warm_start: bool,
+    /// Account-level instance quota (EC2 service quotas). Spawns beyond it
+    /// are silently capped — also a backstop against runaway scheme
+    /// feedback loops.
+    pub instance_cap: usize,
+    /// Requests queued longer than this are dropped and counted in
+    /// [`SimReport::dropped`] (no real serving system queues forever).
+    pub queue_timeout_s: f64,
 }
 
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
-            vm_type: crate::cloud::default_vm_type(),
+            vm_types: vec![crate::cloud::default_vm_type()],
             assignment: Assignment::RandomFeasible,
             seed: 42,
             warm_start: true,
+            instance_cap: 5000,
+            queue_timeout_s: 300.0,
         }
     }
 }
 
-/// f64 time key with total order for the completion heap.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct T(f64);
-impl Eq for T {}
-impl PartialOrd for T {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
+impl SimConfig {
+    /// The palette head (see [`SimConfig::vm_types`]).
+    pub fn primary(&self) -> &'static VmType {
+        self.vm_types
+            .first()
+            .copied()
+            .unwrap_or_else(crate::cloud::default_vm_type)
     }
-}
-impl Ord for T {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
+
+    /// A single-type (homogeneous) configuration.
+    pub fn homogeneous(vm_type: &'static VmType) -> SimConfig {
+        SimConfig { vm_types: vec![vm_type], ..SimConfig::default() }
     }
 }
 
+/// An inference finishing on a VM (payload of the completion heap).
 #[derive(Debug)]
 struct Completion {
-    at: T,
     vm_id: u64,
     model: usize,
-}
-
-impl PartialEq for Completion {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at
-    }
-}
-impl Eq for Completion {}
-impl PartialOrd for Completion {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Completion {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at.cmp(&other.at)
-    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -99,14 +97,15 @@ struct Queued {
 /// Assign a model to every request up front (deterministic given seed).
 pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<usize> {
     let mut rng = Pcg::new(cfg.seed, 0xa551);
+    let vm = cfg.primary();
     reqs.iter()
         .map(|r| match cfg.assignment {
-            Assignment::Policy(p) => select(reg, cfg.vm_type, p, r),
+            Assignment::Policy(p) => select(reg, vm, p, r),
             Assignment::RandomFeasible => {
                 let feasible: Vec<usize> = reg
                     .models
                     .iter()
-                    .filter(|m| m.service_time_s(cfg.vm_type) * 1000.0 <= r.slo_ms)
+                    .filter(|m| m.service_time_s(vm) * 1000.0 <= r.slo_ms)
                     .map(|m| m.idx)
                     .collect();
                 if feasible.is_empty() {
@@ -124,13 +123,64 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 trace_name: &str, cfg: &SimConfig) -> SimReport {
     let models = assign_models(reqs, reg, cfg);
     let n_models = reg.len();
-    let service: Vec<f64> = reg.models.iter().map(|m| m.service_time_s(cfg.vm_type)).collect();
-    let slots: Vec<u32> = reg.models.iter().map(|m| m.slots_on(cfg.vm_type)).collect();
+    let palette: Vec<&'static VmType> = if cfg.vm_types.is_empty() {
+        vec![crate::cloud::default_vm_type()]
+    } else {
+        cfg.vm_types.clone()
+    };
+    let n_types = palette.len();
+
+    // Per-(model, type) capacity axes, palette order.
+    let caps: Vec<Vec<TypeCap>> = reg
+        .models
+        .iter()
+        .map(|m| {
+            palette
+                .iter()
+                .map(|&t| TypeCap {
+                    vm_type: t,
+                    service_s: m.service_time_s(t),
+                    slots_per_vm: m.slots_on(t),
+                })
+                .collect()
+        })
+        .collect();
+    // Routing preference per model: cheapest effective $/query first.
+    // The sort is stable, so a palette of identical types keeps palette
+    // order and reproduces the homogeneous simulator exactly.
+    let order: Vec<Vec<usize>> = (0..n_models)
+        .map(|m| {
+            let mut idx: Vec<usize> = (0..n_types).collect();
+            idx.sort_by(|&a, &b| {
+                caps[m][a].cost_per_query().total_cmp(&caps[m][b].cost_per_query())
+            });
+            idx
+        })
+        .collect();
+
+    // Route one request to the cheapest sub-fleet with a free slot,
+    // preferring types whose service time fits the SLO (pass 0), then —
+    // mirroring the homogeneous simulator, which never refuses its only
+    // type — any type at all (pass 1). Returns (vm id, palette index).
+    let route_best = |cluster: &mut Cluster, m: usize, slo_ms: f64|
+                     -> Option<(u64, usize)> {
+        for pass in 0..2 {
+            for &k in &order[m] {
+                let feasible = caps[m][k].service_s * 1000.0 <= slo_ms;
+                if (pass == 0) == feasible {
+                    if let Some(id) = cluster.route_typed(m, caps[m][k].vm_type) {
+                        return Some((id, k));
+                    }
+                }
+            }
+        }
+        None
+    };
 
     let mut cluster = Cluster::new(cfg.seed ^ 0xc11);
     let mut monitor = crate::scheduler::LoadMonitor::new();
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
-    let mut completions: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
+    let mut completions: SimCore<Completion> = SimCore::new();
     // Lambda warm pools per (model, memory-tier-bucket). Bucket = mem/0.25.
     let mut pools: std::collections::BTreeMap<(usize, u32), crate::cloud::WarmPool> =
         std::collections::BTreeMap::new();
@@ -146,22 +196,30 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     let mut lat_hist = LogHistogram::latency_ms();
     let mut lat_samples: Vec<f64> = Vec::with_capacity(reqs.len());
 
-    // Warm start: provision the steady-state fleet for the first second.
+    // Warm start: provision the steady-state fleet for the load observed
+    // over the first 5 s of the trace, apportioned by each model's share
+    // of *all* assignments in that window, on the scheme's preferred type.
     if cfg.warm_start && !reqs.is_empty() {
-        let t_end = reqs.last().unwrap().arrival_s;
-        let first_rate = reqs.iter().take_while(|r| r.arrival_s < 5.0).count() as f64 / 5.0;
+        let window = reqs.iter().take_while(|r| r.arrival_s < 5.0).count();
+        let first_rate = window as f64 / 5.0;
         for m in 0..n_models {
-            let share = models.iter().take(64).filter(|&&x| x == m).count() as f64
-                / models.len().min(64) as f64;
+            let share = if window > 0 {
+                models[..window].iter().filter(|&&x| x == m).count() as f64
+                    / window as f64
+            } else {
+                0.0
+            };
             let rate_m = first_rate * share;
-            let per_vm = slots[m] as f64 / service[m];
+            let k0 = scheme.preferred_type(&caps[m]).min(n_types - 1);
+            let cap0 = &caps[m][k0];
+            let per_vm = cap0.slots_per_vm as f64 / cap0.service_s;
             let need = (rate_m / per_vm).ceil() as usize;
-            for _ in 0..need {
-                let id = cluster.spawn(cfg.vm_type, m, slots[m], -200.0);
-                let _ = id;
+            // The account quota binds warm starts too.
+            let room = cfg.instance_cap.saturating_sub(cluster.total_alive());
+            for _ in 0..need.min(room) {
+                cluster.spawn(cap0.vm_type, m, cap0.slots_per_vm, -200.0);
             }
         }
-        let _ = t_end;
         cluster.tick(0.0, 0.0, 0.0); // boots complete before t=0
     }
 
@@ -186,7 +244,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
 
     loop {
         let t_arr = reqs.get(req_i).map(|r| r.arrival_s).unwrap_or(f64::INFINITY);
-        let t_cmp = completions.peek().map(|Reverse(c)| c.at.0).unwrap_or(f64::INFINITY);
+        let t_cmp = completions.next_time().unwrap_or(f64::INFINITY);
         let queued_any = queues.iter().any(|q| !q.is_empty());
         let t_tick = if next_tick <= horizon + 2.0 || queued_any || t_cmp.is_finite() {
             next_tick
@@ -201,16 +259,16 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
 
         if t_cmp <= t_arr && t_cmp <= t_tick {
             // --- completion: free the slot, pull from this model's queue.
-            let Reverse(c) = completions.pop().unwrap();
+            let (_, c) = completions.next().unwrap();
             cluster.release(c.vm_id, now);
             if let Some(q) = queues[c.model].pop_front() {
-                if let Some(vm_id) = cluster.route(c.model) {
-                    let done = now + service[c.model];
+                if let Some((vm_id, k)) = route_best(&mut cluster, c.model, q.slo_ms) {
+                    let done = now + caps[c.model][k].service_s;
                     let latency_ms = (done - q.arrival) * 1000.0;
                     record(&mut rep, &mut lat_hist, &mut lat_samples,
                            latency_ms, q.slo_ms, q.strict);
                     rep.served_vm += 1;
-                    completions.push(Reverse(Completion { at: T(done), vm_id, model: c.model }));
+                    completions.schedule_at(done, Completion { vm_id, model: c.model });
                 } else {
                     queues[c.model].push_front(q);
                 }
@@ -224,12 +282,13 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             per_model_count[m] += 1;
             rep.requests += 1;
 
-            if let Some(vm_id) = cluster.route(m) {
-                let done = now + service[m];
+            if let Some((vm_id, k)) = route_best(&mut cluster, m, r.slo_ms) {
+                let svc = caps[m][k].service_s;
+                let done = now + svc;
                 record(&mut rep, &mut lat_hist, &mut lat_samples,
-                       service[m] * 1000.0, r.slo_ms, r.strictness == Strictness::Strict);
+                       svc * 1000.0, r.slo_ms, r.strictness == Strictness::Strict);
                 rep.served_vm += 1;
-                completions.push(Reverse(Completion { at: T(done), vm_id, model: m }));
+                completions.schedule_at(done, Completion { vm_id, model: m });
             } else {
                 let eligible = match scheme.offload() {
                     OffloadPolicy::All => true,
@@ -267,35 +326,63 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         } else {
             // --- scheduler tick (1 Hz)
             monitor.tick();
+            // Expire queued requests past the wait timeout (queues are
+            // FIFO by arrival, so only fronts can be stale). A dropped
+            // request is by definition an SLO violation.
+            for q in queues.iter_mut() {
+                while let Some(&h) = q.front() {
+                    if now - h.arrival <= cfg.queue_timeout_s {
+                        break;
+                    }
+                    q.pop_front();
+                    rep.dropped += 1;
+                    rep.violations += 1;
+                    if h.strict {
+                        rep.violations_strict += 1;
+                    } else {
+                        rep.violations_relaxed += 1;
+                    }
+                }
+            }
             let mut needed_slots = 0.0;
             let mut demands = Vec::with_capacity(n_models);
             for m in 0..n_models {
                 let rate = per_model_rate[m].push(per_model_count[m] as f64);
                 per_model_count[m] = 0;
-                needed_slots += rate * service[m];
+                needed_slots += rate * caps[m][0].service_s;
                 demands.push(ModelDemand {
                     model: m,
                     rate,
-                    service_s: service[m],
-                    slots_per_vm: slots[m],
+                    service_s: caps[m][0].service_s,
+                    slots_per_vm: caps[m][0].slots_per_vm,
                     queued: queues[m].len(),
+                    types: caps[m].clone(),
                 });
             }
             {
-                let obs = SchedObs { now, monitor: &monitor, demands: &demands, cluster: &cluster };
+                let obs = SchedObs {
+                    now,
+                    monitor: &monitor,
+                    demands: &demands,
+                    cluster: &cluster,
+                    vm_types: palette.as_slice(),
+                };
                 let actions = scheme.tick(&obs);
                 for a in actions {
                     match a {
-                        Action::Spawn { model, count } => {
-                            // Account-level instance cap (EC2 quotas): also a
-                            // backstop against runaway scheme feedback loops.
-                            let cap = 5000usize.saturating_sub(cluster.total_alive());
-                            for _ in 0..count.min(cap) {
-                                cluster.spawn(cfg.vm_type, model, slots[model], now);
+                        Action::Spawn { model, vm_type, count } => {
+                            // Account-level instance quota (EC2): also a
+                            // backstop against scheme feedback loops.
+                            let room = cfg
+                                .instance_cap
+                                .saturating_sub(cluster.total_alive());
+                            let slots = reg.models[model].slots_on(vm_type);
+                            for _ in 0..count.min(room) {
+                                cluster.spawn(vm_type, model, slots, now);
                             }
                         }
-                        Action::Drain { model, count } => {
-                            cluster.scale_down(model, count, now);
+                        Action::Drain { model, vm_type, count } => {
+                            cluster.scale_down_typed(model, vm_type, count, now);
                         }
                     }
                 }
@@ -304,16 +391,16 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             rep.peak_vms = rep.peak_vms.max(cluster.total_alive());
             // Newly-booted VMs can absorb queued work.
             for m in 0..n_models {
-                while !queues[m].is_empty() {
-                    match cluster.route(m) {
-                        Some(vm_id) => {
-                            let q = queues[m].pop_front().unwrap();
-                            let done = now + service[m];
-                            let latency_ms = (done - q.arrival) * 1000.0;
+                while let Some(&head) = queues[m].front() {
+                    match route_best(&mut cluster, m, head.slo_ms) {
+                        Some((vm_id, k)) => {
+                            queues[m].pop_front();
+                            let done = now + caps[m][k].service_s;
+                            let latency_ms = (done - head.arrival) * 1000.0;
                             record(&mut rep, &mut lat_hist, &mut lat_samples,
-                                   latency_ms, q.slo_ms, q.strict);
+                                   latency_ms, head.slo_ms, head.strict);
                             rep.served_vm += 1;
-                            completions.push(Reverse(Completion { at: T(done), vm_id, model: m }));
+                            completions.schedule_at(done, Completion { vm_id, model: m });
                         }
                         None => break,
                     }
@@ -327,7 +414,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     }
 
     let end = next_tick.max(horizon);
-    // Terminate the remaining fleet and settle the bill.
+    // Terminate the remaining fleet (all types) and settle the bill.
     for m in 0..n_models {
         cluster.scale_down(m, usize::MAX, end);
     }
@@ -340,13 +427,27 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     rep.latency_mean_ms = lat_hist.mean();
     rep.latency_p50_ms = crate::util::stats::percentile(&mut lat_samples, 50.0);
     rep.latency_p99_ms = crate::util::stats::percentile(&mut lat_samples, 99.0);
-    debug_assert_eq!(rep.served_vm + rep.served_lambda, lat_samples.len() as u64 + 0);
+    rep.vms_by_type = cluster
+        .spawned_by_type
+        .iter()
+        .map(|(name, n)| (name.to_string(), *n))
+        .collect();
+    // Conservation: every request is served exactly once or dropped.
+    assert_eq!(
+        rep.served_vm + rep.served_lambda + rep.dropped,
+        rep.requests,
+        "request conservation violated ({}/{})",
+        rep.scheme,
+        rep.trace
+    );
+    debug_assert_eq!(rep.served_vm + rep.served_lambda, lat_samples.len() as u64);
     rep
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::vm_type;
     use crate::scheduler;
     use crate::trace::{generators, synthesize_requests, WorkloadKind};
 
@@ -364,10 +465,11 @@ mod tests {
         for name in scheduler::ALL_SCHEMES {
             let rep = run_scheme(name, 20.0);
             assert_eq!(
-                rep.served_vm + rep.served_lambda,
+                rep.served_vm + rep.served_lambda + rep.dropped,
                 rep.requests,
                 "{name}: requests lost"
             );
+            assert_eq!(rep.dropped, 0, "{name}: drops on flat load");
             assert!(rep.requests > 10_000, "{name}: too few requests");
         }
     }
@@ -440,6 +542,7 @@ mod tests {
         let b = run_scheme("paragon", 15.0);
         assert_eq!(a.requests, b.requests);
         assert_eq!(a.violations, b.violations);
+        assert_eq!(a.dropped, b.dropped);
         assert!((a.total_cost() - b.total_cost()).abs() < 1e-12);
     }
 
@@ -451,8 +554,81 @@ mod tests {
         let cfg = SimConfig::default();
         let assigned = assign_models(&reqs, &reg, &cfg);
         for (r, &m) in reqs.iter().zip(&assigned) {
-            let svc = reg.models[m].service_time_s(cfg.vm_type) * 1000.0;
+            let svc = reg.models[m].service_time_s(cfg.primary()) * 1000.0;
             assert!(svc <= r.slo_ms, "model {m} ({svc}ms) assigned to slo {}", r.slo_ms);
         }
+    }
+
+    /// A scheme that never procures anything: queued requests must time
+    /// out and be counted, not wait forever.
+    struct NullScheme;
+    impl Scheme for NullScheme {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+        fn tick(&mut self, _obs: &SchedObs) -> Vec<Action> {
+            Vec::new()
+        }
+        fn offload(&self) -> OffloadPolicy {
+            OffloadPolicy::None
+        }
+    }
+
+    #[test]
+    fn queue_timeout_drops_and_conserves() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(5.0, 60);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig {
+            warm_start: false,
+            queue_timeout_s: 30.0,
+            ..SimConfig::default()
+        };
+        let mut s = NullScheme;
+        let rep = simulate(&mut s, &reg, &reqs, "flat", &cfg);
+        assert_eq!(rep.served_vm, 0);
+        assert_eq!(rep.served_lambda, 0);
+        assert_eq!(rep.dropped, rep.requests, "every request must time out");
+        assert_eq!(rep.violations, rep.requests, "drops are violations");
+        assert!(rep.requests > 0);
+    }
+
+    #[test]
+    fn instance_cap_bounds_fleet() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(30.0, 300);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig {
+            warm_start: false,
+            instance_cap: 3,
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("reactive").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        assert!(rep.peak_vms <= 3, "quota exceeded: peak {}", rep.peak_vms);
+        // Under-capacity serving: the backlog must resolve via drops,
+        // not deadlock.
+        assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests);
+        assert!(rep.dropped > 0, "a 3-VM quota at 30 q/s must shed load");
+    }
+
+    #[test]
+    fn heterogeneous_palette_mixed_fleet_serves() {
+        let reg = Registry::builtin();
+        let trace = generators::generate_with(crate::trace::TraceKind::Berkeley, 3, 900, 40.0);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig {
+            vm_types: vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()],
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("paragon").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "berkeley", &cfg);
+        assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests);
+        // Paragon must actually procure the cheaper second type.
+        let c5_spawned = rep
+            .vms_by_type
+            .iter()
+            .any(|(name, n)| name == "c5.large" && *n > 0);
+        assert!(c5_spawned, "no c5.large procured: {:?}", rep.vms_by_type);
     }
 }

@@ -2,7 +2,7 @@
 
 use crate::util::json::Json;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimReport {
     pub scheme: String,
     pub trace: String,
@@ -14,7 +14,13 @@ pub struct SimReport {
     /// Requests served on VMs / on serverless.
     pub served_vm: u64,
     pub served_lambda: u64,
+    /// Requests dropped after exceeding the queue wait timeout
+    /// (`served_vm + served_lambda + dropped == requests` always holds).
+    pub dropped: u64,
     pub lambda_cold_starts: u64,
+    /// VMs launched per instance type over the run (heterogeneous fleets
+    /// report their realized mix; single-type runs have one entry).
+    pub vms_by_type: Vec<(String, u64)>,
     /// Billed cost, USD.
     pub cost_vm: f64,
     pub cost_lambda: f64,
@@ -67,7 +73,14 @@ impl SimReport {
             ("violation_pct", self.violation_pct().into()),
             ("served_vm", (self.served_vm as usize).into()),
             ("served_lambda", (self.served_lambda as usize).into()),
+            ("dropped", (self.dropped as usize).into()),
             ("lambda_cold_starts", (self.lambda_cold_starts as usize).into()),
+            ("vms_by_type", Json::Obj(
+                self.vms_by_type
+                    .iter()
+                    .map(|(name, n)| (name.clone(), Json::from(*n as usize)))
+                    .collect(),
+            )),
             ("cost_vm_usd", self.cost_vm.into()),
             ("cost_lambda_usd", self.cost_lambda.into()),
             ("cost_total_usd", self.total_cost().into()),

@@ -5,9 +5,11 @@
 //! starts, per-second scheduler ticks, and full cost + SLO accounting. All
 //! scheme-comparison figures (5, 6, 9) run through [`engine::simulate`].
 
+pub mod core;
 pub mod engine;
 pub mod metrics;
 
+pub use self::core::{EventQueue, SimCore};
 pub use engine::{simulate, Assignment, SimConfig};
 pub use metrics::SimReport;
 
@@ -34,9 +36,11 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
             .ok_or_else(|| anyhow::anyhow!("unknown scheme {}", cfg.scheme))?
     };
     Ok(simulate(scheme.as_mut(), reg, &reqs, &trace.name, &SimConfig {
-        vm_type: cfg.vm_type,
+        vm_types: cfg.vm_types.clone(),
         assignment: cfg.assignment,
         seed: cfg.seed,
         warm_start: true,
+        instance_cap: cfg.instance_cap,
+        queue_timeout_s: cfg.queue_timeout_s,
     }))
 }

@@ -1,0 +1,139 @@
+//! Heterogeneous-core equivalence properties.
+//!
+//! The multi-type engine must be a strict generalization of the
+//! homogeneous simulator: a palette that is the same type on every axis
+//! (including duplicated entries) reproduces the single-type run
+//! *bit-for-bit* at a fixed seed — same routing decisions, same RNG
+//! stream, same costs to the last ULP. Uses the custom `util::prop`
+//! harness (proptest is absent offline).
+
+use paragon::cloud::pricing::{vm_type, VM_TYPES};
+use paragon::models::Registry;
+use paragon::prop_assert;
+use paragon::scheduler;
+use paragon::sim::{simulate, SimConfig, SimReport};
+use paragon::trace::{generators, synthesize_requests, WorkloadKind};
+use paragon::util::prop::check;
+
+fn run(scheme_name: &str, cfg: &SimConfig, trace_seed: u64, rate: f64) -> SimReport {
+    let reg = Registry::builtin();
+    let kind = paragon::trace::TraceKind::Berkeley;
+    let trace = generators::generate_with(kind, trace_seed, 600, rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, trace_seed ^ 0x51);
+    let mut scheme = scheduler::by_name(scheme_name).unwrap();
+    simulate(scheme.as_mut(), &reg, &reqs, "het-prop", cfg)
+}
+
+#[test]
+fn prop_identical_type_palette_reproduces_homogeneous_bit_for_bit() {
+    // For every scheme and random (seed, rate, type): [t] == [t, t, t].
+    check("het-identity", 10, |rng| {
+        let scheme_name = *rng.choice(&scheduler::ALL_SCHEMES);
+        let ty = rng.choice(VM_TYPES);
+        let rate = rng.uniform(5.0, 30.0);
+        let seed = rng.next_u64();
+        let trace_seed = rng.next_u64();
+
+        let homo = SimConfig {
+            vm_types: vec![ty],
+            seed,
+            ..SimConfig::default()
+        };
+        let dup = SimConfig {
+            vm_types: vec![ty, ty, ty],
+            seed,
+            ..SimConfig::default()
+        };
+        let a = run(scheme_name, &homo, trace_seed, rate);
+        let b = run(scheme_name, &dup, trace_seed, rate);
+        prop_assert!(
+            a == b,
+            "{scheme_name} on {}: duplicated palette diverged\n  homo: {:?}\n  dup:  {:?}",
+            ty.name,
+            a,
+            b
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn default_config_is_single_m4_and_deterministic() {
+    let cfg = SimConfig::default();
+    assert_eq!(cfg.vm_types.len(), 1);
+    assert_eq!(cfg.primary().name, "m4.large");
+    let a = run("paragon", &cfg, 9, 20.0);
+    let b = run("paragon", &cfg, 9, 20.0);
+    assert_eq!(a, b, "same seed must reproduce the full report");
+}
+
+#[test]
+fn quota_scenarios_are_configurable() {
+    // The account cap is a SimConfig field now: a tiny quota visibly
+    // bounds the fleet, a huge one never binds.
+    let tight = SimConfig {
+        instance_cap: 2,
+        warm_start: false,
+        ..SimConfig::default()
+    };
+    let rep = run("reactive", &tight, 5, 25.0);
+    assert!(rep.peak_vms <= 2, "quota not enforced: peak {}", rep.peak_vms);
+    assert_eq!(
+        rep.served_vm + rep.served_lambda + rep.dropped,
+        rep.requests,
+        "conservation must hold under quota pressure"
+    );
+
+    // Warm starts must respect the quota too (they provision before t=0).
+    let warm_tight = SimConfig { instance_cap: 2, ..SimConfig::default() };
+    let rep = run("reactive", &warm_tight, 5, 25.0);
+    assert!(
+        rep.peak_vms <= 2,
+        "warm start bypassed quota: peak {}",
+        rep.peak_vms
+    );
+
+    let loose = SimConfig { instance_cap: 100_000, ..SimConfig::default() };
+    let rep = run("reactive", &loose, 5, 25.0);
+    assert!(rep.peak_vms < 1000, "sane fleet without a binding quota");
+}
+
+#[test]
+fn heterogeneous_paragon_beats_or_matches_single_m4() {
+    // End-to-end acceptance shape: paragon on an m4+c5 palette should not
+    // cost more than paragon pinned to the paper's m4.large, at similar
+    // violation levels (c5 is faster, cheaper per slot-second, and boots
+    // faster — the greedy picker must exploit it).
+    let m4_only = SimConfig {
+        vm_types: vec![vm_type("m4.large").unwrap()],
+        ..SimConfig::default()
+    };
+    let mixed = SimConfig {
+        vm_types: vec![
+            vm_type("m4.large").unwrap(),
+            vm_type("c5.xlarge").unwrap(),
+            vm_type("c5.large").unwrap(),
+        ],
+        ..SimConfig::default()
+    };
+    let a = run("paragon", &m4_only, 11, 40.0);
+    let b = run("paragon", &mixed, 11, 40.0);
+    assert!(
+        b.total_cost() <= a.total_cost() * 1.05,
+        "mixed palette ${} should not exceed m4-only ${}",
+        b.total_cost(),
+        a.total_cost()
+    );
+    assert!(
+        b.violation_pct() <= a.violation_pct() + 2.0,
+        "mixed palette viol {}% vs m4-only {}%",
+        b.violation_pct(),
+        a.violation_pct()
+    );
+    // The run really used a mixed fleet.
+    assert!(
+        b.vms_by_type.iter().any(|(n, c)| n.starts_with("c5") && *c > 0),
+        "no c5 instances procured: {:?}",
+        b.vms_by_type
+    );
+}

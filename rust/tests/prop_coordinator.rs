@@ -84,24 +84,27 @@ fn prop_schemes_never_negative_fleet_and_converge() {
                 service_s: 0.2,
                 slots_per_vm: 2,
                 queued: 0,
+                types: vec![],
             }];
+            let palette = [default_vm_type()];
             let now = t as f64;
             let actions = {
-                let obs = SchedObs { now, monitor: &mon, demands: &demands, cluster: &cluster };
+                let obs = SchedObs { now, monitor: &mon, demands: &demands,
+                                     cluster: &cluster, vm_types: &palette };
                 scheme.tick(&obs)
             };
             for a in actions {
                 match a {
-                    scheduler::Action::Spawn { count, .. } => {
+                    scheduler::Action::Spawn { vm_type, count, .. } => {
                         prop_assert!(count > 0, "zero spawn emitted");
                         prop_assert!(count < 4000, "absurd spawn {count}");
                         for _ in 0..count {
-                            cluster.spawn(default_vm_type(), 0, 2, now);
+                            cluster.spawn(vm_type, 0, 2, now);
                         }
                     }
-                    scheduler::Action::Drain { count, .. } => {
+                    scheduler::Action::Drain { vm_type, count, .. } => {
                         prop_assert!(count > 0, "zero drain emitted");
-                        cluster.scale_down(0, count, now);
+                        cluster.scale_down_typed(0, vm_type, count, now);
                     }
                 }
             }
@@ -138,9 +141,9 @@ fn prop_simulation_conserves_requests_and_money() {
             ..SimConfig::default()
         });
         prop_assert!(rep.requests == reqs.len() as u64, "request count mismatch");
-        prop_assert!(rep.served_vm + rep.served_lambda == rep.requests,
-                     "{scheme_name}: served {} + {} != {}",
-                     rep.served_vm, rep.served_lambda, rep.requests);
+        prop_assert!(rep.served_vm + rep.served_lambda + rep.dropped == rep.requests,
+                     "{scheme_name}: served {} + {} + dropped {} != {}",
+                     rep.served_vm, rep.served_lambda, rep.dropped, rep.requests);
         prop_assert!(rep.violations <= rep.requests);
         prop_assert!(rep.cost_vm >= 0.0 && rep.cost_lambda >= 0.0);
         prop_assert!((rep.served_lambda == 0) == (rep.cost_lambda == 0.0),
