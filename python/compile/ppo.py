@@ -11,12 +11,22 @@ Network: tanh MLP trunk (L1 fused_linear kernels, differentiable via the
 kernel's custom VJP) with a categorical policy head (L1 fused softmax) and a
 scalar value head.
 
-Observation/action spaces match rust/src/rl/env.rs:
+Observation/action spaces match rust/src/rl/env.rs and are *palette-derived*:
+the serving environment is factored over an instance-type palette of
+N_TYPES entries, so both heads scale with it.
 
-  obs (16,): normalized load stats (rate, ewma, peak/median, trend),
-             fleet state (vms running/booting, utilization, lambda share),
-             SLO + cost rates, query-mix and time-of-day features.
-  act (9,):  (vm_delta in {-1,0,+1}) x (lambda policy in {off, strict-only, all})
+  obs (13 + 5*N_TYPES,): a palette-independent base block (normalized load
+             stats, utilization, queue, lambda share, SLO rate, query mix,
+             time of day, bias) followed by one 5-float block per palette
+             entry (running/booting sub-fleet, boot latency, price per
+             slot-second, slots for the active model).
+  act (9*N_TYPES,): flattened (vm_type) x (delta in {-1,0,+1}) x
+             (lambda policy in {off, strict-only, all});
+             a = k*9 + (delta+1)*3 + offload.
+
+The rust driver refuses artifacts whose dimensions disagree with its
+palette (PpoManifest::check_palette), so re-lower with a matching N_TYPES
+when training over a different palette size.
 """
 
 from __future__ import annotations
@@ -29,8 +39,16 @@ import jax.numpy as jnp
 from .kernels import fused_linear, softmax_rows
 from .kernels.ref import log_softmax_rows_ref
 
-OBS_DIM = 16
-ACT_DIM = 9
+# Palette size the artifacts are lowered for (rust: ServeEnv::n_types()).
+N_TYPES = 1
+# Keep in sync with rust/src/rl/env.rs::{BASE_OBS, PER_TYPE_OBS,
+# ACTIONS_PER_TYPE}.
+BASE_OBS = 13
+PER_TYPE_OBS = 5
+ACTIONS_PER_TYPE = 9
+
+OBS_DIM = BASE_OBS + PER_TYPE_OBS * N_TYPES
+ACT_DIM = ACTIONS_PER_TYPE * N_TYPES
 HIDDEN = (64, 64)
 
 # PPO / Adam hyper-parameters (baked into the AOT artifact).

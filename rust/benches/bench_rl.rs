@@ -3,7 +3,7 @@
 
 use paragon::models::Registry;
 use paragon::rl::buffer::Rollout;
-use paragon::rl::env::ServeEnv;
+use paragon::rl::env::{act_dim, obs_dim, ServeEnv};
 use paragon::trace::generators;
 use paragon::util::bench::{bench, bench_throughput};
 use std::path::Path;
@@ -13,11 +13,12 @@ fn main() {
     println!("== env ==");
     let trace = generators::constant(80.0, 4096);
     let mut env = ServeEnv::new(&reg, trace, 3, 7);
+    let n_act = env.act_dim();
     env.reset();
     bench_throughput("serve_env::step x1024", 1, 20, 1024.0, || {
         let mut acc = 0.0;
         for i in 0..1024 {
-            let (_, r) = env.step(i % 9);
+            let (_, r) = env.step(i % n_act);
             acc += r.reward;
             if r.done {
                 env.reset();
@@ -26,11 +27,29 @@ fn main() {
         acc
     });
 
+    println!("\n== env (7-type palette) ==");
+    let trace = generators::constant(80.0, 4096);
+    let palette = paragon::cloud::pricing::VM_TYPES.iter().collect();
+    let mut henv = ServeEnv::with_palette(&reg, trace, 3, 7, palette);
+    let h_act = henv.act_dim();
+    henv.reset();
+    bench_throughput("serve_env::step x1024 (7 types)", 1, 20, 1024.0, || {
+        let mut acc = 0.0;
+        for i in 0..1024 {
+            let (_, r) = henv.step(i % h_act);
+            acc += r.reward;
+            if r.done {
+                henv.reset();
+            }
+        }
+        acc
+    });
+
     println!("\n== GAE ==");
-    let mut roll = Rollout::new(16);
-    let obs = [0.1f32; 16];
+    let mut roll = Rollout::new(obs_dim(1));
+    let obs = vec![0.1f32; obs_dim(1)];
     for i in 0..4096 {
-        roll.push(&obs, (i % 9) as i32, -2.2, -0.01, 0.0, i % 1024 == 1023);
+        roll.push(&obs, (i % act_dim(1)) as i32, -2.2, -0.01, 0.0, i % 1024 == 1023);
     }
     bench("rollout::finish (4096 steps)", 5, 50, || {
         let mut r = roll.clone();
@@ -45,11 +64,14 @@ fn main() {
     }
     println!("\n== PPO through PJRT ==");
     let mut agent = paragon::rl::PpoAgent::load(artifacts, 7).unwrap();
-    let obs_v = vec![0.1f32; 16];
+    let d = agent.obs_dim();
+    let a = agent.act_dim();
+    let obs_v = vec![0.1f32; d];
     bench("agent::act (policy_fwd b1)", 5, 100, || agent.act(&obs_v).unwrap());
-    let mut roll = Rollout::new(16);
+    let mut roll = Rollout::new(d);
+    let obs_row = vec![0.05f32; d];
     for i in 0..256 {
-        roll.push(&[0.05f32; 16], (i % 9) as i32, -2.2, -0.01, 0.0, i == 255);
+        roll.push(&obs_row, (i % a) as i32, -2.2, -0.01, 0.0, i == 255);
     }
     roll.finish(0.0, 0.99, 0.95);
     bench("agent::update (1 epoch, 1 minibatch of 256)", 1, 10, || {

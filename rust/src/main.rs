@@ -85,6 +85,11 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     if want("het") {
         figures::save(&out, "fig_het", &figures::fig_het(&reg, &cfg))?;
     }
+    if want("rl_het") {
+        let iters = args.get_usize("iters", 20)?;
+        figures::save(&out, "fig_rl_het",
+                      &figures::fig_rl_het(&reg, &artifacts_dir(args), iters, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -198,7 +203,8 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het  --out results  [--quick|--duration S --rate R]
+  figures     --fig all|2..10|het|rl_het  --out results
+              [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints]
               [--selection random|naive|paragon] [--trace-file F.csv]
               [--vm-types m4.large,c5.xlarge] [--instance-cap N]

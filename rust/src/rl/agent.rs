@@ -8,6 +8,7 @@
 //! through the train-step executable — rust-only at run time.
 
 use super::buffer::{MiniBatch, Rollout};
+use super::env;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
@@ -15,6 +16,11 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// PPO section of artifacts/manifest.json.
+///
+/// The observation/action dimensions are *palette-derived*: the artifacts
+/// are lowered for a fixed number of instance types
+/// (`python/compile/ppo.py::N_TYPES`), and both heads must agree with the
+/// environment's palette before acting — see [`PpoManifest::check_palette`].
 #[derive(Debug, Clone)]
 pub struct PpoManifest {
     pub obs_dim: usize,
@@ -62,6 +68,47 @@ impl PpoManifest {
                 .collect(),
             init_params_bin: p.req_str("init_params_bin")?,
         })
+    }
+
+    /// Palette size the artifact's factored heads were lowered for,
+    /// recovered from the dimensions (`act_dim = 9 * n_types`,
+    /// `obs_dim = BASE_OBS + PER_TYPE_OBS * n_types`). Errors when the two
+    /// are internally inconsistent — a stale or hand-edited manifest.
+    pub fn palette_size(&self) -> Result<usize> {
+        if self.act_dim == 0 || self.act_dim % env::ACTIONS_PER_TYPE != 0 {
+            bail!(
+                "ppo act_dim {} is not a multiple of {} (vm_type x delta x offload)",
+                self.act_dim,
+                env::ACTIONS_PER_TYPE
+            );
+        }
+        let n = self.act_dim / env::ACTIONS_PER_TYPE;
+        if self.obs_dim != env::obs_dim(n) {
+            bail!(
+                "ppo obs_dim {} inconsistent with act_dim {}: a {n}-type \
+                 palette needs obs_dim {}",
+                self.obs_dim,
+                self.act_dim,
+                env::obs_dim(n)
+            );
+        }
+        Ok(n)
+    }
+
+    /// Reject environments whose palette size differs from the one the
+    /// artifacts were lowered for (an agent trained on N types cannot
+    /// drive an M-type environment).
+    pub fn check_palette(&self, n_types: usize) -> Result<()> {
+        let n = self.palette_size()?;
+        if n != n_types {
+            bail!(
+                "agent artifacts were lowered for a {n}-type palette but the \
+                 environment has {n_types} types — re-lower the PPO graphs \
+                 (python/compile/ppo.py, N_TYPES = {n_types}) or pass a \
+                 matching --vm-types palette"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -152,6 +199,12 @@ impl PpoAgent {
 
     pub fn minibatch_size(&self) -> usize {
         self.manifest.minibatch
+    }
+
+    /// See [`PpoManifest::check_palette`]: errors unless the artifacts were
+    /// lowered for exactly `n_types` instance types.
+    pub fn check_palette(&self, n_types: usize) -> Result<()> {
+        self.manifest.check_palette(n_types)
     }
 
     fn ensure_param_bufs(&mut self) -> Result<()> {

@@ -1,23 +1,56 @@
 //! Hand-written policies on the RL environment: the yardsticks the learned
 //! agent must beat (Fig 10) and the sanity anchors for the env itself.
+//!
+//! All policies speak the factored typed action space of
+//! [`crate::rl::env`]; the single-type heuristics ([`ParagonPolicy`],
+//! [`MixedPolicy`]) only ever act on the palette's primary entry — they are
+//! the "old" action space embedded in the new one — while
+//! [`TypedGreedyPolicy`] exploits resource heterogeneity with the same
+//! cheapest-per-query greedy pick paragon's scheduler-side type picker
+//! uses.
 
-use super::env::{ServeEnv, ACT_DIM, OBS_DIM};
+use super::env::{act_dim, encode_action, ServeEnv, BASE_OBS, PER_TYPE_OBS};
+use crate::scheduler::{cheapest_cap_index, TypeCap};
 use crate::util::rng::Pcg;
 
-/// A deterministic mapping obs -> action.
+/// A deterministic mapping obs -> action. Observations follow the layout
+/// documented in [`crate::rl::env`]; policies recover the palette size
+/// from the vector length via [`obs_n_types`].
 pub trait EnvPolicy {
     fn name(&self) -> &'static str;
-    fn act(&mut self, obs: &[f32; OBS_DIM]) -> usize;
+    fn act(&mut self, obs: &[f32]) -> usize;
 }
 
-/// Encode (vm_delta, offload) back to the discrete action id.
-pub fn encode_action(delta: i32, offload: usize) -> usize {
-    ((delta + 1) as usize) * 3 + offload
+/// Number of palette types encoded in an observation vector.
+pub fn obs_n_types(obs: &[f32]) -> usize {
+    assert!(
+        obs.len() > BASE_OBS && (obs.len() - BASE_OBS) % PER_TYPE_OBS == 0,
+        "malformed observation of length {}",
+        obs.len()
+    );
+    (obs.len() - BASE_OBS) / PER_TYPE_OBS
 }
 
-/// Paragon-like heuristic on env observations: scale on forecast
-/// utilization with a slim margin; offload strict-only when the window's
-/// peak-to-median is high.
+/// Running sub-fleet share of palette entry `k` (normalized).
+fn running_share(obs: &[f32], k: usize) -> f32 {
+    obs[BASE_OBS + PER_TYPE_OBS * k]
+}
+
+/// Booting sub-fleet share of palette entry `k` (normalized).
+fn booting_share(obs: &[f32], k: usize) -> f32 {
+    obs[BASE_OBS + PER_TYPE_OBS * k + 1]
+}
+
+/// Total fleet share (running + booting) across all sub-fleets.
+fn fleet_share(obs: &[f32]) -> f32 {
+    let n = obs_n_types(obs);
+    (0..n).map(|k| running_share(obs, k) + booting_share(obs, k)).sum()
+}
+
+/// Paragon-like heuristic on env observations: scale the *primary* type on
+/// forecast utilization with a slim margin; offload strict-only when the
+/// window's peak-to-median is high. Deliberately single-type — the
+/// yardstick for what the factored action space buys on a palette.
 pub struct ParagonPolicy;
 
 impl EnvPolicy for ParagonPolicy {
@@ -25,12 +58,10 @@ impl EnvPolicy for ParagonPolicy {
         "paragon-heuristic"
     }
 
-    fn act(&mut self, obs: &[f32; OBS_DIM]) -> usize {
+    fn act(&mut self, obs: &[f32]) -> usize {
         let rate_pred = obs[2];
-        let running = obs[5].max(1e-6);
-        let booting = obs[6];
         let p2m = obs[3] * 4.0;
-        let util_pred = rate_pred / (running + booting);
+        let util_pred = rate_pred / fleet_share(obs).max(1e-6);
         let delta = if util_pred > 0.55 {
             1
         } else if util_pred < 0.35 {
@@ -39,11 +70,12 @@ impl EnvPolicy for ParagonPolicy {
             0
         };
         let offload = if p2m >= 1.3 { 1 } else { 0 }; // StrictOnly : None
-        encode_action(delta, offload)
+        encode_action(0, delta, offload)
     }
 }
 
-/// Mixed-like heuristic: reactive scaling, offload everything.
+/// Mixed-like heuristic: reactive scaling on the primary type, offload
+/// everything.
 pub struct MixedPolicy;
 
 impl EnvPolicy for MixedPolicy {
@@ -51,11 +83,9 @@ impl EnvPolicy for MixedPolicy {
         "mixed-heuristic"
     }
 
-    fn act(&mut self, obs: &[f32; OBS_DIM]) -> usize {
+    fn act(&mut self, obs: &[f32]) -> usize {
         let rate = obs[1];
-        let running = obs[5].max(1e-6);
-        let booting = obs[6];
-        let util = rate / (running + booting);
+        let util = rate / fleet_share(obs).max(1e-6);
         let delta = if util > 0.6 {
             1
         } else if util < 0.3 {
@@ -63,7 +93,83 @@ impl EnvPolicy for MixedPolicy {
         } else {
             0
         };
-        encode_action(delta, 2) // All
+        encode_action(0, delta, 2) // All
+    }
+}
+
+/// Type-aware greedy heuristic over the factored action space: scale on
+/// forecast utilization like [`ParagonPolicy`], but grow on the palette
+/// entry with the lowest effective cost per query — the same
+/// cost-per-slot-second metric the paragon scheduler's greedy type picker
+/// uses ([`cheapest_cap_index`]) — and shrink costliest-sub-fleet-first,
+/// so capacity inherited on a pricier type migrates toward the greedy
+/// pick. The honest baseline for the type-aware RL head.
+pub struct TypedGreedyPolicy {
+    caps: Vec<TypeCap>,
+    preferred: usize,
+    /// Rate capacity of one VM of type k relative to one primary-type VM
+    /// (converts per-type fleet shares into primary-equivalents).
+    weight: Vec<f32>,
+}
+
+impl TypedGreedyPolicy {
+    pub fn new(caps: &[TypeCap]) -> TypedGreedyPolicy {
+        assert!(!caps.is_empty(), "empty palette");
+        let preferred = cheapest_cap_index(caps).unwrap_or(0);
+        let per0 = caps[0].slots_per_vm as f64 / caps[0].service_s;
+        let weight = caps
+            .iter()
+            .map(|c| ((c.slots_per_vm as f64 / c.service_s) / per0) as f32)
+            .collect();
+        TypedGreedyPolicy { caps: caps.to_vec(), preferred, weight }
+    }
+
+    /// Build from an environment's palette (the common case).
+    pub fn for_env(env: &ServeEnv) -> TypedGreedyPolicy {
+        TypedGreedyPolicy::new(env.type_caps())
+    }
+
+    /// Costliest non-preferred sub-fleet with any running capacity — the
+    /// next drain/migration target, if any.
+    fn costliest_stale(&self, obs: &[f32], n: usize) -> Option<usize> {
+        (0..n)
+            .filter(|&k| k != self.preferred && running_share(obs, k) > 0.0)
+            .max_by(|&a, &b| {
+                self.caps[a].cost_per_query().total_cmp(&self.caps[b].cost_per_query())
+            })
+    }
+}
+
+impl EnvPolicy for TypedGreedyPolicy {
+    fn name(&self) -> &'static str {
+        "typed-greedy"
+    }
+
+    fn act(&mut self, obs: &[f32]) -> usize {
+        let n = obs_n_types(obs);
+        assert_eq!(n, self.caps.len(), "policy palette != observation palette");
+        let rate_pred = obs[2];
+        let p2m = obs[3] * 4.0;
+        let eff: f32 = (0..n)
+            .map(|k| (running_share(obs, k) + booting_share(obs, k)) * self.weight[k])
+            .sum();
+        let util_pred = rate_pred / eff.max(1e-6);
+        let offload = if p2m >= 1.3 { 1 } else { 0 };
+        if util_pred > 0.55 {
+            encode_action(self.preferred, 1, offload)
+        } else if util_pred < 0.35 {
+            // Shrink: costliest stale sub-fleet first, else the pick.
+            let target = self.costliest_stale(obs, n).unwrap_or(self.preferred);
+            encode_action(target, -1, offload)
+        } else if util_pred < 0.45 {
+            // Comfortable headroom: migrate one step off stale types.
+            match self.costliest_stale(obs, n) {
+                Some(k) => encode_action(k, -1, offload),
+                None => encode_action(self.preferred, 0, offload),
+            }
+        } else {
+            encode_action(self.preferred, 0, offload)
+        }
     }
 }
 
@@ -83,8 +189,8 @@ impl EnvPolicy for RandomPolicy {
         "random"
     }
 
-    fn act(&mut self, _obs: &[f32; OBS_DIM]) -> usize {
-        self.rng.below(ACT_DIM as u64) as usize
+    fn act(&mut self, obs: &[f32]) -> usize {
+        self.rng.below(act_dim(obs_n_types(obs)) as u64) as usize
     }
 }
 
@@ -95,7 +201,7 @@ pub fn run_episode(env: &mut ServeEnv, policy: &mut dyn EnvPolicy) -> (f64, f64,
     loop {
         let a = policy.act(&obs);
         let (next, r) = env.step(a);
-        total += r.reward as f64;
+        total += r.reward;
         obs = next;
         if r.done {
             break;
@@ -107,13 +213,22 @@ pub fn run_episode(env: &mut ServeEnv, policy: &mut dyn EnvPolicy) -> (f64, f64,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::vm_type;
     use crate::models::Registry;
+    use crate::rl::env::{decode_action, obs_dim};
     use crate::trace::{generators, TraceKind};
 
     fn bursty_env(seed: u64) -> ServeEnv {
         let reg = Registry::builtin();
         let trace = generators::generate_with(TraceKind::Twitter, 5, 900, 60.0);
         ServeEnv::new(&reg, trace, 3, seed)
+    }
+
+    fn bursty_het_env(seed: u64) -> ServeEnv {
+        let reg = Registry::builtin();
+        let trace = generators::generate_with(TraceKind::Twitter, 5, 900, 60.0);
+        let palette = vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        ServeEnv::with_palette(&reg, trace, 3, seed, palette)
     }
 
     #[test]
@@ -146,16 +261,47 @@ mod tests {
     }
 
     #[test]
-    fn encode_decode_roundtrip() {
-        use crate::rl::env::decode_action;
-        for a in 0..ACT_DIM {
-            let (d, off) = decode_action(a);
-            let off_idx = match off {
-                crate::scheduler::OffloadPolicy::None => 0,
-                crate::scheduler::OffloadPolicy::StrictOnly => 1,
-                crate::scheduler::OffloadPolicy::All => 2,
-            };
-            assert_eq!(encode_action(d, off_idx), a);
-        }
+    fn typed_greedy_prefers_cheapest_type() {
+        let mut env = bursty_het_env(1);
+        env.reset();
+        let policy = TypedGreedyPolicy::for_env(&env);
+        // resnet18 is strictly cheaper per query on c5.large than m4.large.
+        assert_eq!(policy.preferred, 1);
+
+        // Saturated fleet: the policy must grow on the preferred type.
+        let mut obs = vec![0.0f32; obs_dim(2)];
+        obs[2] = 1.0; // high forecast
+        obs[BASE_OBS] = 0.5; // some m4 running
+        let mut p = TypedGreedyPolicy::for_env(&env);
+        let (k, delta, _) = decode_action(p.act(&obs), 2);
+        assert_eq!((k, delta), (1, 1), "must spawn on the cheapest type");
+
+        // Idle fleet with stale m4 capacity: drain the costlier type first.
+        obs[2] = 0.05;
+        let (k, delta, _) = decode_action(p.act(&obs), 2);
+        assert_eq!((k, delta), (0, -1), "must retire the stale m4 sub-fleet");
     }
+
+    #[test]
+    fn typed_greedy_no_costlier_than_single_type_on_a_palette() {
+        // The INFaaS-style claim on the env: exploiting the cheaper palette
+        // entry must not cost more than pinning the primary type, and must
+        // not pay for it with a collapsed SLO.
+        let mut env_s = bursty_het_env(3);
+        let (_, c_single, v_single) = run_episode(&mut env_s, &mut ParagonPolicy);
+        let mut env_t = bursty_het_env(3);
+        let mut greedy = TypedGreedyPolicy::for_env(&env_t);
+        let (_, c_typed, v_typed) = run_episode(&mut env_t, &mut greedy);
+        assert!(
+            c_typed <= c_single * 1.10,
+            "typed-greedy ${c_typed} vs single-type ${c_single}"
+        );
+        assert!(
+            v_typed <= v_single * 1.5 + 10.0,
+            "typed-greedy traded SLOs for cost: {v_typed} vs {v_single} violations"
+        );
+    }
+
+    // (The exhaustive encode/decode round-trip lives in
+    // rust/tests/rl_actions.rs.)
 }

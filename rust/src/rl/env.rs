@@ -1,70 +1,142 @@
-//! RL environment (§V, Fig 10): the serving system as an MDP.
+//! RL environment (§V, Fig 10): the serving system as an MDP over a
+//! *heterogeneous* instance palette.
 //!
 //! The agent replaces the hand-tuned scheme: each second it observes load/
-//! fleet/cost state and picks a joint action (VM scale delta × offload
-//! policy). Dynamics are a fluid-flow (per-second aggregate) version of the
+//! fleet/cost state and picks a joint action — which VM type to act on,
+//! whether to scale it up or down, and the serverless offload policy.
+//! Dynamics are a fluid-flow (per-second aggregate) version of the
 //! discrete-event simulator — the standard fidelity/speed trade for RL
 //! training loops, and the request-level sim stays available for final
-//! evaluation of the learned policy.
+//! evaluation of the learned policy. Scaling decisions are routed through
+//! the same typed [`Action`] vocabulary the schedulers emit, so booted
+//! capacity lands on the chosen type's sub-fleet after exactly that type's
+//! published boot latency (booked on the shared [`SimCore`] event heap;
+//! the fluid model skips boot jitter for determinism).
 //!
-//! obs (16 dims, all roughly [0,1]-normalized) — matches
-//! python/compile/ppo.py::OBS_DIM:
-//!   0 rate_1s/rate_scale        8 queue/100
-//!   1 rate_ewma/rate_scale      9 lambda share (recent)
-//!   2 rate_pred/rate_scale     10 cost rate (norm)
-//!   3 peak_to_median/4         11 violations (recent, norm)
-//!   4 utilization              12 strict share of arrivals
-//!   5 vms_running/fleet_scale  13 sin(time of day)
-//!   6 vms_booting/fleet_scale  14 cos(time of day)
-//!   7 free_slots/(slots*fleet) 15 bias (1.0)
+//! # Observation layout
 //!
-//! act (9 = 3x3) — matches ACT_DIM:
-//!   vm_delta ∈ {-1, 0, +1} (in units of ~5% of fleet, min 1)
-//!   offload  ∈ {None, StrictOnly, All}
+//! Observations are `obs_dim(n_types) = BASE_OBS + PER_TYPE_OBS * n_types`
+//! floats, all roughly `[0, 1]`-normalized. The palette-independent base
+//! block (matches `python/compile/ppo.py::BASE_OBS`):
+//!
+//! ```text
+//!   0 rate_1s/rate_scale        7 lambda share (recent)
+//!   1 rate_ewma/rate_scale      8 violations (recent, norm)
+//!   2 rate_pred/rate_scale      9 strict share of arrivals
+//!   3 peak_to_median/4         10 sin(time of day)
+//!   4 utilization              11 cos(time of day)
+//!   5 free capacity (norm)     12 bias (1.0)
+//!   6 queue/100
+//! ```
+//!
+//! Then one 5-float block per palette entry, in palette order:
+//!
+//! ```text
+//!   +0 running sub-fleet / fleet_scale
+//!   +1 booting sub-fleet / fleet_scale
+//!   +2 boot latency / 120 s
+//!   +3 price per slot-second / palette max
+//!   +4 slots for the active model / palette max
+//! ```
+//!
+//! # Action encoding
+//!
+//! The factored space `vm_type × delta × offload` is flattened to
+//! `act_dim(n_types) = 9 * n_types` discrete ids:
+//!
+//! ```text
+//!   a = k * 9 + (delta + 1) * 3 + offload
+//!     k       ∈ 0..n_types   palette index the delta applies to
+//!     delta   ∈ {-1, 0, +1}  drain / hold / spawn (~5% of fleet, min 1)
+//!     offload ∈ {0, 1, 2}    OffloadPolicy::{None, StrictOnly, All}
+//! ```
+//!
+//! so `a % 3` is the offload policy, `(a % 9) / 3 - 1` the scale delta and
+//! `a / 9` the type index. A one-entry palette reproduces the original
+//! 9-action single-type space id-for-id.
 
 use crate::cloud::pricing::VmType;
 use crate::cloud::serverless::LambdaFn;
 use crate::models::Registry;
-use crate::scheduler::{LoadMonitor, OffloadPolicy};
+use crate::scheduler::{Action, LoadMonitor, OffloadPolicy, TypeCap};
 use crate::sim::core::SimCore;
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
 
-pub const OBS_DIM: usize = 16;
-pub const ACT_DIM: usize = 9;
+/// Palette-independent observation features (see the module docs).
+pub const BASE_OBS: usize = 13;
+/// Observation features appended per palette entry.
+pub const PER_TYPE_OBS: usize = 5;
+/// Sub-actions per palette entry: delta {-1,0,+1} × offload {None,Strict,All}.
+pub const ACTIONS_PER_TYPE: usize = 9;
+
+/// Observation dimensionality for an `n_types`-entry palette.
+pub fn obs_dim(n_types: usize) -> usize {
+    BASE_OBS + PER_TYPE_OBS * n_types
+}
+
+/// Action-space cardinality for an `n_types`-entry palette.
+pub fn act_dim(n_types: usize) -> usize {
+    ACTIONS_PER_TYPE * n_types
+}
 
 /// Penalty per SLO violation, in USD-equivalents (tunes the cost/SLO
 /// trade-off; the paper's reward couples cost with QoS).
 pub const VIOLATION_PENALTY_USD: f64 = 0.0005;
 
-pub fn decode_action(a: usize) -> (i32, OffloadPolicy) {
-    assert!(a < ACT_DIM);
-    let delta = (a / 3) as i32 - 1;
+/// Decode a flat action id into `(vm_type_index, scale_delta, offload)`.
+/// See the module docs for the index math; inverse of [`encode_action`].
+pub fn decode_action(a: usize, n_types: usize) -> (usize, i32, OffloadPolicy) {
+    assert!(n_types > 0, "empty vm-type palette");
+    assert!(
+        a < act_dim(n_types),
+        "action {a} out of range for a {n_types}-type palette"
+    );
+    let k = a / ACTIONS_PER_TYPE;
+    let delta = ((a % ACTIONS_PER_TYPE) / 3) as i32 - 1;
     let off = match a % 3 {
         0 => OffloadPolicy::None,
         1 => OffloadPolicy::StrictOnly,
         _ => OffloadPolicy::All,
     };
-    (delta, off)
+    (k, delta, off)
 }
 
-/// Fluid-flow serving environment over one trace.
+/// Encode `(vm_type_index, scale_delta, offload_index)` to the flat action
+/// id. Inverse of [`decode_action`].
+pub fn encode_action(vm_type_index: usize, delta: i32, offload: usize) -> usize {
+    debug_assert!((-1..=1).contains(&delta));
+    debug_assert!(offload < 3);
+    vm_type_index * ACTIONS_PER_TYPE + ((delta + 1) as usize) * 3 + offload
+}
+
+/// Fluid-flow serving environment over one trace and one instance palette.
 pub struct ServeEnv {
     trace: Trace,
-    vm: &'static VmType,
-    /// service time of the representative model, seconds
-    service_s: f64,
-    slots: u32,
+    /// Registry index of the representative pool model the workload runs.
+    model: usize,
+    /// Instance-type palette (head entry is the primary type: warm starts
+    /// land on it, mirroring the request-level simulator).
+    palette: Vec<&'static VmType>,
+    /// Per-type capacity axis of the active model, palette order.
+    caps: Vec<TypeCap>,
     lambda: LambdaFn,
     strict_share: f64,
     rate_scale: f64,
     fleet_scale: f64,
+    /// Palette-max slots / slot-second price (observation normalizers).
+    max_slots: f64,
+    max_slot_price: f64,
 
     // dynamic state
     t: usize,
-    running: u32,
-    /// in-flight VM boots, as events on the shared SimCore engine
-    boots: SimCore<()>,
+    /// Running VMs per palette entry.
+    running: Vec<u32>,
+    /// In-flight boots per palette entry (mirror of the `boots` heap).
+    booting: Vec<u32>,
+    /// In-flight VM boots as events on the shared SimCore engine; the
+    /// payload is the palette index the capacity lands on.
+    boots: SimCore<usize>,
     queue_strict: f64,
     queue_relaxed: f64,
     monitor: LoadMonitor,
@@ -85,30 +157,53 @@ pub struct StepResult {
     pub done: bool,
 }
 
-const BOOT_S: u32 = 100;
-
 impl ServeEnv {
+    /// Single-type environment on the paper's default worker type.
     /// `model_idx` picks the representative pool model the workload runs.
     pub fn new(reg: &Registry, trace: Trace, model_idx: usize, seed: u64) -> ServeEnv {
-        let vm = crate::cloud::default_vm_type();
+        Self::with_palette(reg, trace, model_idx, seed,
+                           vec![crate::cloud::default_vm_type()])
+    }
+
+    /// Environment over an explicit instance-type palette (head entry
+    /// primary, as everywhere else in the codebase).
+    pub fn with_palette(reg: &Registry, trace: Trace, model_idx: usize, seed: u64,
+                        palette: Vec<&'static VmType>) -> ServeEnv {
+        assert!(!palette.is_empty(), "empty vm-type palette");
         let m = &reg.models[model_idx];
+        let caps: Vec<TypeCap> = palette
+            .iter()
+            .map(|&t| TypeCap {
+                vm_type: t,
+                service_s: m.service_time_s(t),
+                slots_per_vm: m.slots_on(t),
+            })
+            .collect();
         let mean = trace.mean_rate();
-        let service_s = m.service_time_s(vm);
-        let slots = m.slots_on(vm);
         // Lambda sized for a sub-second strict SLO, else max memory.
         let lambda = m.lambda_for_slo(1000.0).unwrap_or_else(|| m.lambda_at(3.0));
-        let fleet_scale = (mean * service_s / slots as f64).max(1.0) * 2.0;
+        let fleet_scale =
+            (mean * caps[0].service_s / caps[0].slots_per_vm as f64).max(1.0) * 2.0;
+        let max_slots = caps.iter().map(|c| c.slots_per_vm).max().unwrap() as f64;
+        let max_slot_price = caps
+            .iter()
+            .map(|c| c.cost_per_slot_second())
+            .fold(f64::MIN, f64::max);
+        let n = palette.len();
         ServeEnv {
             trace,
-            vm,
-            service_s,
-            slots,
+            model: model_idx,
+            palette,
+            caps,
             lambda,
             strict_share: 0.5,
             rate_scale: (mean * 2.0).max(1.0),
             fleet_scale,
+            max_slots,
+            max_slot_price,
             t: 0,
-            running: 0,
+            running: vec![0; n],
+            booting: vec![0; n],
             boots: SimCore::new(),
             queue_strict: 0.0,
             queue_relaxed: 0.0,
@@ -126,11 +221,65 @@ impl ServeEnv {
         self.trace.duration_s()
     }
 
-    /// Reset to t=0 with a warm steady-state fleet.
-    pub fn reset(&mut self) -> [f32; OBS_DIM] {
+    /// Palette size (the `n_types` of [`obs_dim`]/[`act_dim`]).
+    pub fn n_types(&self) -> usize {
+        self.palette.len()
+    }
+
+    /// Observation dimensionality of this environment.
+    pub fn obs_dim(&self) -> usize {
+        obs_dim(self.n_types())
+    }
+
+    /// Action-space cardinality of this environment.
+    pub fn act_dim(&self) -> usize {
+        act_dim(self.n_types())
+    }
+
+    /// Per-type capacities of the active model, palette order.
+    pub fn type_caps(&self) -> &[TypeCap] {
+        &self.caps
+    }
+
+    /// The instance-type palette, palette order.
+    pub fn vm_types(&self) -> &[&'static VmType] {
+        &self.palette
+    }
+
+    /// Running VMs in palette entry `k`'s sub-fleet.
+    pub fn running_typed(&self, k: usize) -> u32 {
+        self.running[k]
+    }
+
+    /// In-flight boots in palette entry `k`'s sub-fleet.
+    pub fn booting_typed(&self, k: usize) -> u32 {
+        self.booting[k]
+    }
+
+    fn total_running(&self) -> u32 {
+        self.running.iter().sum()
+    }
+
+    /// Aggregate fluid service capacity, requests/second.
+    fn capacity(&self) -> f64 {
+        self.running
+            .iter()
+            .zip(&self.caps)
+            .map(|(&r, c)| r as f64 * c.slots_per_vm as f64 / c.service_s)
+            .sum()
+    }
+
+    /// Reset to t=0 with a warm steady-state fleet on the primary type
+    /// (mirrors the request-level simulator's warm start).
+    pub fn reset(&mut self) -> Vec<f32> {
         self.t = 0;
         let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
-        self.running = ((rate0 * self.service_s / self.slots as f64).ceil() as u32).max(1);
+        self.running.fill(0);
+        self.running[0] = ((rate0 * self.caps[0].service_s
+            / self.caps[0].slots_per_vm as f64)
+            .ceil() as u32)
+            .max(1);
+        self.booting.fill(0);
         self.boots = SimCore::new();
         self.queue_strict = 0.0;
         self.queue_relaxed = 0.0;
@@ -140,59 +289,106 @@ impl ServeEnv {
         self.episode_cost = 0.0;
         self.episode_violations = 0.0;
         self.episode_requests = 0.0;
-        self.observe(rate0, 0.0)
+        self.observe(rate0)
     }
 
-    fn observe(&self, rate_now: f64, lambda_share: f64) -> [f32; OBS_DIM] {
-        let cap = self.running as f64 * self.slots as f64 / self.service_s;
+    fn observe(&self, rate_now: f64) -> Vec<f32> {
+        let cap = self.capacity();
         let util = if cap > 0.0 { (rate_now / cap).min(1.5) } else { 1.5 };
         let free = (cap - rate_now).max(0.0);
         let tod = 2.0 * std::f64::consts::PI * self.t as f64
             / self.trace.duration_s().max(1) as f64;
         let queue = self.queue_strict + self.queue_relaxed;
-        [
-            (rate_now / self.rate_scale) as f32,
-            (self.monitor.rate_ewma() / self.rate_scale) as f32,
-            (self.monitor.rate_pred(BOOT_S as f64 / 2.0) / self.rate_scale) as f32,
-            (self.monitor.peak_to_median() / 4.0) as f32,
-            util as f32,
-            (self.running as f64 / self.fleet_scale) as f32,
-            (self.boots.pending() as f64 / self.fleet_scale) as f32,
-            (free / (self.fleet_scale * self.slots as f64)) as f32,
-            (queue / 100.0).min(2.0) as f32,
-            lambda_share as f32,
-            (self.recent_viol).min(2.0) as f32,
-            self.recent_lambda as f32,
-            self.strict_share as f32,
-            tod.sin() as f32,
-            tod.cos() as f32,
-            1.0,
-        ]
+        // Forecast half a primary boot ahead (the env's planning horizon).
+        let horizon = self.palette[0].boot_mean_s / 2.0;
+        let mut obs = Vec::with_capacity(self.obs_dim());
+        obs.push((rate_now / self.rate_scale) as f32);
+        obs.push((self.monitor.rate_ewma() / self.rate_scale) as f32);
+        obs.push((self.monitor.rate_pred(horizon) / self.rate_scale) as f32);
+        obs.push((self.monitor.peak_to_median() / 4.0) as f32);
+        obs.push(util as f32);
+        obs.push((free / (self.fleet_scale * self.max_slots)) as f32);
+        obs.push((queue / 100.0).min(2.0) as f32);
+        obs.push(self.recent_lambda as f32);
+        obs.push(self.recent_viol.min(2.0) as f32);
+        obs.push(self.strict_share as f32);
+        obs.push(tod.sin() as f32);
+        obs.push(tod.cos() as f32);
+        obs.push(1.0);
+        for (k, c) in self.caps.iter().enumerate() {
+            obs.push((self.running[k] as f64 / self.fleet_scale) as f32);
+            obs.push((self.booting[k] as f64 / self.fleet_scale) as f32);
+            obs.push((c.vm_type.boot_mean_s / 120.0) as f32);
+            obs.push((c.cost_per_slot_second() / self.max_slot_price) as f32);
+            obs.push((c.slots_per_vm as f64 / self.max_slots) as f32);
+        }
+        debug_assert_eq!(obs.len(), self.obs_dim());
+        obs
     }
 
-    /// Advance one second under action `a`.
-    pub fn step(&mut self, a: usize) -> ([f32; OBS_DIM], StepResult) {
-        let (delta, offload) = decode_action(a);
-        // Apply scaling action: boots are events on the SimCore heap.
-        if delta > 0 {
-            let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
-            for _ in 0..step {
-                self.boots.schedule_at((self.t + BOOT_S as usize) as f64, ());
+    /// Palette index of a typed action's target.
+    fn type_index(&self, vm_type: &VmType) -> usize {
+        self.palette
+            .iter()
+            .position(|t| t.name == vm_type.name)
+            .expect("action targets a type outside the palette")
+    }
+
+    /// Apply one typed scaling action to the fluid fleet — the same
+    /// [`Action`] vocabulary the schedulers emit to the request-level
+    /// simulator. Spawns book boot events at the target type's mean boot
+    /// latency; drains cancel that type's newest boots first, then retire
+    /// running VMs (never below one running VM fleet-wide).
+    fn apply(&mut self, action: Action) {
+        match action {
+            Action::Spawn { vm_type, count, .. } => {
+                let k = self.type_index(vm_type);
+                for _ in 0..count {
+                    self.boots
+                        .schedule_at(self.t as f64 + vm_type.boot_mean_s, k);
+                    self.booting[k] += 1;
+                }
             }
-        } else if delta < 0 {
-            let step = ((self.running as f64 * 0.05).ceil() as u32).max(1);
-            // Cancel the newest boots first, then drain running VMs.
-            let mut cancel = step.min(self.boots.pending() as u32);
-            let drained = step - cancel;
-            while cancel > 0 {
-                self.boots.cancel_latest();
-                cancel -= 1;
+            Action::Drain { vm_type, count, .. } => {
+                let k = self.type_index(vm_type);
+                let mut left = count;
+                while left > 0
+                    && self.booting[k] > 0
+                    && self.boots.cancel_latest_matching(|&j| j == k).is_some()
+                {
+                    self.booting[k] -= 1;
+                    left -= 1;
+                }
+                let floor_spare = self.total_running().saturating_sub(1) as usize;
+                let drained = left.min(self.running[k] as usize).min(floor_spare);
+                self.running[k] -= drained as u32;
             }
-            self.running = self.running.saturating_sub(drained).max(1);
         }
-        // Boots due by this step come online.
-        while self.boots.pop_due(self.t as f64).is_some() {
-            self.running += 1;
+    }
+
+    /// Advance one second under action `a` (see the module docs for the
+    /// encoding).
+    pub fn step(&mut self, a: usize) -> (Vec<f32>, StepResult) {
+        let (k, delta, offload) = decode_action(a, self.palette.len());
+        // Scaling step: ~5% of the current fleet, at least one VM.
+        let step_sz = ((self.total_running() as f64 * 0.05).ceil() as usize).max(1);
+        if delta > 0 {
+            self.apply(Action::Spawn {
+                model: self.model,
+                vm_type: self.palette[k],
+                count: step_sz,
+            });
+        } else if delta < 0 {
+            self.apply(Action::Drain {
+                model: self.model,
+                vm_type: self.palette[k],
+                count: step_sz,
+            });
+        }
+        // Boots due by this step come online on their type's sub-fleet.
+        while let Some((_, j)) = self.boots.pop_due(self.t as f64) {
+            self.running[j] += 1;
+            self.booting[j] = self.booting[j].saturating_sub(1);
         }
 
         // Arrivals this second.
@@ -206,8 +402,8 @@ impl ServeEnv {
         let relaxed_arr = arrivals - strict_arr;
         self.episode_requests += arrivals;
 
-        // VM service capacity this second (fluid).
-        let cap = self.running as f64 * self.slots as f64 / self.service_s;
+        // VM service capacity this second (fluid, summed over sub-fleets).
+        let cap = self.capacity();
         let mut viol = 0.0;
         let mut lambda_n = 0.0;
 
@@ -262,10 +458,17 @@ impl ServeEnv {
         self.queue_strict += new_strict;
         self.queue_relaxed += new_relaxed;
 
-        // Costs: per-second VM + per-invocation lambda (warm-dominated;
-        // fluid model folds cold starts into a 5% premium).
-        let vm_cost = (self.running as f64 + self.boots.pending() as f64)
-            * self.vm.price.per_second();
+        // Costs: per-second per-type VM billing (booting VMs bill too) +
+        // per-invocation lambda (warm-dominated; the fluid model folds cold
+        // starts into a 5% premium).
+        let vm_cost: f64 = self
+            .palette
+            .iter()
+            .enumerate()
+            .map(|(j, t)| {
+                (self.running[j] as f64 + self.booting[j] as f64) * t.price.per_second()
+            })
+            .sum();
         let lambda_cost = lambda_n * self.lambda.invoke_cost(false) * 1.05;
         let cost = vm_cost + lambda_cost;
 
@@ -279,7 +482,7 @@ impl ServeEnv {
         let reward = -(cost + viol * VIOLATION_PENALTY_USD) * 100.0;
         self.t += 1;
         let done = self.t >= self.trace.duration_s();
-        let obs = self.observe(rate, self.recent_lambda);
+        let obs = self.observe(rate);
         (obs, StepResult { reward, cost_usd: cost, violations: viol, done })
     }
 }
@@ -287,6 +490,7 @@ impl ServeEnv {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::vm_type;
     use crate::trace::generators;
 
     fn env() -> ServeEnv {
@@ -295,25 +499,76 @@ mod tests {
         ServeEnv::new(&reg, trace, 3, 7)
     }
 
+    fn het_env() -> ServeEnv {
+        let reg = Registry::builtin();
+        let trace = generators::constant(50.0, 200);
+        let palette = vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        ServeEnv::with_palette(&reg, trace, 3, 7, palette)
+    }
+
     #[test]
     fn action_decoding_covers_space() {
-        let mut seen = std::collections::BTreeSet::new();
-        for a in 0..ACT_DIM {
-            seen.insert(format!("{:?}", decode_action(a)));
+        for n in [1usize, 2, 7] {
+            let mut seen = std::collections::BTreeSet::new();
+            for a in 0..act_dim(n) {
+                seen.insert(format!("{:?}", decode_action(a, n)));
+            }
+            assert_eq!(seen.len(), act_dim(n), "collisions on a {n}-type palette");
         }
-        assert_eq!(seen.len(), ACT_DIM);
-        assert_eq!(decode_action(4), (0, OffloadPolicy::StrictOnly));
+        // Single-type palette keeps the legacy 9-action ids.
+        assert_eq!(decode_action(4, 1), (0, 0, OffloadPolicy::StrictOnly));
+        assert_eq!(decode_action(0, 1), (0, -1, OffloadPolicy::None));
+        // Factored index math: a = k*9 + (delta+1)*3 + offload.
+        assert_eq!(decode_action(ACTIONS_PER_TYPE + 2 * 3 + 2, 2),
+                   (1, 1, OffloadPolicy::All));
     }
 
     #[test]
     fn reset_gives_normalized_obs() {
         let mut e = env();
         let obs = e.reset();
-        assert_eq!(obs.len(), OBS_DIM);
+        assert_eq!(obs.len(), obs_dim(1));
+        assert_eq!(obs.len(), e.obs_dim());
         for (i, &x) in obs.iter().enumerate() {
             assert!(x.is_finite() && x.abs() <= 4.0, "obs[{i}]={x}");
         }
-        assert_eq!(obs[15], 1.0, "bias term");
+        assert_eq!(obs[BASE_OBS - 1], 1.0, "bias term closes the base block");
+    }
+
+    #[test]
+    fn het_obs_carries_per_type_blocks() {
+        let mut e = het_env();
+        let obs = e.reset();
+        assert_eq!(obs.len(), obs_dim(2));
+        // Warm fleet lands on the primary sub-fleet only.
+        assert!(obs[BASE_OBS] > 0.0, "primary running share");
+        assert_eq!(obs[BASE_OBS + PER_TYPE_OBS], 0.0, "secondary starts empty");
+        // Static palette descriptors: boot latency and price-per-slot.
+        let m4_boot = obs[BASE_OBS + 2];
+        let c5_boot = obs[BASE_OBS + PER_TYPE_OBS + 2];
+        assert!(c5_boot < m4_boot, "c5 boots faster than m4");
+        let m4_price = obs[BASE_OBS + 3];
+        let c5_price = obs[BASE_OBS + PER_TYPE_OBS + 3];
+        assert!(c5_price < m4_price, "c5 is cheaper per slot-second");
+        assert!((m4_price - 1.0).abs() < 1e-6, "palette max normalizes to 1");
+    }
+
+    // (The boot-landing timing scenario lives in rust/tests/rl_actions.rs,
+    // exercising the public API end to end.)
+
+    #[test]
+    fn drain_cancels_newest_boots_of_that_type_first() {
+        let mut e = het_env();
+        e.reset();
+        e.step(encode_action(1, 1, 0)); // boots on c5
+        e.step(encode_action(0, 1, 0)); // boots on m4
+        let (m4_boots, c5_boots) = (e.booting_typed(0), e.booting_typed(1));
+        assert!(m4_boots >= 1 && c5_boots >= 1);
+        let m4_running = e.running_typed(0);
+        e.step(encode_action(1, -1, 0)); // drain c5: cancels its boots only
+        assert_eq!(e.booting_typed(0), m4_boots, "m4 boots must survive");
+        assert!(e.booting_typed(1) < c5_boots, "c5 boots must cancel first");
+        assert_eq!(e.running_typed(0), m4_running, "running m4s untouched");
     }
 
     #[test]

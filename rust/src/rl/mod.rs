@@ -6,6 +6,16 @@
 //! yardsticks ([`baselines`]) and the PPO driver ([`agent`]) whose forward
 //! pass *and* train step execute AOT-compiled JAX/Pallas artifacts via
 //! PJRT — no Python at run time.
+//!
+//! Since PR 2 the action space is *factored over the instance-type
+//! palette* — each discrete action names a `(vm_type, scale_delta,
+//! offload_policy)` triple, and observations carry a per-type feature
+//! block — so the agent can learn the resource-heterogeneity dimension the
+//! paper argues for (see [`env`] for the exact encoding). Observation and
+//! action dimensions are therefore palette-derived ([`env::obs_dim`] /
+//! [`env::act_dim`]); the AOT artifacts are lowered for one palette size
+//! and checked against the environment before acting
+//! ([`agent::PpoManifest::check_palette`]).
 
 pub mod agent;
 pub mod baselines;
@@ -13,6 +23,6 @@ pub mod buffer;
 pub mod env;
 pub mod trainer;
 
-pub use agent::{PpoAgent, UpdateStats};
+pub use agent::{PpoAgent, PpoManifest, UpdateStats};
 pub use buffer::Rollout;
-pub use env::{ServeEnv, ACT_DIM, OBS_DIM};
+pub use env::{act_dim, decode_action, encode_action, obs_dim, ServeEnv};

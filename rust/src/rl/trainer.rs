@@ -34,13 +34,16 @@ impl Default for TrainConfig {
 
 /// Train `agent` on `env`; returns the per-iteration learning curve.
 /// Episodes restart inside the rollout whenever the env reaches its
-/// horizon (classic fixed-horizon PPO).
+/// horizon (classic fixed-horizon PPO). Errors up front when the agent's
+/// AOT artifacts were lowered for a different palette size than the
+/// environment's (see [`PpoAgent::check_palette`]).
 pub fn train(env: &mut ServeEnv, agent: &mut PpoAgent, cfg: &TrainConfig)
              -> Result<Vec<IterStats>> {
+    agent.check_palette(env.n_types())?;
     assert!(cfg.horizon % agent.minibatch_size() == 0,
             "horizon must be a multiple of the AOT minibatch");
     let mut curve = Vec::with_capacity(cfg.iterations);
-    let mut obs = env.reset().to_vec();
+    let mut obs = env.reset();
     let mut ep_costs: Vec<f64> = Vec::new();
     let mut ep_viols: Vec<f64> = Vec::new();
     let mut ep_reqs: Vec<f64> = Vec::new();
@@ -55,14 +58,14 @@ pub fn train(env: &mut ServeEnv, agent: &mut PpoAgent, cfg: &TrainConfig)
             let (a, logp, value) = agent.act(&obs)?;
             let (next, r) = env.step(a);
             roll.push(&obs, a as i32, logp, r.reward as f32, value, r.done);
-            reward_sum += r.reward as f64;
+            reward_sum += r.reward;
             if r.done {
                 ep_costs.push(env.episode_cost);
                 ep_viols.push(env.episode_violations);
                 ep_reqs.push(env.episode_requests);
-                obs = env.reset().to_vec();
+                obs = env.reset();
             } else {
-                obs = next.to_vec();
+                obs = next;
             }
         }
         // Bootstrap value for the unfinished tail.

@@ -4,7 +4,7 @@
 //! horizon ahead and provisions a safety margin above it — few SLO
 //! violations, 20-30% over-provisioning (Fig 5/6).
 
-use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use super::{converge, drain_foreign_types, Action, OffloadPolicy, SchedObs, Scheme};
 use crate::cloud::vm::PROVISION_MEAN_S;
 use std::collections::BTreeMap;
 
@@ -59,6 +59,8 @@ impl Scheme for Exascale {
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
             converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            // Retire inherited foreign sub-fleets (shared no-gap sweep).
+            drain_foreign_types(obs, d.model, ty, desired, &mut out);
         }
         out
     }

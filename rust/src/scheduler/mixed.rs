@@ -7,7 +7,7 @@
 //! wasteful for relaxed queries that could simply have waited (the gap
 //! Paragon closes).
 
-use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use super::{converge, drain_foreign_types, Action, OffloadPolicy, SchedObs, Scheme};
 use std::collections::BTreeMap;
 
 const DRAIN_COOLDOWN_S: f64 = 60.0;
@@ -46,6 +46,8 @@ impl Scheme for Mixed {
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
             converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            // Retire inherited foreign sub-fleets (shared no-gap sweep).
+            drain_foreign_types(obs, d.model, ty, desired, &mut out);
         }
         out
     }

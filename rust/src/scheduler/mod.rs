@@ -13,6 +13,12 @@
 //! | `exascale`  | predictive w/ headroom [17]| provision above forecast | pins the primary type      | never                 |
 //! | `mixed`     | MArk [12] / Spock [13]    | reactive                  | pins the primary type      | offload all overflow  |
 //! | `paragon`   | this paper                | short-horizon predictive  | greedy cheapest-per-slot-second per model | strict-SLO overflow only, gated by peak-to-median |
+//!
+//! Every scheme — type-aware or pinned — retires sub-fleets on foreign
+//! palette types through the shared `drain_foreign_types` sweep: once the
+//! scheme's chosen type holds enough *running* capacity on its own,
+//! inherited capacity on other types is drained (never before, so a
+//! migration cannot open a serving gap while replacements boot).
 
 pub mod exascale;
 pub mod load_monitor;
@@ -22,7 +28,7 @@ pub mod reactive;
 pub mod util_aware;
 
 use crate::cloud::pricing::VmType;
-use crate::cloud::Cluster;
+use crate::cloud::{Cluster, VmState};
 pub use load_monitor::LoadMonitor;
 
 /// Which queued/overflow requests may be sent to serverless functions.
@@ -224,6 +230,38 @@ pub(crate) fn converge(
     }
 }
 
+/// Shared sweep for schemes that converge a model group onto one type of a
+/// heterogeneous palette: retire sub-fleets on every *other* palette type,
+/// but only once the chosen type's Running capacity alone covers `desired`
+/// VMs — never trade serving capacity for cost while replacements are
+/// still booting (the no-gap migration rule, shared with paragon's greedy
+/// type migration). Without this, a scheme pinning its primary type on a
+/// multi-type palette would pay for foreign sub-fleets — capacity it
+/// inherited from a warm start or a mid-run scheme swap — forever.
+pub(crate) fn drain_foreign_types(
+    obs: &SchedObs,
+    model: usize,
+    pinned: &'static VmType,
+    desired: usize,
+    out: &mut Vec<Action>,
+) {
+    if obs.vm_types.len() <= 1 {
+        return;
+    }
+    if obs.cluster.count_typed(model, pinned, VmState::Running) < desired {
+        return;
+    }
+    for &ty in obs.vm_types {
+        if ty.name == pinned.name {
+            continue;
+        }
+        let stale = obs.cluster.alive_typed(model, ty);
+        if stale > 0 {
+            out.push(Action::Drain { model, vm_type: ty, count: stale });
+        }
+    }
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -291,6 +329,45 @@ mod tests {
         assert_eq!(d.vms_for_rate(9.0), 3);
         assert_eq!(d.vms_for_rate(8.0), 2);
         assert_eq!(d.vms_for_rate(0.0), 0);
+    }
+
+    #[test]
+    fn foreign_subfleet_retired_once_pinned_covers() {
+        use super::testutil::obs_fixture;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        // 3 running m4 (covers 40 q/s at 0.1 s / 2 slots) + 2 stale c5.
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 3, true);
+        for _ in 0..2 {
+            cluster.spawn(c5, 0, 2, 0.0);
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        let vm_types = [m4, c5];
+        let mut out = Vec::new();
+        let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: &vm_types };
+        drain_foreign_types(&obs, 0, m4, 3, &mut out);
+        assert_eq!(out, vec![Action::Drain { model: 0, vm_type: c5, count: 2 }]);
+    }
+
+    #[test]
+    fn foreign_subfleet_survives_while_pinned_is_short() {
+        use super::testutil::obs_fixture;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        // Only 2 running m4 for a desired fleet of 3: the c5 capacity is
+        // still serving — the sweep must not open a gap.
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 2, true);
+        for _ in 0..2 {
+            cluster.spawn(c5, 0, 2, 0.0);
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        let vm_types = [m4, c5];
+        let mut out = Vec::new();
+        let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: &vm_types };
+        drain_foreign_types(&obs, 0, m4, 3, &mut out);
+        assert!(out.is_empty(), "must not drain while pinned is short: {out:?}");
     }
 
     #[test]

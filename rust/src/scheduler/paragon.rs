@@ -21,8 +21,8 @@
 //!    running capacity alone covers demand, so a migration never opens
 //!    a serving gap while replacements boot.
 
-use super::{cheapest_cap, converge, Action, OffloadPolicy, SchedObs, Scheme, TypeCap};
-use crate::cloud::VmState;
+use super::{cheapest_cap, converge, drain_foreign_types, Action, OffloadPolicy,
+            SchedObs, Scheme, TypeCap};
 use std::collections::BTreeMap;
 
 /// Offload opens only above this windowed peak-to-median (Observation 4).
@@ -95,21 +95,10 @@ impl Scheme for Paragon {
                 .or_insert(None);
             converge(obs, d.model, cap.vm_type, desired, since, DRAIN_COOLDOWN_S,
                      &mut out);
-            // Migration: retire sub-fleets on non-chosen types, but only
-            // once the chosen type's *running* capacity alone covers the
-            // desired fleet — never trade serving capacity for cost while
-            // replacements are still booting.
-            if obs.cluster.count_typed(d.model, cap.vm_type, VmState::Running) >= desired {
-                for &ty in obs.vm_types {
-                    if ty.name == cap.vm_type.name {
-                        continue;
-                    }
-                    let stale = obs.cluster.alive_typed(d.model, ty);
-                    if stale > 0 {
-                        out.push(Action::Drain { model: d.model, vm_type: ty, count: stale });
-                    }
-                }
-            }
+            // Migration: retire sub-fleets on non-chosen types under the
+            // shared no-gap rule (chosen type's running capacity must
+            // cover the desired fleet first).
+            drain_foreign_types(obs, d.model, cap.vm_type, desired, &mut out);
         }
         out
     }

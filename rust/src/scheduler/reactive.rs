@@ -3,7 +3,7 @@
 //! serverless. Cheap, but every ramp is absorbed as queueing (and SLO
 //! violations) while new VMs boot.
 
-use super::{converge, Action, OffloadPolicy, SchedObs, Scheme};
+use super::{converge, drain_foreign_types, Action, OffloadPolicy, SchedObs, Scheme};
 use std::collections::BTreeMap;
 
 /// Seconds of sustained surplus before a drain is issued.
@@ -50,6 +50,9 @@ impl Scheme for Reactive {
             };
             let since = self.surplus_since.entry(d.model).or_insert(None);
             converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            // On a multi-type palette: retire inherited foreign sub-fleets
+            // once the pinned type alone covers demand (no-gap rule).
+            drain_foreign_types(obs, d.model, ty, desired, &mut out);
         }
         out
     }
@@ -114,5 +117,33 @@ mod tests {
     #[test]
     fn never_offloads() {
         assert_eq!(Reactive::new().offload(), OffloadPolicy::None);
+    }
+
+    #[test]
+    fn retires_foreign_subfleet_on_multi_type_palette() {
+        use crate::cloud::pricing::vm_type;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        // Pinned m4 fleet covers demand (3 VMs for 40 q/s); 2 inherited c5
+        // VMs must be drained instead of billing forever.
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 3, true);
+        for _ in 0..2 {
+            cluster.spawn(c5, 0, 2, 0.0);
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        let vm_types = [m4, c5];
+        let mut s = Reactive::new();
+        let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: &vm_types };
+        let acts = s.tick(&obs);
+        assert!(
+            acts.contains(&Action::Drain { model: 0, vm_type: c5, count: 2 }),
+            "foreign c5 sub-fleet not retired: {acts:?}"
+        );
+        assert!(
+            !acts.iter().any(|a| matches!(
+                a, Action::Drain { vm_type, .. } if vm_type.name == "m4.large")),
+            "pinned fleet must survive: {acts:?}"
+        );
     }
 }

@@ -5,7 +5,7 @@
 //! scale-up threshold, i.e. ~1/0.8 = 1.25x the VMs reactive would hold —
 //! the 20-30% over-provisioning of Fig 5.
 
-use super::{Action, OffloadPolicy, SchedObs, Scheme};
+use super::{drain_foreign_types, Action, OffloadPolicy, SchedObs, Scheme};
 use std::collections::BTreeMap;
 
 /// Scale up when mean utilization crosses this (the paper's "80%").
@@ -90,6 +90,12 @@ impl Scheme for UtilAware {
             } else {
                 *low = None;
             }
+            // Retire inherited foreign sub-fleets once the pinned type's
+            // running capacity covers current demand (the threshold loop
+            // above is utilization-driven and type-blind, so without this
+            // sweep a foreign sub-fleet would be billed forever).
+            let cover = if d.rate > 0.0 { d.vms_for_rate(d.rate).max(1) } else { 0 };
+            drain_foreign_types(obs, d.model, ty, cover, &mut out);
         }
         out
     }
@@ -145,6 +151,27 @@ mod tests {
         assert_eq!(
             acts,
             vec![Action::Drain { model: 0, vm_type: default_vm_type(), count: 1 }]
+        );
+    }
+
+    #[test]
+    fn retires_foreign_subfleet_on_multi_type_palette() {
+        use crate::cloud::pricing::vm_type;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let (mon, demands, mut cluster) = obs_fixture(40.0, 3, true);
+        for _ in 0..2 {
+            cluster.spawn(c5, 0, 2, 0.0);
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        let vm_types = [m4, c5];
+        let mut s = UtilAware::new();
+        let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
+                             cluster: &cluster, vm_types: &vm_types };
+        let acts = s.tick(&obs);
+        assert!(
+            acts.contains(&Action::Drain { model: 0, vm_type: c5, count: 2 }),
+            "foreign c5 sub-fleet not retired: {acts:?}"
         );
     }
 

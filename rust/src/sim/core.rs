@@ -4,7 +4,8 @@
 //! `Engine<Payload>`) plus a monotone clock. Two layers build on it: the
 //! request-level simulator ([`super::engine::simulate`]) schedules inference
 //! completions through it, and the RL environment
-//! ([`crate::rl::env::ServeEnv`]) schedules VM boot completions. Events at
+//! ([`crate::rl::env::ServeEnv`]) schedules per-type VM boot completions
+//! (cancelled typed via [`SimCore::cancel_latest_matching`]). Events at
 //! equal times pop in insertion order (a per-event sequence number breaks
 //! ties), so every consumer is deterministic by construction — `BinaryHeap`
 //! alone makes no ordering promise for equal keys.
@@ -77,19 +78,28 @@ impl<P> EventQueue<P> {
     /// Remove the most recently pushed pending event (LIFO cancellation —
     /// e.g. aborting the newest of several in-flight VM boots). O(n).
     pub fn remove_latest(&mut self) -> Option<P> {
-        if self.heap.is_empty() {
-            return None;
-        }
+        self.remove_latest_where(|_| true)
+    }
+
+    /// [`Self::remove_latest`] restricted to events whose payload satisfies
+    /// `pred` — LIFO cancellation within one class of events (e.g. aborting
+    /// the newest in-flight boot of one VM type while boots of other types
+    /// stay booked). O(n).
+    pub fn remove_latest_where<F: Fn(&P) -> bool>(&mut self, pred: F) -> Option<P> {
         let mut entries: Vec<Entry<P>> = std::mem::take(&mut self.heap).into_vec();
-        let mut newest = 0;
+        let mut newest: Option<usize> = None;
         for (i, e) in entries.iter().enumerate() {
-            if e.seq > entries[newest].seq {
-                newest = i;
+            let newer = match newest {
+                Some(j) => e.seq > entries[j].seq,
+                None => true,
+            };
+            if newer && pred(&e.payload) {
+                newest = Some(i);
             }
         }
-        let e = entries.swap_remove(newest);
+        let out = newest.map(|i| entries.swap_remove(i).payload);
         self.heap = entries.into();
-        Some(e.payload)
+        out
     }
 
     pub fn len(&self) -> usize {
@@ -171,6 +181,12 @@ impl<P> SimCore<P> {
         self.events.remove_latest()
     }
 
+    /// Cancel the most recently scheduled pending event whose payload
+    /// satisfies `pred` (see [`EventQueue::remove_latest_where`]).
+    pub fn cancel_latest_matching<F: Fn(&P) -> bool>(&mut self, pred: F) -> Option<P> {
+        self.events.remove_latest_where(pred)
+    }
+
     pub fn pending(&self) -> usize {
         self.events.len()
     }
@@ -214,6 +230,19 @@ mod tests {
         assert_eq!(q.remove_latest(), Some("mid"));
         assert_eq!(q.pop(), Some((1.0, "old")));
         assert_eq!(q.remove_latest(), None);
+    }
+
+    #[test]
+    fn remove_latest_where_is_lifo_within_the_class() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 10); // seq 0
+        q.push(2.0, 21); // seq 1
+        q.push(3.0, 20); // seq 2
+        // Newest event matching the class, regardless of its time key.
+        assert_eq!(q.remove_latest_where(|&p| p < 21), Some(20));
+        assert_eq!(q.remove_latest_where(|&p| p < 21), Some(10));
+        assert_eq!(q.remove_latest_where(|&p| p < 21), None, "21 never matches");
+        assert_eq!(q.pop(), Some((2.0, 21)), "non-matching event survives");
     }
 
     #[test]

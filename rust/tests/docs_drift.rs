@@ -1,0 +1,45 @@
+//! Docs-drift guard (same check CI runs): `docs/ARCHITECTURE.md` must
+//! describe every top-level module under `rust/src/`, and the README's
+//! quickstart must keep naming the real entry points. Documentation that
+//! stops compiling against the tree is documentation that rots.
+
+use std::path::Path;
+
+#[test]
+fn architecture_doc_mentions_every_top_level_module() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let doc = std::fs::read_to_string(root.join("docs/ARCHITECTURE.md"))
+        .expect("docs/ARCHITECTURE.md must exist");
+    let mut missing = Vec::new();
+    for entry in std::fs::read_dir(root.join("rust/src")).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name().into_string().unwrap();
+        let module = if entry.path().is_dir() {
+            name
+        } else if let Some(stem) = name.strip_suffix(".rs") {
+            stem.to_string()
+        } else {
+            continue;
+        };
+        if module == "lib" || module == "main" {
+            continue; // crate roots, not modules
+        }
+        if !doc.contains(&format!("`{module}`")) && !doc.contains(&format!("{module}/")) {
+            missing.push(module);
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "docs/ARCHITECTURE.md does not mention top-level modules: {missing:?}"
+    );
+}
+
+#[test]
+fn readme_quickstart_names_real_entry_points() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let readme = std::fs::read_to_string(root.join("README.md"))
+        .expect("README.md must exist");
+    for needle in ["cargo build --release", "--vm-types", "--fig", "ARCHITECTURE.md"] {
+        assert!(readme.contains(needle), "README.md quickstart lost: {needle}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration coverage for the typed, factored RL action space (PR 2):
+//! exhaustive encode/decode round-trip over the full 7-type palette, typed
+//! boots landing on the chosen sub-fleet after exactly that type's boot
+//! latency, and agent-manifest/palette compatibility rejection.
+
+use paragon::cloud::pricing::{vm_type, VM_TYPES};
+use paragon::models::Registry;
+use paragon::rl::agent::PpoManifest;
+use paragon::rl::env::{act_dim, decode_action, encode_action, obs_dim, ServeEnv,
+                       ACTIONS_PER_TYPE};
+use paragon::scheduler::OffloadPolicy;
+use paragon::trace::generators;
+
+#[test]
+fn decode_encode_roundtrip_exhaustive_over_7_type_palette() {
+    let n = VM_TYPES.len();
+    assert_eq!(n, 7, "the paper palette has 7 instance types");
+    let mut seen = std::collections::BTreeSet::new();
+    for a in 0..act_dim(n) {
+        let (k, delta, off) = decode_action(a, n);
+        assert!(k < n, "type index {k} out of palette");
+        assert!((-1..=1).contains(&delta));
+        let off_idx = match off {
+            OffloadPolicy::None => 0,
+            OffloadPolicy::StrictOnly => 1,
+            OffloadPolicy::All => 2,
+        };
+        assert_eq!(encode_action(k, delta, off_idx), a, "round trip broke at {a}");
+        seen.insert((k, delta, off_idx));
+    }
+    assert_eq!(
+        seen.len(),
+        act_dim(n),
+        "vm_types x delta x offload must be a bijection onto 0..{}",
+        act_dim(n)
+    );
+    // The documented index math: a = k*9 + (delta+1)*3 + offload.
+    assert_eq!(decode_action(6 * ACTIONS_PER_TYPE + 2 * 3 + 1, 7),
+               (6, 1, OffloadPolicy::StrictOnly));
+    assert_eq!(act_dim(7), 63);
+    assert_eq!(obs_dim(7), 13 + 5 * 7);
+}
+
+#[test]
+#[should_panic]
+fn decode_rejects_actions_outside_the_palette_space() {
+    decode_action(act_dim(3), 3);
+}
+
+#[test]
+fn spawn_on_type_k_lands_in_its_subfleet_after_its_boot_latency() {
+    let reg = Registry::builtin();
+    let m4 = vm_type("m4.large").unwrap();
+    let c5 = vm_type("c5.large").unwrap();
+    let trace = generators::constant(20.0, 400);
+    let mut env = ServeEnv::with_palette(&reg, trace, 3, 7, vec![m4, c5]);
+    env.reset();
+    assert_eq!(env.running_typed(1), 0, "warm start is primary-only");
+
+    let hold = encode_action(0, 0, 0);
+    env.step(encode_action(1, 1, 0)); // spawn on palette index 1 = c5.large
+    let spawned = env.booting_typed(1);
+    assert!(spawned >= 1, "no boot booked on the chosen type");
+    assert_eq!(env.running_typed(1), 0, "capacity must not land instantly");
+
+    // The fluid env books boots at the type's mean latency (no jitter):
+    // c5.large provisions in exactly 60 s, not the m4 primary's 100 s.
+    let boot = c5.boot_mean_s as usize;
+    assert!(boot < m4.boot_mean_s as usize);
+    for _ in 0..boot - 1 {
+        env.step(hold);
+        assert_eq!(env.running_typed(1), 0, "boot landed early");
+    }
+    env.step(hold);
+    assert_eq!(
+        env.running_typed(1),
+        spawned,
+        "boot must land on the chosen sub-fleet after boot_mean_s"
+    );
+    assert_eq!(env.booting_typed(1), 0);
+}
+
+#[test]
+fn agent_manifest_rejects_mismatched_palette_with_clear_error() {
+    let mk = |obs: usize, act: usize| PpoManifest {
+        obs_dim: obs,
+        act_dim: act,
+        minibatch: 256,
+        policy_fwd: vec![],
+        train_step: String::new(),
+        param_shapes: vec![],
+        init_params_bin: String::new(),
+    };
+    // Consistent 2-type manifest accepts a 2-type palette only.
+    let two = mk(obs_dim(2), act_dim(2));
+    assert_eq!(two.palette_size().unwrap(), 2);
+    two.check_palette(2).unwrap();
+    let err = two.check_palette(3).unwrap_err().to_string();
+    assert!(
+        err.contains("2-type") && err.contains("3 types"),
+        "error must name both palette sizes: {err}"
+    );
+    // Internally inconsistent dims are rejected outright.
+    assert!(mk(obs_dim(2), act_dim(3)).palette_size().is_err());
+    assert!(mk(17, act_dim(1)).palette_size().is_err());
+    assert!(mk(obs_dim(1), 10).palette_size().is_err());
+}

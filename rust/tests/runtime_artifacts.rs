@@ -90,13 +90,19 @@ fn padding_does_not_change_results() {
 fn ppo_agent_acts_and_trains() {
     let Some(dir) = artifacts_dir() else { return };
     let mut agent = PpoAgent::load(&dir, 7).unwrap();
-    assert_eq!(agent.obs_dim(), 16);
-    assert_eq!(agent.act_dim(), 9);
+    // Dims are palette-derived: whatever N_TYPES the artifacts were
+    // lowered for, the obs and act heads must agree on it.
+    let od = agent.obs_dim();
+    let ad = agent.act_dim();
+    let n_types = ad / paragon::rl::env::ACTIONS_PER_TYPE;
+    assert_eq!(ad, paragon::rl::env::act_dim(n_types));
+    assert_eq!(od, paragon::rl::env::obs_dim(n_types));
+    agent.check_palette(n_types).unwrap();
 
     // Acting: valid distribution + value.
-    let obs = vec![0.1f32; 16];
+    let obs = vec![0.1f32; od];
     let (probs, value) = agent.policy(&obs).unwrap();
-    assert_eq!(probs.len(), 9);
+    assert_eq!(probs.len(), ad);
     let s: f32 = probs.iter().sum();
     assert!((s - 1.0).abs() < 1e-3);
     assert!(value.is_finite());
@@ -105,15 +111,15 @@ fn ppo_agent_acts_and_trains() {
     // must rise — proving the AOT train step actually learns.
     let mut rng = Pcg::seeded(3);
     let bsz = agent.minibatch_size();
-    let mut roll = Rollout::new(16);
-    let mut favored_obs = vec![0.0f32; 16];
-    favored_obs[15] = 1.0;
+    let mut roll = Rollout::new(od);
+    let mut favored_obs = vec![0.0f32; od];
+    favored_obs[od - 1] = 1.0;
     for i in 0..bsz * 2 {
-        let mut o = vec![0.0f32; 16];
+        let mut o = vec![0.0f32; od];
         for x in o.iter_mut() {
             *x = rng.normal() as f32 * 0.1;
         }
-        o[15] = 1.0;
+        o[od - 1] = 1.0;
         let (a, logp, v) = agent.act(&o).unwrap();
         // Reward action 3, punish the rest.
         let r = if a == 3 { 1.0 } else { -0.2 };
