@@ -1,0 +1,94 @@
+//! Drive the *live* server fleet with any procurement scheme through the
+//! shared control plane — no artifacts needed (dry-run replicas model
+//! admission, boots and billing; attach a PJRT engine for real execution).
+//!
+//! The exact same `Scheme` object that runs inside the discrete-event
+//! simulator here scales per-type live serving pools: demand flows in via
+//! `ServerFleet::ingest`, `ControlLoop::tick_scheme` assembles the
+//! `SchedObs` from the fleet's `FleetView`/demand snapshot, and the
+//! scheme's typed `Action::{Spawn, Drain}` land on real replica pools.
+//!
+//!     cargo run --release --example drive_fleet -- \
+//!         --scheme paragon --trace twitter --rate 60 --duration 900 \
+//!         --vm-types m4.large,c5.large
+
+use paragon::cloud::pricing::parse_vm_type_list;
+use paragon::control::{ControlLoop, FleetActuator, ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::scheduler;
+use paragon::sim::{assign_models, SimConfig};
+use paragon::trace::{generators, synthesize_requests, TraceKind, WorkloadKind};
+use paragon::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scheme_name = args.get_or("scheme", "paragon");
+    let trace_name = args.get_or("trace", "twitter");
+    let rate = args.get_f64("rate", 60.0)?;
+    let duration = args.get_usize("duration", 900)?;
+    let seed = args.get_u64("seed", 42)?;
+    let palette = parse_vm_type_list(&args.get_or("vm-types", "m4.large,c5.large"))?;
+    let kind = TraceKind::from_name(&trace_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace {trace_name}"))?;
+    let mut scheme = scheduler::by_name(&scheme_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {scheme_name} (one of {:?})",
+                                       scheduler::ALL_SCHEMES))?;
+
+    let reg = Registry::builtin();
+    let trace = generators::generate_with(kind, seed, duration, rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, seed ^ 0x51);
+    let sim_cfg = SimConfig { vm_types: palette.clone(), seed, ..SimConfig::default() };
+    let models = assign_models(&reqs, &reg, &sim_cfg);
+
+    let mut fleet = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        ..ServerFleetConfig::default()
+    });
+    let mut cl = ControlLoop::new(&reg, palette.clone());
+
+    println!(
+        "driving a live {}-type fleet with scheme '{}' on trace '{}' \
+         ({} req over {}s, cold start)",
+        palette.len(), scheme_name, trace.name, reqs.len(), duration
+    );
+
+    let mut req_i = 0usize;
+    for t in 0..duration {
+        let now = t as f64 + 1.0;
+        while req_i < reqs.len() && reqs[req_i].arrival_s < now {
+            fleet.ingest(models[req_i], reqs[req_i].slo_ms, reqs[req_i].arrival_s);
+            req_i += 1;
+        }
+        fleet.advance(now);
+        cl.tick_scheme(scheme.as_mut(), &mut fleet, now);
+        if (t + 1) % 150 == 0 {
+            let v = fleet.view();
+            let mix: Vec<String> = palette
+                .iter()
+                .map(|&ty| {
+                    let alive: usize =
+                        (0..reg.len()).map(|m| v.alive_typed(m, ty)).sum();
+                    format!("{}:{}", ty.name, alive)
+                })
+                .collect();
+            println!("t={:>4}s  fleet [{}]  cost ${:.3}", t + 1, mix.join(" "),
+                     fleet.total_cost(now));
+        }
+    }
+    // Drain the tail and report.
+    let end = duration as f64 + 120.0;
+    fleet.advance(end);
+    let rep = fleet.report(end);
+    println!("\n=== drive_fleet ({scheme_name}) ===");
+    println!("requests served   {} (+{} dropped, +{} still queued)",
+             rep.served, rep.dropped, rep.queued);
+    println!("SLO violations    {} ({:.2}%)", rep.violations,
+             rep.violations as f64 / rep.served.max(1) as f64 * 100.0);
+    println!("mean queue wait   {:.1} ms", rep.mean_wait_ms);
+    println!("peak replicas     {}", rep.peak_replicas);
+    println!("fleet bill        ${:.4}", rep.cost_usd);
+    for (name, n) in &rep.spawned_by_type {
+        println!("  {:<12} {:>4} replicas launched", name, n);
+    }
+    Ok(())
+}

@@ -12,7 +12,7 @@
 
 use paragon::models::{Registry, SelectionPolicy};
 use paragon::runtime::engine::Engine;
-use paragon::serving::{Server, ServerConfig};
+use paragon::serving::{Server, ServerConfig, SubmitRequest};
 use paragon::trace::{generators, synthesize_requests, TraceKind, WorkloadKind};
 use paragon::util::cli::Args;
 use paragon::util::rng::Pcg;
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         batch_timeout_ms: 8.0,
         workers: 2,
         selection: SelectionPolicy::Paragon,
+        ..ServerConfig::default()
     });
 
     // Open-loop load from the scaled trace.
@@ -69,7 +70,11 @@ fn main() -> anyhow::Result<()> {
             std::thread::sleep(due - elapsed);
         }
         let input = inputs_pool[(r.id % 32) as usize].clone();
-        let rx = server.submit(input, r.slo_ms, r.min_accuracy);
+        let rx = server.submit(
+            SubmitRequest::new(input)
+                .with_slo_ms(r.slo_ms)
+                .with_min_accuracy(r.min_accuracy),
+        )?;
         pending.push((r.slo_ms, rx));
     }
     println!("all submitted in {:.1}s; draining...", started.elapsed().as_secs_f64());

@@ -16,7 +16,8 @@ fn main() {
     let reg = Registry::builtin();
 
     println!("== router ==");
-    let router = Router::new(&reg, &[0, 1, 2, 3, 4, 5, 6, 7], SelectionPolicy::Paragon);
+    let router = Router::new(&reg, &[0, 1, 2, 3, 4, 5, 6, 7], SelectionPolicy::Paragon,
+                             &[paragon::cloud::default_vm_type()]);
     let mut rng = Pcg::seeded(3);
     bench_throughput("router::route x1000", 10, 200, 1000.0, || {
         let mut acc = 0usize;

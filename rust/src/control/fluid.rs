@@ -1,0 +1,189 @@
+//! [`FleetActuator`] over a fluid (per-second aggregate) fleet: the RL
+//! environment's backend.
+//!
+//! No per-VM state — just running/booting counts per palette entry, with
+//! in-flight boots booked on the shared [`SimCore`] event heap at exactly
+//! the target type's mean boot latency (the fluid model skips boot jitter
+//! for determinism). This is the scaling plumbing that used to live inside
+//! [`ServeEnv`](crate::rl::env::ServeEnv); the env now delegates here, so
+//! RL training and the live control loop exercise the same contract.
+
+use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
+use crate::cloud::pricing::VmType;
+use crate::scheduler::Action;
+use crate::sim::core::SimCore;
+
+/// Fluid sub-fleets over one model's palette. Drains cancel the target
+/// type's newest boots first (LIFO within the type), then retire running
+/// capacity — never below one running VM fleet-wide, so the fluid serving
+/// model cannot divide by an empty fleet.
+///
+/// Deliberate fidelity difference from the other two backends: the fluid
+/// env cancels the boot the agent most recently ordered ("undo the last
+/// decision" — RL step semantics, exercised by the rl_actions tests),
+/// while [`ClusterActuator`](super::ClusterActuator) and
+/// [`ServerFleet`](super::ServerFleet) cancel the *oldest* in-flight boot
+/// and therefore stay count- AND timing-equivalent to each other (the
+/// sim↔live equivalence pair in `rust/tests/control_plane.rs`).
+pub struct FluidFleet {
+    model: usize,
+    palette: Vec<&'static VmType>,
+    running: Vec<u32>,
+    booting: Vec<u32>,
+    /// In-flight boots; the payload is the palette index the capacity
+    /// lands on.
+    boots: SimCore<usize>,
+    /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
+    clock: f64,
+}
+
+impl FluidFleet {
+    pub fn new(model: usize, palette: Vec<&'static VmType>) -> FluidFleet {
+        assert!(!palette.is_empty(), "empty vm-type palette");
+        let n = palette.len();
+        FluidFleet {
+            model,
+            palette,
+            running: vec![0; n],
+            booting: vec![0; n],
+            boots: SimCore::new(),
+            clock: 0.0,
+        }
+    }
+
+    /// Running VMs per palette entry, palette order.
+    pub fn running(&self) -> &[u32] {
+        &self.running
+    }
+
+    /// In-flight boots per palette entry, palette order.
+    pub fn booting(&self) -> &[u32] {
+        &self.booting
+    }
+
+    pub fn total_running(&self) -> u32 {
+        self.running.iter().sum()
+    }
+
+    /// Place `n` already-running VMs on palette entry `k` (warm starts).
+    pub fn force_running(&mut self, k: usize, n: u32) {
+        self.running[k] = n;
+    }
+
+    /// Palette index of a typed action's target.
+    fn type_index(&self, vm_type: &VmType) -> usize {
+        self.palette
+            .iter()
+            .position(|t| t.name == vm_type.name)
+            .expect("action targets a type outside the palette")
+    }
+}
+
+impl FleetActuator for FluidFleet {
+    fn backend(&self) -> &'static str {
+        "fluid"
+    }
+
+    fn apply(&mut self, action: &Action, now: f64) {
+        self.clock = self.clock.max(now);
+        match *action {
+            Action::Spawn { model, vm_type, count } => {
+                debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+                let k = self.type_index(vm_type);
+                for _ in 0..count {
+                    self.boots.schedule_at(now + vm_type.boot_mean_s, k);
+                    self.booting[k] += 1;
+                }
+            }
+            Action::Drain { model, vm_type, count } => {
+                debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+                let k = self.type_index(vm_type);
+                let mut left = count;
+                while left > 0
+                    && self.booting[k] > 0
+                    && self.boots.cancel_latest_matching(|&j| j == k).is_some()
+                {
+                    self.booting[k] -= 1;
+                    left -= 1;
+                }
+                let floor_spare = self.total_running().saturating_sub(1) as usize;
+                let drained = left.min(self.running[k] as usize).min(floor_spare);
+                self.running[k] -= drained as u32;
+            }
+        }
+    }
+
+    fn advance(&mut self, now: f64) {
+        self.clock = self.clock.max(now);
+        while let Some((_, j)) = self.boots.pop_due(now) {
+            self.running[j] += 1;
+            self.booting[j] = self.booting[j].saturating_sub(1);
+        }
+    }
+
+    fn view(&self) -> FleetView {
+        let mut b = FleetViewBuilder::new();
+        for (k, &t) in self.palette.iter().enumerate() {
+            for _ in 0..self.running[k] {
+                b.add(self.model, t, VmPhase::Running, 0.0);
+            }
+            for _ in 0..self.booting[k] {
+                b.add(self.model, t, VmPhase::Booting, 0.0);
+            }
+        }
+        b.build(self.clock)
+    }
+
+    fn demand(&mut self) -> DemandSnapshot {
+        // The fluid fleet models capacity only; its embedding environment
+        // tracks arrivals and queues itself.
+        DemandSnapshot::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+
+    fn fleet2() -> FluidFleet {
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        FluidFleet::new(0, vec![m4, c5])
+    }
+
+    #[test]
+    fn boots_land_on_their_type_after_its_latency() {
+        let mut f = fleet2();
+        let c5 = vm_type("c5.large").unwrap();
+        f.apply(&Action::Spawn { model: 0, vm_type: c5, count: 2 }, 0.0);
+        assert_eq!(f.booting(), &[0, 2]);
+        f.advance(c5.boot_mean_s - 1.0);
+        assert_eq!(f.running(), &[0, 0], "capacity must not land early");
+        f.advance(c5.boot_mean_s);
+        assert_eq!(f.running(), &[0, 2]);
+        assert_eq!(f.booting(), &[0, 0]);
+    }
+
+    #[test]
+    fn drain_floor_keeps_one_running_fleet_wide() {
+        let mut f = fleet2();
+        f.force_running(0, 2);
+        f.apply(&Action::Drain { model: 0, vm_type: vm_type("m4.large").unwrap(),
+                                 count: 5 }, 0.0);
+        assert_eq!(f.total_running(), 1, "fleet-wide floor of one");
+    }
+
+    #[test]
+    fn view_matches_counts() {
+        let mut f = fleet2();
+        f.force_running(1, 3);
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        f.apply(&Action::Spawn { model: 0, vm_type: m4, count: 1 }, 0.0);
+        let v = f.view();
+        assert_eq!(v.running_typed(0, c5), 3);
+        assert_eq!(v.booting_typed(0, m4), 1);
+        assert_eq!(v.total_alive(), 4);
+    }
+}

@@ -1,0 +1,638 @@
+//! [`FleetActuator`] over *live serving pools*: the real-path backend of
+//! the control plane.
+//!
+//! A [`ServerFleet`] holds one serving pool per palette entry; each pool
+//! member ("replica") is a VM-equivalent unit of live capacity pinned to
+//! one `(model, vm_type)` sub-fleet, with the palette's published boot
+//! latency (scaled by [`ServerFleetConfig::boot_scale`]) and the real
+//! per-type EC2 pricing from [`crate::cloud::pricing`]. Typed
+//! `Action::{Spawn, Drain}` from any scheme or RL policy land here exactly
+//! as they land on the simulated cluster.
+//!
+//! Two execution modes share the one control plane:
+//! - **Attached** ([`ServerFleet::with_engine`]): when a palette entry
+//!   first has a running replica, the fleet starts that type's real
+//!   [`Server`] (router → batcher → PJRT workers) and [`ServerFleet::submit`]
+//!   forwards requests to the cheapest pool with live capacity.
+//! - **Dry-run** ([`ServerFleet::new`]): no engine; [`ServerFleet::ingest`]
+//!   models admission (slot bin-packing, FIFO queueing, per-type service
+//!   times, bounded-wait drops) so control-plane experiments, figures and
+//!   CI tests exercise the live path without AOT artifacts.
+//!
+//! Attached-mode caveat: per-replica busy slots and queues are tracked by
+//! the *dry-run* admission model only — `submit` hands the request to a
+//! pool's own batcher and gets no completion callback, so in attached
+//! mode [`FleetActuator::view`] reports utilization 0.0 and
+//! `demand().queued` stays empty. Drive attached fleets with rate-based
+//! deciders (reactive/paragon/RL policies); utilization-threshold schemes
+//! (util_aware) need the dry-run path until completion callbacks are
+//! wired (see ROADMAP).
+
+use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
+use crate::cloud::pricing::VmType;
+use crate::models::Registry;
+use crate::runtime::engine::EngineHandle;
+use crate::scheduler::{Action, TypeCap};
+use crate::serving::router::Router;
+use crate::serving::{LiveResponse, Server, ServerConfig, ServerStats, SubmitError,
+                     SubmitRequest};
+use crate::sim::core::SimCore;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc;
+
+#[derive(Debug, Clone)]
+pub struct ServerFleetConfig {
+    /// Instance-type palette (head entry primary, as everywhere else).
+    pub vm_types: Vec<&'static VmType>,
+    /// Account-level replica quota; spawns beyond it are capped.
+    pub instance_cap: usize,
+    /// Multiplier on the palette's boot means: 1.0 models realistic
+    /// provisioning latency; accelerated demos compress it.
+    pub boot_scale: f64,
+    /// Dry-run requests queued longer than this are dropped and counted
+    /// as violations (mirrors the simulator's
+    /// [`SimConfig`](crate::sim::SimConfig) queue timeout — no real
+    /// serving system queues forever).
+    pub queue_timeout_s: f64,
+    /// Per-pool server settings (batching, workers, selection) used when
+    /// an engine is attached.
+    pub server: ServerConfig,
+}
+
+impl Default for ServerFleetConfig {
+    fn default() -> Self {
+        ServerFleetConfig {
+            vm_types: vec![crate::cloud::default_vm_type()],
+            instance_cap: 5000,
+            boot_scale: 1.0,
+            queue_timeout_s: 300.0,
+            server: ServerConfig::default(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReplicaState {
+    Booting,
+    Running,
+    /// No new work; retires when in-flight requests finish.
+    Draining,
+}
+
+/// One VM-equivalent unit of live serving capacity.
+#[derive(Debug, Clone)]
+struct Replica {
+    id: u64,
+    model: usize,
+    /// Palette index of this replica's type.
+    k: usize,
+    state: ReplicaState,
+    launched_at: f64,
+    ready_at: f64,
+    slots: u32,
+    busy: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct DryQueued {
+    slo_ms: f64,
+    arrival: f64,
+}
+
+/// End-of-run summary of a [`ServerFleet`] drive.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub served: u64,
+    pub violations: u64,
+    /// Requests dropped after waiting past the queue timeout (each also
+    /// counted as a violation). served + dropped + queued = ingested.
+    pub dropped: u64,
+    /// Requests still waiting for capacity when the report was taken.
+    pub queued: usize,
+    /// Total replica billing (per-second EC2 pricing, 60 s minimum).
+    pub cost_usd: f64,
+    pub mean_wait_ms: f64,
+    pub peak_replicas: usize,
+    /// Replicas launched per instance-type name over the whole run.
+    pub spawned_by_type: Vec<(String, u64)>,
+}
+
+/// Per-type live serving pools behind the [`FleetActuator`] contract.
+pub struct ServerFleet {
+    cfg: ServerFleetConfig,
+    reg: Registry,
+    /// Per-(model, palette entry) capacity axes.
+    caps: Vec<Vec<TypeCap>>,
+    /// Per-model palette order, cheapest effective $/query first.
+    order: Vec<Vec<usize>>,
+    replicas: Vec<Replica>,
+    next_id: u64,
+    /// Per-model arrivals since the last demand() call.
+    arrivals: Vec<u64>,
+    /// Dry-run admission queues, FIFO per model.
+    queues: Vec<VecDeque<DryQueued>>,
+    /// Dry-run in-flight completions: payload (replica id, model).
+    completions: SimCore<(u64, usize)>,
+    retired_cost: f64,
+    served: u64,
+    violations: u64,
+    dropped: u64,
+    wait_ms_sum: f64,
+    peak_replicas: usize,
+    /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
+    clock: f64,
+    spawned_by_type: BTreeMap<&'static str, u64>,
+    /// Real execution (attached mode): PJRT engine + per-type pools,
+    /// started lazily when a type first has running capacity.
+    engine: Option<EngineHandle>,
+    pools: Vec<Option<Server>>,
+    router: Option<Router>,
+}
+
+impl ServerFleet {
+    /// Dry-run fleet: full control-plane semantics, no PJRT execution.
+    pub fn new(reg: &Registry, cfg: ServerFleetConfig) -> ServerFleet {
+        Self::build(reg, cfg, None)
+    }
+
+    /// Fleet attached to a live PJRT engine: running replicas start real
+    /// per-type [`Server`] pools and [`Self::submit`] executes for real.
+    pub fn with_engine(reg: &Registry, cfg: ServerFleetConfig,
+                       engine: EngineHandle) -> ServerFleet {
+        Self::build(reg, cfg, Some(engine))
+    }
+
+    fn build(reg: &Registry, cfg: ServerFleetConfig,
+             engine: Option<EngineHandle>) -> ServerFleet {
+        assert!(!cfg.vm_types.is_empty(), "empty vm-type palette");
+        let caps = super::palette_caps(reg, &cfg.vm_types);
+        let n_types = cfg.vm_types.len();
+        let order: Vec<Vec<usize>> = caps
+            .iter()
+            .map(|mc| {
+                let mut idx: Vec<usize> = (0..n_types).collect();
+                idx.sort_by(|&a, &b| {
+                    mc[a].cost_per_query().total_cmp(&mc[b].cost_per_query())
+                });
+                idx
+            })
+            .collect();
+        let router = engine.as_ref().map(|e| {
+            let loaded: Vec<usize> = e.models.keys().copied().collect();
+            Router::new(reg, &loaded, cfg.server.selection, &cfg.vm_types)
+        });
+        let n = reg.len();
+        ServerFleet {
+            caps,
+            order,
+            reg: reg.clone(),
+            replicas: Vec::new(),
+            next_id: 0,
+            arrivals: vec![0; n],
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            completions: SimCore::new(),
+            retired_cost: 0.0,
+            served: 0,
+            violations: 0,
+            dropped: 0,
+            wait_ms_sum: 0.0,
+            peak_replicas: 0,
+            clock: 0.0,
+            spawned_by_type: BTreeMap::new(),
+            pools: (0..cfg.vm_types.len()).map(|_| None).collect(),
+            router,
+            engine,
+            cfg,
+        }
+    }
+
+    fn type_index(&self, vm_type: &VmType) -> usize {
+        self.cfg
+            .vm_types
+            .iter()
+            .position(|t| t.name == vm_type.name)
+            .expect("action targets a type outside the palette")
+    }
+
+    /// Alive (Booting + Running) replicas, the quota denominator.
+    pub fn total_alive(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| matches!(r.state, ReplicaState::Booting | ReplicaState::Running))
+            .count()
+    }
+
+    /// Total replica billing as of `now` (terminated replicas at their
+    /// final bills, live ones pro-rated).
+    pub fn total_cost(&self, now: f64) -> f64 {
+        self.retired_cost
+            + self
+                .replicas
+                .iter()
+                .map(|r| {
+                    self.cfg.vm_types[r.k]
+                        .price
+                        .cost_for((now - r.launched_at).max(0.0))
+                })
+                .sum::<f64>()
+    }
+
+    fn retire(&mut self, idx: usize, now: f64) {
+        let r = self.replicas.swap_remove(idx);
+        self.retired_cost += self.cfg.vm_types[r.k]
+            .price
+            .cost_for((now - r.launched_at).max(0.0));
+    }
+
+    /// Record one arrival for `model` without admitting it — demand-only
+    /// accounting for deployments where another tier serves the request
+    /// and this fleet only manages capacity (also what the cross-backend
+    /// equivalence tests use, since [`ClusterActuator`](super::ClusterActuator)
+    /// counts demand the same way).
+    pub fn note_arrival(&mut self, model: usize) {
+        self.arrivals[model] += 1;
+    }
+
+    /// Dry-run arrival: admit to a free slot (cheapest type first,
+    /// most-loaded replica first, mirroring the simulator's bin-packing)
+    /// or queue FIFO.
+    pub fn ingest(&mut self, model: usize, slo_ms: f64, now: f64) {
+        self.arrivals[model] += 1;
+        if !self.try_dispatch(model, slo_ms, now, now) {
+            self.queues[model].push_back(DryQueued { slo_ms, arrival: now });
+        }
+    }
+
+    fn try_dispatch(&mut self, model: usize, slo_ms: f64, arrival: f64,
+                    now: f64) -> bool {
+        for oi in 0..self.order[model].len() {
+            let k = self.order[model][oi];
+            let mut best: Option<usize> = None;
+            for (i, r) in self.replicas.iter().enumerate() {
+                if r.model == model && r.k == k && r.state == ReplicaState::Running
+                    && r.busy < r.slots
+                {
+                    best = match best {
+                        Some(j) if self.replicas[j].busy >= r.busy => Some(j),
+                        _ => Some(i),
+                    };
+                }
+            }
+            if let Some(i) = best {
+                let svc = self.caps[model][k].service_s;
+                self.replicas[i].busy += 1;
+                let id = self.replicas[i].id;
+                self.completions.schedule_at(now + svc, (id, model));
+                let wait_ms = (now - arrival) * 1000.0;
+                self.served += 1;
+                self.wait_ms_sum += wait_ms;
+                if wait_ms + svc * 1000.0 > slo_ms {
+                    self.violations += 1;
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Attached mode: a type's first running replica starts its real
+    /// serving pool (router → batcher → PJRT workers). Every pool's
+    /// internal router gets the FULL fleet palette, not just its own type:
+    /// palette only affects candidate costing, and sharing it keeps every
+    /// pool's model choice identical to the fleet-level router that gated
+    /// admission (no model disagreement between the capacity check and
+    /// the executing pool).
+    fn start_pools(&mut self, newly_running: Vec<usize>) {
+        if let Some(engine) = &self.engine {
+            for k in newly_running {
+                if self.pools[k].is_none() {
+                    let server_cfg = ServerConfig {
+                        vm_types: self.cfg.vm_types.clone(),
+                        ..self.cfg.server.clone()
+                    };
+                    self.pools[k] =
+                        Some(Server::start(engine.clone(), &self.reg, server_cfg));
+                }
+            }
+        }
+    }
+
+    /// Freed or newly-booted capacity absorbs queued work, FIFO per model,
+    /// timestamped at `t` (when the capacity became available). Heads
+    /// waiting past the queue timeout are dropped first and counted as
+    /// violations — the same bounded-queue rule the simulator applies.
+    fn dispatch_queued(&mut self, t: f64) {
+        for m in 0..self.queues.len() {
+            loop {
+                let head = match self.queues[m].front() {
+                    Some(h) => *h,
+                    None => break,
+                };
+                if t - head.arrival > self.cfg.queue_timeout_s {
+                    self.queues[m].pop_front();
+                    self.dropped += 1;
+                    self.violations += 1; // a drop is by definition a violation
+                    continue;
+                }
+                if self.try_dispatch(m, head.slo_ms, head.arrival, t) {
+                    self.queues[m].pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Live submission (attached mode): route the request, then forward it
+    /// to the cheapest pool holding running capacity for the routed model.
+    pub fn submit(&mut self, req: SubmitRequest)
+                  -> Result<mpsc::Receiver<LiveResponse>, SubmitError> {
+        let model = match &self.router {
+            Some(r) => r.route(req.slo_ms, req.min_accuracy),
+            None => return Err(SubmitError::NoCapacity),
+        };
+        self.arrivals[model] += 1;
+        for oi in 0..self.order[model].len() {
+            let k = self.order[model][oi];
+            let has_running = self.replicas.iter().any(|r| {
+                r.model == model && r.k == k && r.state == ReplicaState::Running
+            });
+            if !has_running {
+                continue;
+            }
+            if let Some(pool) = &self.pools[k] {
+                return pool.submit(req);
+            }
+        }
+        Err(SubmitError::NoCapacity)
+    }
+
+    /// Gracefully shut down any started pools, returning their stats.
+    pub fn shutdown_pools(&mut self) -> Vec<ServerStats> {
+        self.pools.iter_mut().filter_map(Option::take).map(Server::shutdown).collect()
+    }
+
+    /// End-of-run summary.
+    pub fn report(&self, now: f64) -> LiveReport {
+        LiveReport {
+            served: self.served,
+            violations: self.violations,
+            dropped: self.dropped,
+            queued: self.queues.iter().map(VecDeque::len).sum(),
+            cost_usd: self.total_cost(now),
+            mean_wait_ms: if self.served == 0 {
+                0.0
+            } else {
+                self.wait_ms_sum / self.served as f64
+            },
+            peak_replicas: self.peak_replicas,
+            spawned_by_type: self
+                .spawned_by_type
+                .iter()
+                .map(|(name, n)| (name.to_string(), *n))
+                .collect(),
+        }
+    }
+}
+
+impl FleetActuator for ServerFleet {
+    fn backend(&self) -> &'static str {
+        "server-fleet"
+    }
+
+    fn apply(&mut self, action: &Action, now: f64) {
+        self.clock = self.clock.max(now);
+        match *action {
+            Action::Spawn { model, vm_type, count } => {
+                let k = self.type_index(vm_type);
+                let room = self.cfg.instance_cap.saturating_sub(self.total_alive());
+                for _ in 0..count.min(room) {
+                    let boot = vm_type.boot_mean_s * self.cfg.boot_scale;
+                    self.replicas.push(Replica {
+                        id: self.next_id,
+                        model,
+                        k,
+                        state: ReplicaState::Booting,
+                        launched_at: now,
+                        ready_at: now + boot,
+                        slots: self.caps[model][k].slots_per_vm,
+                        busy: 0,
+                    });
+                    self.next_id += 1;
+                    *self.spawned_by_type.entry(vm_type.name).or_insert(0) += 1;
+                }
+                self.peak_replicas = self.peak_replicas.max(self.total_alive());
+            }
+            Action::Drain { model, vm_type, count } => {
+                let k = self.type_index(vm_type);
+                let mut left = count;
+                // Cancel provisioning replicas first (they serve nothing),
+                // then retire running ones, emptiest first; busy replicas
+                // drain gracefully.
+                while left > 0 {
+                    match self.replicas.iter().position(|r| {
+                        r.model == model && r.k == k && r.state == ReplicaState::Booting
+                    }) {
+                        Some(i) => {
+                            self.retire(i, now);
+                            left -= 1;
+                        }
+                        None => break,
+                    }
+                }
+                while left > 0 {
+                    let mut best: Option<usize> = None;
+                    for (i, r) in self.replicas.iter().enumerate() {
+                        if r.model == model && r.k == k
+                            && r.state == ReplicaState::Running
+                        {
+                            best = match best {
+                                Some(j) if self.replicas[j].busy <= r.busy => Some(j),
+                                _ => Some(i),
+                            };
+                        }
+                    }
+                    match best {
+                        Some(i) => {
+                            if self.replicas[i].busy == 0 {
+                                self.retire(i, now);
+                            } else {
+                                self.replicas[i].state = ReplicaState::Draining;
+                            }
+                            left -= 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+
+    fn advance(&mut self, now: f64) {
+        self.clock = self.clock.max(now);
+        // Replay capacity events (boot landings, dry-run completions) in
+        // time order up to `now`, dispatching queued work at each event's
+        // OWN time — a large time jump (end-of-run queue drain) therefore
+        // rotates every slot as many times as the elapsed interval allows,
+        // and recorded waits reflect when capacity actually freed, not the
+        // caller's observation time.
+        loop {
+            let boot_t = self
+                .replicas
+                .iter()
+                .filter(|r| r.state == ReplicaState::Booting && r.ready_at <= now)
+                .map(|r| r.ready_at)
+                .fold(f64::INFINITY, f64::min);
+            let done_t = match self.completions.next_time() {
+                Some(t) if t <= now => t,
+                _ => f64::INFINITY,
+            };
+            if boot_t.is_infinite() && done_t.is_infinite() {
+                break;
+            }
+            let t = boot_t.min(done_t);
+            if boot_t <= done_t {
+                // Boots landing at `t` come online on their type's pool.
+                let mut newly_running: Vec<usize> = Vec::new();
+                for r in &mut self.replicas {
+                    if r.state == ReplicaState::Booting && r.ready_at <= t {
+                        r.state = ReplicaState::Running;
+                        newly_running.push(r.k);
+                    }
+                }
+                self.start_pools(newly_running);
+            } else {
+                // One completion releases its slot; drained idle replicas
+                // retire at their completion time.
+                let (done_at, (id, _model)) = self.completions.pop_due(now).unwrap();
+                if let Some(i) = self.replicas.iter().position(|r| r.id == id) {
+                    self.replicas[i].busy = self.replicas[i].busy.saturating_sub(1);
+                    if self.replicas[i].state == ReplicaState::Draining
+                        && self.replicas[i].busy == 0
+                    {
+                        self.retire(i, done_at);
+                    }
+                }
+            }
+            self.dispatch_queued(t);
+            self.peak_replicas = self.peak_replicas.max(self.total_alive());
+        }
+        // Capacity can also free outside the event stream (a drain cancel,
+        // a fresh spawn script): one final dispatch pass at `now`.
+        self.dispatch_queued(now);
+        self.peak_replicas = self.peak_replicas.max(self.total_alive());
+    }
+
+    fn view(&self) -> FleetView {
+        let mut b = FleetViewBuilder::new();
+        for r in &self.replicas {
+            match r.state {
+                ReplicaState::Running => b.add(
+                    r.model,
+                    self.cfg.vm_types[r.k],
+                    VmPhase::Running,
+                    r.busy as f64 / r.slots.max(1) as f64,
+                ),
+                ReplicaState::Booting => {
+                    b.add(r.model, self.cfg.vm_types[r.k], VmPhase::Booting, 0.0)
+                }
+                ReplicaState::Draining => {}
+            }
+        }
+        b.build(self.clock)
+    }
+
+    fn demand(&mut self) -> DemandSnapshot {
+        let n = self.arrivals.len();
+        DemandSnapshot {
+            arrivals: std::mem::replace(&mut self.arrivals, vec![0; n]),
+            queued: self.queues.iter().map(VecDeque::len).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+
+    fn fleet2() -> ServerFleet {
+        let reg = Registry::builtin();
+        ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()],
+            ..ServerFleetConfig::default()
+        })
+    }
+
+    #[test]
+    fn replicas_boot_with_palette_latency_and_bill_per_type() {
+        let mut f = fleet2();
+        let m4 = vm_type("m4.large").unwrap();
+        f.apply(&Action::Spawn { model: 3, vm_type: m4, count: 2 }, 0.0);
+        assert_eq!(f.view().booting_typed(3, m4), 2);
+        f.advance(m4.boot_mean_s - 1.0);
+        assert_eq!(f.view().running_typed(3, m4), 0, "boot must take boot_mean_s");
+        f.advance(m4.boot_mean_s);
+        assert_eq!(f.view().running_typed(3, m4), 2);
+        // 2 replicas alive for one hour bill 2 m4.large-hours.
+        let c = f.total_cost(3600.0);
+        assert!((c - 2.0 * m4.price.hourly_usd).abs() < 1e-9, "cost {c}");
+    }
+
+    #[test]
+    fn dry_run_serves_queues_and_counts_violations() {
+        let mut f = fleet2();
+        let m4 = vm_type("m4.large").unwrap();
+        f.apply(&Action::Spawn { model: 3, vm_type: m4, count: 1 }, 0.0);
+        f.advance(200.0);
+        let slots = f.caps[3][0].slots_per_vm as usize;
+        // Fill every slot, then one more: it must queue.
+        for _ in 0..slots + 1 {
+            f.ingest(3, 10_000.0, 200.0);
+        }
+        assert_eq!(f.served, slots as u64);
+        assert_eq!(f.queues[3].len(), 1);
+        // After the service time, the queued request dispatches.
+        let svc = f.caps[3][0].service_s;
+        f.advance(200.0 + svc + 0.001);
+        assert_eq!(f.served, slots as u64 + 1);
+        assert_eq!(f.queues[3].len(), 0);
+        // A strict SLO tighter than the service time always violates.
+        f.ingest(3, 1.0, 300.0);
+        assert!(f.violations >= 1);
+    }
+
+    #[test]
+    fn drain_cancels_boots_then_retires_idle() {
+        let mut f = fleet2();
+        let c5 = vm_type("c5.large").unwrap();
+        f.apply(&Action::Spawn { model: 0, vm_type: c5, count: 3 }, 0.0);
+        f.advance(100.0); // all running (c5 boots in 60s)
+        f.apply(&Action::Spawn { model: 0, vm_type: c5, count: 1 }, 100.0);
+        // Drain 2: the booting replica cancels first, then one idle runner.
+        f.apply(&Action::Drain { model: 0, vm_type: c5, count: 2 }, 101.0);
+        let v = f.view();
+        assert_eq!(v.booting_typed(0, c5), 0);
+        assert_eq!(v.running_typed(0, c5), 2);
+    }
+
+    #[test]
+    fn quota_caps_spawns() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut f = ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: vec![m4],
+            instance_cap: 2,
+            ..ServerFleetConfig::default()
+        });
+        f.apply(&Action::Spawn { model: 0, vm_type: m4, count: 10 }, 0.0);
+        assert_eq!(f.total_alive(), 2);
+    }
+
+    #[test]
+    fn dry_fleet_rejects_live_submission() {
+        let mut f = fleet2();
+        let err = f.submit(SubmitRequest::new(vec![0.0; 4])).unwrap_err();
+        assert_eq!(err, SubmitError::NoCapacity);
+    }
+}

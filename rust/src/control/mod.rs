@@ -1,0 +1,502 @@
+//! The control plane: one typed contract between *deciders* (procurement
+//! schemes, RL policies) and *fleets* (the simulated cluster, the fluid RL
+//! fleet, the live server fleet).
+//!
+//! The paper's end-state is a self-managed serving system whose controller
+//! reconfigures real fleets, not just simulated ones. Everything that
+//! scales capacity in this repo already speaks one action vocabulary —
+//! [`Action::{Spawn, Drain}`](crate::scheduler::Action) over
+//! `(model, vm_type, count)` sub-fleets — so the seam between "decide" and
+//! "actuate" is small enough to be a trait:
+//!
+//! ```text
+//!   Scheme / EnvPolicy ──tick──► ControlLoop ──Action──► dyn FleetActuator
+//!        ▲                          │                        │
+//!        │        SchedObs / RL obs │                        │ FleetView +
+//!        └──────────────────────────┴────────────────────────┘ DemandSnapshot
+//! ```
+//!
+//! [`FleetActuator`] is implemented three times:
+//! - [`sim::ClusterActuator`] — the discrete-event [`Cluster`]
+//!   (per-VM lifecycle, sampled boot jitter, billing),
+//! - [`fluid::FluidFleet`] — the RL environment's per-second aggregate
+//!   fleet (deterministic boots on the [`SimCore`] heap),
+//! - [`live::ServerFleet`] — per-type live serving pools wrapping
+//!   [`Server`](crate::serving::Server), with palette-derived boot delays
+//!   and real per-type pricing.
+//!
+//! A policy written against the contract drives any backend unchanged;
+//! `rust/tests/control_plane.rs` proves the sim cluster and the live fleet
+//! produce identical [`FleetView`] transitions for the same action script.
+//!
+//! [`Cluster`]: crate::cloud::Cluster
+//! [`SimCore`]: crate::sim::core::SimCore
+
+pub mod fluid;
+pub mod live;
+pub mod sim;
+
+pub use fluid::FluidFleet;
+pub use live::{LiveReport, ServerFleet, ServerFleetConfig};
+pub use sim::{cluster_view, ClusterActuator};
+
+use crate::cloud::pricing::VmType;
+use crate::models::Registry;
+use crate::rl::baselines::EnvPolicy;
+use crate::rl::env::{decode_action, ObsLayout, ObsSignals};
+use crate::scheduler::{Action, LoadMonitor, ModelDemand, SchedObs, Scheme, TypeCap};
+use crate::util::stats::Ewma;
+use std::collections::BTreeMap;
+
+/// One `(model, vm_type)` sub-fleet in a [`FleetView`] snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubFleet {
+    pub model: usize,
+    pub vm_type: &'static VmType,
+    /// VMs/replicas serving requests.
+    pub running: usize,
+    /// VMs/replicas provisioning (billing, not serving).
+    pub booting: usize,
+    /// Σ busy/slots over the Running members (utilization numerator; the
+    /// per-member mean is what threshold autoscalers read).
+    pub util_sum: f64,
+}
+
+/// Point-in-time, backend-agnostic fleet snapshot: the only fleet state a
+/// scheme may observe. Sub-fleets are sorted by `(model, vm_type.name)`
+/// and empty sub-fleets are dropped, so two backends that hold the same
+/// capacity produce the same view.
+#[derive(Debug, Clone, Default)]
+pub struct FleetView {
+    pub now: f64,
+    subfleets: Vec<SubFleet>,
+}
+
+impl FleetView {
+    /// A view of an empty fleet (cold start / unit tests).
+    pub fn empty(now: f64) -> FleetView {
+        FleetView { now, subfleets: Vec::new() }
+    }
+
+    pub fn subfleets(&self) -> &[SubFleet] {
+        &self.subfleets
+    }
+
+    fn get(&self, model: usize, vm_type: &VmType) -> Option<&SubFleet> {
+        self.subfleets
+            .iter()
+            .find(|s| s.model == model && s.vm_type.name == vm_type.name)
+    }
+
+    /// Running members of the `(model, vm_type)` sub-fleet.
+    pub fn running_typed(&self, model: usize, vm_type: &VmType) -> usize {
+        self.get(model, vm_type).map_or(0, |s| s.running)
+    }
+
+    /// Booting members of the `(model, vm_type)` sub-fleet.
+    pub fn booting_typed(&self, model: usize, vm_type: &VmType) -> usize {
+        self.get(model, vm_type).map_or(0, |s| s.booting)
+    }
+
+    /// Alive (Running + Booting) members of the `(model, vm_type)` sub-fleet.
+    pub fn alive_typed(&self, model: usize, vm_type: &VmType) -> usize {
+        self.get(model, vm_type).map_or(0, |s| s.running + s.booting)
+    }
+
+    /// Running members across all types for `model`.
+    pub fn running(&self, model: usize) -> usize {
+        self.subfleets
+            .iter()
+            .filter(|s| s.model == model)
+            .map(|s| s.running)
+            .sum()
+    }
+
+    /// Alive (Running + Booting) members across all types for `model`.
+    pub fn alive(&self, model: usize) -> usize {
+        self.subfleets
+            .iter()
+            .filter(|s| s.model == model)
+            .map(|s| s.running + s.booting)
+            .sum()
+    }
+
+    /// Alive members across every model and type.
+    pub fn total_alive(&self) -> usize {
+        self.subfleets.iter().map(|s| s.running + s.booting).sum()
+    }
+
+    /// Mean utilization over `model`'s Running members — 1.0 when none are
+    /// running, so a fully missing fleet reads saturated and prompts
+    /// scale-up (mirrors [`Cluster::utilization`](crate::cloud::Cluster)).
+    pub fn utilization(&self, model: usize) -> f64 {
+        let (sum, n) = self
+            .subfleets
+            .iter()
+            .filter(|s| s.model == model)
+            .fold((0.0, 0usize), |(u, n), s| (u + s.util_sum, n + s.running));
+        if n == 0 {
+            1.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+/// Lifecycle phase a fleet member contributes to a [`FleetView`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmPhase {
+    Booting,
+    Running,
+}
+
+/// Accumulates per-member contributions into a normalized [`FleetView`]
+/// (the one way every backend builds its snapshot, so views are directly
+/// comparable across backends).
+pub struct FleetViewBuilder {
+    map: BTreeMap<(usize, &'static str), SubFleet>,
+}
+
+impl Default for FleetViewBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FleetViewBuilder {
+    pub fn new() -> FleetViewBuilder {
+        FleetViewBuilder { map: BTreeMap::new() }
+    }
+
+    /// Record one alive fleet member. `utilization` is busy/slots and is
+    /// only meaningful for Running members (pass 0.0 for Booting).
+    pub fn add(&mut self, model: usize, vm_type: &'static VmType, phase: VmPhase,
+               utilization: f64) {
+        let s = self.map.entry((model, vm_type.name)).or_insert(SubFleet {
+            model,
+            vm_type,
+            running: 0,
+            booting: 0,
+            util_sum: 0.0,
+        });
+        match phase {
+            VmPhase::Running => {
+                s.running += 1;
+                s.util_sum += utilization;
+            }
+            VmPhase::Booting => s.booting += 1,
+        }
+    }
+
+    pub fn build(self, now: f64) -> FleetView {
+        FleetView { now, subfleets: self.map.into_values().collect() }
+    }
+}
+
+/// Per-model demand counters an actuator reports each control tick:
+/// arrivals since the last snapshot and currently queued requests, both
+/// indexed by model (missing entries read as zero).
+#[derive(Debug, Clone, Default)]
+pub struct DemandSnapshot {
+    pub arrivals: Vec<u64>,
+    pub queued: Vec<usize>,
+}
+
+/// A fleet that typed [`Action`]s can reconfigure — the actuator half of
+/// the control plane. Backends differ in *what* a fleet member is (a
+/// simulated VM, a fluid aggregate, a live serving replica); the contract
+/// is identical: actions land on `(model, vm_type)` sub-fleets, `advance`
+/// moves the backend's clock (boots complete, queued work dispatches), and
+/// `view`/`demand` report state back to the deciders.
+pub trait FleetActuator {
+    /// Short backend name for logs/reports ("sim-cluster", "server-fleet").
+    fn backend(&self) -> &'static str;
+
+    /// Apply one typed scaling action at time `now`. Implementations
+    /// enforce their own capacity quota; spawns beyond it are capped.
+    fn apply(&mut self, action: &Action, now: f64);
+
+    /// Advance the backend to `now`: complete due boots, dispatch queued
+    /// work, settle lifecycle transitions.
+    fn advance(&mut self, now: f64);
+
+    /// Snapshot the per-`(model, vm_type)` fleet state.
+    fn view(&self) -> FleetView;
+
+    /// Drain demand counters accumulated since the last call. Backends
+    /// that do not track demand (the fluid fleet) report nothing.
+    fn demand(&mut self) -> DemandSnapshot {
+        DemandSnapshot::default()
+    }
+}
+
+/// Per-`(model, palette entry)` capacity table — the one way every
+/// control-plane consumer derives service times and slots from a palette.
+pub fn palette_caps(reg: &Registry, palette: &[&'static VmType]) -> Vec<Vec<TypeCap>> {
+    reg.models
+        .iter()
+        .map(|m| {
+            palette
+                .iter()
+                .map(|&t| TypeCap {
+                    vm_type: t,
+                    service_s: m.service_time_s(t),
+                    slots_per_vm: m.slots_on(t),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Outcome of one scheme tick: the actions applied and the demand
+/// observation they were decided on (callers reuse `demands` for, e.g.,
+/// needed-slot accounting).
+pub struct TickResult {
+    pub actions: Vec<Action>,
+    pub demands: Vec<ModelDemand>,
+}
+
+/// Ticks any decider against any [`FleetActuator`] at 1 Hz: pulls the
+/// actuator's demand snapshot, maintains the shared rate monitor/EWMAs,
+/// assembles the observation (a [`SchedObs`] for schemes, the RL
+/// observation layout for env policies), and applies the resulting typed
+/// actions back to the actuator.
+pub struct ControlLoop {
+    palette: Vec<&'static VmType>,
+    caps: Vec<Vec<TypeCap>>,
+    monitor: LoadMonitor,
+    rates: Vec<Ewma>,
+}
+
+impl ControlLoop {
+    pub fn new(reg: &Registry, palette: Vec<&'static VmType>) -> ControlLoop {
+        assert!(!palette.is_empty(), "empty vm-type palette");
+        let caps = palette_caps(reg, &palette);
+        let rates = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
+        ControlLoop { palette, caps, monitor: LoadMonitor::new(), rates }
+    }
+
+    /// Per-model capacity axes over the palette (palette order).
+    pub fn caps(&self) -> &[Vec<TypeCap>] {
+        &self.caps
+    }
+
+    pub fn palette(&self) -> &[&'static VmType] {
+        &self.palette
+    }
+
+    pub fn monitor(&self) -> &LoadMonitor {
+        &self.monitor
+    }
+
+    /// Replay the snapshot's arrivals into the monitor and roll its
+    /// 1-second bucket (batch replay at tick time is state-identical to
+    /// incremental per-arrival calls).
+    fn absorb(&mut self, snap: &DemandSnapshot) {
+        self.monitor.on_arrivals(snap.arrivals.iter().sum());
+        self.monitor.tick();
+    }
+
+    /// One 1 Hz control tick of a procurement [`Scheme`]: demand →
+    /// [`SchedObs`] (with the actuator's [`FleetView`]) → typed actions →
+    /// `actuator.apply`. The caller advances the actuator's clock
+    /// (backends tie `advance` to their own event loops).
+    pub fn tick_scheme(&mut self, scheme: &mut dyn Scheme,
+                       actuator: &mut dyn FleetActuator, now: f64) -> TickResult {
+        let snap = actuator.demand();
+        self.absorb(&snap);
+        let mut demands = Vec::with_capacity(self.caps.len());
+        for (m, caps) in self.caps.iter().enumerate() {
+            let arrived = snap.arrivals.get(m).copied().unwrap_or(0) as f64;
+            let rate = self.rates[m].push(arrived);
+            demands.push(ModelDemand {
+                model: m,
+                rate,
+                service_s: caps[0].service_s,
+                slots_per_vm: caps[0].slots_per_vm,
+                queued: snap.queued.get(m).copied().unwrap_or(0),
+                types: caps.clone(),
+            });
+        }
+        let view = actuator.view();
+        let actions = {
+            let obs = SchedObs {
+                now,
+                monitor: &self.monitor,
+                demands: &demands,
+                fleet: &view,
+                vm_types: &self.palette,
+            };
+            scheme.tick(&obs)
+        };
+        for a in &actions {
+            actuator.apply(a, now);
+        }
+        TickResult { actions, demands }
+    }
+
+    /// One 1 Hz control tick of an RL-environment policy over `model`'s
+    /// fleet: renders the actuator's state in the exact observation layout
+    /// of [`crate::rl::env`] (via the shared [`ObsLayout`]), so PPO
+    /// artifacts and the heuristic baselines drive a live fleet unchanged.
+    /// Advances the actuator to `now` first (boots land before the policy
+    /// observes), then applies the decoded scaling delta (~5% of the
+    /// running fleet, min 1 — the env's step size). Returns the action id.
+    ///
+    /// Known fidelity gap: actuators have no serverless valve yet, so the
+    /// action's *offload* component is decoded but not actuated, and the
+    /// observation's lambda/violation shares render as 0.0 (the fleets
+    /// report neither). Policies keyed on the scaling dimensions transfer
+    /// exactly; offload-heavy policies see their valve as a no-op on live
+    /// backends (tracked in ROADMAP).
+    pub fn tick_policy(&mut self, policy: &mut dyn EnvPolicy, layout: &ObsLayout,
+                       model: usize, actuator: &mut dyn FleetActuator,
+                       now: f64) -> usize {
+        // Advance first: boots land and freed capacity absorbs queued work
+        // BEFORE the observation is taken, so the queue feature matches the
+        // env's post-serve queue semantics (advance never touches arrival
+        // counters, so the demand snapshot is unaffected by the order).
+        actuator.advance(now);
+        let snap = actuator.demand();
+        // Parity with [`ServeEnv`](crate::rl::env::ServeEnv): the env's
+        // monitor counts only the driven model's arrivals, so the live
+        // rate signals must too. (The per-model rate EWMAs stay a
+        // tick_scheme concern.)
+        self.monitor
+            .on_arrivals(snap.arrivals.get(model).copied().unwrap_or(0));
+        self.monitor.tick();
+        let view = actuator.view();
+        let n = layout.caps.len();
+        let mut running = vec![0u32; n];
+        let mut booting = vec![0u32; n];
+        for (k, c) in layout.caps.iter().enumerate() {
+            running[k] = view.running_typed(model, c.vm_type) as u32;
+            booting[k] = view.booting_typed(model, c.vm_type) as u32;
+        }
+        let signals = ObsSignals {
+            t_s: now,
+            rate_now: snap.arrivals.get(model).copied().unwrap_or(0) as f64,
+            rate_ewma: self.monitor.rate_ewma(),
+            rate_pred: self.monitor.rate_pred(layout.caps[0].vm_type.boot_mean_s / 2.0),
+            peak_to_median: self.monitor.peak_to_median(),
+            queue: snap.queued.get(model).copied().unwrap_or(0) as f64,
+            lambda_share: 0.0,
+            viol_share: 0.0,
+            strict_share: 0.5,
+        };
+        let obs = layout.render(&signals, &running, &booting);
+        let a = policy.act(&obs);
+        let (k, delta, _offload) = decode_action(a, n);
+        let total: u32 = running.iter().sum();
+        let step = ((total as f64 * 0.05).ceil() as usize).max(1);
+        if delta > 0 {
+            actuator.apply(
+                &Action::Spawn { model, vm_type: layout.caps[k].vm_type, count: step },
+                now,
+            );
+        } else if delta < 0 {
+            actuator.apply(
+                &Action::Drain { model, vm_type: layout.caps[k].vm_type, count: step },
+                now,
+            );
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::default_vm_type;
+    use crate::scheduler;
+
+    /// Mock backend: records applied actions, reports a scripted view.
+    struct MockActuator {
+        applied: Vec<(f64, Action)>,
+        arrivals: Vec<u64>,
+        view: FleetView,
+    }
+
+    impl FleetActuator for MockActuator {
+        fn backend(&self) -> &'static str {
+            "mock"
+        }
+        fn apply(&mut self, action: &Action, now: f64) {
+            self.applied.push((now, action.clone()));
+        }
+        fn advance(&mut self, _now: f64) {}
+        fn view(&self) -> FleetView {
+            self.view.clone()
+        }
+        fn demand(&mut self) -> DemandSnapshot {
+            DemandSnapshot {
+                arrivals: std::mem::take(&mut self.arrivals),
+                queued: Vec::new(),
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_actions_route_through_the_actuator() {
+        let reg = Registry::builtin();
+        let n = reg.len();
+        let mut cl = ControlLoop::new(&reg, vec![default_vm_type()]);
+        let mut scheme = scheduler::by_name("reactive").unwrap();
+        let mut mock = MockActuator {
+            applied: Vec::new(),
+            arrivals: vec![40; n], // steady 40 q/s on every model
+            view: FleetView::empty(0.0),
+        };
+        // Warm the EWMAs so the scheme sees a real rate.
+        for t in 0..30 {
+            mock.arrivals = vec![40; n];
+            cl.tick_scheme(scheme.as_mut(), &mut mock, t as f64);
+        }
+        // An empty fleet under demand must have produced spawns, and every
+        // action must have reached the actuator verbatim.
+        let spawns = mock
+            .applied
+            .iter()
+            .filter(|(_, a)| matches!(a, Action::Spawn { .. }))
+            .count();
+        assert!(spawns > 0, "no spawns applied: {:?}", mock.applied.len());
+        assert!(
+            mock.applied.iter().all(|(_, a)| match a {
+                Action::Spawn { vm_type, .. } | Action::Drain { vm_type, .. } =>
+                    vm_type.name == default_vm_type().name,
+            }),
+            "single-type palette must only act on the primary type"
+        );
+    }
+
+    #[test]
+    fn view_queries_aggregate_subfleets() {
+        use crate::cloud::pricing::vm_type;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let mut b = FleetViewBuilder::new();
+        b.add(0, m4, VmPhase::Running, 0.5);
+        b.add(0, m4, VmPhase::Running, 1.0);
+        b.add(0, m4, VmPhase::Booting, 0.0);
+        b.add(0, c5, VmPhase::Running, 0.0);
+        b.add(1, c5, VmPhase::Booting, 0.0);
+        let v = b.build(10.0);
+        assert_eq!(v.running_typed(0, m4), 2);
+        assert_eq!(v.booting_typed(0, m4), 1);
+        assert_eq!(v.alive_typed(0, m4), 3);
+        assert_eq!(v.alive(0), 4);
+        assert_eq!(v.running(0), 3);
+        assert_eq!(v.total_alive(), 5);
+        // Mean over model 0's three running members: (0.5 + 1.0 + 0.0) / 3.
+        assert!((v.utilization(0) - 0.5).abs() < 1e-12);
+        assert_eq!(v.utilization(1), 1.0, "no running members reads saturated");
+        assert_eq!(v.alive_typed(1, m4), 0);
+    }
+
+    #[test]
+    fn empty_view_reads_cold() {
+        let v = FleetView::empty(0.0);
+        assert_eq!(v.total_alive(), 0);
+        assert_eq!(v.utilization(0), 1.0);
+    }
+}

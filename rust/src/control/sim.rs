@@ -1,0 +1,180 @@
+//! [`FleetActuator`] over the discrete-event [`Cluster`]: the simulation
+//! backend of the control plane.
+//!
+//! The actuator owns the cluster plus the palette capacity table and the
+//! account-level instance quota, so "apply a typed action" is the *only*
+//! scaling entry point — the request-level simulator
+//! ([`crate::sim::engine`]) no longer carries bespoke spawn/drain plumbing.
+
+use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
+use crate::cloud::pricing::VmType;
+use crate::cloud::{Cluster, VmState};
+use crate::models::Registry;
+use crate::scheduler::{Action, TypeCap};
+
+/// Build a [`FleetView`] snapshot of any cluster (scheme unit tests build
+/// observations straight from a hand-assembled [`Cluster`]).
+pub fn cluster_view(cluster: &Cluster, now: f64) -> FleetView {
+    let mut b = FleetViewBuilder::new();
+    for vm in &cluster.vms {
+        match vm.state {
+            VmState::Running => b.add(vm.model, vm.vm_type, VmPhase::Running,
+                                      vm.utilization()),
+            VmState::Booting => b.add(vm.model, vm.vm_type, VmPhase::Booting, 0.0),
+            VmState::Draining | VmState::Terminated => {}
+        }
+    }
+    b.build(now)
+}
+
+/// The simulated-cluster backend: typed actions land as VM spawns (slots
+/// from the palette capacity table, boots sampled per type) and typed
+/// drains, capped by the account instance quota.
+pub struct ClusterActuator {
+    pub cluster: Cluster,
+    palette: Vec<&'static VmType>,
+    caps: Vec<Vec<TypeCap>>,
+    instance_cap: usize,
+    /// Per-model arrivals since the last [`FleetActuator::demand`] call
+    /// (fed by the embedding event loop via [`Self::note_arrival`]).
+    arrivals: Vec<u64>,
+    /// Per-model queue depths (set by the embedding event loop, which owns
+    /// the actual request queues).
+    queued: Vec<usize>,
+    /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
+    clock: f64,
+}
+
+impl ClusterActuator {
+    pub fn new(reg: &Registry, palette: Vec<&'static VmType>, instance_cap: usize,
+               seed: u64) -> ClusterActuator {
+        assert!(!palette.is_empty(), "empty vm-type palette");
+        let caps = super::palette_caps(reg, &palette);
+        let n = reg.len();
+        ClusterActuator {
+            cluster: Cluster::new(seed),
+            palette,
+            caps,
+            instance_cap,
+            arrivals: vec![0; n],
+            queued: vec![0; n],
+            clock: 0.0,
+        }
+    }
+
+    /// Record one request arrival for `model` (drained by `demand`).
+    pub fn note_arrival(&mut self, model: usize) {
+        self.arrivals[model] += 1;
+    }
+
+    /// Report the embedding loop's current per-model queue depths.
+    pub fn set_queued(&mut self, queued: impl Iterator<Item = usize>) {
+        for (slot, q) in self.queued.iter_mut().zip(queued) {
+            *slot = q;
+        }
+    }
+
+    fn type_index(&self, vm_type: &VmType) -> usize {
+        self.palette
+            .iter()
+            .position(|t| t.name == vm_type.name)
+            .expect("action targets a type outside the palette")
+    }
+}
+
+impl FleetActuator for ClusterActuator {
+    fn backend(&self) -> &'static str {
+        "sim-cluster"
+    }
+
+    fn apply(&mut self, action: &Action, now: f64) {
+        self.clock = self.clock.max(now);
+        match *action {
+            Action::Spawn { model, vm_type, count } => {
+                // Account-level instance quota (EC2 service quotas): also a
+                // backstop against scheme feedback loops.
+                let room = self
+                    .instance_cap
+                    .saturating_sub(self.cluster.total_alive());
+                let slots = self.caps[model][self.type_index(vm_type)].slots_per_vm;
+                for _ in 0..count.min(room) {
+                    self.cluster.spawn(vm_type, model, slots, now);
+                }
+            }
+            Action::Drain { model, vm_type, count } => {
+                self.cluster.scale_down_typed(model, vm_type, count, now);
+            }
+        }
+    }
+
+    /// Advance VM lifecycle (boots complete, drains settle) WITHOUT
+    /// integrating the cluster's per-interval efficiency metrics
+    /// (boot_seconds, provisioned/excess slot-seconds): those require the
+    /// real elapsed-dt and needed-slots series, which only the embedding
+    /// event loop knows — [`crate::sim::engine`] calls `cluster.tick`
+    /// itself at 1 Hz with both. Standalone control loops get correct
+    /// state and zeroed (not wrong) efficiency metrics.
+    fn advance(&mut self, now: f64) {
+        self.cluster.tick(now, 0.0, 0.0);
+        self.clock = self.clock.max(now);
+    }
+
+    fn view(&self) -> FleetView {
+        cluster_view(&self.cluster, self.clock)
+    }
+
+    fn demand(&mut self) -> DemandSnapshot {
+        let n = self.arrivals.len();
+        let arrivals = std::mem::replace(&mut self.arrivals, vec![0; n]);
+        DemandSnapshot { arrivals, queued: self.queued.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::{default_vm_type, vm_type};
+
+    #[test]
+    fn spawn_respects_quota_and_slots() {
+        let reg = Registry::builtin();
+        let mut a = ClusterActuator::new(&reg, vec![default_vm_type()], 3, 1);
+        a.apply(&Action::Spawn { model: 0, vm_type: default_vm_type(), count: 5 }, 0.0);
+        assert_eq!(a.cluster.total_alive(), 3, "quota must cap the spawn");
+        let slots = reg.models[0].slots_on(default_vm_type());
+        assert!(a.cluster.vms.iter().all(|v| v.slots == slots));
+    }
+
+    #[test]
+    fn view_tracks_boot_transitions() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut a = ClusterActuator::new(&reg, vec![m4], 100, 2);
+        a.apply(&Action::Spawn { model: 0, vm_type: m4, count: 2 }, 0.0);
+        let v = a.view();
+        assert_eq!(v.booting_typed(0, m4), 2);
+        assert_eq!(v.running_typed(0, m4), 0);
+        a.advance(500.0); // beyond max boot jitter
+        let v = a.view();
+        assert_eq!(v.running_typed(0, m4), 2);
+        assert_eq!(v.booting_typed(0, m4), 0);
+        a.apply(&Action::Drain { model: 0, vm_type: m4, count: 2 }, 501.0);
+        a.advance(502.0);
+        assert_eq!(a.view().alive_typed(0, m4), 0);
+    }
+
+    #[test]
+    fn demand_drains_counters() {
+        let reg = Registry::builtin();
+        let mut a = ClusterActuator::new(&reg, vec![default_vm_type()], 10, 3);
+        a.note_arrival(0);
+        a.note_arrival(0);
+        a.note_arrival(2);
+        a.set_queued([7usize, 0, 1].into_iter());
+        let d = a.demand();
+        assert_eq!(d.arrivals[0], 2);
+        assert_eq!(d.arrivals[2], 1);
+        assert_eq!(d.queued[0], 7);
+        assert_eq!(a.demand().arrivals.iter().sum::<u64>(), 0, "drained");
+    }
+}

@@ -7,7 +7,9 @@
 //!
 //! Layer map (three-layer rust+JAX+Pallas stack, AOT via PJRT):
 //! - L3 (this crate): coordinator — routing, batching, the five
-//!   procurement schemes, cloud cost simulator, PPO driver, figures.
+//!   procurement schemes, cloud cost simulator, PPO driver, figures, and
+//!   the control plane ([`control`]) that lets one policy drive the
+//!   simulated cluster and the live server fleet alike.
 //! - L2/L1 (python/compile): JAX model pool + PPO graphs over Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt`.
 
@@ -23,6 +25,7 @@
 
 pub mod cloud;
 pub mod config;
+pub mod control;
 pub mod figures;
 pub mod models;
 pub mod runtime;

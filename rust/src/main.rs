@@ -90,6 +90,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
         figures::save(&out, "fig_rl_het",
                       &figures::fig_rl_het(&reg, &artifacts_dir(args), iters, &cfg))?;
     }
+    if want("live") {
+        figures::save(&out, "fig_live", &figures::fig_live(&reg, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -203,7 +206,7 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het  --out results
+  figures     --fig all|2..10|het|rl_het|live  --out results
               [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints]
               [--selection random|naive|paragon] [--trace-file F.csv]

@@ -57,9 +57,9 @@
 
 use crate::cloud::pricing::VmType;
 use crate::cloud::serverless::LambdaFn;
+use crate::control::{FleetActuator, FluidFleet};
 use crate::models::Registry;
 use crate::scheduler::{Action, LoadMonitor, OffloadPolicy, TypeCap};
-use crate::sim::core::SimCore;
 use crate::trace::Trace;
 use crate::util::rng::Pcg;
 
@@ -110,6 +110,107 @@ pub fn encode_action(vm_type_index: usize, delta: i32, offload: usize) -> usize 
     vm_type_index * ACTIONS_PER_TYPE + ((delta + 1) as usize) * 3 + offload
 }
 
+/// Normalizers and static palette facts needed to render one observation
+/// in this module's layout. Owned by [`ServeEnv`], and constructible
+/// standalone so the live control loop
+/// ([`ControlLoop::tick_policy`](crate::control::ControlLoop::tick_policy))
+/// renders the *identical* layout over a real fleet — PPO artifacts and
+/// the heuristic baselines transfer unchanged.
+#[derive(Debug, Clone)]
+pub struct ObsLayout {
+    /// Per-type capacities of the driven model, palette order.
+    pub caps: Vec<TypeCap>,
+    pub rate_scale: f64,
+    pub fleet_scale: f64,
+    /// Palette-max slots / slot-second price (observation normalizers).
+    pub max_slots: f64,
+    pub max_slot_price: f64,
+    /// Episode length for the time-of-day encoding, seconds.
+    pub horizon_s: f64,
+}
+
+/// Dynamic signals rendered into the base observation block (the
+/// palette-independent features documented in the module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct ObsSignals {
+    pub t_s: f64,
+    pub rate_now: f64,
+    pub rate_ewma: f64,
+    pub rate_pred: f64,
+    pub peak_to_median: f64,
+    pub queue: f64,
+    pub lambda_share: f64,
+    pub viol_share: f64,
+    pub strict_share: f64,
+}
+
+impl ObsLayout {
+    /// Normalizers derived from the workload's mean rate, exactly as the
+    /// environment derives them (so sim-trained policies see the same
+    /// scales on a live fleet driven at the same mean rate).
+    pub fn new(caps: Vec<TypeCap>, mean_rate: f64, horizon_s: f64) -> ObsLayout {
+        assert!(!caps.is_empty(), "empty vm-type palette");
+        let fleet_scale =
+            (mean_rate * caps[0].service_s / caps[0].slots_per_vm as f64).max(1.0) * 2.0;
+        let max_slots = caps.iter().map(|c| c.slots_per_vm).max().unwrap() as f64;
+        let max_slot_price = caps
+            .iter()
+            .map(|c| c.cost_per_slot_second())
+            .fold(f64::MIN, f64::max);
+        ObsLayout {
+            caps,
+            rate_scale: (mean_rate * 2.0).max(1.0),
+            fleet_scale,
+            max_slots,
+            max_slot_price,
+            horizon_s: horizon_s.max(1.0),
+        }
+    }
+
+    /// Observation dimensionality of this layout.
+    pub fn obs_dim(&self) -> usize {
+        obs_dim(self.caps.len())
+    }
+
+    /// Render one observation: the 13-float base block from `signals`,
+    /// then one 5-float block per palette entry from the sub-fleet counts.
+    pub fn render(&self, s: &ObsSignals, running: &[u32], booting: &[u32]) -> Vec<f32> {
+        debug_assert_eq!(running.len(), self.caps.len());
+        debug_assert_eq!(booting.len(), self.caps.len());
+        let cap: f64 = running
+            .iter()
+            .zip(&self.caps)
+            .map(|(&r, c)| r as f64 * c.slots_per_vm as f64 / c.service_s)
+            .sum();
+        let util = if cap > 0.0 { (s.rate_now / cap).min(1.5) } else { 1.5 };
+        let free = (cap - s.rate_now).max(0.0);
+        let tod = 2.0 * std::f64::consts::PI * s.t_s / self.horizon_s;
+        let mut obs = Vec::with_capacity(self.obs_dim());
+        obs.push((s.rate_now / self.rate_scale) as f32);
+        obs.push((s.rate_ewma / self.rate_scale) as f32);
+        obs.push((s.rate_pred / self.rate_scale) as f32);
+        obs.push((s.peak_to_median / 4.0) as f32);
+        obs.push(util as f32);
+        obs.push((free / (self.fleet_scale * self.max_slots)) as f32);
+        obs.push((s.queue / 100.0).min(2.0) as f32);
+        obs.push(s.lambda_share as f32);
+        obs.push(s.viol_share.min(2.0) as f32);
+        obs.push(s.strict_share as f32);
+        obs.push(tod.sin() as f32);
+        obs.push(tod.cos() as f32);
+        obs.push(1.0);
+        for (k, c) in self.caps.iter().enumerate() {
+            obs.push((running[k] as f64 / self.fleet_scale) as f32);
+            obs.push((booting[k] as f64 / self.fleet_scale) as f32);
+            obs.push((c.vm_type.boot_mean_s / 120.0) as f32);
+            obs.push((c.cost_per_slot_second() / self.max_slot_price) as f32);
+            obs.push((c.slots_per_vm as f64 / self.max_slots) as f32);
+        }
+        debug_assert_eq!(obs.len(), self.obs_dim());
+        obs
+    }
+}
+
 /// Fluid-flow serving environment over one trace and one instance palette.
 pub struct ServeEnv {
     trace: Trace,
@@ -118,25 +219,18 @@ pub struct ServeEnv {
     /// Instance-type palette (head entry is the primary type: warm starts
     /// land on it, mirroring the request-level simulator).
     palette: Vec<&'static VmType>,
-    /// Per-type capacity axis of the active model, palette order.
-    caps: Vec<TypeCap>,
+    /// Capacities + observation normalizers, shared verbatim with the live
+    /// control loop (see [`ObsLayout`]).
+    layout: ObsLayout,
     lambda: LambdaFn,
     strict_share: f64,
-    rate_scale: f64,
-    fleet_scale: f64,
-    /// Palette-max slots / slot-second price (observation normalizers).
-    max_slots: f64,
-    max_slot_price: f64,
 
     // dynamic state
     t: usize,
-    /// Running VMs per palette entry.
-    running: Vec<u32>,
-    /// In-flight boots per palette entry (mirror of the `boots` heap).
-    booting: Vec<u32>,
-    /// In-flight VM boots as events on the shared SimCore engine; the
-    /// payload is the palette index the capacity lands on.
-    boots: SimCore<usize>,
+    /// The fleet behind the control-plane contract: running/booting counts
+    /// per palette entry with deterministic typed boots
+    /// ([`crate::control::FluidFleet`]).
+    fleet: FluidFleet,
     queue_strict: f64,
     queue_relaxed: f64,
     monitor: LoadMonitor,
@@ -182,29 +276,18 @@ impl ServeEnv {
         let mean = trace.mean_rate();
         // Lambda sized for a sub-second strict SLO, else max memory.
         let lambda = m.lambda_for_slo(1000.0).unwrap_or_else(|| m.lambda_at(3.0));
-        let fleet_scale =
-            (mean * caps[0].service_s / caps[0].slots_per_vm as f64).max(1.0) * 2.0;
-        let max_slots = caps.iter().map(|c| c.slots_per_vm).max().unwrap() as f64;
-        let max_slot_price = caps
-            .iter()
-            .map(|c| c.cost_per_slot_second())
-            .fold(f64::MIN, f64::max);
-        let n = palette.len();
+        let horizon_s = trace.duration_s().max(1) as f64;
+        let layout = ObsLayout::new(caps, mean, horizon_s);
+        let fleet = FluidFleet::new(model_idx, palette.clone());
         ServeEnv {
             trace,
             model: model_idx,
             palette,
-            caps,
+            layout,
             lambda,
             strict_share: 0.5,
-            rate_scale: (mean * 2.0).max(1.0),
-            fleet_scale,
-            max_slots,
-            max_slot_price,
             t: 0,
-            running: vec![0; n],
-            booting: vec![0; n],
-            boots: SimCore::new(),
+            fleet,
             queue_strict: 0.0,
             queue_relaxed: 0.0,
             monitor: LoadMonitor::new(),
@@ -238,7 +321,13 @@ impl ServeEnv {
 
     /// Per-type capacities of the active model, palette order.
     pub fn type_caps(&self) -> &[TypeCap] {
-        &self.caps
+        &self.layout.caps
+    }
+
+    /// Observation normalizers + palette facts, shareable with the live
+    /// control loop so both render the identical layout.
+    pub fn obs_layout(&self) -> &ObsLayout {
+        &self.layout
     }
 
     /// The instance-type palette, palette order.
@@ -248,23 +337,20 @@ impl ServeEnv {
 
     /// Running VMs in palette entry `k`'s sub-fleet.
     pub fn running_typed(&self, k: usize) -> u32 {
-        self.running[k]
+        self.fleet.running()[k]
     }
 
     /// In-flight boots in palette entry `k`'s sub-fleet.
     pub fn booting_typed(&self, k: usize) -> u32 {
-        self.booting[k]
-    }
-
-    fn total_running(&self) -> u32 {
-        self.running.iter().sum()
+        self.fleet.booting()[k]
     }
 
     /// Aggregate fluid service capacity, requests/second.
     fn capacity(&self) -> f64 {
-        self.running
+        self.fleet
+            .running()
             .iter()
-            .zip(&self.caps)
+            .zip(&self.layout.caps)
             .map(|(&r, c)| r as f64 * c.slots_per_vm as f64 / c.service_s)
             .sum()
     }
@@ -274,13 +360,14 @@ impl ServeEnv {
     pub fn reset(&mut self) -> Vec<f32> {
         self.t = 0;
         let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
-        self.running.fill(0);
-        self.running[0] = ((rate0 * self.caps[0].service_s
-            / self.caps[0].slots_per_vm as f64)
-            .ceil() as u32)
-            .max(1);
-        self.booting.fill(0);
-        self.boots = SimCore::new();
+        self.fleet = FluidFleet::new(self.model, self.palette.clone());
+        self.fleet.force_running(
+            0,
+            ((rate0 * self.layout.caps[0].service_s
+                / self.layout.caps[0].slots_per_vm as f64)
+                .ceil() as u32)
+                .max(1),
+        );
         self.queue_strict = 0.0;
         self.queue_relaxed = 0.0;
         self.monitor = LoadMonitor::new();
@@ -293,103 +380,53 @@ impl ServeEnv {
     }
 
     fn observe(&self, rate_now: f64) -> Vec<f32> {
-        let cap = self.capacity();
-        let util = if cap > 0.0 { (rate_now / cap).min(1.5) } else { 1.5 };
-        let free = (cap - rate_now).max(0.0);
-        let tod = 2.0 * std::f64::consts::PI * self.t as f64
-            / self.trace.duration_s().max(1) as f64;
-        let queue = self.queue_strict + self.queue_relaxed;
         // Forecast half a primary boot ahead (the env's planning horizon).
         let horizon = self.palette[0].boot_mean_s / 2.0;
-        let mut obs = Vec::with_capacity(self.obs_dim());
-        obs.push((rate_now / self.rate_scale) as f32);
-        obs.push((self.monitor.rate_ewma() / self.rate_scale) as f32);
-        obs.push((self.monitor.rate_pred(horizon) / self.rate_scale) as f32);
-        obs.push((self.monitor.peak_to_median() / 4.0) as f32);
-        obs.push(util as f32);
-        obs.push((free / (self.fleet_scale * self.max_slots)) as f32);
-        obs.push((queue / 100.0).min(2.0) as f32);
-        obs.push(self.recent_lambda as f32);
-        obs.push(self.recent_viol.min(2.0) as f32);
-        obs.push(self.strict_share as f32);
-        obs.push(tod.sin() as f32);
-        obs.push(tod.cos() as f32);
-        obs.push(1.0);
-        for (k, c) in self.caps.iter().enumerate() {
-            obs.push((self.running[k] as f64 / self.fleet_scale) as f32);
-            obs.push((self.booting[k] as f64 / self.fleet_scale) as f32);
-            obs.push((c.vm_type.boot_mean_s / 120.0) as f32);
-            obs.push((c.cost_per_slot_second() / self.max_slot_price) as f32);
-            obs.push((c.slots_per_vm as f64 / self.max_slots) as f32);
-        }
-        debug_assert_eq!(obs.len(), self.obs_dim());
-        obs
-    }
-
-    /// Palette index of a typed action's target.
-    fn type_index(&self, vm_type: &VmType) -> usize {
-        self.palette
-            .iter()
-            .position(|t| t.name == vm_type.name)
-            .expect("action targets a type outside the palette")
-    }
-
-    /// Apply one typed scaling action to the fluid fleet — the same
-    /// [`Action`] vocabulary the schedulers emit to the request-level
-    /// simulator. Spawns book boot events at the target type's mean boot
-    /// latency; drains cancel that type's newest boots first, then retire
-    /// running VMs (never below one running VM fleet-wide).
-    fn apply(&mut self, action: Action) {
-        match action {
-            Action::Spawn { vm_type, count, .. } => {
-                let k = self.type_index(vm_type);
-                for _ in 0..count {
-                    self.boots
-                        .schedule_at(self.t as f64 + vm_type.boot_mean_s, k);
-                    self.booting[k] += 1;
-                }
-            }
-            Action::Drain { vm_type, count, .. } => {
-                let k = self.type_index(vm_type);
-                let mut left = count;
-                while left > 0
-                    && self.booting[k] > 0
-                    && self.boots.cancel_latest_matching(|&j| j == k).is_some()
-                {
-                    self.booting[k] -= 1;
-                    left -= 1;
-                }
-                let floor_spare = self.total_running().saturating_sub(1) as usize;
-                let drained = left.min(self.running[k] as usize).min(floor_spare);
-                self.running[k] -= drained as u32;
-            }
-        }
+        let signals = ObsSignals {
+            t_s: self.t as f64,
+            rate_now,
+            rate_ewma: self.monitor.rate_ewma(),
+            rate_pred: self.monitor.rate_pred(horizon),
+            peak_to_median: self.monitor.peak_to_median(),
+            queue: self.queue_strict + self.queue_relaxed,
+            lambda_share: self.recent_lambda,
+            viol_share: self.recent_viol,
+            strict_share: self.strict_share,
+        };
+        self.layout
+            .render(&signals, self.fleet.running(), self.fleet.booting())
     }
 
     /// Advance one second under action `a` (see the module docs for the
-    /// encoding).
+    /// encoding). Scaling goes through the control-plane contract — the
+    /// same typed [`Action`]s, applied to the [`FluidFleet`] actuator.
     pub fn step(&mut self, a: usize) -> (Vec<f32>, StepResult) {
         let (k, delta, offload) = decode_action(a, self.palette.len());
+        let now = self.t as f64;
         // Scaling step: ~5% of the current fleet, at least one VM.
-        let step_sz = ((self.total_running() as f64 * 0.05).ceil() as usize).max(1);
+        let step_sz =
+            ((self.fleet.total_running() as f64 * 0.05).ceil() as usize).max(1);
         if delta > 0 {
-            self.apply(Action::Spawn {
-                model: self.model,
-                vm_type: self.palette[k],
-                count: step_sz,
-            });
+            self.fleet.apply(
+                &Action::Spawn {
+                    model: self.model,
+                    vm_type: self.palette[k],
+                    count: step_sz,
+                },
+                now,
+            );
         } else if delta < 0 {
-            self.apply(Action::Drain {
-                model: self.model,
-                vm_type: self.palette[k],
-                count: step_sz,
-            });
+            self.fleet.apply(
+                &Action::Drain {
+                    model: self.model,
+                    vm_type: self.palette[k],
+                    count: step_sz,
+                },
+                now,
+            );
         }
         // Boots due by this step come online on their type's sub-fleet.
-        while let Some((_, j)) = self.boots.pop_due(self.t as f64) {
-            self.running[j] += 1;
-            self.booting[j] = self.booting[j].saturating_sub(1);
-        }
+        self.fleet.advance(now);
 
         // Arrivals this second.
         let rate = self.trace.rates.get(self.t).copied().unwrap_or(0.0);
@@ -466,7 +503,8 @@ impl ServeEnv {
             .iter()
             .enumerate()
             .map(|(j, t)| {
-                (self.running[j] as f64 + self.booting[j] as f64) * t.price.per_second()
+                (self.fleet.running()[j] as f64 + self.fleet.booting()[j] as f64)
+                    * t.price.per_second()
             })
             .sum();
         let lambda_cost = lambda_n * self.lambda.invoke_cost(false) * 1.05;

@@ -25,4 +25,5 @@ pub mod trainer;
 
 pub use agent::{PpoAgent, PpoManifest, UpdateStats};
 pub use buffer::Rollout;
-pub use env::{act_dim, decode_action, encode_action, obs_dim, ServeEnv};
+pub use env::{act_dim, decode_action, encode_action, obs_dim, ObsLayout, ObsSignals,
+              ServeEnv};

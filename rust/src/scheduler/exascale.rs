@@ -74,16 +74,17 @@ impl Scheme for Exascale {
 mod tests {
     use super::*;
     use crate::cloud::default_vm_type;
-    use crate::scheduler::testutil::{obs_fixture, palette};
+    use crate::control::FleetView;
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
     use crate::scheduler::{LoadMonitor, ModelDemand, SchedObs};
-    use crate::cloud::Cluster;
 
     #[test]
     fn provisions_headroom_above_demand() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Exascale::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         // reactive would want 2 VMs; exascale wants ceil(40*1.3*0.1/2)=3.
         assert_eq!(
@@ -107,10 +108,10 @@ mod tests {
             model: 0, rate: 69.0, service_s: 0.1, slots_per_vm: 2, queued: 0,
             types: vec![],
         }];
-        let cluster = Cluster::new(1);
+        let fleet = FleetView::empty(60.0);
         let mut s = Exascale::new();
         let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         match &acts[0] {
             Action::Spawn { count, .. } => {
@@ -126,8 +127,9 @@ mod tests {
     fn slow_drain() {
         let (mon, demands, cluster) = obs_fixture(40.0, 8, true);
         let mut s = Exascale::new();
+        let fleet = view(&cluster, 100.0);
         let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
-                                  cluster: &cluster, vm_types: palette() };
+                                  fleet: &fleet, vm_types: palette() };
         assert!(s.tick(&mk(100.0)).is_empty());
         assert!(s.tick(&mk(190.0)).is_empty(), "cooldown 120s not elapsed");
         let acts = s.tick(&mk(221.0));

@@ -40,6 +40,12 @@ impl LoadMonitor {
         self.pending += 1;
     }
 
+    /// Record `n` arrivals at once — state-identical to `n` calls of
+    /// [`Self::on_arrival`] (batch replay from a demand snapshot).
+    pub fn on_arrivals(&mut self, n: u64) {
+        self.pending += n;
+    }
+
     /// Close the current 1-second bucket. Call exactly once per sim second.
     pub fn tick(&mut self) {
         let rate = self.pending as f64;

@@ -61,14 +61,15 @@ impl Scheme for Mixed {
 mod tests {
     use super::*;
     use crate::cloud::default_vm_type;
-    use crate::scheduler::testutil::{obs_fixture, palette};
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
 
     #[test]
     fn vm_policy_matches_reactive() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Mixed::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         assert_eq!(
             s.tick(&obs),
             vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 3 }]

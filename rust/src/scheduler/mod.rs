@@ -28,7 +28,7 @@ pub mod reactive;
 pub mod util_aware;
 
 use crate::cloud::pricing::VmType;
-use crate::cloud::{Cluster, VmState};
+use crate::control::FleetView;
 pub use load_monitor::LoadMonitor;
 
 /// Which queued/overflow requests may be sent to serverless functions.
@@ -141,12 +141,15 @@ impl ModelDemand {
     }
 }
 
-/// Everything a scheme may observe at a tick boundary.
+/// Everything a scheme may observe at a tick boundary. Fleet state arrives
+/// as a backend-agnostic [`FleetView`] snapshot — the same observation
+/// whether the fleet behind it is the simulated cluster, the RL env's
+/// fluid fleet, or live serving pools (see [`crate::control`]).
 pub struct SchedObs<'a> {
     pub now: f64,
     pub monitor: &'a LoadMonitor,
     pub demands: &'a [ModelDemand],
-    pub cluster: &'a Cluster,
+    pub fleet: &'a FleetView,
     /// The instance-type palette this run may procure from; the first
     /// entry is the *primary* type homogeneous schemes pin.
     pub vm_types: &'a [&'static VmType],
@@ -215,7 +218,7 @@ pub(crate) fn converge(
     cooldown_s: f64,
     out: &mut Vec<Action>,
 ) {
-    let alive = obs.cluster.alive_typed(model, vm_type);
+    let alive = obs.fleet.alive_typed(model, vm_type);
     if alive < desired {
         *surplus_since = None;
         out.push(Action::Spawn { model, vm_type, count: desired - alive });
@@ -248,14 +251,14 @@ pub(crate) fn drain_foreign_types(
     if obs.vm_types.len() <= 1 {
         return;
     }
-    if obs.cluster.count_typed(model, pinned, VmState::Running) < desired {
+    if obs.fleet.running_typed(model, pinned) < desired {
         return;
     }
     for &ty in obs.vm_types {
         if ty.name == pinned.name {
             continue;
         }
-        let stale = obs.cluster.alive_typed(model, ty);
+        let stale = obs.fleet.alive_typed(model, ty);
         if stale > 0 {
             out.push(Action::Drain { model, vm_type: ty, count: stale });
         }
@@ -266,11 +269,17 @@ pub(crate) fn drain_foreign_types(
 pub(crate) mod testutil {
     use super::*;
     use crate::cloud::pricing::default_vm_type;
+    use crate::cloud::Cluster;
 
     /// Single-primary-type palette for scheme unit tests.
     pub fn palette() -> &'static [&'static VmType] {
         static P: std::sync::OnceLock<Vec<&'static VmType>> = std::sync::OnceLock::new();
         P.get_or_init(|| vec![default_vm_type()]).as_slice()
+    }
+
+    /// Snapshot a hand-assembled cluster for a [`SchedObs`].
+    pub fn view(cluster: &Cluster, now: f64) -> FleetView {
+        crate::control::cluster_view(cluster, now)
     }
 
     /// Build a one-model observation with the given EWMA rate and fleet.
@@ -333,7 +342,7 @@ mod tests {
 
     #[test]
     fn foreign_subfleet_retired_once_pinned_covers() {
-        use super::testutil::obs_fixture;
+        use super::testutil::{obs_fixture, view};
         let m4 = vm_type("m4.large").unwrap();
         let c5 = vm_type("c5.large").unwrap();
         // 3 running m4 (covers 40 q/s at 0.1 s / 2 slots) + 2 stale c5.
@@ -344,15 +353,16 @@ mod tests {
         cluster.tick(1000.0, 0.0, 0.0);
         let vm_types = [m4, c5];
         let mut out = Vec::new();
+        let fleet = view(&cluster, 1000.0);
         let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: &vm_types };
+                             fleet: &fleet, vm_types: &vm_types };
         drain_foreign_types(&obs, 0, m4, 3, &mut out);
         assert_eq!(out, vec![Action::Drain { model: 0, vm_type: c5, count: 2 }]);
     }
 
     #[test]
     fn foreign_subfleet_survives_while_pinned_is_short() {
-        use super::testutil::obs_fixture;
+        use super::testutil::{obs_fixture, view};
         let m4 = vm_type("m4.large").unwrap();
         let c5 = vm_type("c5.large").unwrap();
         // Only 2 running m4 for a desired fleet of 3: the c5 capacity is
@@ -364,8 +374,9 @@ mod tests {
         cluster.tick(1000.0, 0.0, 0.0);
         let vm_types = [m4, c5];
         let mut out = Vec::new();
+        let fleet = view(&cluster, 1000.0);
         let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: &vm_types };
+                             fleet: &fleet, vm_types: &vm_types };
         drain_foreign_types(&obs, 0, m4, 3, &mut out);
         assert!(out.is_empty(), "must not drain while pinned is short: {out:?}");
     }

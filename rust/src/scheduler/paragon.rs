@@ -123,16 +123,17 @@ impl Scheme for Paragon {
 mod tests {
     use super::*;
     use crate::cloud::pricing::vm_type;
-    use crate::cloud::Cluster;
-    use crate::scheduler::testutil::{obs_fixture, palette};
+    use crate::control::FleetView;
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
     use crate::scheduler::{LoadMonitor, ModelDemand, SchedObs};
 
     #[test]
     fn gate_closed_on_flat_load() {
         let (mon, demands, cluster) = obs_fixture(40.0, 2, true);
         let mut s = Paragon::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         s.tick(&obs);
         // Flat load: peak-to-median ~1.0 < gate; lambda valve shut.
         assert_eq!(s.offload(), OffloadPolicy::None);
@@ -152,10 +153,10 @@ mod tests {
             model: 0, rate: 80.0, service_s: 0.1, slots_per_vm: 2, queued: 0,
             types: vec![],
         }];
-        let cluster = Cluster::new(1);
+        let fleet = FleetView::empty(60.0);
         let mut s = Paragon::new();
         let obs = SchedObs { now: 60.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         s.tick(&obs);
         assert_eq!(s.offload(), OffloadPolicy::StrictOnly);
     }
@@ -164,8 +165,9 @@ mod tests {
     fn provisions_with_slim_margin() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Paragon::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         // Flat 40 q/s: forecast = rate, margin 1.05 -> ceil(42*0.05)= 3 VMs
         // (reactive: 2, exascale: 3 with much bigger margin on ramps).
@@ -190,8 +192,9 @@ mod tests {
         demands[0].types = types;
         let vm_types = [m4, c5];
         let mut s = Paragon::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: &vm_types };
+                             fleet: &fleet, vm_types: &vm_types };
         let acts = s.tick(&obs);
         match &acts[0] {
             Action::Spawn { vm_type, .. } => assert_eq!(vm_type.name, "c5.large"),
@@ -214,8 +217,9 @@ mod tests {
         let vm_types = [m4, c5];
         let mut s = Paragon::new();
         let acts = {
+            let fleet = view(&cluster, 30.0);
             let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                                 cluster: &cluster, vm_types: &vm_types };
+                                 fleet: &fleet, vm_types: &vm_types };
             s.tick(&obs)
         };
         // c5 fleet is empty: spawn c5, but do NOT drain the serving m4s.
@@ -230,8 +234,9 @@ mod tests {
         }
         cluster.tick(1000.0, 0.0, 0.0);
         let acts = {
+            let fleet = view(&cluster, 1000.0);
             let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
-                                 cluster: &cluster, vm_types: &vm_types };
+                                 fleet: &fleet, vm_types: &vm_types };
             s.tick(&obs)
         };
         assert!(acts.iter().any(|a| matches!(

@@ -66,15 +66,16 @@ impl Scheme for Reactive {
 mod tests {
     use super::*;
     use crate::cloud::default_vm_type;
-    use crate::scheduler::testutil::{obs_fixture, palette};
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
     use crate::scheduler::LoadMonitor;
 
     #[test]
     fn scales_to_current_demand_exactly() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = Reactive::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         // ceil(40 q/s * 1.1 margin * 0.1s / 2 slots) = 3 VMs.
         assert_eq!(
@@ -87,8 +88,9 @@ mod tests {
     fn drains_only_after_cooldown() {
         let (mon, demands, cluster) = obs_fixture(40.0, 5, true);
         let mut s = Reactive::new();
+        let fleet = view(&cluster, 100.0);
         let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
-                                  cluster: &cluster, vm_types: palette() };
+                                  fleet: &fleet, vm_types: palette() };
         assert!(s.tick(&mk(100.0)).is_empty(), "surplus observed, no drain yet");
         assert!(s.tick(&mk(130.0)).is_empty(), "cooldown not elapsed");
         let acts = s.tick(&mk(161.0));
@@ -104,8 +106,9 @@ mod tests {
         demands[0].rate = 0.0;
         let mon = LoadMonitor::new();
         let mut s = Reactive::new();
+        let fleet = view(&cluster, 0.0);
         let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
-                                  cluster: &cluster, vm_types: palette() };
+                                  fleet: &fleet, vm_types: palette() };
         s.tick(&mk(0.0));
         let acts = s.tick(&mk(61.0));
         assert_eq!(
@@ -133,8 +136,9 @@ mod tests {
         cluster.tick(1000.0, 0.0, 0.0);
         let vm_types = [m4, c5];
         let mut s = Reactive::new();
+        let fleet = view(&cluster, 1000.0);
         let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: &vm_types };
+                             fleet: &fleet, vm_types: &vm_types };
         let acts = s.tick(&obs);
         assert!(
             acts.contains(&Action::Drain { model: 0, vm_type: c5, count: 2 }),

@@ -49,8 +49,8 @@ impl Scheme for UtilAware {
         // Homogeneous threshold autoscaler: pins the primary type.
         let ty = obs.primary();
         for d in obs.demands {
-            let alive = obs.cluster.alive(d.model);
-            let util = obs.cluster.utilization(d.model);
+            let alive = obs.fleet.alive(d.model);
+            let util = obs.fleet.utilization(d.model);
             let low = self.low_since.entry(d.model).or_insert(None);
             if alive == 0 {
                 if d.rate > 0.0 || d.queued > 0 {
@@ -109,7 +109,7 @@ impl Scheme for UtilAware {
 mod tests {
     use super::*;
     use crate::cloud::default_vm_type;
-    use crate::scheduler::testutil::{obs_fixture, palette};
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
 
     #[test]
     fn spawns_on_high_utilization() {
@@ -119,8 +119,9 @@ mod tests {
             cluster.route(0).unwrap();
         }
         let mut s = UtilAware::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         assert_eq!(
             acts,
@@ -135,8 +136,9 @@ mod tests {
         cluster.route(0).unwrap();
         cluster.route(0).unwrap();
         let mut s = UtilAware::new();
+        let fleet = view(&cluster, 30.0);
         let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         assert!(s.tick(&obs).is_empty());
     }
 
@@ -144,8 +146,9 @@ mod tests {
     fn drains_one_at_a_time_after_cooldown() {
         let (mon, demands, cluster) = obs_fixture(1.0, 3, true); // idle fleet
         let mut s = UtilAware::new();
+        let fleet = view(&cluster, 10.0);
         let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
-                                  cluster: &cluster, vm_types: palette() };
+                                  fleet: &fleet, vm_types: palette() };
         assert!(s.tick(&mk(10.0)).is_empty());
         let acts = s.tick(&mk(131.0));
         assert_eq!(
@@ -166,8 +169,9 @@ mod tests {
         cluster.tick(1000.0, 0.0, 0.0);
         let vm_types = [m4, c5];
         let mut s = UtilAware::new();
+        let fleet = view(&cluster, 1000.0);
         let obs = SchedObs { now: 1000.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: &vm_types };
+                             fleet: &fleet, vm_types: &vm_types };
         let acts = s.tick(&obs);
         assert!(
             acts.contains(&Action::Drain { model: 0, vm_type: c5, count: 2 }),
@@ -179,8 +183,9 @@ mod tests {
     fn cold_start_spawns_for_demand() {
         let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
         let mut s = UtilAware::new();
+        let fleet = view(&cluster, 0.0);
         let obs = SchedObs { now: 0.0, monitor: &mon, demands: &demands,
-                             cluster: &cluster, vm_types: palette() };
+                             fleet: &fleet, vm_types: palette() };
         let acts = s.tick(&obs);
         assert_eq!(
             acts,

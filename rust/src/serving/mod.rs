@@ -16,6 +16,65 @@ pub use server::{Server, ServerConfig, ServerStats};
 
 use std::time::Instant;
 
+/// One typed live submission: the client-facing request contract
+/// ([`Server::submit`] / [`ServerFleet::submit`](crate::control::ServerFleet)).
+/// INFaaS-style model-less front door: callers state *constraints*
+/// (latency SLO, accuracy floor); model and resource choice stay inside
+/// the serving system.
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    /// Flattened input features (must match the engine's `input_dim`).
+    pub input: Vec<f32>,
+    /// Latency SLO, ms.
+    pub slo_ms: f64,
+    /// Minimum accuracy constraint, percent (0 = unconstrained).
+    pub min_accuracy: f64,
+}
+
+impl SubmitRequest {
+    /// Unconstrained request (10 s SLO, no accuracy floor).
+    pub fn new(input: Vec<f32>) -> SubmitRequest {
+        SubmitRequest { input, slo_ms: 10_000.0, min_accuracy: 0.0 }
+    }
+
+    pub fn with_slo_ms(mut self, slo_ms: f64) -> SubmitRequest {
+        self.slo_ms = slo_ms;
+        self
+    }
+
+    pub fn with_min_accuracy(mut self, min_accuracy: f64) -> SubmitRequest {
+        self.min_accuracy = min_accuracy;
+        self
+    }
+}
+
+/// Why a live submission was rejected (typed, instead of the old
+/// panic-on-shutdown behavior).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The server has shut down (ingress channel closed).
+    Stopped,
+    /// Input feature width does not match the engine's `input_dim`.
+    BadInput { expected: usize, got: usize },
+    /// No pool holds running capacity for the routed request
+    /// (fleet-level admission, see [`crate::control::ServerFleet`]).
+    NoCapacity,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Stopped => write!(f, "server stopped"),
+            SubmitError::BadInput { expected, got } => {
+                write!(f, "bad input width: expected {expected}, got {got}")
+            }
+            SubmitError::NoCapacity => write!(f, "no running serving capacity"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One live inference request.
 pub struct LiveRequest {
     pub id: u64,

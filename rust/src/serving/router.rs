@@ -1,7 +1,14 @@
 //! Request router: maps each live request to a pool model using the same
 //! selection policies as the simulator (§III-A), restricted to the models
 //! actually loaded in the engine.
+//!
+//! Costing is *palette-aware*: each candidate is priced at its cheapest
+//! feasible instance type from the fleet's actual palette (effective
+//! $/query = slot-second price × service time), not at a hardcoded
+//! default type — on a heterogeneous fleet the cheapest model can differ
+//! from what m4.large-only pricing would suggest.
 
+use crate::cloud::pricing::VmType;
 use crate::models::{Registry, SelectionPolicy};
 use crate::trace::{Request, Strictness};
 
@@ -22,23 +29,39 @@ struct Candidate {
 }
 
 impl Router {
-    /// `loaded` = model indices available in the engine.
-    pub fn new(reg: &Registry, loaded: &[usize], policy: SelectionPolicy) -> Router {
-        let vm = crate::cloud::default_vm_type();
+    /// `loaded` = model indices available in the engine; `vm_types` = the
+    /// fleet's instance palette (each candidate is costed at its cheapest
+    /// palette entry). An empty palette falls back to the default type.
+    pub fn new(reg: &Registry, loaded: &[usize], policy: SelectionPolicy,
+               vm_types: &[&'static VmType]) -> Router {
+        let fallback = [crate::cloud::default_vm_type()];
+        let palette: &[&'static VmType] =
+            if vm_types.is_empty() { &fallback } else { vm_types };
         let mut candidates: Vec<Candidate> = loaded
             .iter()
             .map(|&idx| {
                 let m = &reg.models[idx];
+                let cost = palette
+                    .iter()
+                    .copied()
+                    .map(|t| m.vm_cost_per_query(t))
+                    .fold(f64::INFINITY, f64::min);
                 Candidate {
                     idx,
                     accuracy: m.accuracy,
                     latency_ms: m.latency_ms,
-                    cost: m.vm_cost_per_query(vm),
+                    cost,
                 }
             })
             .collect();
         candidates.sort_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap());
         Router { candidates, policy }
+    }
+
+    /// Effective $/query this router prices `model` at (its cheapest
+    /// palette entry), if the model is loaded.
+    pub fn cost_of(&self, model: usize) -> Option<f64> {
+        self.candidates.iter().find(|c| c.idx == model).map(|c| c.cost)
     }
 
     /// Pick a model for constraints (slo_ms, min_accuracy).
@@ -86,10 +109,11 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::pricing::{default_vm_type, vm_type};
 
     fn router(policy: SelectionPolicy) -> Router {
         let reg = Registry::builtin();
-        Router::new(&reg, &[0, 1, 3, 4], policy)
+        Router::new(&reg, &[0, 1, 3, 4], policy, &[default_vm_type()])
     }
 
     #[test]
@@ -114,5 +138,27 @@ mod tests {
         assert_eq!(idx, 3, "resnet18 is the best <=500ms model loaded");
         // Impossible latency too: fastest model.
         assert_eq!(r.route(1.0, 99.0), 0);
+    }
+
+    #[test]
+    fn costs_come_from_the_cheapest_palette_entry() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let r = Router::new(&reg, &[0, 3, 4], SelectionPolicy::Paragon, &[m4, c5]);
+        for &idx in &[0usize, 3, 4] {
+            let want = reg.models[idx]
+                .vm_cost_per_query(m4)
+                .min(reg.models[idx].vm_cost_per_query(c5));
+            let got = r.cost_of(idx).unwrap();
+            assert!(
+                (got - want).abs() < 1e-15,
+                "model {idx}: router cost {got} != cheapest palette cost {want}"
+            );
+        }
+        // Single-type palette reproduces the legacy default-type costing.
+        let legacy = Router::new(&reg, &[3], SelectionPolicy::Paragon, &[m4]);
+        let want = reg.models[3].vm_cost_per_query(m4);
+        assert!((legacy.cost_of(3).unwrap() - want).abs() < 1e-15);
     }
 }

@@ -18,7 +18,8 @@
 
 use super::batcher::{Batch, Batcher};
 use super::router::Router;
-use super::{LiveRequest, LiveResponse};
+use super::{LiveRequest, LiveResponse, SubmitError, SubmitRequest};
+use crate::cloud::pricing::VmType;
 use crate::models::{Registry, SelectionPolicy};
 use crate::runtime::engine::EngineHandle;
 use crate::util::stats::LogHistogram;
@@ -36,6 +37,10 @@ pub struct ServerConfig {
     /// Dispatch workers pulling flushed batches.
     pub workers: usize,
     pub selection: SelectionPolicy,
+    /// Instance-type palette this server's fleet runs on; the router
+    /// prices each model at its cheapest palette entry. Defaults to the
+    /// paper's single m4.large worker type.
+    pub vm_types: Vec<&'static VmType>,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +50,7 @@ impl Default for ServerConfig {
             batch_timeout_ms: 10.0,
             workers: 2,
             selection: SelectionPolicy::Paragon,
+            vm_types: vec![crate::cloud::default_vm_type()],
         }
     }
 }
@@ -88,7 +94,7 @@ impl Server {
     pub fn start(engine: EngineHandle, reg: &Registry, cfg: ServerConfig) -> Server {
         let loaded: Vec<usize> = engine.models.keys().copied().collect();
         assert!(!loaded.is_empty(), "engine has no models loaded");
-        let router = Router::new(reg, &loaded, cfg.selection);
+        let router = Router::new(reg, &loaded, cfg.selection, &cfg.vm_types);
         let n_models = reg.len();
 
         let (ingress_tx, ingress_rx) = mpsc::channel::<LiveRequest>();
@@ -228,43 +234,44 @@ impl Server {
         }
     }
 
-    /// Submit one request; returns the response receiver.
-    pub fn submit(&self, input: Vec<f32>, slo_ms: f64, min_accuracy: f64)
-                  -> mpsc::Receiver<LiveResponse> {
-        assert_eq!(input.len(), self.input_dim, "bad input width");
+    /// Submit one typed request; returns the response receiver, or a typed
+    /// rejection (no more panic-after-shutdown: a stopped server reports
+    /// [`SubmitError::Stopped`]).
+    pub fn submit(&self, req: SubmitRequest)
+                  -> Result<mpsc::Receiver<LiveResponse>, SubmitError> {
+        if req.input.len() != self.input_dim {
+            return Err(SubmitError::BadInput {
+                expected: self.input_dim,
+                got: req.input.len(),
+            });
+        }
         let (tx, rx) = mpsc::channel();
-        let req = LiveRequest {
+        let live = LiveRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            input,
-            slo_ms,
-            min_accuracy,
+            input: req.input,
+            slo_ms: req.slo_ms,
+            min_accuracy: req.min_accuracy,
             submitted: Instant::now(),
             resp: tx,
         };
+        // Count before sending: a worker may complete the request before
+        // this thread runs again, and `completed` must never be observed
+        // above `submitted`. A failed send uncounts.
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        self.ingress.send(req).expect("server stopped");
-        rx
+        if self.ingress.send(live).is_err() {
+            self.counters.submitted.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Stopped);
+        }
+        Ok(rx)
     }
 
     pub fn stats(&self) -> ServerStats {
-        let lat = self.latency.lock().unwrap();
-        let batches = self.counters.batches.load(Ordering::Relaxed);
-        let batched = self.counters.batched_requests.load(Ordering::Relaxed);
-        ServerStats {
-            submitted: self.counters.submitted.load(Ordering::Relaxed),
-            completed: self.counters.completed.load(Ordering::Relaxed),
-            batches,
-            errors: self.counters.errors.load(Ordering::Relaxed),
-            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
-            latency_mean_ms: lat.mean(),
-            latency_p99_ms: lat.quantile(99.0),
-        }
+        snapshot_stats(&self.counters, &self.latency)
     }
 
     /// Graceful shutdown: flush pending batches, join all threads.
     pub fn shutdown(mut self) -> ServerStats {
         self.stop.store(true, Ordering::Relaxed);
-        let stats_ref = (self.counters.clone(), self.latency.clone());
         // Closing ingress wakes the batcher's Disconnected arm.
         drop(std::mem::replace(&mut self.ingress, {
             let (tx, _) = mpsc::channel();
@@ -273,17 +280,24 @@ impl Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        let lat = stats_ref.1.lock().unwrap();
-        let batches = stats_ref.0.batches.load(Ordering::Relaxed);
-        let batched = stats_ref.0.batched_requests.load(Ordering::Relaxed);
-        ServerStats {
-            submitted: stats_ref.0.submitted.load(Ordering::Relaxed),
-            completed: stats_ref.0.completed.load(Ordering::Relaxed),
-            batches,
-            errors: stats_ref.0.errors.load(Ordering::Relaxed),
-            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
-            latency_mean_ms: lat.mean(),
-            latency_p99_ms: lat.quantile(99.0),
-        }
+        snapshot_stats(&self.counters, &self.latency)
+    }
+}
+
+/// Assemble a [`ServerStats`] from the shared counters (one source for
+/// both the live [`Server::stats`] snapshot and the final
+/// [`Server::shutdown`] report).
+fn snapshot_stats(counters: &Counters, latency: &Mutex<LogHistogram>) -> ServerStats {
+    let lat = latency.lock().unwrap();
+    let batches = counters.batches.load(Ordering::Relaxed);
+    let batched = counters.batched_requests.load(Ordering::Relaxed);
+    ServerStats {
+        submitted: counters.submitted.load(Ordering::Relaxed),
+        completed: counters.completed.load(Ordering::Relaxed),
+        batches,
+        errors: counters.errors.load(Ordering::Relaxed),
+        mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+        latency_mean_ms: lat.mean(),
+        latency_p99_ms: lat.quantile(99.0),
     }
 }

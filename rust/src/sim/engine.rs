@@ -7,17 +7,23 @@
 //! the cheapest feasible `(model, vm_type)` sub-fleet. Overflow goes to a
 //! per-model FIFO queue (bounded by a wait timeout) or — policy permitting —
 //! to a serverless warm pool with cold-start and GB-second billing.
+//!
+//! Scaling runs through the shared control plane ([`crate::control`]):
+//! the fleet sits behind a [`ClusterActuator`] and each scheduler tick is
+//! one [`ControlLoop::tick_scheme`] — the same loop that drives the live
+//! [`ServerFleet`](crate::control::ServerFleet).
 
 use super::core::SimCore;
 use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
 use crate::cloud::serverless::LambdaFn;
 use crate::cloud::Cluster;
+use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator};
 use crate::models::{select, Registry, SelectionPolicy};
-use crate::scheduler::{Action, ModelDemand, OffloadPolicy, SchedObs, Scheme, TypeCap};
+use crate::scheduler::{Action, OffloadPolicy, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
-use crate::util::stats::{Ewma, LogHistogram};
+use crate::util::stats::LogHistogram;
 use std::collections::VecDeque;
 
 /// How each request is mapped to a pool model.
@@ -130,21 +136,9 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     };
     let n_types = palette.len();
 
-    // Per-(model, type) capacity axes, palette order.
-    let caps: Vec<Vec<TypeCap>> = reg
-        .models
-        .iter()
-        .map(|m| {
-            palette
-                .iter()
-                .map(|&t| TypeCap {
-                    vm_type: t,
-                    service_s: m.service_time_s(t),
-                    slots_per_vm: m.slots_on(t),
-                })
-                .collect()
-        })
-        .collect();
+    // Per-(model, type) capacity axes, palette order (the control plane's
+    // shared table; the control loop derives its own identical copy).
+    let caps: Vec<Vec<TypeCap>> = palette_caps(reg, &palette);
     // Routing preference per model: cheapest effective $/query first.
     // The sort is stable, so a palette of identical types keeps palette
     // order and reproduces the homogeneous simulator exactly.
@@ -177,16 +171,17 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         None
     };
 
-    let mut cluster = Cluster::new(cfg.seed ^ 0xc11);
-    let mut monitor = crate::scheduler::LoadMonitor::new();
+    // The fleet sits behind the control-plane actuator: typed actions are
+    // the only scaling entry point (quota-capped spawns, typed drains),
+    // and the control loop owns the demand monitor/EWMAs.
+    let mut actuator =
+        ClusterActuator::new(reg, palette.clone(), cfg.instance_cap, cfg.seed ^ 0xc11);
+    let mut cl = ControlLoop::new(reg, palette.clone());
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
     let mut completions: SimCore<Completion> = SimCore::new();
     // Lambda warm pools per (model, memory-tier-bucket). Bucket = mem/0.25.
     let mut pools: std::collections::BTreeMap<(usize, u32), crate::cloud::WarmPool> =
         std::collections::BTreeMap::new();
-
-    let mut per_model_rate: Vec<Ewma> = (0..n_models).map(|_| Ewma::new(0.15)).collect();
-    let mut per_model_count: Vec<u64> = vec![0; n_models];
 
     let mut rep = SimReport {
         scheme: scheme.name().to_string(),
@@ -214,13 +209,15 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             let cap0 = &caps[m][k0];
             let per_vm = cap0.slots_per_vm as f64 / cap0.service_s;
             let need = (rate_m / per_vm).ceil() as usize;
-            // The account quota binds warm starts too.
-            let room = cfg.instance_cap.saturating_sub(cluster.total_alive());
-            for _ in 0..need.min(room) {
-                cluster.spawn(cap0.vm_type, m, cap0.slots_per_vm, -200.0);
+            if need > 0 {
+                // The actuator's account quota binds warm starts too.
+                actuator.apply(
+                    &Action::Spawn { model: m, vm_type: cap0.vm_type, count: need },
+                    -200.0,
+                );
             }
         }
-        cluster.tick(0.0, 0.0, 0.0); // boots complete before t=0
+        actuator.cluster.tick(0.0, 0.0, 0.0); // boots complete before t=0
     }
 
     let record = |rep: &mut SimReport, lat_hist: &mut LogHistogram,
@@ -260,9 +257,11 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         if t_cmp <= t_arr && t_cmp <= t_tick {
             // --- completion: free the slot, pull from this model's queue.
             let (_, c) = completions.next().unwrap();
-            cluster.release(c.vm_id, now);
+            actuator.cluster.release(c.vm_id, now);
             if let Some(q) = queues[c.model].pop_front() {
-                if let Some((vm_id, k)) = route_best(&mut cluster, c.model, q.slo_ms) {
+                if let Some((vm_id, k)) =
+                    route_best(&mut actuator.cluster, c.model, q.slo_ms)
+                {
                     let done = now + caps[c.model][k].service_s;
                     let latency_ms = (done - q.arrival) * 1000.0;
                     record(&mut rep, &mut lat_hist, &mut lat_samples,
@@ -278,11 +277,10 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             let r = &reqs[req_i];
             let m = models[req_i];
             req_i += 1;
-            monitor.on_arrival();
-            per_model_count[m] += 1;
+            actuator.note_arrival(m);
             rep.requests += 1;
 
-            if let Some((vm_id, k)) = route_best(&mut cluster, m, r.slo_ms) {
+            if let Some((vm_id, k)) = route_best(&mut actuator.cluster, m, r.slo_ms) {
                 let svc = caps[m][k].service_s;
                 let done = now + svc;
                 record(&mut rep, &mut lat_hist, &mut lat_samples,
@@ -325,10 +323,11 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             }
         } else {
             // --- scheduler tick (1 Hz)
-            monitor.tick();
             // Expire queued requests past the wait timeout (queues are
             // FIFO by arrival, so only fronts can be stale). A dropped
-            // request is by definition an SLO violation.
+            // request is by definition an SLO violation. Runs before the
+            // control tick so the demand snapshot carries post-expiry
+            // queue depths.
             for q in queues.iter_mut() {
                 while let Some(&h) = q.front() {
                     if now - h.arrival <= cfg.queue_timeout_s {
@@ -344,55 +343,19 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                     }
                 }
             }
-            let mut needed_slots = 0.0;
-            let mut demands = Vec::with_capacity(n_models);
-            for m in 0..n_models {
-                let rate = per_model_rate[m].push(per_model_count[m] as f64);
-                per_model_count[m] = 0;
-                needed_slots += rate * caps[m][0].service_s;
-                demands.push(ModelDemand {
-                    model: m,
-                    rate,
-                    service_s: caps[m][0].service_s,
-                    slots_per_vm: caps[m][0].slots_per_vm,
-                    queued: queues[m].len(),
-                    types: caps[m].clone(),
-                });
-            }
-            {
-                let obs = SchedObs {
-                    now,
-                    monitor: &monitor,
-                    demands: &demands,
-                    cluster: &cluster,
-                    vm_types: palette.as_slice(),
-                };
-                let actions = scheme.tick(&obs);
-                for a in actions {
-                    match a {
-                        Action::Spawn { model, vm_type, count } => {
-                            // Account-level instance quota (EC2): also a
-                            // backstop against scheme feedback loops.
-                            let room = cfg
-                                .instance_cap
-                                .saturating_sub(cluster.total_alive());
-                            let slots = reg.models[model].slots_on(vm_type);
-                            for _ in 0..count.min(room) {
-                                cluster.spawn(vm_type, model, slots, now);
-                            }
-                        }
-                        Action::Drain { model, vm_type, count } => {
-                            cluster.scale_down_typed(model, vm_type, count, now);
-                        }
-                    }
-                }
-            }
-            cluster.tick(now, 1.0, needed_slots);
-            rep.peak_vms = rep.peak_vms.max(cluster.total_alive());
+            // One control tick: the loop assembles demand + fleet view,
+            // runs the scheme, and applies its typed actions back to the
+            // actuator (quota-capped).
+            actuator.set_queued(queues.iter().map(|q| q.len()));
+            let tick = cl.tick_scheme(scheme, &mut actuator, now);
+            let needed_slots: f64 =
+                tick.demands.iter().map(|d| d.rate * d.service_s).sum();
+            actuator.cluster.tick(now, 1.0, needed_slots);
+            rep.peak_vms = rep.peak_vms.max(actuator.cluster.total_alive());
             // Newly-booted VMs can absorb queued work.
             for m in 0..n_models {
                 while let Some(&head) = queues[m].front() {
-                    match route_best(&mut cluster, m, head.slo_ms) {
+                    match route_best(&mut actuator.cluster, m, head.slo_ms) {
                         Some((vm_id, k)) => {
                             queues[m].pop_front();
                             let done = now + caps[m][k].service_s;
@@ -407,7 +370,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 }
             }
             if (now as u64) % 60 == 0 {
-                cluster.compact(now);
+                actuator.cluster.compact(now);
             }
             next_tick += 1.0;
         }
@@ -415,6 +378,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
 
     let end = next_tick.max(horizon);
     // Terminate the remaining fleet (all types) and settle the bill.
+    let cluster = &mut actuator.cluster;
     for m in 0..n_models {
         cluster.scale_down(m, usize::MAX, end);
     }
@@ -449,6 +413,7 @@ mod tests {
     use super::*;
     use crate::cloud::pricing::vm_type;
     use crate::scheduler;
+    use crate::scheduler::SchedObs;
     use crate::trace::{generators, synthesize_requests, WorkloadKind};
 
     fn run_scheme(name: &str, rate: f64) -> SimReport {

@@ -10,7 +10,7 @@ pub mod engine;
 pub mod metrics;
 
 pub use self::core::{EventQueue, SimCore};
-pub use engine::{simulate, Assignment, SimConfig};
+pub use engine::{assign_models, simulate, Assignment, SimConfig};
 pub use metrics::SimReport;
 
 use crate::config::ExperimentConfig;

@@ -1,0 +1,204 @@
+//! Control-plane integration: the simulated cluster and the live server
+//! fleet are interchangeable behind the [`FleetActuator`] contract.
+//!
+//! - An explicit `Action` script produces *identical* `FleetView`
+//!   transitions on both backends (zero-jitter instance types make boot
+//!   completion deterministic on the cluster too).
+//! - ONE policy object — the type-aware greedy RL baseline — drives both
+//!   backends tick-for-tick through `ControlLoop::tick_policy` with no
+//!   policy-side code changes, and the fleets never diverge.
+//! - The same policy scales a two-type live fleet under a bursty trace
+//!   end to end: burst absorbed, cheapest type procured, requests
+//!   conserved.
+
+use paragon::cloud::pricing::{vm_type, VmPrice, VmType};
+use paragon::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator,
+                       FleetView, ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::rl::baselines::TypedGreedyPolicy;
+use paragon::rl::env::ObsLayout;
+use paragon::scheduler::Action;
+use paragon::trace::{generators, TraceKind};
+use paragon::util::rng::Pcg;
+
+/// Leak a zero-jitter instance type so both backends boot at exactly the
+/// mean latency (the cluster normally samples jitter per spawn).
+fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        vcpus: 2,
+        mem_gb: 8.0,
+        price: VmPrice { hourly_usd: hourly },
+        speed,
+        boot_mean_s: boot_s,
+        boot_jitter_s: 0.0,
+    }))
+}
+
+/// Comparable summary of a view: (model, type, running, booting) rows.
+fn fingerprint(v: &FleetView) -> Vec<(usize, String, usize, usize)> {
+    v.subfleets()
+        .iter()
+        .map(|s| (s.model, s.vm_type.name.to_string(), s.running, s.booting))
+        .collect()
+}
+
+#[test]
+fn cluster_and_server_fleet_views_match_on_action_script() {
+    let reg = Registry::builtin();
+    let ta = leak_type("script.m", 0.10, 1.0, 100.0);
+    let tb = leak_type("script.c", 0.085, 1.25, 60.0);
+    let palette = vec![ta, tb];
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 100,
+        ..ServerFleetConfig::default()
+    });
+
+    let script: Vec<(f64, Action)> = vec![
+        (0.0, Action::Spawn { model: 0, vm_type: ta, count: 3 }),
+        (0.0, Action::Spawn { model: 1, vm_type: tb, count: 2 }),
+        // At t=30 tb is still booting: this must cancel a boot on both.
+        (30.0, Action::Drain { model: 1, vm_type: tb, count: 1 }),
+        // At t=130 everything is running: retire two idle runners.
+        (130.0, Action::Drain { model: 0, vm_type: ta, count: 2 }),
+        (140.0, Action::Spawn { model: 0, vm_type: tb, count: 4 }),
+    ];
+    let checkpoints = [0.0, 30.0, 61.0, 101.0, 130.0, 140.0, 205.0, 400.0];
+
+    let mut si = 0;
+    for &t in &checkpoints {
+        while si < script.len() && script[si].0 <= t {
+            sim.apply(&script[si].1, script[si].0);
+            live.apply(&script[si].1, script[si].0);
+            si += 1;
+        }
+        sim.advance(t);
+        live.advance(t);
+        assert_eq!(
+            fingerprint(&sim.view()),
+            fingerprint(&live.view()),
+            "backends diverged at t={t}"
+        );
+    }
+    // Every scripted transition actually exercised both backends.
+    assert_eq!(si, script.len());
+    assert!(sim.view().total_alive() > 0);
+}
+
+#[test]
+fn one_policy_object_drives_both_backends_identically() {
+    let reg = Registry::builtin();
+    let ta = leak_type("eq.m", 0.10, 1.0, 80.0);
+    let tb = leak_type("eq.c", 0.085, 1.25, 40.0);
+    let palette = vec![ta, tb];
+    let model = 3; // resnet18
+    let caps = palette_caps(&reg, &palette)[model].clone();
+    let layout = ObsLayout::new(caps.clone(), 40.0, 600.0);
+
+    // ONE policy object, zero policy-side changes between backends.
+    let mut policy = TypedGreedyPolicy::new(&caps);
+
+    let mut cl_sim = ControlLoop::new(&reg, palette.clone());
+    let mut cl_live = ControlLoop::new(&reg, palette.clone());
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 1000, 11);
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 1000,
+        ..ServerFleetConfig::default()
+    });
+
+    // Identical warm starts on the primary type.
+    let warm = Action::Spawn { model, vm_type: ta, count: 5 };
+    sim.apply(&warm, -200.0);
+    live.apply(&warm, -200.0);
+    sim.advance(0.0);
+    live.advance(0.0);
+
+    // Identical Poisson arrival realization of a bursty trace.
+    let trace = generators::generate_with(TraceKind::Twitter, 5, 600, 40.0);
+    let mut rng = Pcg::seeded(9);
+    let mut scaled = false;
+    for t in 0..600usize {
+        let now = t as f64 + 1.0;
+        for _ in 0..rng.poisson(trace.rates[t]) {
+            sim.note_arrival(model);
+            live.note_arrival(model);
+        }
+        let a_sim = cl_sim.tick_policy(&mut policy, &layout, model, &mut sim, now);
+        let a_live = cl_live.tick_policy(&mut policy, &layout, model, &mut live, now);
+        assert_eq!(a_sim, a_live, "policy decisions diverged at t={t}");
+        assert_eq!(
+            fingerprint(&sim.view()),
+            fingerprint(&live.view()),
+            "fleets diverged at t={t}"
+        );
+        scaled |= sim.view().total_alive() != 5;
+    }
+    assert!(scaled, "the burst must have forced at least one scaling action");
+}
+
+#[test]
+fn typed_greedy_scales_live_fleet_under_burst() {
+    let reg = Registry::builtin();
+    let m4 = vm_type("m4.large").unwrap();
+    let c5 = vm_type("c5.large").unwrap();
+    let palette = vec![m4, c5];
+    let model = 3; // resnet18: strictly cheaper per query on c5.large
+    let mean = 40.0;
+    let duration = 600usize;
+    let caps = palette_caps(&reg, &palette)[model].clone();
+    let layout = ObsLayout::new(caps.clone(), mean, duration as f64);
+    let mut policy = TypedGreedyPolicy::new(&caps);
+    let mut cl = ControlLoop::new(&reg, palette.clone());
+    let mut fleet = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        ..ServerFleetConfig::default()
+    });
+
+    // Warm start on the primary type, sized for the mean rate (the shared
+    // TypeCap sizing every control-plane consumer uses).
+    let warm = caps[0].vms_for_rate(mean).max(1);
+    fleet.apply(&Action::Spawn { model, vm_type: palette[0], count: warm }, -200.0);
+    fleet.advance(0.0);
+
+    let trace = generators::generate_with(TraceKind::Twitter, 3, duration, mean);
+    let mut rng = Pcg::seeded(21);
+    let mut total: u64 = 0;
+    for t in 0..duration {
+        let now = t as f64 + 1.0;
+        let n = rng.poisson(trace.rates[t]);
+        total += n;
+        for _ in 0..n {
+            fleet.ingest(model, 1000.0, now);
+        }
+        cl.tick_policy(&mut policy, &layout, model, &mut fleet, now);
+    }
+    // Let the queue tail drain on the final fleet.
+    fleet.advance(duration as f64 + 120.0);
+    let rep = fleet.report(duration as f64 + 120.0);
+
+    assert_eq!(
+        rep.served + rep.dropped + rep.queued as u64,
+        total,
+        "requests lost: {rep:?}"
+    );
+    assert!(
+        rep.served as f64 >= total as f64 * 0.5,
+        "served only {} of {total}",
+        rep.served
+    );
+    assert!(rep.cost_usd > 0.0);
+    assert!(
+        rep.peak_replicas > warm,
+        "no scale-up under burst: peak {} vs warm {warm}",
+        rep.peak_replicas
+    );
+    // The greedy pick must have procured the cheaper c5 sub-fleet.
+    assert!(
+        rep.spawned_by_type.iter().any(|(n, c)| n == "c5.large" && *c > 0),
+        "cheapest type never procured: {:?}",
+        rep.spawned_by_type
+    );
+}

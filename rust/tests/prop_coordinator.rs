@@ -89,8 +89,9 @@ fn prop_schemes_never_negative_fleet_and_converge() {
             let palette = [default_vm_type()];
             let now = t as f64;
             let actions = {
+                let fleet = paragon::control::cluster_view(&cluster, now);
                 let obs = SchedObs { now, monitor: &mon, demands: &demands,
-                                     cluster: &cluster, vm_types: &palette };
+                                     fleet: &fleet, vm_types: &palette };
                 scheme.tick(&obs)
             };
             for a in actions {

@@ -4,7 +4,7 @@
 
 use paragon::models::{Registry, SelectionPolicy};
 use paragon::runtime::engine::Engine;
-use paragon::serving::{Server, ServerConfig};
+use paragon::serving::{Server, ServerConfig, SubmitRequest};
 use paragon::util::rng::Pcg;
 use std::path::{Path, PathBuf};
 
@@ -27,6 +27,7 @@ fn start(selection: SelectionPolicy, models: Vec<usize>) -> Option<(Engine, Serv
         batch_timeout_ms: 4.0,
         workers: 2,
         selection,
+        ..ServerConfig::default()
     });
     Some((engine, server, reg))
 }
@@ -42,7 +43,8 @@ fn concurrent_load_all_requests_complete() {
     for i in 0..n {
         let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
         let slo = if i % 2 == 0 { 500.0 } else { 5000.0 };
-        rxs.push(server.submit(input, slo, 0.0));
+        rxs.push(server.submit(SubmitRequest::new(input).with_slo_ms(slo))
+            .expect("submit"));
     }
     let mut classes = std::collections::BTreeSet::new();
     for rx in rxs {
@@ -70,7 +72,7 @@ fn batching_amortizes_under_burst() {
     let mut rxs = Vec::new();
     for _ in 0..64 {
         let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
-        rxs.push(server.submit(input, 10_000.0, 0.0));
+        rxs.push(server.submit(SubmitRequest::new(input)).expect("submit"));
     }
     let mut max_batch_seen = 0;
     for rx in rxs {
@@ -93,10 +95,21 @@ fn router_respects_accuracy_constraints_live() {
     let mut rng = Pcg::seeded(11);
     let input: Vec<f32> = (0..reg.input_dim).map(|_| rng.normal() as f32).collect();
     // min_accuracy 75 forces resnet18 (idx 3) over mobilenet_025 (idx 0).
-    let r = server.submit(input.clone(), 10_000.0, 75.0).recv().unwrap();
+    let r = server
+        .submit(SubmitRequest::new(input.clone()).with_min_accuracy(75.0))
+        .expect("submit")
+        .recv()
+        .unwrap();
     assert_eq!(r.model, 3, "accuracy constraint ignored");
     // Unconstrained goes to the cheapest model.
-    let r = server.submit(input, 10_000.0, 0.0).recv().unwrap();
+    let r = server.submit(SubmitRequest::new(input.clone())).expect("submit")
+        .recv().unwrap();
     assert_eq!(r.model, 0);
+    // Typed rejection instead of a panic: wrong input width.
+    let err = server.submit(SubmitRequest::new(input[..1].to_vec())).unwrap_err();
+    assert_eq!(
+        err,
+        paragon::serving::SubmitError::BadInput { expected: reg.input_dim, got: 1 }
+    );
     server.shutdown();
 }
