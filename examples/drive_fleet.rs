@@ -80,13 +80,15 @@ fn main() -> anyhow::Result<()> {
     fleet.advance(end);
     let rep = fleet.report(end);
     println!("\n=== drive_fleet ({scheme_name}) ===");
-    println!("requests served   {} (+{} dropped, +{} still queued)",
-             rep.served, rep.dropped, rep.queued);
+    println!("requests served   {} (+{} offloaded to lambdas, +{} dropped, \
+              +{} still queued)",
+             rep.served, rep.offloaded, rep.dropped, rep.queued);
     println!("SLO violations    {} ({:.2}%)", rep.violations,
              rep.violations as f64 / rep.served.max(1) as f64 * 100.0);
     println!("mean queue wait   {:.1} ms", rep.mean_wait_ms);
     println!("peak replicas     {}", rep.peak_replicas);
-    println!("fleet bill        ${:.4}", rep.cost_usd);
+    println!("fleet bill        ${:.4} VM + ${:.4} lambda", rep.cost_usd,
+             rep.lambda_cost_usd);
     for (name, n) in &rep.spawned_by_type {
         println!("  {:<12} {:>4} replicas launched", name, n);
     }

@@ -8,9 +8,11 @@
 //! [`ServeEnv`](crate::rl::env::ServeEnv); the env now delegates here, so
 //! RL training and the live control loop exercise the same contract.
 
+use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
-use crate::scheduler::Action;
+use crate::models::Registry;
+use crate::scheduler::{Action, OffloadPolicy};
 use crate::sim::core::SimCore;
 
 /// Fluid sub-fleets over one model's palette. Drains cancel the target
@@ -33,6 +35,10 @@ pub struct FluidFleet {
     /// In-flight boots; the payload is the palette index the capacity
     /// lands on.
     boots: SimCore<usize>,
+    /// Serverless valve (absent on capacity-only fleets built without a
+    /// registry): the RL env bills its fluid lambda mass through it, so
+    /// the fleet's [`FleetView`] reports offload like every other backend.
+    valve: Option<ServerlessValve>,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
@@ -47,8 +53,23 @@ impl FluidFleet {
             running: vec![0; n],
             booting: vec![0; n],
             boots: SimCore::new(),
+            valve: None,
             clock: 0.0,
         }
+    }
+
+    /// A fluid fleet with a serverless valve over `reg`'s model pool (the
+    /// RL environment's configuration).
+    pub fn with_valve(reg: &Registry, model: usize,
+                      palette: Vec<&'static VmType>) -> FluidFleet {
+        let mut f = Self::new(model, palette);
+        f.valve = Some(ServerlessValve::new(reg));
+        f
+    }
+
+    /// The fleet's serverless valve, if it has one.
+    pub fn valve_mut(&mut self) -> Option<&mut ServerlessValve> {
+        self.valve.as_mut()
     }
 
     /// Running VMs per palette entry, palette order.
@@ -131,13 +152,37 @@ impl FleetActuator for FluidFleet {
                 b.add(self.model, t, VmPhase::Booting, 0.0);
             }
         }
+        if let Some(v) = &self.valve {
+            b.set_lambda(v.usage());
+        }
         b.build(self.clock)
     }
 
     fn demand(&mut self) -> DemandSnapshot {
         // The fluid fleet models capacity only; its embedding environment
-        // tracks arrivals and queues itself.
-        DemandSnapshot::default()
+        // tracks arrivals and queues itself. Valve usage is still reported
+        // (the valve is the fleet's, not the environment's).
+        DemandSnapshot {
+            offloaded: self.valve.as_mut().map(ServerlessValve::drain_offloaded)
+                                 .unwrap_or_default(),
+            ..DemandSnapshot::default()
+        }
+    }
+
+    fn set_offload(&mut self, policy: OffloadPolicy) {
+        if let Some(v) = &mut self.valve {
+            v.set_policy(policy);
+        }
+    }
+
+    fn try_offload(&mut self, model: usize, slo_ms: f64, strict: bool,
+                   now: f64) -> Option<LambdaOutcome> {
+        debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+        let v = self.valve.as_mut()?;
+        if !v.admits(strict) {
+            return None;
+        }
+        Some(v.invoke(model, slo_ms, now))
     }
 }
 

@@ -19,26 +19,32 @@
 //!   times, bounded-wait drops) so control-plane experiments, figures and
 //!   CI tests exercise the live path without AOT artifacts.
 //!
-//! Attached-mode caveat: per-replica busy slots and queues are tracked by
-//! the *dry-run* admission model only — `submit` hands the request to a
-//! pool's own batcher and gets no completion callback, so in attached
-//! mode [`FleetActuator::view`] reports utilization 0.0 and
-//! `demand().queued` stays empty. Drive attached fleets with rate-based
-//! deciders (reactive/paragon/RL policies); utilization-threshold schemes
-//! (util_aware) need the dry-run path until completion callbacks are
-//! wired (see ROADMAP).
+//! Both modes carry the **serverless valve** ([`ServerlessValve`]): when
+//! the control loop opens it (a scheme's offload gate or the decoded RL
+//! action's offload component), overflow requests — fresh arrivals that
+//! find no free slot, and queued requests whose SLO class the policy
+//! admits — divert to lambdas with per-request sizing, warm-pool cold
+//! starts and per-invocation billing, exactly as in the request-level
+//! simulator. Utilization is reported in both modes: dry-run from
+//! per-replica busy slots, attached from the in-flight counters maintained
+//! by completion callbacks ([`Server`] calls the fleet's hook as each
+//! batch finishes), so utilization-threshold schemes (util_aware) read
+//! real numbers against live pools.
 
+use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
 use crate::models::Registry;
 use crate::runtime::engine::EngineHandle;
-use crate::scheduler::{Action, TypeCap};
+use crate::scheduler::{Action, OffloadPolicy, TypeCap};
 use crate::serving::router::Router;
 use crate::serving::{LiveResponse, Server, ServerConfig, ServerStats, SubmitError,
                      SubmitRequest};
 use crate::sim::core::SimCore;
+use crate::trace::Strictness;
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 
 #[derive(Debug, Clone)]
 pub struct ServerFleetConfig {
@@ -102,15 +108,26 @@ struct DryQueued {
 /// End-of-run summary of a [`ServerFleet`] drive.
 #[derive(Debug, Clone)]
 pub struct LiveReport {
+    /// Requests served on VM replicas.
     pub served: u64,
     pub violations: u64,
     /// Requests dropped after waiting past the queue timeout (each also
-    /// counted as a violation). served + dropped + queued = ingested.
+    /// counted as a violation).
     pub dropped: u64,
+    /// Requests the serverless valve absorbed (overflow diverted to
+    /// lambdas while the offload policy admitted them).
+    pub offloaded: u64,
     /// Requests still waiting for capacity when the report was taken.
+    ///
+    /// Conservation (asserted by [`ServerFleet::report`], mirroring the
+    /// simulator's `SimReport` invariant):
+    /// served + dropped + offloaded + queued = ingested.
     pub queued: usize,
     /// Total replica billing (per-second EC2 pricing, 60 s minimum).
     pub cost_usd: f64,
+    /// Total serverless billing (per-invocation, GB-seconds).
+    pub lambda_cost_usd: f64,
+    /// Mean queue wait of VM-served requests, ms.
     pub mean_wait_ms: f64,
     pub peak_replicas: usize,
     /// Replicas launched per instance-type name over the whole run.
@@ -133,10 +150,19 @@ pub struct ServerFleet {
     queues: Vec<VecDeque<DryQueued>>,
     /// Dry-run in-flight completions: payload (replica id, model).
     completions: SimCore<(u64, usize)>,
+    /// The serverless valve: absorbs overflow when the control loop opens
+    /// it ([`FleetActuator::set_offload`]).
+    valve: ServerlessValve,
     retired_cost: f64,
+    /// Dry-run requests admitted via [`Self::ingest`] (the conservation
+    /// denominator; `note_arrival` demand-only counts are excluded).
+    ingested: u64,
     served: u64,
     violations: u64,
+    /// Per-model violations since the last demand() snapshot.
+    viol_delta: Vec<u64>,
     dropped: u64,
+    offloaded: u64,
     wait_ms_sum: f64,
     peak_replicas: usize,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
@@ -147,6 +173,11 @@ pub struct ServerFleet {
     engine: Option<EngineHandle>,
     pools: Vec<Option<Server>>,
     router: Option<Router>,
+    /// Attached-mode in-flight requests per palette entry: incremented at
+    /// [`Self::submit`], decremented by the completion hook each pool
+    /// calls as batches finish. The utilization numerator in attached
+    /// mode (dry-run tracks per-replica busy slots instead).
+    inflight: Vec<Arc<AtomicU64>>,
 }
 
 impl ServerFleet {
@@ -191,15 +222,22 @@ impl ServerFleet {
             arrivals: vec![0; n],
             queues: (0..n).map(|_| VecDeque::new()).collect(),
             completions: SimCore::new(),
+            valve: ServerlessValve::new(reg),
             retired_cost: 0.0,
+            ingested: 0,
             served: 0,
             violations: 0,
+            viol_delta: vec![0; n],
             dropped: 0,
+            offloaded: 0,
             wait_ms_sum: 0.0,
             peak_replicas: 0,
             clock: 0.0,
             spawned_by_type: BTreeMap::new(),
             pools: (0..cfg.vm_types.len()).map(|_| None).collect(),
+            inflight: (0..cfg.vm_types.len())
+                .map(|_| Arc::new(AtomicU64::new(0)))
+                .collect(),
             router,
             engine,
             cfg,
@@ -254,13 +292,40 @@ impl ServerFleet {
     }
 
     /// Dry-run arrival: admit to a free slot (cheapest type first,
-    /// most-loaded replica first, mirroring the simulator's bin-packing)
-    /// or queue FIFO.
+    /// most-loaded replica first, mirroring the simulator's bin-packing);
+    /// overflow diverts to the serverless valve when the current offload
+    /// policy admits the request's SLO class (sub-second SLOs are strict,
+    /// [`Strictness::from_slo_ms`]), else queues FIFO.
     pub fn ingest(&mut self, model: usize, slo_ms: f64, now: f64) {
         self.arrivals[model] += 1;
-        if !self.try_dispatch(model, slo_ms, now, now) {
+        self.ingested += 1;
+        if self.try_dispatch(model, slo_ms, now, now) {
+            return;
+        }
+        if self.valve.admits(Strictness::from_slo_ms(slo_ms) == Strictness::Strict) {
+            self.offload_one(model, slo_ms, now, now);
+        } else {
             self.queues[model].push_back(DryQueued { slo_ms, arrival: now });
         }
+    }
+
+    /// SLO violation bookkeeping (cumulative + per-model snapshot delta).
+    fn note_violation(&mut self, model: usize) {
+        self.violations += 1;
+        self.viol_delta[model] += 1;
+    }
+
+    /// Divert one overflow request to the valve: per-request lambda sizing
+    /// and warm-pool cold starts; the invocation violates when queue wait
+    /// plus lambda latency exceeds the SLO.
+    fn offload_one(&mut self, model: usize, slo_ms: f64, arrival: f64,
+                   now: f64) -> LambdaOutcome {
+        let out = self.valve.invoke(model, slo_ms, now);
+        self.offloaded += 1;
+        if (now - arrival) * 1000.0 + out.latency_ms > slo_ms {
+            self.note_violation(model);
+        }
+        out
     }
 
     fn try_dispatch(&mut self, model: usize, slo_ms: f64, arrival: f64,
@@ -287,7 +352,7 @@ impl ServerFleet {
                 self.served += 1;
                 self.wait_ms_sum += wait_ms;
                 if wait_ms + svc * 1000.0 > slo_ms {
-                    self.violations += 1;
+                    self.note_violation(model);
                 }
                 return true;
             }
@@ -310,8 +375,17 @@ impl ServerFleet {
                         vm_types: self.cfg.vm_types.clone(),
                         ..self.cfg.server.clone()
                     };
-                    self.pools[k] =
-                        Some(Server::start(engine.clone(), &self.reg, server_cfg));
+                    // Completion callback: the pool reports every finished
+                    // batch (success or error) so the fleet's in-flight
+                    // counter — and hence attached-mode utilization —
+                    // tracks real execution.
+                    let inflight = self.inflight[k].clone();
+                    let hook: crate::serving::CompletionHook =
+                        Arc::new(move |_model, n| {
+                            inflight.fetch_sub(n as u64, Ordering::Relaxed);
+                        });
+                    self.pools[k] = Some(Server::start_with_hook(
+                        engine.clone(), &self.reg, server_cfg, Some(hook)));
                 }
             }
         }
@@ -321,6 +395,15 @@ impl ServerFleet {
     /// timestamped at `t` (when the capacity became available). Heads
     /// waiting past the queue timeout are dropped first and counted as
     /// violations — the same bounded-queue rule the simulator applies.
+    /// With the valve open, queued heads that cannot get a slot divert to
+    /// lambdas instead of waiting (the burst-absorption path).
+    ///
+    /// Every request takes exactly ONE accounting path — served, dropped
+    /// or offloaded. In particular a head that times out the same tick it
+    /// becomes offload-eligible is dropped once, never also billed to the
+    /// valve (its SLO is long blown; paying for a lambda would both
+    /// double-count the request and waste money). `report()` asserts the
+    /// resulting conservation law.
     fn dispatch_queued(&mut self, t: f64) {
         for m in 0..self.queues.len() {
             loop {
@@ -331,14 +414,21 @@ impl ServerFleet {
                 if t - head.arrival > self.cfg.queue_timeout_s {
                     self.queues[m].pop_front();
                     self.dropped += 1;
-                    self.violations += 1; // a drop is by definition a violation
+                    self.note_violation(m); // a drop is by definition a violation
                     continue;
                 }
                 if self.try_dispatch(m, head.slo_ms, head.arrival, t) {
                     self.queues[m].pop_front();
-                } else {
-                    break;
+                    continue;
                 }
+                let strict = Strictness::from_slo_ms(head.slo_ms)
+                    == Strictness::Strict;
+                if self.valve.admits(strict) {
+                    self.queues[m].pop_front();
+                    self.offload_one(m, head.slo_ms, head.arrival, t);
+                    continue;
+                }
+                break;
             }
         }
     }
@@ -361,7 +451,19 @@ impl ServerFleet {
                 continue;
             }
             if let Some(pool) = &self.pools[k] {
-                return pool.submit(req);
+                // Count BEFORE submitting: the pool's completion hook may
+                // fire before this thread resumes, and the u64 counter
+                // must never decrement past zero (an underflow would peg
+                // attached-mode utilization at 1.0). A failed submit
+                // uncounts.
+                self.inflight[k].fetch_add(1, Ordering::Relaxed);
+                match pool.submit(req) {
+                    Ok(rx) => return Ok(rx),
+                    Err(e) => {
+                        self.inflight[k].fetch_sub(1, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                }
             }
         }
         Err(SubmitError::NoCapacity)
@@ -372,14 +474,26 @@ impl ServerFleet {
         self.pools.iter_mut().filter_map(Option::take).map(Server::shutdown).collect()
     }
 
-    /// End-of-run summary.
+    /// End-of-run summary. Asserts request conservation (the invariant
+    /// mirrored from the simulator's `SimReport`): every ingested request
+    /// is served, dropped or offloaded exactly once, or still queued.
     pub fn report(&self, now: f64) -> LiveReport {
+        let queued: usize = self.queues.iter().map(VecDeque::len).sum();
+        assert_eq!(
+            self.ingested,
+            self.served + self.dropped + self.offloaded + queued as u64,
+            "request conservation violated: {} ingested vs {} served + {} \
+             dropped + {} offloaded + {queued} queued",
+            self.ingested, self.served, self.dropped, self.offloaded
+        );
         LiveReport {
             served: self.served,
             violations: self.violations,
             dropped: self.dropped,
-            queued: self.queues.iter().map(VecDeque::len).sum(),
+            offloaded: self.offloaded,
+            queued,
             cost_usd: self.total_cost(now),
+            lambda_cost_usd: self.valve.usage().cost_usd,
             mean_wait_ms: if self.served == 0 {
                 0.0
             } else {
@@ -525,20 +639,39 @@ impl FleetActuator for ServerFleet {
 
     fn view(&self) -> FleetView {
         let mut b = FleetViewBuilder::new();
+        // Attached mode: in-flight counters (maintained by the pools'
+        // completion hooks) are per palette entry, so pool k's load is
+        // attributed evenly across its running replicas — the per-replica
+        // split lives inside the pool's batcher. Dry-run tracks busy slots
+        // per replica directly.
+        let attached = self.engine.is_some();
+        let mut pool_slots = vec![0u64; self.cfg.vm_types.len()];
+        if attached {
+            for r in &self.replicas {
+                if r.state == ReplicaState::Running {
+                    pool_slots[r.k] += r.slots as u64;
+                }
+            }
+        }
         for r in &self.replicas {
             match r.state {
-                ReplicaState::Running => b.add(
-                    r.model,
-                    self.cfg.vm_types[r.k],
-                    VmPhase::Running,
-                    r.busy as f64 / r.slots.max(1) as f64,
-                ),
+                ReplicaState::Running => {
+                    let util = if attached {
+                        let inflight =
+                            self.inflight[r.k].load(Ordering::Relaxed) as f64;
+                        (inflight / pool_slots[r.k].max(1) as f64).min(1.0)
+                    } else {
+                        r.busy as f64 / r.slots.max(1) as f64
+                    };
+                    b.add(r.model, self.cfg.vm_types[r.k], VmPhase::Running, util)
+                }
                 ReplicaState::Booting => {
                     b.add(r.model, self.cfg.vm_types[r.k], VmPhase::Booting, 0.0)
                 }
                 ReplicaState::Draining => {}
             }
         }
+        b.set_lambda(self.valve.usage());
         b.build(self.clock)
     }
 
@@ -547,7 +680,27 @@ impl FleetActuator for ServerFleet {
         DemandSnapshot {
             arrivals: std::mem::replace(&mut self.arrivals, vec![0; n]),
             queued: self.queues.iter().map(VecDeque::len).collect(),
+            offloaded: self.valve.drain_offloaded(),
+            violations: std::mem::replace(&mut self.viol_delta, vec![0; n]),
         }
+    }
+
+    fn set_offload(&mut self, policy: OffloadPolicy) {
+        self.valve.set_policy(policy);
+    }
+
+    fn try_offload(&mut self, model: usize, slo_ms: f64, strict: bool,
+                   now: f64) -> Option<LambdaOutcome> {
+        if !self.valve.admits(strict) {
+            return None;
+        }
+        // try_offload bypasses ingest(): count the request as ingested so
+        // the conservation ledger stays balanced, then take the SAME
+        // accounting path as ingest-time overflow (offloaded + violation
+        // bookkeeping) — the two live admission surfaces must agree on
+        // what one offloaded request means.
+        self.ingested += 1;
+        Some(self.offload_one(model, slo_ms, now, now))
     }
 }
 
@@ -634,5 +787,74 @@ mod tests {
         let mut f = fleet2();
         let err = f.submit(SubmitRequest::new(vec![0.0; 4])).unwrap_err();
         assert_eq!(err, SubmitError::NoCapacity);
+    }
+
+    #[test]
+    fn open_valve_absorbs_overflow_and_drains_queued_strict() {
+        let mut f = fleet2();
+        let m4 = vm_type("m4.large").unwrap();
+        f.apply(&Action::Spawn { model: 3, vm_type: m4, count: 1 }, 0.0);
+        f.advance(200.0);
+        let slots = f.caps[3][0].slots_per_vm as usize;
+        // Saturate the replica with relaxed work, valve closed.
+        for _ in 0..slots {
+            f.ingest(3, 20_000.0, 200.0);
+        }
+        // Strict overflow with the valve closed queues (pre-valve behavior).
+        f.ingest(3, 500.0, 200.0);
+        assert_eq!(f.queues[3].len(), 1);
+        assert_eq!(f.offloaded, 0);
+        // Open the valve strict-only: the queued strict head diverts to a
+        // lambda at the next dispatch pass (before any slot frees).
+        f.set_offload(OffloadPolicy::StrictOnly);
+        f.advance(200.1);
+        assert_eq!(f.queues[3].len(), 0, "queued strict head must offload");
+        assert_eq!(f.offloaded, 1);
+        // Fresh strict overflow now offloads at ingest; relaxed still queues.
+        f.ingest(3, 500.0, 200.2);
+        assert_eq!(f.offloaded, 2);
+        f.ingest(3, 20_000.0, 200.2);
+        assert_eq!(f.queues[3].len(), 1, "relaxed must not offload under StrictOnly");
+        let rep = f.report(200.3); // conservation asserted inside
+        assert_eq!(rep.offloaded, 2);
+        assert!(rep.lambda_cost_usd > 0.0, "offloads must bill lambda cost");
+    }
+
+    #[test]
+    fn timed_out_head_drops_once_even_when_offloadable() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut f = ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: vec![m4],
+            queue_timeout_s: 30.0,
+            ..ServerFleetConfig::default()
+        });
+        // No capacity: a strict request queues while the valve is closed.
+        f.ingest(0, 500.0, 0.0);
+        // The valve opens; by the next pass the head has ALSO timed out.
+        // Exactly one accounting path: it drops (its SLO is long blown),
+        // and is not additionally billed to the valve.
+        f.set_offload(OffloadPolicy::All);
+        f.advance(31.0);
+        let rep = f.report(31.0);
+        assert_eq!(rep.dropped, 1);
+        assert_eq!(rep.offloaded, 0, "a dropped request must not also offload");
+        assert_eq!(rep.violations, 1, "counted once, not per path");
+        // A fresh arrival under the open valve offloads immediately.
+        f.ingest(0, 500.0, 31.5);
+        let rep = f.report(32.0);
+        assert_eq!((rep.dropped, rep.offloaded), (1, 1));
+    }
+
+    #[test]
+    fn view_reports_valve_usage() {
+        let mut f = fleet2();
+        assert_eq!(f.view().lambda.served, 0.0);
+        f.set_offload(OffloadPolicy::All);
+        f.ingest(3, 500.0, 0.0); // no capacity: straight to the valve
+        let v = f.view();
+        assert_eq!(v.lambda.served, 1.0);
+        assert!(v.lambda.cost_usd > 0.0);
+        assert_eq!(v.lambda.cold_starts, 1, "first invocation cold-starts");
     }
 }

@@ -35,16 +35,19 @@
 pub mod fluid;
 pub mod live;
 pub mod sim;
+pub mod valve;
 
 pub use fluid::FluidFleet;
 pub use live::{LiveReport, ServerFleet, ServerFleetConfig};
 pub use sim::{cluster_view, ClusterActuator};
+pub use valve::{LambdaOutcome, LambdaUsage, ServerlessValve};
 
 use crate::cloud::pricing::VmType;
 use crate::models::Registry;
 use crate::rl::baselines::EnvPolicy;
 use crate::rl::env::{decode_action, ObsLayout, ObsSignals};
-use crate::scheduler::{Action, LoadMonitor, ModelDemand, SchedObs, Scheme, TypeCap};
+use crate::scheduler::{Action, LoadMonitor, ModelDemand, OffloadPolicy, SchedObs,
+                       Scheme, TypeCap};
 use crate::util::stats::Ewma;
 use std::collections::BTreeMap;
 
@@ -70,12 +73,15 @@ pub struct SubFleet {
 pub struct FleetView {
     pub now: f64,
     subfleets: Vec<SubFleet>,
+    /// Cumulative serverless-valve usage of the fleet behind this view
+    /// (zero for backends without a valve).
+    pub lambda: LambdaUsage,
 }
 
 impl FleetView {
     /// A view of an empty fleet (cold start / unit tests).
     pub fn empty(now: f64) -> FleetView {
-        FleetView { now, subfleets: Vec::new() }
+        FleetView { now, subfleets: Vec::new(), lambda: LambdaUsage::default() }
     }
 
     pub fn subfleets(&self) -> &[SubFleet] {
@@ -155,6 +161,7 @@ pub enum VmPhase {
 /// comparable across backends).
 pub struct FleetViewBuilder {
     map: BTreeMap<(usize, &'static str), SubFleet>,
+    lambda: LambdaUsage,
 }
 
 impl Default for FleetViewBuilder {
@@ -165,7 +172,12 @@ impl Default for FleetViewBuilder {
 
 impl FleetViewBuilder {
     pub fn new() -> FleetViewBuilder {
-        FleetViewBuilder { map: BTreeMap::new() }
+        FleetViewBuilder { map: BTreeMap::new(), lambda: LambdaUsage::default() }
+    }
+
+    /// Attach the fleet's cumulative serverless-valve usage.
+    pub fn set_lambda(&mut self, usage: LambdaUsage) {
+        self.lambda = usage;
     }
 
     /// Record one alive fleet member. `utilization` is busy/slots and is
@@ -189,7 +201,8 @@ impl FleetViewBuilder {
     }
 
     pub fn build(self, now: f64) -> FleetView {
-        FleetView { now, subfleets: self.map.into_values().collect() }
+        FleetView { now, subfleets: self.map.into_values().collect(),
+                    lambda: self.lambda }
     }
 }
 
@@ -200,6 +213,13 @@ impl FleetViewBuilder {
 pub struct DemandSnapshot {
     pub arrivals: Vec<u64>,
     pub queued: Vec<usize>,
+    /// Per-model requests the serverless valve absorbed since the last
+    /// snapshot (fractional for the fluid backend; empty reads as zero).
+    pub offloaded: Vec<f64>,
+    /// Per-model SLO violations since the last snapshot (backends that do
+    /// not track violations — or whose embedding loop owns them — report
+    /// nothing; missing entries read as zero).
+    pub violations: Vec<u64>,
 }
 
 /// A fleet that typed [`Action`]s can reconfigure — the actuator half of
@@ -227,6 +247,23 @@ pub trait FleetActuator {
     /// that do not track demand (the fluid fleet) report nothing.
     fn demand(&mut self) -> DemandSnapshot {
         DemandSnapshot::default()
+    }
+
+    /// Set the serverless-valve policy: which overflow requests the fleet
+    /// may divert to lambdas until the next control tick. The control loop
+    /// calls this every tick with the scheme's `offload()` (or the decoded
+    /// RL action's offload component), so the decision actuates on every
+    /// backend the same way. Valveless backends ignore it.
+    fn set_offload(&mut self, _policy: OffloadPolicy) {}
+
+    /// Divert one overflow request through the fleet's serverless valve,
+    /// if the current policy admits its SLO class. Returns the invocation
+    /// outcome, or `None` when the policy refuses the request (or the
+    /// backend has no valve). The *caller* decides when a request is
+    /// overflow — the valve only decides eligibility and billing.
+    fn try_offload(&mut self, _model: usize, _slo_ms: f64, _strict: bool,
+                   _now: f64) -> Option<LambdaOutcome> {
+        None
     }
 }
 
@@ -266,6 +303,11 @@ pub struct ControlLoop {
     caps: Vec<Vec<TypeCap>>,
     monitor: LoadMonitor,
     rates: Vec<Ewma>,
+    /// Recent offloaded-share of arrivals (0.9/0.1 EWMA, the RL env's
+    /// `recent_lambda` semantics) — rendered into policy observations.
+    recent_lambda: f64,
+    /// Recent violation-share of arrivals (same EWMA as the env).
+    recent_viol: f64,
 }
 
 impl ControlLoop {
@@ -273,7 +315,14 @@ impl ControlLoop {
         assert!(!palette.is_empty(), "empty vm-type palette");
         let caps = palette_caps(reg, &palette);
         let rates = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
-        ControlLoop { palette, caps, monitor: LoadMonitor::new(), rates }
+        ControlLoop {
+            palette,
+            caps,
+            monitor: LoadMonitor::new(),
+            rates,
+            recent_lambda: 0.0,
+            recent_viol: 0.0,
+        }
     }
 
     /// Per-model capacity axes over the palette (palette order).
@@ -332,6 +381,10 @@ impl ControlLoop {
         for a in &actions {
             actuator.apply(a, now);
         }
+        // The scheme's offload gate actuates on the fleet's serverless
+        // valve until the next tick (pre-valve, only the simulator's
+        // arrival loop honored it — the live path dropped it).
+        actuator.set_offload(scheme.offload());
         TickResult { actions, demands }
     }
 
@@ -341,14 +394,10 @@ impl ControlLoop {
     /// artifacts and the heuristic baselines drive a live fleet unchanged.
     /// Advances the actuator to `now` first (boots land before the policy
     /// observes), then applies the decoded scaling delta (~5% of the
-    /// running fleet, min 1 — the env's step size). Returns the action id.
-    ///
-    /// Known fidelity gap: actuators have no serverless valve yet, so the
-    /// action's *offload* component is decoded but not actuated, and the
-    /// observation's lambda/violation shares render as 0.0 (the fleets
-    /// report neither). Policies keyed on the scaling dimensions transfer
-    /// exactly; offload-heavy policies see their valve as a no-op on live
-    /// backends (tracked in ROADMAP).
+    /// running fleet, min 1 — the env's step size) and sets the fleet's
+    /// serverless valve to the decoded offload component, so the full
+    /// `(vm_type, delta, offload)` action vocabulary actuates on every
+    /// backend. Returns the action id.
     pub fn tick_policy(&mut self, policy: &mut dyn EnvPolicy, layout: &ObsLayout,
                        model: usize, actuator: &mut dyn FleetActuator,
                        now: f64) -> usize {
@@ -362,9 +411,18 @@ impl ControlLoop {
         // monitor counts only the driven model's arrivals, so the live
         // rate signals must too. (The per-model rate EWMAs stay a
         // tick_scheme concern.)
-        self.monitor
-            .on_arrivals(snap.arrivals.get(model).copied().unwrap_or(0));
+        let arrived = snap.arrivals.get(model).copied().unwrap_or(0);
+        self.monitor.on_arrivals(arrived);
         self.monitor.tick();
+        // Lambda/violation shares with the env's recency semantics
+        // (0.9/0.1 EWMA of the per-tick share of arrivals) — live fleets
+        // report real offload and violation counts now, so these features
+        // no longer render as hardwired zeros on the live path.
+        let offl = snap.offloaded.get(model).copied().unwrap_or(0.0);
+        let viol = snap.violations.get(model).copied().unwrap_or(0);
+        let share = |x: f64| if arrived > 0 { x / arrived as f64 } else { 0.0 };
+        self.recent_lambda = 0.9 * self.recent_lambda + 0.1 * share(offl);
+        self.recent_viol = 0.9 * self.recent_viol + 0.1 * share(viol as f64);
         let view = actuator.view();
         let n = layout.caps.len();
         let mut running = vec![0u32; n];
@@ -380,13 +438,14 @@ impl ControlLoop {
             rate_pred: self.monitor.rate_pred(layout.caps[0].vm_type.boot_mean_s / 2.0),
             peak_to_median: self.monitor.peak_to_median(),
             queue: snap.queued.get(model).copied().unwrap_or(0) as f64,
-            lambda_share: 0.0,
-            viol_share: 0.0,
+            lambda_share: self.recent_lambda,
+            viol_share: self.recent_viol,
             strict_share: 0.5,
         };
         let obs = layout.render(&signals, &running, &booting);
         let a = policy.act(&obs);
-        let (k, delta, _offload) = decode_action(a, n);
+        let (k, delta, offload) = decode_action(a, n);
+        actuator.set_offload(offload);
         let total: u32 = running.iter().sum();
         let step = ((total as f64 * 0.05).ceil() as usize).max(1);
         if delta > 0 {
@@ -431,7 +490,7 @@ mod tests {
         fn demand(&mut self) -> DemandSnapshot {
             DemandSnapshot {
                 arrivals: std::mem::take(&mut self.arrivals),
-                queued: Vec::new(),
+                ..DemandSnapshot::default()
             }
         }
     }

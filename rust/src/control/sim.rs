@@ -6,11 +6,12 @@
 //! scaling entry point — the request-level simulator
 //! ([`crate::sim::engine`]) no longer carries bespoke spawn/drain plumbing.
 
+use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
 use crate::cloud::{Cluster, VmState};
 use crate::models::Registry;
-use crate::scheduler::{Action, TypeCap};
+use crate::scheduler::{Action, OffloadPolicy, TypeCap};
 
 /// Build a [`FleetView`] snapshot of any cluster (scheme unit tests build
 /// observations straight from a hand-assembled [`Cluster`]).
@@ -41,6 +42,10 @@ pub struct ClusterActuator {
     /// Per-model queue depths (set by the embedding event loop, which owns
     /// the actual request queues).
     queued: Vec<usize>,
+    /// The serverless valve: overflow requests the embedding loop routes
+    /// through [`FleetActuator::try_offload`] (policy set each control
+    /// tick from the scheme's offload gate).
+    valve: ServerlessValve,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
@@ -58,6 +63,7 @@ impl ClusterActuator {
             instance_cap,
             arrivals: vec![0; n],
             queued: vec![0; n],
+            valve: ServerlessValve::new(reg),
             clock: 0.0,
         }
     }
@@ -120,13 +126,32 @@ impl FleetActuator for ClusterActuator {
     }
 
     fn view(&self) -> FleetView {
-        cluster_view(&self.cluster, self.clock)
+        let mut v = cluster_view(&self.cluster, self.clock);
+        v.lambda = self.valve.usage();
+        v
     }
 
     fn demand(&mut self) -> DemandSnapshot {
         let n = self.arrivals.len();
         let arrivals = std::mem::replace(&mut self.arrivals, vec![0; n]);
-        DemandSnapshot { arrivals, queued: self.queued.clone() }
+        DemandSnapshot {
+            arrivals,
+            queued: self.queued.clone(),
+            offloaded: self.valve.drain_offloaded(),
+            violations: Vec::new(), // the embedding event loop owns SLO accounting
+        }
+    }
+
+    fn set_offload(&mut self, policy: OffloadPolicy) {
+        self.valve.set_policy(policy);
+    }
+
+    fn try_offload(&mut self, model: usize, slo_ms: f64, strict: bool,
+                   now: f64) -> Option<LambdaOutcome> {
+        if !self.valve.admits(strict) {
+            return None;
+        }
+        Some(self.valve.invoke(model, slo_ms, now))
     }
 }
 

@@ -1,0 +1,211 @@
+//! The serverless valve: the one offload path shared by every
+//! [`FleetActuator`](super::FleetActuator) backend.
+//!
+//! The paper's burst-absorption story (§IV-C1, MArk/Spock-style VM+lambda
+//! hybrids) hinges on overflow requests being divertable to serverless
+//! functions while slow-booting VMs provision. Pre-valve, only the
+//! request-level simulator actuated that decision — the live fleet decoded
+//! a policy's offload component and dropped it. The valve centralizes the
+//! mechanism so all three backends bill and count offloads identically:
+//!
+//! - **policy**: which overflow requests may offload
+//!   ([`OffloadPolicy`], set each control tick from the scheme's
+//!   `offload()` or the decoded RL action component);
+//! - **discrete path** ([`ServerlessValve::invoke`]): per-request lambda
+//!   sizing (`lambda_for_slo`, falling back to max memory), warm-pool
+//!   cold-start tracking and per-invocation billing — exactly the
+//!   request-level simulator's historical semantics, now shared with the
+//!   live [`ServerFleet`](super::ServerFleet);
+//! - **fluid path** ([`ServerlessValve::absorb`]): request *mass* at the
+//!   warm-invocation price with a 5% cold-start premium — the RL
+//!   environment's historical fluid-flow semantics.
+//!
+//! Usage counters ([`LambdaUsage`]) surface in every backend's
+//! [`FleetView`](super::FleetView), which is what the cross-backend
+//! offload-conformance suite compares.
+
+use crate::cloud::serverless::LambdaFn;
+use crate::cloud::WarmPool;
+use crate::models::Registry;
+use crate::scheduler::OffloadPolicy;
+use std::collections::BTreeMap;
+
+/// Cumulative serverless usage of one fleet (reported in its
+/// [`FleetView`](super::FleetView)).
+///
+/// `served` is an `f64` because the fluid backend absorbs fractional
+/// request mass; the discrete backends count whole invocations in it.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LambdaUsage {
+    /// Requests served by the valve (invocations, or fluid mass).
+    pub served: f64,
+    /// Total serverless billing, USD.
+    pub cost_usd: f64,
+    /// Cold starts among the discrete invocations.
+    pub cold_starts: u64,
+}
+
+/// Outcome of one discrete valve invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct LambdaOutcome {
+    /// End-to-end invocation latency (compute + cold start if any), ms.
+    pub latency_ms: f64,
+    pub cold: bool,
+    /// Billed cost of this invocation, USD.
+    pub cost_usd: f64,
+}
+
+/// Warm-pool bucket of a lambda deployment: memory rounded to 0.25 GB
+/// (one pool per distinct deployment, as in the request-level simulator).
+fn mem_bucket(f: &LambdaFn) -> u32 {
+    (f.mem_gb / 0.25).round() as u32
+}
+
+/// Serverless offload valve for one fleet. See the module docs.
+pub struct ServerlessValve {
+    reg: Registry,
+    policy: OffloadPolicy,
+    /// Fluid-path deployment per model: sized for a sub-second strict SLO,
+    /// else max memory (the RL environment's historical sizing).
+    fluid_fns: Vec<LambdaFn>,
+    /// Warm pools per `(model, memory bucket)` deployment.
+    pools: BTreeMap<(usize, u32), WarmPool>,
+    usage: LambdaUsage,
+    /// Per-model offloads since the last [`Self::drain_offloaded`] call.
+    offloaded_delta: Vec<f64>,
+}
+
+impl ServerlessValve {
+    /// A closed valve ([`OffloadPolicy::None`]) over the registry's models.
+    pub fn new(reg: &Registry) -> ServerlessValve {
+        let fluid_fns = reg
+            .models
+            .iter()
+            .map(|m| m.lambda_for_slo(1000.0).unwrap_or_else(|| m.lambda_at(3.0)))
+            .collect();
+        ServerlessValve {
+            reg: reg.clone(),
+            policy: OffloadPolicy::None,
+            fluid_fns,
+            pools: BTreeMap::new(),
+            usage: LambdaUsage::default(),
+            offloaded_delta: vec![0.0; reg.len()],
+        }
+    }
+
+    pub fn policy(&self) -> OffloadPolicy {
+        self.policy
+    }
+
+    pub fn set_policy(&mut self, policy: OffloadPolicy) {
+        self.policy = policy;
+    }
+
+    /// Whether the current policy admits a request of the given SLO class.
+    pub fn admits(&self, strict: bool) -> bool {
+        self.policy.admits(strict)
+    }
+
+    /// Discrete invocation: size the model's lambda for the request's SLO
+    /// (max-memory fallback), route through the deployment's warm pool,
+    /// bill per invocation. The caller gates on [`Self::admits`] — the
+    /// valve itself never refuses (a lambda can always be provisioned).
+    pub fn invoke(&mut self, model: usize, slo_ms: f64, now: f64) -> LambdaOutcome {
+        let m = &self.reg.models[model];
+        let f = m.lambda_for_slo(slo_ms).unwrap_or_else(|| m.lambda_at(3.0));
+        let pool = self.pools.entry((model, mem_bucket(&f))).or_default();
+        let cold = pool.invoke(now, f.compute_time_s(), f.cold_start_s());
+        let cost = f.invoke_cost(cold);
+        self.usage.served += 1.0;
+        self.usage.cost_usd += cost;
+        if cold {
+            self.usage.cold_starts += 1;
+        }
+        self.offloaded_delta[model] += 1.0;
+        LambdaOutcome { latency_ms: f.invoke_latency_s(cold) * 1000.0, cold, cost_usd: cost }
+    }
+
+    /// Fluid absorption: bill `mass` requests of `model` at the warm
+    /// per-invocation price with a 5% cold-start premium (the fluid model
+    /// folds cold starts into the premium instead of tracking pools).
+    /// Returns the billed cost.
+    pub fn absorb(&mut self, model: usize, mass: f64) -> f64 {
+        let cost = mass * self.fluid_fns[model].invoke_cost(false) * 1.05;
+        self.usage.served += mass;
+        self.usage.cost_usd += cost;
+        self.offloaded_delta[model] += mass;
+        cost
+    }
+
+    /// Cumulative usage counters (the [`FleetView`](super::FleetView)
+    /// lambda block).
+    pub fn usage(&self) -> LambdaUsage {
+        self.usage
+    }
+
+    /// Per-model offloads since the last call (the
+    /// [`DemandSnapshot`](super::DemandSnapshot) offload counters).
+    pub fn drain_offloaded(&mut self) -> Vec<f64> {
+        let n = self.offloaded_delta.len();
+        std::mem::replace(&mut self.offloaded_delta, vec![0.0; n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn valve() -> ServerlessValve {
+        ServerlessValve::new(&Registry::builtin())
+    }
+
+    #[test]
+    fn closed_by_default_and_policy_gates() {
+        let mut v = valve();
+        assert!(!v.admits(true) && !v.admits(false));
+        v.set_policy(OffloadPolicy::StrictOnly);
+        assert!(v.admits(true) && !v.admits(false));
+        v.set_policy(OffloadPolicy::All);
+        assert!(v.admits(true) && v.admits(false));
+    }
+
+    #[test]
+    fn first_invocation_cold_then_warm_reuse() {
+        let mut v = valve();
+        v.set_policy(OffloadPolicy::All);
+        let a = v.invoke(0, 1000.0, 0.0);
+        assert!(a.cold, "fresh pool must cold-start");
+        // Long after the first finishes (within the idle timeout): warm.
+        let b = v.invoke(0, 1000.0, 30.0);
+        assert!(!b.cold, "warm instance must be reused");
+        assert!(a.latency_ms > b.latency_ms);
+        assert!(a.cost_usd > b.cost_usd, "cold init time is billed");
+        let u = v.usage();
+        assert_eq!(u.served, 2.0);
+        assert_eq!(u.cold_starts, 1);
+        assert!((u.cost_usd - (a.cost_usd + b.cost_usd)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fluid_absorb_bills_warm_plus_premium() {
+        let mut v = valve();
+        let unit = v.fluid_fns[3].invoke_cost(false) * 1.05;
+        let c = v.absorb(3, 10.0);
+        assert!((c - 10.0 * unit).abs() < 1e-12);
+        assert_eq!(v.usage().served, 10.0);
+        assert_eq!(v.usage().cold_starts, 0, "fluid path tracks no pools");
+    }
+
+    #[test]
+    fn offload_deltas_drain_per_model() {
+        let mut v = valve();
+        v.invoke(2, 500.0, 0.0);
+        v.invoke(2, 500.0, 0.1);
+        v.absorb(3, 2.5);
+        let d = v.drain_offloaded();
+        assert_eq!(d[2], 2.0);
+        assert_eq!(d[3], 2.5);
+        assert!(v.drain_offloaded().iter().all(|&x| x == 0.0), "drained");
+        assert_eq!(v.usage().served, 4.5, "usage is cumulative, not drained");
+    }
+}

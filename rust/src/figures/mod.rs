@@ -566,11 +566,10 @@ pub fn fig_live(reg: &Registry, cfg: &FigConfig) -> Json {
 
     // --- live backend: the SAME policy object on a ServerFleet, fed the
     // identical arrival stream (the env's own Pcg substream) and rendering
-    // the env's own observation layout (no re-derivation to drift). Note
-    // the comparison covers the VM path: the live fleet has no serverless
-    // valve, so the policy's offload component is a no-op there while the
-    // env may offload strict overflow (small on an adequately-scaled
-    // fleet; part of the reported fidelity gap).
+    // the env's own observation layout (no re-derivation to drift). The
+    // policy's offload component actuates on both backends now: the
+    // fleet's serverless valve absorbs overflow whenever the decoded
+    // action opens it, so lambda share/cost are part of the comparison.
     let caps = env.type_caps().to_vec();
     let layout = env.obs_layout().clone();
     let mut fleet = ServerFleet::new(reg, ServerFleetConfig {
@@ -593,40 +592,58 @@ pub fn fig_live(reg: &Registry, cfg: &FigConfig) -> Json {
     for t in 0..trace.duration_s() {
         let now = t as f64 + 1.0;
         let n = rng.poisson(trace.rates[t]);
-        live_reqs += n;
-        for _ in 0..n {
-            fleet.ingest(model, 1000.0, now);
+        for i in 0..n {
+            // The env's workload is half strict / half relaxed
+            // (strict_share 0.5): alternate a sub-second interactive SLO
+            // with a queue-tolerant one so the valve sees the same SLO mix
+            // the fluid backend offloads.
+            let slo = if (live_reqs + i) % 2 == 0 { 500.0 } else { 20_000.0 };
+            fleet.ingest(model, slo, now);
         }
+        live_reqs += n;
         cl.tick_policy(&mut policy, &layout, model, &mut fleet, now);
     }
+    // Close the billing window consistently: VM cost pro-rated to the
+    // trace duration, valve usage snapshotted now, and the valve shut
+    // before the post-run queue-tail drain — otherwise a still-open valve
+    // would offload (and bill) tail requests whose cost/share would sit
+    // outside the snapshot while their violations land in the report.
     let live_cost = fleet.total_cost(trace.duration_s() as f64) - cost_at_t0;
+    let live_lambda = fleet.view().lambda;
+    fleet.set_offload(crate::scheduler::OffloadPolicy::None);
     let end = trace.duration_s() as f64 + 120.0;
     fleet.advance(end); // drain the queue tail on the final fleet
     let rep = fleet.report(end);
     let live_reqs = (live_reqs as f64).max(1.0);
+    let live_cost = live_cost + live_lambda.cost_usd;
 
     println!("\nFigure live: one policy ({}), two backends (berkeley, resnet18, \
               m4.large+c5.large)", policy.name());
-    hline(74);
-    println!("{:<14} {:>10} {:>12} {:>12} {:>12}", "backend", "cost $",
-             "viol rate", "wait ms", "requests");
-    hline(74);
-    println!("{:<14} {:>10.3} {:>12.4} {:>12} {:>12.0}", "sim-fluid", sim_cost,
-             sim_viol / sim_reqs, "-", sim_reqs);
-    println!("{:<14} {:>10.3} {:>12.4} {:>12.2} {:>12.0}", "server-fleet",
-             live_cost, rep.violations as f64 / live_reqs, rep.mean_wait_ms,
+    hline(86);
+    println!("{:<14} {:>10} {:>12} {:>10} {:>12} {:>12}", "backend", "cost $",
+             "viol rate", "lambda %", "wait ms", "requests");
+    hline(86);
+    println!("{:<14} {:>10.3} {:>12.4} {:>9.2}% {:>12} {:>12.0}", "sim-fluid",
+             sim_cost, sim_viol / sim_reqs,
+             env.episode_lambda / sim_reqs * 100.0, "-", sim_reqs);
+    println!("{:<14} {:>10.3} {:>12.4} {:>9.2}% {:>12.2} {:>12.0}",
+             "server-fleet", live_cost, rep.violations as f64 / live_reqs,
+             live_lambda.served / live_reqs * 100.0, rep.mean_wait_ms,
              live_reqs);
     let rows = vec![
         Json::obj(vec![
             ("backend", "sim-fluid".into()),
             ("cost_usd", sim_cost.into()),
             ("violation_rate", (sim_viol / sim_reqs).into()),
+            ("lambda_share", (env.episode_lambda / sim_reqs).into()),
             ("requests", sim_reqs.into()),
         ]),
         Json::obj(vec![
             ("backend", "server-fleet".into()),
             ("cost_usd", live_cost.into()),
             ("violation_rate", (rep.violations as f64 / live_reqs).into()),
+            ("lambda_share", (live_lambda.served / live_reqs).into()),
+            ("lambda_cost_usd", live_lambda.cost_usd.into()),
             ("requests", live_reqs.into()),
             ("mean_wait_ms", rep.mean_wait_ms.into()),
             ("peak_replicas", (rep.peak_replicas as f64).into()),
@@ -879,6 +896,17 @@ mod tests {
         // Neither backend collapses on SLOs under the greedy policy.
         assert!(get("sim-fluid", "violation_rate") < 0.5);
         assert!(get("server-fleet", "violation_rate") < 0.5);
+        // The policy's offload component actuates on the live backend now:
+        // a policy that opens the valve during bursts produces a NONZERO
+        // lambda share on the server fleet (pre-valve this column was
+        // structurally zero — the live path dropped the decision).
+        let live_lambda = get("server-fleet", "lambda_share");
+        assert!(
+            live_lambda > 0.0,
+            "offload decision must actuate on the live backend: {j}"
+        );
+        assert!(live_lambda < 0.6, "valve must stay a burst valve: {j}");
+        assert!(get("server-fleet", "lambda_cost_usd") > 0.0);
     }
 
     #[test]

@@ -56,7 +56,6 @@
 //! 9-action single-type space id-for-id.
 
 use crate::cloud::pricing::VmType;
-use crate::cloud::serverless::LambdaFn;
 use crate::control::{FleetActuator, FluidFleet};
 use crate::models::Registry;
 use crate::scheduler::{Action, LoadMonitor, OffloadPolicy, TypeCap};
@@ -214,6 +213,8 @@ impl ObsLayout {
 /// Fluid-flow serving environment over one trace and one instance palette.
 pub struct ServeEnv {
     trace: Trace,
+    /// Model pool (the fleet's valve is rebuilt from it on reset).
+    reg: Registry,
     /// Registry index of the representative pool model the workload runs.
     model: usize,
     /// Instance-type palette (head entry is the primary type: warm starts
@@ -222,7 +223,6 @@ pub struct ServeEnv {
     /// Capacities + observation normalizers, shared verbatim with the live
     /// control loop (see [`ObsLayout`]).
     layout: ObsLayout,
-    lambda: LambdaFn,
     strict_share: f64,
 
     // dynamic state
@@ -240,6 +240,8 @@ pub struct ServeEnv {
     pub episode_cost: f64,
     pub episode_violations: f64,
     pub episode_requests: f64,
+    /// Request mass the serverless valve absorbed over the episode.
+    pub episode_lambda: f64,
 }
 
 /// Per-step outcome.
@@ -274,17 +276,18 @@ impl ServeEnv {
             })
             .collect();
         let mean = trace.mean_rate();
-        // Lambda sized for a sub-second strict SLO, else max memory.
-        let lambda = m.lambda_for_slo(1000.0).unwrap_or_else(|| m.lambda_at(3.0));
         let horizon_s = trace.duration_s().max(1) as f64;
         let layout = ObsLayout::new(caps, mean, horizon_s);
-        let fleet = FluidFleet::new(model_idx, palette.clone());
+        // Fleet with a serverless valve: the env's offload decisions bill
+        // through it, so the fluid backend reports lambda usage in its
+        // FleetView like the sim and live backends.
+        let fleet = FluidFleet::with_valve(reg, model_idx, palette.clone());
         ServeEnv {
             trace,
+            reg: reg.clone(),
             model: model_idx,
             palette,
             layout,
-            lambda,
             strict_share: 0.5,
             t: 0,
             fleet,
@@ -297,6 +300,7 @@ impl ServeEnv {
             episode_cost: 0.0,
             episode_violations: 0.0,
             episode_requests: 0.0,
+            episode_lambda: 0.0,
         }
     }
 
@@ -360,7 +364,7 @@ impl ServeEnv {
     pub fn reset(&mut self) -> Vec<f32> {
         self.t = 0;
         let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
-        self.fleet = FluidFleet::new(self.model, self.palette.clone());
+        self.fleet = FluidFleet::with_valve(&self.reg, self.model, self.palette.clone());
         self.fleet.force_running(
             0,
             ((rate0 * self.layout.caps[0].service_s
@@ -376,6 +380,7 @@ impl ServeEnv {
         self.episode_cost = 0.0;
         self.episode_violations = 0.0;
         self.episode_requests = 0.0;
+        self.episode_lambda = 0.0;
         self.observe(rate0)
     }
 
@@ -403,6 +408,9 @@ impl ServeEnv {
     pub fn step(&mut self, a: usize) -> (Vec<f32>, StepResult) {
         let (k, delta, offload) = decode_action(a, self.palette.len());
         let now = self.t as f64;
+        // The offload component arms the fleet's serverless valve — the
+        // same set_offload every backend receives from the control loop.
+        self.fleet.set_offload(offload);
         // Scaling step: ~5% of the current fleet, at least one VM.
         let step_sz =
             ((self.fleet.total_running() as f64 * 0.05).ceil() as usize).max(1);
@@ -496,8 +504,9 @@ impl ServeEnv {
         self.queue_relaxed += new_relaxed;
 
         // Costs: per-second per-type VM billing (booting VMs bill too) +
-        // per-invocation lambda (warm-dominated; the fluid model folds cold
-        // starts into a 5% premium).
+        // the valve's fluid lambda billing (warm price with a 5% cold-start
+        // premium — the valve's absorb path, so the fluid backend's
+        // FleetView reports the same offload usage the sim/live valves do).
         let vm_cost: f64 = self
             .palette
             .iter()
@@ -507,8 +516,14 @@ impl ServeEnv {
                     * t.price.per_second()
             })
             .sum();
-        let lambda_cost = lambda_n * self.lambda.invoke_cost(false) * 1.05;
+        let model = self.model;
+        let lambda_cost = self
+            .fleet
+            .valve_mut()
+            .expect("env fleets always carry a valve")
+            .absorb(model, lambda_n);
         let cost = vm_cost + lambda_cost;
+        self.episode_lambda += lambda_n;
 
         self.recent_lambda = 0.9 * self.recent_lambda
             + 0.1 * if arrivals > 0.0 { lambda_n / arrivals } else { 0.0 };

@@ -44,6 +44,49 @@ impl EngineHandle {
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rx.recv().context("engine dropped response")?
     }
+
+    /// Loopback engine for artifact-free serving: answers every inference
+    /// with uniform class probabilities after `exec_ms` of simulated
+    /// device time. This is NOT a model — it exists so the serving path
+    /// (batcher, dispatch workers, completion hooks, attached
+    /// [`ServerFleet`](crate::control::ServerFleet) pools) can be
+    /// exercised end to end in CI and demos where no AOT artifacts (and,
+    /// offline, no real PJRT bindings) are available. The thread exits
+    /// when the last handle is dropped.
+    pub fn synthetic(reg: &Registry, model_indices: Vec<usize>,
+                     exec_ms: f64) -> EngineHandle {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let num_classes = reg.num_classes;
+        let input_dim = reg.input_dim;
+        let models: BTreeMap<usize, String> = model_indices
+            .into_iter()
+            .map(|i| (i, reg.models[i].name.clone()))
+            .collect();
+        std::thread::Builder::new()
+            .name("synthetic-engine".into())
+            .spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Shutdown => break,
+                        Cmd::Infer { n, resp, .. } => {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(
+                                exec_ms.max(0.0) / 1000.0,
+                            ));
+                            let probs =
+                                vec![1.0 / num_classes as f32; n * num_classes];
+                            let _ = resp.send(Ok(InferOutput {
+                                probs,
+                                batch: n,
+                                num_classes,
+                                exec_ms,
+                            }));
+                        }
+                    }
+                }
+            })
+            .expect("spawn synthetic engine");
+        EngineHandle { tx, models, input_dim, num_classes }
+    }
 }
 
 /// The engine thread itself; dropping joins (after a Shutdown).

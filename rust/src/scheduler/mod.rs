@@ -42,6 +42,19 @@ pub enum OffloadPolicy {
     All,
 }
 
+impl OffloadPolicy {
+    /// Whether a request of the given SLO class may be offloaded — the one
+    /// eligibility rule every backend's serverless valve applies
+    /// (see [`crate::control::ServerlessValve`]).
+    pub fn admits(self, strict: bool) -> bool {
+        match self {
+            OffloadPolicy::None => false,
+            OffloadPolicy::StrictOnly => strict,
+            OffloadPolicy::All => true,
+        }
+    }
+}
+
 /// What one VM of a given type offers one model: the per-`(model, vm_type)`
 /// capacity axis of a heterogeneous palette.
 #[derive(Debug, Clone, Copy, PartialEq)]

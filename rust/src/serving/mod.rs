@@ -12,7 +12,7 @@ pub mod batcher;
 pub mod router;
 pub mod server;
 
-pub use server::{Server, ServerConfig, ServerStats};
+pub use server::{CompletionHook, Server, ServerConfig, ServerStats};
 
 use std::time::Instant;
 

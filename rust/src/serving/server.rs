@@ -28,6 +28,14 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Callback a [`Server`] invokes once per finished batch — success *or*
+/// execution error — with `(model, n_requests)`. This is the completion
+/// feedback the control plane's live fleet uses to keep in-flight /
+/// utilization bookkeeping truthful in attached mode (see
+/// [`ServerFleet`](crate::control::ServerFleet)); erred batches must fire
+/// too or in-flight counts would leak upward forever.
+pub type CompletionHook = std::sync::Arc<dyn Fn(usize, usize) + Send + Sync>;
+
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Largest dynamic batch (<= largest AOT batch size).
@@ -92,6 +100,13 @@ pub struct Server {
 
 impl Server {
     pub fn start(engine: EngineHandle, reg: &Registry, cfg: ServerConfig) -> Server {
+        Self::start_with_hook(engine, reg, cfg, None)
+    }
+
+    /// Start with an optional per-batch completion callback (see
+    /// [`CompletionHook`]).
+    pub fn start_with_hook(engine: EngineHandle, reg: &Registry, cfg: ServerConfig,
+                           hook: Option<CompletionHook>) -> Server {
         let loaded: Vec<usize> = engine.models.keys().copied().collect();
         assert!(!loaded.is_empty(), "engine has no models loaded");
         let router = Router::new(reg, &loaded, cfg.selection, &cfg.vm_types);
@@ -165,6 +180,7 @@ impl Server {
             let engine = engine.clone();
             let counters = counters.clone();
             let latency = latency.clone();
+            let hook = hook.clone();
             let input_dim = engine.input_dim;
             threads.push(
                 std::thread::Builder::new()
@@ -178,6 +194,7 @@ impl Server {
                         counters.idle_workers.fetch_sub(1, Ordering::Relaxed);
                         let Ok(batch) = batch else { break };
                         let n = batch.requests.len();
+                        let model = batch.model;
                         let mut input = Vec::with_capacity(n * input_dim);
                         for r in &batch.requests {
                             input.extend_from_slice(&r.input);
@@ -217,6 +234,11 @@ impl Server {
                             Err(_) => {
                                 counters.errors.fetch_add(n as u64, Ordering::Relaxed);
                             }
+                        }
+                        // Fire after responses are sent, success or error,
+                        // so callers' in-flight bookkeeping never leaks.
+                        if let Some(h) = &hook {
+                            (**h)(model, n);
                         }
                     })
                     .expect("spawn dispatch"),

@@ -16,11 +16,10 @@
 use super::core::SimCore;
 use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
-use crate::cloud::serverless::LambdaFn;
 use crate::cloud::Cluster;
 use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator};
 use crate::models::{select, Registry, SelectionPolicy};
-use crate::scheduler::{Action, OffloadPolicy, Scheme, TypeCap};
+use crate::scheduler::{Action, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
 use crate::util::stats::LogHistogram;
@@ -179,9 +178,12 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     let mut cl = ControlLoop::new(reg, palette.clone());
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
     let mut completions: SimCore<Completion> = SimCore::new();
-    // Lambda warm pools per (model, memory-tier-bucket). Bucket = mem/0.25.
-    let mut pools: std::collections::BTreeMap<(usize, u32), crate::cloud::WarmPool> =
-        std::collections::BTreeMap::new();
+    // The serverless valve lives on the actuator (shared with the live
+    // backend); the control loop re-arms it from the scheme's gate each
+    // tick. Arm it for pre-first-tick arrivals too — the scheme's offload
+    // state only changes inside tick(), so this is exactly the old
+    // read-`scheme.offload()`-per-arrival behavior.
+    actuator.set_offload(scheme.offload());
 
     let mut rep = SimReport {
         scheme: scheme.name().to_string(),
@@ -288,37 +290,28 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 rep.served_vm += 1;
                 completions.schedule_at(done, Completion { vm_id, model: m });
             } else {
-                let eligible = match scheme.offload() {
-                    OffloadPolicy::All => true,
-                    OffloadPolicy::StrictOnly => r.strictness == Strictness::Strict,
-                    OffloadPolicy::None => false,
-                };
-                let lambda: Option<LambdaFn> = if eligible {
-                    reg.models[m]
-                        .lambda_for_slo(r.slo_ms)
-                        .or_else(|| Some(reg.models[m].lambda_at(3.0)))
-                } else {
-                    None
-                };
-                if let Some(f) = lambda {
-                    let bucket = (f.mem_gb / 0.25).round() as u32;
-                    let pool = pools.entry((m, bucket)).or_default();
-                    let dur = f.compute_time_s();
-                    let cold = pool.invoke(now, dur, f.cold_start_s());
-                    let latency_ms = f.invoke_latency_s(cold) * 1000.0;
-                    rep.cost_lambda += f.invoke_cost(cold);
-                    rep.served_lambda += 1;
-                    if cold {
-                        rep.lambda_cold_starts += 1;
+                // Overflow: the actuator's serverless valve (shared with
+                // the live backend) sizes, cold-starts and bills the
+                // invocation — or refuses under the current policy, in
+                // which case the request queues.
+                let strict = r.strictness == Strictness::Strict;
+                match actuator.try_offload(m, r.slo_ms, strict, now) {
+                    Some(out) => {
+                        rep.cost_lambda += out.cost_usd;
+                        rep.served_lambda += 1;
+                        if out.cold {
+                            rep.lambda_cold_starts += 1;
+                        }
+                        record(&mut rep, &mut lat_hist, &mut lat_samples,
+                               out.latency_ms, r.slo_ms, strict);
                     }
-                    record(&mut rep, &mut lat_hist, &mut lat_samples,
-                           latency_ms, r.slo_ms, r.strictness == Strictness::Strict);
-                } else {
-                    queues[m].push_back(Queued {
-                        slo_ms: r.slo_ms,
-                        arrival: now,
-                        strict: r.strictness == Strictness::Strict,
-                    });
+                    None => {
+                        queues[m].push_back(Queued {
+                            slo_ms: r.slo_ms,
+                            arrival: now,
+                            strict,
+                        });
+                    }
                 }
             }
         } else {
@@ -413,7 +406,7 @@ mod tests {
     use super::*;
     use crate::cloud::pricing::vm_type;
     use crate::scheduler;
-    use crate::scheduler::SchedObs;
+    use crate::scheduler::{OffloadPolicy, SchedObs};
     use crate::trace::{generators, synthesize_requests, WorkloadKind};
 
     fn run_scheme(name: &str, rate: f64) -> SimReport {

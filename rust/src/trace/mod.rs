@@ -76,6 +76,21 @@ pub enum Strictness {
     Relaxed,
 }
 
+impl Strictness {
+    /// SLO class of a bare latency bound: sub-second SLOs are strict
+    /// (interactive), everything else tolerates queueing. This is the one
+    /// workload convention both synthesis branches below follow, and what
+    /// ingestion paths that only carry an SLO (the live
+    /// [`ServerFleet`](crate::control::ServerFleet)) use to classify.
+    pub fn from_slo_ms(slo_ms: f64) -> Strictness {
+        if slo_ms < 1000.0 {
+            Strictness::Strict
+        } else {
+            Strictness::Relaxed
+        }
+    }
+}
+
 /// One inference query: Poisson arrival within its trace second plus the
 /// application constraints used by model selection and the schedulers.
 #[derive(Debug, Clone)]
@@ -126,8 +141,7 @@ pub fn synthesize_requests(trace: &Trace, kind: WorkloadKind, seed: u64) -> Vec<
                     // pool's feasible envelope (Fig 2).
                     let acc = rng.uniform(50.0, 88.0);
                     let slo = rng.uniform(400.0, 6000.0);
-                    let strict = if slo < 1000.0 { Strictness::Strict } else { Strictness::Relaxed };
-                    (slo, acc, strict)
+                    (slo, acc, Strictness::from_slo_ms(slo))
                 }
             };
             out.push(Request {

@@ -10,6 +10,10 @@
 //! - The same policy scales a two-type live fleet under a bursty trace
 //!   end to end: burst absorbed, cheapest type procured, requests
 //!   conserved.
+//! - Attached mode (synthetic loopback engine, no artifacts needed):
+//!   completion callbacks keep the in-flight counters truthful, so
+//!   `FleetView` utilization matches the closed form and util_aware
+//!   scales a live fleet instead of reading zeros.
 
 use paragon::cloud::pricing::{vm_type, VmPrice, VmType};
 use paragon::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator,
@@ -17,7 +21,9 @@ use paragon::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator
 use paragon::models::Registry;
 use paragon::rl::baselines::TypedGreedyPolicy;
 use paragon::rl::env::ObsLayout;
+use paragon::runtime::engine::EngineHandle;
 use paragon::scheduler::Action;
+use paragon::serving::SubmitRequest;
 use paragon::trace::{generators, TraceKind};
 use paragon::util::rng::Pcg;
 
@@ -180,7 +186,7 @@ fn typed_greedy_scales_live_fleet_under_burst() {
     let rep = fleet.report(duration as f64 + 120.0);
 
     assert_eq!(
-        rep.served + rep.dropped + rep.queued as u64,
+        rep.served + rep.dropped + rep.offloaded + rep.queued as u64,
         total,
         "requests lost: {rep:?}"
     );
@@ -201,4 +207,106 @@ fn typed_greedy_scales_live_fleet_under_burst() {
         "cheapest type never procured: {:?}",
         rep.spawned_by_type
     );
+}
+
+/// Attached fleet on the synthetic loopback engine (no artifacts needed):
+/// `exec_ms` is long enough that submissions observably stay in flight.
+fn attached_fleet(reg: &Registry, vm: &'static VmType, exec_ms: f64) -> ServerFleet {
+    let engine = EngineHandle::synthetic(reg, vec![0], exec_ms);
+    ServerFleet::with_engine(reg, ServerFleetConfig {
+        vm_types: vec![vm],
+        ..ServerFleetConfig::default()
+    }, engine)
+}
+
+/// Poll `cond` for up to ~2 s of wall time (completion hooks fire on pool
+/// worker threads shortly after responses are delivered).
+fn eventually(mut cond: impl FnMut() -> bool) -> bool {
+    for _ in 0..100 {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    cond()
+}
+
+#[test]
+fn attached_mode_utilization_matches_closed_form() {
+    let reg = Registry::builtin();
+    let m4 = vm_type("m4.large").unwrap();
+    let model = 0; // unconstrained submits route to the cheapest pool model
+    let slots = reg.models[model].slots_on(m4) as f64;
+    let replicas = 2usize;
+    // 1 s of simulated device time per batch: far longer than the
+    // submit→view window below, so the in-flight count is deterministic.
+    let mut fleet = attached_fleet(&reg, m4, 1000.0);
+    fleet.apply(&Action::Spawn { model, vm_type: m4, count: replicas }, 0.0);
+    fleet.advance(m4.boot_mean_s + 1.0); // replicas run, the pool starts
+
+    // Known constant load: K requests in flight across the pool.
+    let k = 2usize;
+    let mut rxs = Vec::new();
+    for _ in 0..k {
+        rxs.push(fleet.submit(SubmitRequest::new(vec![0.0; reg.input_dim]))
+            .expect("attached fleet must accept submissions"));
+    }
+    // Closed form: K in-flight over (replicas * slots) pool slots. Before
+    // completion callbacks landed, attached-mode utilization read 0.0 here
+    // and silently broke threshold schemes.
+    let expected = (k as f64 / (replicas as f64 * slots)).min(1.0);
+    let util = fleet.view().utilization(model);
+    assert!(
+        (util - expected).abs() < 1e-9,
+        "attached utilization {util} != closed form {expected}"
+    );
+    // Completion callbacks release the in-flight count: after all
+    // responses arrive, utilization returns to zero.
+    for rx in rxs {
+        rx.recv().expect("synthetic engine answers every request");
+    }
+    assert!(
+        eventually(|| fleet.view().utilization(model) == 0.0),
+        "completion hooks must drain in-flight counts, got {}",
+        fleet.view().utilization(model)
+    );
+    fleet.shutdown_pools();
+}
+
+#[test]
+fn util_aware_scales_attached_fleet_on_real_utilization() {
+    let reg = Registry::builtin();
+    let m4 = vm_type("m4.large").unwrap();
+    let model = 0;
+    let slots = reg.models[model].slots_on(m4) as usize;
+    let mut fleet = attached_fleet(&reg, m4, 2000.0);
+    let mut cl = ControlLoop::new(&reg, vec![m4]);
+    let mut scheme = paragon::scheduler::by_name("util_aware").unwrap();
+    fleet.apply(&Action::Spawn { model, vm_type: m4, count: 1 }, 0.0);
+    fleet.advance(m4.boot_mean_s + 1.0);
+
+    // Saturate the single replica: utilization reads 1.0 (≥ the 80%
+    // threshold) while the batch executes.
+    let mut rxs = Vec::new();
+    for _ in 0..slots {
+        rxs.push(fleet.submit(SubmitRequest::new(vec![0.0; reg.input_dim]))
+            .expect("submit"));
+    }
+    assert!(fleet.view().utilization(model) >= 0.8, "setup must saturate");
+    let now = m4.boot_mean_s + 2.0;
+    let tick = cl.tick_scheme(scheme.as_mut(), &mut fleet, now);
+    assert!(
+        tick.actions.iter().any(|a| matches!(a,
+            Action::Spawn { model: m, .. } if *m == model)),
+        "util_aware must scale up a saturated live fleet, got {:?}",
+        tick.actions
+    );
+    assert!(
+        fleet.view().booting_typed(model, m4) > 0,
+        "the spawn must land on the fleet"
+    );
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    fleet.shutdown_pools();
 }

@@ -1,0 +1,342 @@
+//! Offload conformance: the serverless valve behaves identically on all
+//! three [`FleetActuator`] backends.
+//!
+//! - The same offload-heavy script — typed spawns, valve policy changes
+//!   and a fixed overflow stream — produces equivalent `FleetView`
+//!   lambda-share and cost trajectories on the sim `ClusterActuator`, the
+//!   RL `FluidFleet` and the dry-run `ServerFleet` (zero-jitter palette so
+//!   capacity transitions are deterministic; tolerance-based float
+//!   compare).
+//! - `ServerFleet::ingest` overflow (the live admission path) reproduces
+//!   the same valve trajectory as driving the valve surface directly.
+//! - Property (het_equivalence style): with offload permanently disabled,
+//!   the valve-bearing `ServerFleet` is bit-for-bit identical to a fleet
+//!   that never touches the valve, and still matches the sim cluster's
+//!   `FleetView` transitions on random action scripts — the valve is
+//!   strictly additive.
+
+use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::control::{ClusterActuator, FleetActuator, FleetView, FluidFleet,
+                       ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::prop_assert;
+use paragon::scheduler::{Action, OffloadPolicy};
+use paragon::util::prop::check;
+use paragon::util::rng::Pcg;
+
+/// Leak a zero-jitter instance type so every backend boots at exactly the
+/// mean latency (the sim cluster normally samples jitter per spawn).
+fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        vcpus: 2,
+        mem_gb: 8.0,
+        price: VmPrice { hourly_usd: hourly },
+        speed,
+        boot_mean_s: boot_s,
+        boot_jitter_s: 0.0,
+    }))
+}
+
+/// Comparable capacity summary: (model, type, running, booting) rows.
+fn fingerprint(v: &FleetView) -> Vec<(usize, String, usize, usize)> {
+    v.subfleets()
+        .iter()
+        .map(|s| (s.model, s.vm_type.name.to_string(), s.running, s.booting))
+        .collect()
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// The scripted offload phases: opened wide, tightened to strict-only,
+/// closed, reopened — every policy transition a decider can produce.
+fn policy_at(t: usize) -> Option<OffloadPolicy> {
+    match t {
+        10 => Some(OffloadPolicy::All),
+        40 => Some(OffloadPolicy::StrictOnly),
+        70 => Some(OffloadPolicy::None),
+        90 => Some(OffloadPolicy::All),
+        _ => None,
+    }
+}
+
+#[test]
+fn same_offload_script_same_lambda_trajectories_on_all_backends() {
+    let reg = Registry::builtin();
+    let ta = leak_type("conf.m", 0.10, 1.0, 100.0);
+    let tb = leak_type("conf.c", 0.085, 1.25, 60.0);
+    let palette = vec![ta, tb];
+    let model = 3; // resnet18 (FluidFleet is single-model)
+
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    let mut fluid = FluidFleet::with_valve(&reg, model, palette.clone());
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 100,
+        ..ServerFleetConfig::default()
+    });
+
+    // One loop drives all three through the identical script: typed spawns
+    // land the same capacity, the valve opens/tightens/closes at the same
+    // ticks, and every backend sees the same overflow stream (3 requests
+    // per second, alternating strict/relaxed SLOs).
+    let mut arrivals_total = 0u64;
+    let mut trajectories: Vec<Vec<(f64, f64)>> = vec![Vec::new(); 3];
+    for t in 0..120usize {
+        let now = t as f64;
+        let each = |b: &mut dyn FleetActuator| {
+            if t == 0 {
+                b.apply(&Action::Spawn { model, vm_type: ta, count: 2 }, now);
+            }
+            if t == 20 {
+                b.apply(&Action::Spawn { model, vm_type: tb, count: 1 }, now);
+            }
+            if let Some(p) = policy_at(t) {
+                b.set_offload(p);
+            }
+            b.advance(now);
+            for i in 0..3u64 {
+                let strict = (t as u64 * 3 + i) % 2 == 0;
+                let slo = if strict { 500.0 } else { 20_000.0 };
+                b.try_offload(model, slo, strict, now);
+            }
+        };
+        each(&mut sim);
+        each(&mut fluid);
+        each(&mut live);
+        arrivals_total += 3;
+
+        let views = [sim.view(), fluid.view(), live.view()];
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[1]),
+                   "sim/fluid capacity diverged at t={t}");
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[2]),
+                   "sim/live capacity diverged at t={t}");
+        for (traj, v) in trajectories.iter_mut().zip(&views) {
+            traj.push((v.lambda.served, v.lambda.cost_usd));
+        }
+    }
+
+    // Lambda-share and cost trajectories agree across backends at every
+    // tick (tolerance-based compare — the float accumulation order is
+    // identical, so this is tight).
+    for (t, &(s0, c0)) in trajectories[0].iter().enumerate() {
+        for (name, traj) in [("fluid", &trajectories[1]), ("live", &trajectories[2])] {
+            let (s, c) = traj[t];
+            assert!(close(s0, s), "{name} lambda served diverged at t={t}: {s0} vs {s}");
+            assert!(close(c0, c), "{name} lambda cost diverged at t={t}: {c0} vs {c}");
+        }
+    }
+    // The script really exercised the valve: a meaningful share of the
+    // stream was offloaded (All + StrictOnly phases), and the None phase
+    // kept it shut.
+    let (served_end, cost_end) = *trajectories[0].last().unwrap();
+    let share = served_end / arrivals_total as f64;
+    assert!(share > 0.3 && share < 1.0, "implausible lambda share {share}");
+    assert!(cost_end > 0.0);
+    let at_69 = trajectories[0][69].0;
+    let at_89 = trajectories[0][89].0;
+    assert_eq!(at_69, at_89, "closed valve must not offload (t in 70..90)");
+}
+
+#[test]
+fn ingest_overflow_reproduces_direct_valve_trajectory() {
+    let reg = Registry::builtin();
+    let ta = leak_type("conf.i", 0.10, 1.0, 100.0);
+    let palette = vec![ta];
+    let model = 3;
+
+    // Zero-capacity live fleet with the valve wide open: every ingested
+    // request overflows into the valve at admission.
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        ..ServerFleetConfig::default()
+    });
+    live.set_offload(OffloadPolicy::All);
+    // Reference: the same stream driven through the shared valve surface.
+    let mut reference = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    reference.set_offload(OffloadPolicy::All);
+
+    let mut total = 0u64;
+    for t in 0..60usize {
+        let now = t as f64;
+        live.advance(now);
+        reference.advance(now);
+        for i in 0..2u64 {
+            let strict = (t as u64 * 2 + i) % 2 == 0;
+            let slo = if strict { 500.0 } else { 20_000.0 };
+            live.ingest(model, slo, now);
+            reference.try_offload(model, slo, strict, now);
+            total += 1;
+        }
+        let (lv, rv) = (live.view(), reference.view());
+        assert!(close(lv.lambda.served, rv.lambda.served),
+                "served diverged at t={t}");
+        assert!(close(lv.lambda.cost_usd, rv.lambda.cost_usd),
+                "cost diverged at t={t}");
+    }
+    let rep = live.report(60.0); // conservation asserted inside
+    assert_eq!(rep.offloaded, total, "every overflow must offload");
+    assert_eq!(rep.served, 0);
+    assert_eq!(rep.dropped, 0);
+    assert!(rep.lambda_cost_usd > 0.0);
+}
+
+/// One step of a random action script (generated once, replayed on every
+/// backend under comparison).
+#[derive(Debug, Clone)]
+enum Op {
+    Spawn { k: usize, count: usize },
+    Drain { k: usize, count: usize },
+    Ingest { slo_ms: f64 },
+}
+
+fn random_script(rng: &mut Pcg, n_types: usize, ticks: usize) -> Vec<(f64, Vec<Op>)> {
+    (0..ticks)
+        .map(|t| {
+            let mut ops = Vec::new();
+            if rng.f64() < 0.3 {
+                let k = rng.below(n_types as u64) as usize;
+                let count = 1 + rng.below(3) as usize;
+                if rng.f64() < 0.6 {
+                    ops.push(Op::Spawn { k, count });
+                } else {
+                    ops.push(Op::Drain { k, count });
+                }
+            }
+            for _ in 0..rng.below(4) {
+                let slo = if rng.f64() < 0.5 { 500.0 } else { 20_000.0 };
+                ops.push(Op::Ingest { slo_ms: slo });
+            }
+            (t as f64, ops)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_disabled_valve_is_strictly_additive() {
+    let reg = Registry::builtin();
+    // Zero-jitter palette shared across trials (leaked once).
+    let palette: Vec<&'static VmType> = vec![
+        leak_type("prop.m", 0.10, 1.0, 100.0),
+        leak_type("prop.c", 0.085, 1.25, 60.0),
+    ];
+    let model = 3;
+    check("valve-additive", 10, |rng| {
+        let ticks = 40 + rng.below(40) as usize;
+        let script = random_script(rng, palette.len(), ticks);
+        let mk = || {
+            ServerFleet::new(&reg, ServerFleetConfig {
+                vm_types: palette.clone(),
+                instance_cap: 50,
+                ..ServerFleetConfig::default()
+            })
+        };
+        // Fleet A never touches the valve; fleet B has offload explicitly
+        // (and permanently) disabled every tick. Identical script, and the
+        // runs must be bit-for-bit identical — the valve plumbing may not
+        // perturb the non-offload path in any way.
+        let mut a = mk();
+        let mut b = mk();
+        for (now, ops) in &script {
+            b.set_offload(OffloadPolicy::None);
+            for op in ops {
+                match *op {
+                    Op::Spawn { k, count } => {
+                        let act = Action::Spawn { model, vm_type: palette[k], count };
+                        a.apply(&act, *now);
+                        b.apply(&act, *now);
+                    }
+                    Op::Drain { k, count } => {
+                        let act = Action::Drain { model, vm_type: palette[k], count };
+                        a.apply(&act, *now);
+                        b.apply(&act, *now);
+                    }
+                    Op::Ingest { slo_ms } => {
+                        a.ingest(model, slo_ms, *now);
+                        b.ingest(model, slo_ms, *now);
+                    }
+                }
+            }
+            a.advance(*now);
+            b.advance(*now);
+            prop_assert!(
+                fingerprint(&a.view()) == fingerprint(&b.view()),
+                "views diverged at t={now}"
+            );
+        }
+        let end = ticks as f64 + 400.0;
+        a.advance(end);
+        b.advance(end);
+        let (ra, rb) = (a.report(end), b.report(end));
+        prop_assert!(
+            format!("{ra:?}") == format!("{rb:?}"),
+            "reports diverged:\n  a: {ra:?}\n  b: {rb:?}"
+        );
+        prop_assert!(ra.offloaded == 0, "disabled valve must not offload");
+        prop_assert!(ra.lambda_cost_usd == 0.0, "disabled valve must not bill");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disabled_valve_fleet_still_matches_sim_cluster() {
+    let reg = Registry::builtin();
+    let palette: Vec<&'static VmType> = vec![
+        leak_type("prop.sm", 0.10, 1.0, 90.0),
+        leak_type("prop.sc", 0.085, 1.25, 45.0),
+    ];
+    let model = 2;
+    // Action-only scripts (ingestion loads differ by construction between
+    // a serving fleet and a capacity-only cluster): the pre-valve
+    // sim↔live FleetView equivalence guarantee, generalized from one
+    // hand-written script to random ones.
+    check("valve-sim-live-equiv", 10, |rng| {
+        let ticks = 30 + rng.below(30) as usize;
+        let script: Vec<(f64, Option<Op>)> = (0..ticks)
+            .map(|t| {
+                let op = if rng.f64() < 0.4 {
+                    let k = rng.below(palette.len() as u64) as usize;
+                    let count = 1 + rng.below(3) as usize;
+                    Some(if rng.f64() < 0.65 {
+                        Op::Spawn { k, count }
+                    } else {
+                        Op::Drain { k, count }
+                    })
+                } else {
+                    None
+                };
+                (t as f64 * 7.0, op) // 7 s steps so boots interleave ticks
+            })
+            .collect();
+        let mut sim = ClusterActuator::new(&reg, palette.clone(), 60, rng.next_u64());
+        let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: palette.clone(),
+            instance_cap: 60,
+            ..ServerFleetConfig::default()
+        });
+        for (now, op) in &script {
+            if let Some(op) = op {
+                let act = match *op {
+                    Op::Spawn { k, count } =>
+                        Action::Spawn { model, vm_type: palette[k], count },
+                    Op::Drain { k, count } =>
+                        Action::Drain { model, vm_type: palette[k], count },
+                    Op::Ingest { .. } => unreachable!("action-only script"),
+                };
+                sim.apply(&act, *now);
+                live.apply(&act, *now);
+            }
+            sim.advance(*now);
+            live.advance(*now);
+            prop_assert!(
+                fingerprint(&sim.view()) == fingerprint(&live.view()),
+                "sim/live diverged at t={now}:\n  sim: {:?}\n  live: {:?}",
+                fingerprint(&sim.view()),
+                fingerprint(&live.view())
+            );
+        }
+        Ok(())
+    });
+}
