@@ -41,14 +41,31 @@ from .kernels.ref import log_softmax_rows_ref
 
 # Palette size the artifacts are lowered for (rust: ServeEnv::n_types()).
 N_TYPES = 1
+# Variant-family size for the joint (variant, vm_type, delta, offload)
+# space (rust: VariantServeEnv / PpoManifest::check_family).
+N_VARIANTS = 1
+# Joint-layout switch, edited like N_TYPES/N_VARIANTS above. The joint
+# observation carries a 2-float block per family member EVEN for a
+# one-member family (obs_dim_joint(T, 1) = obs_dim(T) + 2), so the
+# default below only covers the unambiguous cases: legacy ServeEnv
+# artifacts keep it False, N_VARIANTS > 1 forces it True, and lowering
+# joint heads for a ONE-member family (VariantServeEnv with V == 1,
+# PpoManifest::check_family) requires setting it True by hand here.
+JOINT_VARIANTS = N_VARIANTS > 1
 # Keep in sync with rust/src/rl/env.rs::{BASE_OBS, PER_TYPE_OBS,
-# ACTIONS_PER_TYPE}.
+# PER_VARIANT_OBS, ACTIONS_PER_TYPE}.
 BASE_OBS = 13
 PER_TYPE_OBS = 5
+PER_VARIANT_OBS = 2
 ACTIONS_PER_TYPE = 9
 
-OBS_DIM = BASE_OBS + PER_TYPE_OBS * N_TYPES
-ACT_DIM = ACTIONS_PER_TYPE * N_TYPES
+if JOINT_VARIANTS:
+    OBS_DIM = (BASE_OBS + PER_TYPE_OBS * N_TYPES * N_VARIANTS
+               + PER_VARIANT_OBS * N_VARIANTS)
+    ACT_DIM = ACTIONS_PER_TYPE * N_TYPES * N_VARIANTS
+else:
+    OBS_DIM = BASE_OBS + PER_TYPE_OBS * N_TYPES
+    ACT_DIM = ACTIONS_PER_TYPE * N_TYPES
 HIDDEN = (64, 64)
 
 # PPO / Adam hyper-parameters (baked into the AOT artifact).

@@ -1,0 +1,98 @@
+//! Variant-plane benchmarks: the per-`(model, vm_type)` view index at
+//! palette × family cardinality (ROADMAP "Scale" item — `FleetView::get`
+//! was a linear scan; it is now a BTreeMap-backed index), and the
+//! model-less selector's hot path. Emits `results/BENCH_5.json`.
+
+use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::control::{FleetViewBuilder, VmPhase};
+use paragon::models::Registry;
+use paragon::util::bench::bench;
+use paragon::util::json::Json;
+use paragon::variants::{VariantFamily, VariantSelector};
+
+/// Leak a synthetic instance type (benches model "every EC2 family"-sized
+/// palettes, far beyond the built-in seven).
+fn leak_type(i: usize) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(format!("bench.t{i}").into_boxed_str()),
+        vcpus: 2 + (i % 4) as u32 * 2,
+        mem_gb: 8.0 + (i % 4) as f64 * 8.0,
+        price: VmPrice { hourly_usd: 0.08 + 0.01 * (i % 16) as f64 },
+        speed: 1.0 + 0.05 * (i % 8) as f64,
+        boot_mean_s: 60.0 + (i % 5) as f64 * 10.0,
+        boot_jitter_s: 0.0,
+    }))
+}
+
+fn main() {
+    let reg = Registry::builtin();
+    let n_models = reg.len();
+    let palette: Vec<&'static VmType> = (0..32).map(leak_type).collect();
+
+    // A fully-populated view: every (model, type) pair holds capacity —
+    // 8 x 32 = 256 sub-fleets, the regime the ROADMAP flagged.
+    let mut b = FleetViewBuilder::new();
+    for m in 0..n_models {
+        for &t in &palette {
+            b.add(m, t, VmPhase::Running, 0.5);
+            b.add(m, t, VmPhase::Booting, 0.0);
+        }
+    }
+    let view = b.build(0.0);
+    let pairs: Vec<(usize, &'static VmType)> = (0..n_models)
+        .flat_map(|m| palette.iter().map(move |&t| (m, t)))
+        .collect();
+
+    println!("== per-(model,type) view lookups ({} sub-fleets) ==", pairs.len());
+    let indexed = bench("fleetview::running_typed (indexed)", 10, 200, || {
+        let mut s = 0usize;
+        for &(m, t) in &pairs {
+            s += view.running_typed(m, t);
+        }
+        s
+    });
+    // The pre-index behavior, reconstructed over the public sub-fleet
+    // slice: what every lookup cost when `get` linearly scanned.
+    let linear = bench("fleetview::running_typed (linear scan)", 10, 200, || {
+        let mut s = 0usize;
+        for &(m, t) in &pairs {
+            s += view
+                .subfleets()
+                .iter()
+                .find(|sf| sf.model == m && sf.vm_type.name == t.name)
+                .map_or(0, |sf| sf.running);
+        }
+        s
+    });
+    println!("  speedup vs linear: {:.1}x", linear.mean_ns / indexed.mean_ns);
+
+    println!("\n== model-less selection over the full pool x 32 types ==");
+    let selector =
+        VariantSelector::new(&reg, VariantFamily::full_pool(&reg), &palette);
+    let floors = [0.0, 65.0, 78.0, 86.0];
+    let slos = [500.0, 2_000.0, 20_000.0];
+    let select = bench("variant_selector::select x12", 10, 500, || {
+        let mut acc = 0usize;
+        for &f in &floors {
+            for &s in &slos {
+                acc += selector.select(f, s).model;
+            }
+        }
+        acc
+    });
+
+    let out = Json::obj(vec![
+        ("bench", "BENCH_5".into()),
+        ("subfleets", pairs.len().into()),
+        ("speedup_vs_linear", (linear.mean_ns / indexed.mean_ns).into()),
+        ("results", Json::Arr(vec![
+            indexed.to_json(),
+            linear.to_json(),
+            select.to_json(),
+        ])),
+    ]);
+    std::fs::create_dir_all("results").expect("create results/");
+    std::fs::write("results/BENCH_5.json", out.to_string())
+        .expect("write results/BENCH_5.json");
+    println!("\n[saved results/BENCH_5.json]");
+}

@@ -163,6 +163,7 @@ impl ExperimentConfig {
             cfg.workload = match s {
                 "mixed-slo" => WorkloadKind::MixedSlo,
                 "constraints" => WorkloadKind::VarConstraints,
+                "tiered" => WorkloadKind::AccuracyTiered,
                 other => bail!("unknown workload {other:?}"),
             };
         }
@@ -171,7 +172,14 @@ impl ExperimentConfig {
                 "random" => Assignment::RandomFeasible,
                 "naive" => Assignment::Policy(SelectionPolicy::Naive),
                 "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
-                other => bail!("unknown selection {other:?}"),
+                "modelless" => Assignment::ModelLess,
+                other => match other.strip_prefix("fixed:") {
+                    Some(idx) => Assignment::Fixed(
+                        idx.parse()
+                            .with_context(|| format!("bad fixed model index {idx:?}"))?,
+                    ),
+                    None => bail!("unknown selection {other:?}"),
+                },
             };
         }
         if let Some(x) = j.get("seed").as_f64() {
@@ -204,13 +212,16 @@ impl ExperimentConfig {
     /// so every results file records the exact experiment that made it).
     pub fn to_json(&self) -> Json {
         let sel = match self.assignment {
-            Assignment::RandomFeasible => "random",
-            Assignment::Policy(SelectionPolicy::Naive) => "naive",
-            Assignment::Policy(SelectionPolicy::Paragon) => "paragon",
+            Assignment::RandomFeasible => "random".to_string(),
+            Assignment::Policy(SelectionPolicy::Naive) => "naive".to_string(),
+            Assignment::Policy(SelectionPolicy::Paragon) => "paragon".to_string(),
+            Assignment::ModelLess => "modelless".to_string(),
+            Assignment::Fixed(m) => format!("fixed:{m}"),
         };
         let wl = match self.workload {
             WorkloadKind::MixedSlo => "mixed-slo",
             WorkloadKind::VarConstraints => "constraints",
+            WorkloadKind::AccuracyTiered => "tiered",
         };
         let mut fields = vec![
             ("trace", Json::from(self.trace.name())),
@@ -238,6 +249,21 @@ impl ExperimentConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn modelless_and_tiered_round_trip() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"selection": "modelless", "workload": "tiered"}"#).unwrap();
+        assert!(matches!(c.assignment, Assignment::ModelLess));
+        assert_eq!(c.workload, WorkloadKind::AccuracyTiered);
+        let j = c.to_json().to_string();
+        let c2 = ExperimentConfig::from_str_json(&j).unwrap();
+        assert!(matches!(c2.assignment, Assignment::ModelLess));
+        assert_eq!(c2.workload, WorkloadKind::AccuracyTiered);
+        let cf = ExperimentConfig::from_str_json(r#"{"selection": "fixed:4"}"#).unwrap();
+        assert!(matches!(cf.assignment, Assignment::Fixed(4)));
+        assert!(ExperimentConfig::from_str_json(r#"{"selection": "fixed:x"}"#).is_err());
+    }
 
     #[test]
     fn empty_object_gives_defaults() {

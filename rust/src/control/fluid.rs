@@ -1,12 +1,20 @@
 //! [`FleetActuator`] over a fluid (per-second aggregate) fleet: the RL
 //! environment's backend.
 //!
-//! No per-VM state — just running/booting counts per palette entry, with
-//! in-flight boots booked on the shared [`SimCore`] event heap at exactly
-//! the target type's mean boot latency (the fluid model skips boot jitter
-//! for determinism). This is the scaling plumbing that used to live inside
-//! [`ServeEnv`](crate::rl::env::ServeEnv); the env now delegates here, so
-//! RL training and the live control loop exercise the same contract.
+//! No per-VM state — just running/booting counts per `(variant, palette
+//! entry)` sub-fleet, with in-flight boots booked on the shared [`SimCore`]
+//! event heap at exactly the target type's mean boot latency (the fluid
+//! model skips boot jitter for determinism). This is the scaling plumbing
+//! that used to live inside [`ServeEnv`](crate::rl::env::ServeEnv); the env
+//! delegates here, so RL training and the live control loop exercise the
+//! same contract.
+//!
+//! Historically single-model; the variant plane generalized it to a
+//! [`VariantFamily`]'s member list ([`FluidFleet::with_family`]) so the
+//! joint `(variant, vm_type, delta, offload)` action space of
+//! [`crate::rl::variant_env`] actuates on one fluid backend. A one-member
+//! family reproduces the original single-model fleet exactly — the legacy
+//! constructors build precisely that.
 
 use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
@@ -14,11 +22,12 @@ use crate::cloud::pricing::VmType;
 use crate::models::Registry;
 use crate::scheduler::{Action, OffloadPolicy};
 use crate::sim::core::SimCore;
+use crate::variants::{VariantChoice, VariantFamily, VariantPlane};
 
-/// Fluid sub-fleets over one model's palette. Drains cancel the target
-/// type's newest boots first (LIFO within the type), then retire running
-/// capacity — never below one running VM fleet-wide, so the fluid serving
-/// model cannot divide by an empty fleet.
+/// Fluid sub-fleets over a model family's palette. Drains cancel the
+/// target sub-fleet's newest boots first (LIFO within the `(variant,
+/// type)` pair), then retire running capacity — never below one running VM
+/// fleet-wide, so the fluid serving model cannot divide by an empty fleet.
 ///
 /// Deliberate fidelity difference from the other two backends: the fluid
 /// env cancels the boot the agent most recently ordered ("undo the last
@@ -28,42 +37,69 @@ use crate::sim::core::SimCore;
 /// and therefore stay count- AND timing-equivalent to each other (the
 /// sim↔live equivalence pair in `rust/tests/control_plane.rs`).
 pub struct FluidFleet {
-    model: usize,
+    /// Registry indices of the fleet's models (family order; a single
+    /// entry for the legacy single-model fleet).
+    members: Vec<usize>,
     palette: Vec<&'static VmType>,
-    running: Vec<u32>,
-    booting: Vec<u32>,
-    /// In-flight boots; the payload is the palette index the capacity
-    /// lands on.
-    boots: SimCore<usize>,
+    /// Running VMs per `(variant, palette entry)`.
+    running: Vec<Vec<u32>>,
+    /// In-flight boots per `(variant, palette entry)`.
+    booting: Vec<Vec<u32>>,
+    /// In-flight boots; the payload is the `(variant, palette index)` the
+    /// capacity lands on.
+    boots: SimCore<(usize, usize)>,
     /// Serverless valve (absent on capacity-only fleets built without a
     /// registry): the RL env bills its fluid lambda mass through it, so
     /// the fleet's [`FleetView`] reports offload like every other backend.
     valve: Option<ServerlessValve>,
+    /// Variant plane (model-less query routing); installed by
+    /// [`FluidFleet::with_family`] or `install_variants`.
+    plane: Option<VariantPlane>,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
 
 impl FluidFleet {
     pub fn new(model: usize, palette: Vec<&'static VmType>) -> FluidFleet {
+        Self::over_members(vec![model], palette)
+    }
+
+    fn over_members(members: Vec<usize>, palette: Vec<&'static VmType>) -> FluidFleet {
         assert!(!palette.is_empty(), "empty vm-type palette");
-        let n = palette.len();
+        assert!(!members.is_empty(), "empty member list");
+        let k = palette.len();
+        let v = members.len();
         FluidFleet {
-            model,
+            members,
             palette,
-            running: vec![0; n],
-            booting: vec![0; n],
+            running: vec![vec![0; k]; v],
+            booting: vec![vec![0; k]; v],
             boots: SimCore::new(),
             valve: None,
+            plane: None,
             clock: 0.0,
         }
     }
 
     /// A fluid fleet with a serverless valve over `reg`'s model pool (the
-    /// RL environment's configuration).
+    /// single-model RL environment's configuration).
     pub fn with_valve(reg: &Registry, model: usize,
                       palette: Vec<&'static VmType>) -> FluidFleet {
         let mut f = Self::new(model, palette);
         f.valve = Some(ServerlessValve::new(reg));
+        f
+    }
+
+    /// A fluid fleet over a whole variant family: one `(variant, type)`
+    /// count matrix, a serverless valve, and an installed variant plane
+    /// routing model-less queries over the same members (the
+    /// [`VariantServeEnv`](crate::rl::variant_env::VariantServeEnv)
+    /// backend).
+    pub fn with_family(reg: &Registry, family: &VariantFamily,
+                       palette: Vec<&'static VmType>) -> FluidFleet {
+        let mut f = Self::over_members(family.members.clone(), palette.clone());
+        f.valve = Some(ServerlessValve::new(reg));
+        f.plane = Some(VariantPlane::new(reg, family.clone(), &palette));
         f
     }
 
@@ -72,23 +108,51 @@ impl FluidFleet {
         self.valve.as_mut()
     }
 
-    /// Running VMs per palette entry, palette order.
+    /// Registry indices of the fleet's models, family order.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Family position of a registry model, if the fleet holds it.
+    pub fn variant_of(&self, model: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == model)
+    }
+
+    /// Running VMs per palette entry for the *first* member (the whole
+    /// fleet for legacy single-model fleets), palette order.
     pub fn running(&self) -> &[u32] {
+        &self.running[0]
+    }
+
+    /// In-flight boots per palette entry for the first member.
+    pub fn booting(&self) -> &[u32] {
+        &self.booting[0]
+    }
+
+    /// Running VMs per `(variant, palette entry)`, family × palette order.
+    pub fn running_all(&self) -> &[Vec<u32>] {
         &self.running
     }
 
-    /// In-flight boots per palette entry, palette order.
-    pub fn booting(&self) -> &[u32] {
+    /// In-flight boots per `(variant, palette entry)`.
+    pub fn booting_all(&self) -> &[Vec<u32>] {
         &self.booting
     }
 
     pub fn total_running(&self) -> u32 {
-        self.running.iter().sum()
+        self.running.iter().flatten().sum()
     }
 
-    /// Place `n` already-running VMs on palette entry `k` (warm starts).
+    /// Place `n` already-running VMs of the first member on palette entry
+    /// `k` (legacy warm starts).
     pub fn force_running(&mut self, k: usize, n: u32) {
-        self.running[k] = n;
+        self.running[0][k] = n;
+    }
+
+    /// Place `n` already-running VMs of family member `v` on palette
+    /// entry `k` (variant-aware warm starts).
+    pub fn force_running_of(&mut self, v: usize, k: usize, n: u32) {
+        self.running[v][k] = n;
     }
 
     /// Palette index of a typed action's target.
@@ -97,6 +161,16 @@ impl FluidFleet {
             .iter()
             .position(|t| t.name == vm_type.name)
             .expect("action targets a type outside the palette")
+    }
+
+    /// Route a weighted model-less demand through the installed plane
+    /// (fluid backends route whole per-tier masses; discrete callers use
+    /// the trait's [`FleetActuator::route_modelless`]).
+    pub fn route_modelless_weighted(&mut self, min_accuracy: f64, slo_ms: f64,
+                                    weight: f64) -> Option<VariantChoice> {
+        self.plane
+            .as_mut()
+            .map(|p| p.route_weighted(min_accuracy, slo_ms, weight))
     }
 }
 
@@ -109,62 +183,79 @@ impl FleetActuator for FluidFleet {
         self.clock = self.clock.max(now);
         match *action {
             Action::Spawn { model, vm_type, count } => {
-                debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+                let v = self.variant_of(model)
+                    .expect("fluid fleet does not hold the action's model");
                 let k = self.type_index(vm_type);
                 for _ in 0..count {
-                    self.boots.schedule_at(now + vm_type.boot_mean_s, k);
-                    self.booting[k] += 1;
+                    self.boots.schedule_at(now + vm_type.boot_mean_s, (v, k));
+                    self.booting[v][k] += 1;
                 }
             }
             Action::Drain { model, vm_type, count } => {
-                debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+                let v = self.variant_of(model)
+                    .expect("fluid fleet does not hold the action's model");
                 let k = self.type_index(vm_type);
                 let mut left = count;
                 while left > 0
-                    && self.booting[k] > 0
-                    && self.boots.cancel_latest_matching(|&j| j == k).is_some()
+                    && self.booting[v][k] > 0
+                    && self.boots.cancel_latest_matching(|&(bv, bk)| bv == v && bk == k)
+                           .is_some()
                 {
-                    self.booting[k] -= 1;
+                    self.booting[v][k] -= 1;
                     left -= 1;
                 }
                 let floor_spare = self.total_running().saturating_sub(1) as usize;
-                let drained = left.min(self.running[k] as usize).min(floor_spare);
-                self.running[k] -= drained as u32;
+                let drained = left.min(self.running[v][k] as usize).min(floor_spare);
+                self.running[v][k] -= drained as u32;
             }
         }
     }
 
     fn advance(&mut self, now: f64) {
         self.clock = self.clock.max(now);
-        while let Some((_, j)) = self.boots.pop_due(now) {
-            self.running[j] += 1;
-            self.booting[j] = self.booting[j].saturating_sub(1);
+        while let Some((_, (v, k))) = self.boots.pop_due(now) {
+            self.running[v][k] += 1;
+            self.booting[v][k] = self.booting[v][k].saturating_sub(1);
         }
+        self.refresh_variants(now);
     }
 
     fn view(&self) -> FleetView {
         let mut b = FleetViewBuilder::new();
-        for (k, &t) in self.palette.iter().enumerate() {
-            for _ in 0..self.running[k] {
-                b.add(self.model, t, VmPhase::Running, 0.0);
-            }
-            for _ in 0..self.booting[k] {
-                b.add(self.model, t, VmPhase::Booting, 0.0);
+        for (v, &m) in self.members.iter().enumerate() {
+            for (k, &t) in self.palette.iter().enumerate() {
+                for _ in 0..self.running[v][k] {
+                    b.add(m, t, VmPhase::Running, 0.0);
+                }
+                for _ in 0..self.booting[v][k] {
+                    b.add(m, t, VmPhase::Booting, 0.0);
+                }
             }
         }
-        if let Some(v) = &self.valve {
-            b.set_lambda(v.usage());
+        if let Some(valve) = &self.valve {
+            b.set_lambda(valve.usage());
+        }
+        if let Some(p) = &self.plane {
+            b.set_accuracy(p.usage());
         }
         b.build(self.clock)
     }
 
     fn demand(&mut self) -> DemandSnapshot {
         // The fluid fleet models capacity only; its embedding environment
-        // tracks arrivals and queues itself. Valve usage is still reported
-        // (the valve is the fleet's, not the environment's).
+        // tracks arrivals and queues itself. Valve usage and the plane's
+        // delivered-accuracy deltas are still reported (both are the
+        // fleet's, not the environment's).
+        let (acc_sum, acc_routed) = self
+            .plane
+            .as_mut()
+            .map(VariantPlane::drain_acc)
+            .unwrap_or_default();
         DemandSnapshot {
             offloaded: self.valve.as_mut().map(ServerlessValve::drain_offloaded)
                                  .unwrap_or_default(),
+            acc_sum,
+            acc_routed,
             ..DemandSnapshot::default()
         }
     }
@@ -177,12 +268,58 @@ impl FleetActuator for FluidFleet {
 
     fn try_offload(&mut self, model: usize, slo_ms: f64, strict: bool,
                    now: f64) -> Option<LambdaOutcome> {
-        debug_assert_eq!(model, self.model, "fluid fleet is single-model");
+        debug_assert!(self.variant_of(model).is_some(),
+                      "fluid fleet does not hold model {model}");
         let v = self.valve.as_mut()?;
         if !v.admits(strict) {
             return None;
         }
         Some(v.invoke(model, slo_ms, now))
+    }
+
+    /// The fluid fleet derives the plane's capacity straight from its
+    /// count matrices (the RL hot path must not build a `FleetView` per
+    /// step), so the plane's family and palette must align with the
+    /// fleet's — asserted here; [`FluidFleet::with_family`] constructs
+    /// them aligned by definition.
+    fn install_variants(&mut self, plane: VariantPlane) {
+        assert_eq!(plane.family().members, self.members,
+                   "fluid variant plane must span exactly the fleet's members");
+        let caps = plane.selector().caps();
+        assert!(
+            caps.iter().all(|row| {
+                row.len() == self.palette.len()
+                    && row.iter()
+                          .zip(&self.palette)
+                          .all(|(c, t)| c.vm_type.name == t.name)
+            }),
+            "fluid variant plane must be costed over the fleet's palette"
+        );
+        self.plane = Some(plane);
+    }
+
+    fn variants(&self) -> Option<&VariantPlane> {
+        self.plane.as_ref()
+    }
+
+    fn route_modelless(&mut self, min_accuracy: f64, slo_ms: f64)
+                       -> Option<VariantChoice> {
+        self.route_modelless_weighted(min_accuracy, slo_ms, 1.0)
+    }
+
+    fn refresh_variants(&mut self, now: f64) {
+        let Some(p) = self.plane.as_mut() else { return };
+        // O(V·T) capacity from the count matrices — alignment with the
+        // plane's caps is guaranteed by `install_variants`/`with_family`.
+        let caps = p.selector().caps();
+        let mut capacity = 0.0;
+        for (v, row) in self.running.iter().enumerate() {
+            for (k, &n) in row.iter().enumerate() {
+                let c = &caps[v][k];
+                capacity += n as f64 * c.slots_per_vm as f64 / c.service_s;
+            }
+        }
+        p.refresh_with_capacity(capacity, now);
     }
 }
 
@@ -230,5 +367,39 @@ mod tests {
         assert_eq!(v.running_typed(0, c5), 3);
         assert_eq!(v.booting_typed(0, m4), 1);
         assert_eq!(v.total_alive(), 4);
+    }
+
+    #[test]
+    fn family_fleet_lands_capacity_per_variant() {
+        use crate::variants::VariantFamily;
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let fam = VariantFamily::from_members(&reg, "pair", vec![1, 3]);
+        let mut f = FluidFleet::with_family(&reg, &fam, vec![m4, c5]);
+        assert_eq!(f.members(), &[1, 3]);
+        // Spawns name registry models; capacity lands on the right member.
+        f.apply(&Action::Spawn { model: 3, vm_type: c5, count: 2 }, 0.0);
+        f.apply(&Action::Spawn { model: 1, vm_type: m4, count: 1 }, 0.0);
+        f.advance(200.0);
+        assert_eq!(f.running_all()[0], vec![1, 0], "member 1 on m4");
+        assert_eq!(f.running_all()[1], vec![0, 2], "member 3 on c5");
+        let v = f.view();
+        assert_eq!(v.running_typed(3, c5), 2);
+        assert_eq!(v.running_typed(1, m4), 1);
+        // Draining one member never touches the other.
+        f.apply(&Action::Drain { model: 3, vm_type: c5, count: 5 }, 201.0);
+        assert_eq!(f.running_all()[0], vec![1, 0]);
+        assert_eq!(f.total_running(), 1, "fleet-wide floor spans variants");
+        // Model-less routing goes through the installed plane, and the
+        // delivered-accuracy deltas drain through the demand snapshot.
+        let c = f.route_modelless(70.0, 60_000.0).unwrap();
+        assert_eq!(c.model, 3, "resnet18 is the cheapest member >= 70%");
+        let snap = f.demand();
+        assert!((snap.acc_routed[3] - 1.0).abs() < 1e-12);
+        assert!((snap.acc_sum[3] - 79.5).abs() < 1e-9);
+        let snap2 = f.demand();
+        assert!(snap2.acc_routed.iter().all(|&x| x == 0.0), "acc deltas drain");
+        assert!(f.view().accuracy.routed > 0.0, "view reports accuracy usage");
     }
 }

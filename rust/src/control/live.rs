@@ -42,6 +42,7 @@ use crate::serving::{LiveResponse, Server, ServerConfig, ServerStats, SubmitErro
                      SubmitRequest};
 use crate::sim::core::SimCore;
 use crate::trace::Strictness;
+use crate::variants::{VariantChoice, VariantPlane};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -153,6 +154,10 @@ pub struct ServerFleet {
     /// The serverless valve: absorbs overflow when the control loop opens
     /// it ([`FleetActuator::set_offload`]).
     valve: ServerlessValve,
+    /// Variant plane: resolves model-less queries
+    /// ([`Self::ingest_modelless`], plane-routed [`Self::submit`]) when
+    /// installed.
+    plane: Option<VariantPlane>,
     retired_cost: f64,
     /// Dry-run requests admitted via [`Self::ingest`] (the conservation
     /// denominator; `note_arrival` demand-only counts are excluded).
@@ -223,6 +228,7 @@ impl ServerFleet {
             queues: (0..n).map(|_| VecDeque::new()).collect(),
             completions: SimCore::new(),
             valve: ServerlessValve::new(reg),
+            plane: None,
             retired_cost: 0.0,
             ingested: 0,
             served: 0,
@@ -307,6 +313,18 @@ impl ServerFleet {
         } else {
             self.queues[model].push_back(DryQueued { slo_ms, arrival: now });
         }
+    }
+
+    /// Model-less live arrival: resolve `(min_accuracy, slo_ms)` through
+    /// the installed variant plane, then take the exact same admission
+    /// path as a model-named [`Self::ingest`] — free slot, else valve,
+    /// else FIFO queue. Returns the plane's choice, or `None` (and admits
+    /// nothing) when no plane is installed.
+    pub fn ingest_modelless(&mut self, min_accuracy: f64, slo_ms: f64,
+                            now: f64) -> Option<VariantChoice> {
+        let choice = self.route_modelless(min_accuracy, slo_ms)?;
+        self.ingest(choice.model, slo_ms, now);
+        Some(choice)
     }
 
     /// SLO violation bookkeeping (cumulative + per-model snapshot delta).
@@ -437,11 +455,22 @@ impl ServerFleet {
     /// to the cheapest pool holding running capacity for the routed model.
     pub fn submit(&mut self, req: SubmitRequest)
                   -> Result<mpsc::Receiver<LiveResponse>, SubmitError> {
-        let model = match &self.router {
-            Some(r) => r.route(req.slo_ms, req.min_accuracy),
-            None => return Err(SubmitError::NoCapacity),
+        // An installed variant plane overrides the router's per-request
+        // selection (model-less mode): attached pools then execute the
+        // same variant decisions the control plane plans capacity for.
+        // Selection here is a pure peek — the plane's delivered-accuracy
+        // and pressure ledgers are booked only once the request is
+        // actually ADMITTED below, so rejected submits never masquerade
+        // as delivered traffic.
+        let model = match &self.plane {
+            Some(p) => p.selector().select(req.min_accuracy, req.slo_ms).model,
+            None => match &self.router {
+                Some(r) => r.route(req.slo_ms, req.min_accuracy),
+                None => return Err(SubmitError::NoCapacity),
+            },
         };
         self.arrivals[model] += 1;
+        let (q_slo, q_acc) = (req.slo_ms, req.min_accuracy);
         for oi in 0..self.order[model].len() {
             let k = self.order[model][oi];
             let has_running = self.replicas.iter().any(|r| {
@@ -458,7 +487,15 @@ impl ServerFleet {
                 // uncounts.
                 self.inflight[k].fetch_add(1, Ordering::Relaxed);
                 match pool.submit(req) {
-                    Ok(rx) => return Ok(rx),
+                    Ok(rx) => {
+                        // Admitted: now book the plane's ledgers (the
+                        // selector is deterministic between refreshes, so
+                        // this re-selects the same choice peeked above).
+                        if let Some(p) = self.plane.as_mut() {
+                            p.route(q_acc, q_slo);
+                        }
+                        return Ok(rx);
+                    }
                     Err(e) => {
                         self.inflight[k].fetch_sub(1, Ordering::Relaxed);
                         return Err(e);
@@ -635,6 +672,7 @@ impl FleetActuator for ServerFleet {
         // a fresh spawn script): one final dispatch pass at `now`.
         self.dispatch_queued(now);
         self.peak_replicas = self.peak_replicas.max(self.total_alive());
+        self.refresh_variants(now);
     }
 
     fn view(&self) -> FleetView {
@@ -672,16 +710,38 @@ impl FleetActuator for ServerFleet {
             }
         }
         b.set_lambda(self.valve.usage());
+        if let Some(p) = &self.plane {
+            b.set_accuracy(p.usage());
+        }
         b.build(self.clock)
     }
 
     fn demand(&mut self) -> DemandSnapshot {
         let n = self.arrivals.len();
+        let mut queued: Vec<usize> = self.queues.iter().map(VecDeque::len).collect();
+        // Attached mode: each pool's batcher owns its own per-model
+        // queues, invisible to the dry-run FIFO above. Export their
+        // depths so queue-aware schemes and the variant downgrade ladder
+        // see real backlog against engine-attached fleets.
+        for pool in self.pools.iter().flatten() {
+            for (m, depth) in pool.queued_by_model().into_iter().enumerate() {
+                if m < queued.len() {
+                    queued[m] += depth as usize;
+                }
+            }
+        }
+        let (acc_sum, acc_routed) = self
+            .plane
+            .as_mut()
+            .map(VariantPlane::drain_acc)
+            .unwrap_or_default();
         DemandSnapshot {
             arrivals: std::mem::replace(&mut self.arrivals, vec![0; n]),
-            queued: self.queues.iter().map(VecDeque::len).collect(),
+            queued,
             offloaded: self.valve.drain_offloaded(),
             violations: std::mem::replace(&mut self.viol_delta, vec![0; n]),
+            acc_sum,
+            acc_routed,
         }
     }
 
@@ -701,6 +761,43 @@ impl FleetActuator for ServerFleet {
         // what one offloaded request means.
         self.ingested += 1;
         Some(self.offload_one(model, slo_ms, now, now))
+    }
+
+    /// On an engine-attached fleet the plane overrides the router in
+    /// [`Self::submit`], so its family may only contain models the engine
+    /// actually loaded — build it from
+    /// [`Router::loaded_models`](crate::serving::router::Router) —
+    /// otherwise a model-less query could resolve to a variant no pool
+    /// can ever execute. Asserted here (fail fast at install, not at the
+    /// first unlucky query). Dry-run fleets have no engine constraint.
+    fn install_variants(&mut self, plane: VariantPlane) {
+        if let Some(r) = &self.router {
+            let loaded = r.loaded_models();
+            assert!(
+                plane.family().members.iter().all(|m| loaded.contains(m)),
+                "variant family {:?} exceeds the engine's loaded models {loaded:?}",
+                plane.family().members
+            );
+        }
+        self.plane = Some(plane);
+    }
+
+    fn variants(&self) -> Option<&VariantPlane> {
+        self.plane.as_ref()
+    }
+
+    fn route_modelless(&mut self, min_accuracy: f64, slo_ms: f64)
+                       -> Option<VariantChoice> {
+        self.plane.as_mut().map(|p| p.route(min_accuracy, slo_ms))
+    }
+
+    fn refresh_variants(&mut self, now: f64) {
+        if self.plane.is_some() {
+            let view = self.view();
+            if let Some(p) = self.plane.as_mut() {
+                p.refresh(&view, now);
+            }
+        }
     }
 }
 
@@ -844,6 +941,72 @@ mod tests {
         f.ingest(0, 500.0, 31.5);
         let rep = f.report(32.0);
         assert_eq!((rep.dropped, rep.offloaded), (1, 1));
+    }
+
+    #[test]
+    fn modelless_ingest_routes_through_the_plane() {
+        use crate::variants::VariantFamily;
+        let reg = Registry::builtin();
+        let mut f = fleet2();
+        let palette = f.cfg.vm_types.clone();
+        f.install_variants(VariantPlane::new(
+            &reg,
+            VariantFamily::full_pool(&reg),
+            &palette,
+        ));
+        // Floor 75 with a relaxed SLO resolves to resnet18 (model 3); no
+        // capacity yet, so it queues under that model's FIFO.
+        let c = f.ingest_modelless(75.0, 20_000.0, 0.0).unwrap();
+        assert_eq!(c.model, 3);
+        assert_eq!(f.queues[3].len(), 1);
+        let v = f.view();
+        assert_eq!(v.accuracy.routed, 1.0);
+        assert_eq!(v.accuracy.floor_attained, 1.0);
+        // The demand snapshot carries (and drains) the accuracy deltas.
+        let snap = f.demand();
+        assert_eq!(snap.arrivals[3], 1);
+        assert!((snap.acc_sum[3] - 79.5).abs() < 1e-9);
+        assert!((snap.acc_routed[3] - 1.0).abs() < 1e-12);
+        assert!(f.demand().acc_routed.iter().all(|&x| x == 0.0));
+        // Conservation still holds with the request queued.
+        let rep = f.report(1.0);
+        assert_eq!(rep.queued, 1);
+    }
+
+    #[test]
+    fn attached_demand_exports_batcher_depth() {
+        use crate::runtime::engine::EngineHandle;
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        // Synthetic engine with a 1 s device time: two workers absorb two
+        // 16-request batches and block, so the tail of a 40-request burst
+        // must sit in the pool's batcher queue.
+        let engine = EngineHandle::synthetic(&reg, vec![0], 1000.0);
+        let mut f = ServerFleet::with_engine(&reg, ServerFleetConfig {
+            vm_types: vec![m4],
+            ..ServerFleetConfig::default()
+        }, engine);
+        f.apply(&Action::Spawn { model: 0, vm_type: m4, count: 1 }, 0.0);
+        f.advance(m4.boot_mean_s + 1.0);
+        let mut rxs = Vec::new();
+        for _ in 0..40 {
+            rxs.push(f.submit(SubmitRequest::new(vec![0.0; reg.input_dim]))
+                .expect("attached fleet accepts submissions"));
+        }
+        // Pre-export, pools' batcher queues were invisible to demand().
+        let mut seen = 0usize;
+        for _ in 0..100 {
+            seen = f.demand().queued[0];
+            if seen > 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert!(seen > 0, "attached batcher depth must reach demand()");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        f.shutdown_pools();
     }
 
     #[test]

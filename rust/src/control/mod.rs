@@ -29,6 +29,13 @@
 //! `rust/tests/control_plane.rs` proves the sim cluster and the live fleet
 //! produce identical [`FleetView`] transitions for the same action script.
 //!
+//! Backends also share the **variant plane** ([`crate::variants`]): an
+//! installed [`VariantPlane`] resolves model-less queries — `(accuracy
+//! floor, SLO)` instead of a model id — to concrete `(variant, vm_type)`
+//! pairs through one load-adaptive selector, and `route_modelless` is the
+//! trait surface every backend answers identically
+//! (`rust/tests/variant_conformance.rs`).
+//!
 //! [`Cluster`]: crate::cloud::Cluster
 //! [`SimCore`]: crate::sim::core::SimCore
 
@@ -49,6 +56,7 @@ use crate::rl::env::{decode_action, ObsLayout, ObsSignals};
 use crate::scheduler::{Action, LoadMonitor, ModelDemand, OffloadPolicy, SchedObs,
                        Scheme, TypeCap};
 use crate::util::stats::Ewma;
+use crate::variants::{AccuracyUsage, VariantChoice, VariantPlane};
 use std::collections::BTreeMap;
 
 /// One `(model, vm_type)` sub-fleet in a [`FleetView`] snapshot.
@@ -73,15 +81,23 @@ pub struct SubFleet {
 pub struct FleetView {
     pub now: f64,
     subfleets: Vec<SubFleet>,
+    /// `(model, type name)` → position in `subfleets`. Keeps the hot
+    /// per-`(model, vm_type)` lookup O(log n): routing and the variant
+    /// plane query views at palette × family cardinality, where the old
+    /// linear scan (ROADMAP "Scale" item) stopped being free.
+    index: BTreeMap<(usize, &'static str), usize>,
     /// Cumulative serverless-valve usage of the fleet behind this view
     /// (zero for backends without a valve).
     pub lambda: LambdaUsage,
+    /// Cumulative delivered-accuracy usage of the fleet's variant plane
+    /// (zero for backends without one).
+    pub accuracy: AccuracyUsage,
 }
 
 impl FleetView {
     /// A view of an empty fleet (cold start / unit tests).
     pub fn empty(now: f64) -> FleetView {
-        FleetView { now, subfleets: Vec::new(), lambda: LambdaUsage::default() }
+        FleetView { now, ..FleetView::default() }
     }
 
     pub fn subfleets(&self) -> &[SubFleet] {
@@ -89,9 +105,9 @@ impl FleetView {
     }
 
     fn get(&self, model: usize, vm_type: &VmType) -> Option<&SubFleet> {
-        self.subfleets
-            .iter()
-            .find(|s| s.model == model && s.vm_type.name == vm_type.name)
+        self.index
+            .get(&(model, vm_type.name))
+            .map(|&i| &self.subfleets[i])
     }
 
     /// Running members of the `(model, vm_type)` sub-fleet.
@@ -162,6 +178,7 @@ pub enum VmPhase {
 pub struct FleetViewBuilder {
     map: BTreeMap<(usize, &'static str), SubFleet>,
     lambda: LambdaUsage,
+    accuracy: AccuracyUsage,
 }
 
 impl Default for FleetViewBuilder {
@@ -172,12 +189,21 @@ impl Default for FleetViewBuilder {
 
 impl FleetViewBuilder {
     pub fn new() -> FleetViewBuilder {
-        FleetViewBuilder { map: BTreeMap::new(), lambda: LambdaUsage::default() }
+        FleetViewBuilder {
+            map: BTreeMap::new(),
+            lambda: LambdaUsage::default(),
+            accuracy: AccuracyUsage::default(),
+        }
     }
 
     /// Attach the fleet's cumulative serverless-valve usage.
     pub fn set_lambda(&mut self, usage: LambdaUsage) {
         self.lambda = usage;
+    }
+
+    /// Attach the fleet's cumulative variant-plane accuracy usage.
+    pub fn set_accuracy(&mut self, usage: AccuracyUsage) {
+        self.accuracy = usage;
     }
 
     /// Record one alive fleet member. `utilization` is busy/slots and is
@@ -201,8 +227,14 @@ impl FleetViewBuilder {
     }
 
     pub fn build(self, now: f64) -> FleetView {
-        FleetView { now, subfleets: self.map.into_values().collect(),
-                    lambda: self.lambda }
+        let mut subfleets = Vec::with_capacity(self.map.len());
+        let mut index = BTreeMap::new();
+        for (i, (key, s)) in self.map.into_iter().enumerate() {
+            index.insert(key, i);
+            subfleets.push(s);
+        }
+        FleetView { now, subfleets, index, lambda: self.lambda,
+                    accuracy: self.accuracy }
     }
 }
 
@@ -220,6 +252,13 @@ pub struct DemandSnapshot {
     /// not track violations — or whose embedding loop owns them — report
     /// nothing; missing entries read as zero).
     pub violations: Vec<u64>,
+    /// Per-model Σ (weight × delivered accuracy %) routed through the
+    /// backend's variant plane since the last snapshot (empty when the
+    /// backend has no plane).
+    pub acc_sum: Vec<f64>,
+    /// Per-model weight routed through the variant plane since the last
+    /// snapshot (the denominator of `acc_sum`; empty reads as zero).
+    pub acc_routed: Vec<f64>,
 }
 
 /// A fleet that typed [`Action`]s can reconfigure — the actuator half of
@@ -265,6 +304,34 @@ pub trait FleetActuator {
                    _now: f64) -> Option<LambdaOutcome> {
         None
     }
+
+    /// Install a variant plane: from here on the backend resolves
+    /// model-less queries through it ([`Self::route_modelless`]) and
+    /// reports delivered accuracy in its view/demand snapshots. Backends
+    /// without variant support ignore the plane (the default).
+    fn install_variants(&mut self, _plane: VariantPlane) {}
+
+    /// The backend's variant plane, if one is installed.
+    fn variants(&self) -> Option<&VariantPlane> {
+        None
+    }
+
+    /// Resolve one model-less query `(min_accuracy, slo_ms)` to a concrete
+    /// `(variant, vm_type)` through the installed plane — pure selection:
+    /// no arrival/admission side effects, so every backend answers the
+    /// same script identically (the caller decides what to do with the
+    /// choice: the sim engine assigns the request, the live fleet ingests
+    /// it). `None` when no plane is installed.
+    fn route_modelless(&mut self, _min_accuracy: f64, _slo_ms: f64)
+                       -> Option<VariantChoice> {
+        None
+    }
+
+    /// Advance the variant plane's load ladder from the backend's current
+    /// fleet state. Backends with a plane call this from `advance`;
+    /// embedding loops that bypass `advance` (the request-level simulator
+    /// ticks its cluster directly) call it once per control tick.
+    fn refresh_variants(&mut self, _now: f64) {}
 }
 
 /// Per-`(model, palette entry)` capacity table — the one way every
@@ -303,11 +370,20 @@ pub struct ControlLoop {
     caps: Vec<Vec<TypeCap>>,
     monitor: LoadMonitor,
     rates: Vec<Ewma>,
+    /// Per-model delivered-accuracy EWMAs (percent), fed from the demand
+    /// snapshot's variant-plane deltas — what
+    /// [`ModelDemand::delivered_acc`] reports to schemes. Holds its value
+    /// on ticks where nothing routed to the model.
+    accs: Vec<Ewma>,
     /// Recent offloaded-share of arrivals (0.9/0.1 EWMA, the RL env's
     /// `recent_lambda` semantics) — rendered into policy observations.
     recent_lambda: f64,
     /// Recent violation-share of arrivals (same EWMA as the env).
     recent_viol: f64,
+    /// Recent mean delivered accuracy (percent) of the driven model's
+    /// variant plane (0.9/0.1 EWMA; 0 until something routes) — the
+    /// tick_policy counterpart of the per-model EWMAs above.
+    recent_acc: f64,
 }
 
 impl ControlLoop {
@@ -315,14 +391,25 @@ impl ControlLoop {
         assert!(!palette.is_empty(), "empty vm-type palette");
         let caps = palette_caps(reg, &palette);
         let rates = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
+        let accs = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
         ControlLoop {
             palette,
             caps,
             monitor: LoadMonitor::new(),
             rates,
+            accs,
             recent_lambda: 0.0,
             recent_viol: 0.0,
+            recent_acc: 0.0,
         }
+    }
+
+    /// Recent mean delivered accuracy of the policy-driven model's variant
+    /// plane, percent (0.0 until a plane routes something). Maintained by
+    /// [`Self::tick_policy`] so policy harnesses observe delivered
+    /// accuracy alongside the lambda/violation shares.
+    pub fn recent_delivered_acc(&self) -> f64 {
+        self.recent_acc
     }
 
     /// Per-model capacity axes over the palette (palette order).
@@ -358,12 +445,22 @@ impl ControlLoop {
         for (m, caps) in self.caps.iter().enumerate() {
             let arrived = snap.arrivals.get(m).copied().unwrap_or(0) as f64;
             let rate = self.rates[m].push(arrived);
+            // Delivered accuracy: EWMA of the plane's per-tick mean; holds
+            // its last value on ticks where nothing routed to this model.
+            let routed = snap.acc_routed.get(m).copied().unwrap_or(0.0);
+            let delivered_acc = if routed > 0.0 {
+                let mean = snap.acc_sum.get(m).copied().unwrap_or(0.0) / routed;
+                self.accs[m].push(mean)
+            } else {
+                self.accs[m].get()
+            };
             demands.push(ModelDemand {
                 model: m,
                 rate,
                 service_s: caps[0].service_s,
                 slots_per_vm: caps[0].slots_per_vm,
                 queued: snap.queued.get(m).copied().unwrap_or(0),
+                delivered_acc,
                 types: caps.clone(),
             });
         }
@@ -423,6 +520,13 @@ impl ControlLoop {
         let share = |x: f64| if arrived > 0 { x / arrived as f64 } else { 0.0 };
         self.recent_lambda = 0.9 * self.recent_lambda + 0.1 * share(offl);
         self.recent_viol = 0.9 * self.recent_viol + 0.1 * share(viol as f64);
+        // Delivered accuracy of the driven model through the backend's
+        // variant plane (same EWMA recency; holds when nothing routed).
+        let acc_routed = snap.acc_routed.get(model).copied().unwrap_or(0.0);
+        if acc_routed > 0.0 {
+            let mean = snap.acc_sum.get(model).copied().unwrap_or(0.0) / acc_routed;
+            self.recent_acc = 0.9 * self.recent_acc + 0.1 * mean;
+        }
         let view = actuator.view();
         let n = layout.caps.len();
         let mut running = vec![0u32; n];

@@ -12,6 +12,7 @@ use crate::cloud::pricing::VmType;
 use crate::cloud::{Cluster, VmState};
 use crate::models::Registry;
 use crate::scheduler::{Action, OffloadPolicy, TypeCap};
+use crate::variants::{VariantChoice, VariantPlane};
 
 /// Build a [`FleetView`] snapshot of any cluster (scheme unit tests build
 /// observations straight from a hand-assembled [`Cluster`]).
@@ -46,6 +47,9 @@ pub struct ClusterActuator {
     /// through [`FleetActuator::try_offload`] (policy set each control
     /// tick from the scheme's offload gate).
     valve: ServerlessValve,
+    /// Variant plane: resolves the embedding loop's model-less queries
+    /// ([`FleetActuator::route_modelless`]) when installed.
+    plane: Option<VariantPlane>,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
@@ -64,6 +68,7 @@ impl ClusterActuator {
             arrivals: vec![0; n],
             queued: vec![0; n],
             valve: ServerlessValve::new(reg),
+            plane: None,
             clock: 0.0,
         }
     }
@@ -123,22 +128,33 @@ impl FleetActuator for ClusterActuator {
     fn advance(&mut self, now: f64) {
         self.cluster.tick(now, 0.0, 0.0);
         self.clock = self.clock.max(now);
+        self.refresh_variants(now);
     }
 
     fn view(&self) -> FleetView {
         let mut v = cluster_view(&self.cluster, self.clock);
         v.lambda = self.valve.usage();
+        if let Some(p) = &self.plane {
+            v.accuracy = p.usage();
+        }
         v
     }
 
     fn demand(&mut self) -> DemandSnapshot {
         let n = self.arrivals.len();
         let arrivals = std::mem::replace(&mut self.arrivals, vec![0; n]);
+        let (acc_sum, acc_routed) = self
+            .plane
+            .as_mut()
+            .map(VariantPlane::drain_acc)
+            .unwrap_or_default();
         DemandSnapshot {
             arrivals,
             queued: self.queued.clone(),
             offloaded: self.valve.drain_offloaded(),
             violations: Vec::new(), // the embedding event loop owns SLO accounting
+            acc_sum,
+            acc_routed,
         }
     }
 
@@ -152,6 +168,28 @@ impl FleetActuator for ClusterActuator {
             return None;
         }
         Some(self.valve.invoke(model, slo_ms, now))
+    }
+
+    fn install_variants(&mut self, plane: VariantPlane) {
+        self.plane = Some(plane);
+    }
+
+    fn variants(&self) -> Option<&VariantPlane> {
+        self.plane.as_ref()
+    }
+
+    fn route_modelless(&mut self, min_accuracy: f64, slo_ms: f64)
+                       -> Option<VariantChoice> {
+        self.plane.as_mut().map(|p| p.route(min_accuracy, slo_ms))
+    }
+
+    fn refresh_variants(&mut self, now: f64) {
+        if self.plane.is_some() {
+            let view = cluster_view(&self.cluster, self.clock);
+            if let Some(p) = self.plane.as_mut() {
+                p.refresh(&view, now);
+            }
+        }
     }
 }
 

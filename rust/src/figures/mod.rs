@@ -20,6 +20,11 @@
 //!   fig_live one policy object, two backends: the fluid sim and the live
 //!           ServerFleet agree on cost/SLO for the same arrivals (the
 //!           control-plane seam, this repo's extension)
+//!   fig_variants cost–accuracy–SLO frontier of the variant plane: on an
+//!           accuracy-tiered model-less workload, variant-aware control
+//!           strictly dominates every fixed-variant baseline on cost at
+//!           equal-or-better floor attainment, and beats naive selection
+//!           on both (this repo's tentpole extension)
 
 use crate::cloud::pricing::{default_vm_type, VmType, VM_TYPES};
 use crate::models::{Registry, SelectionPolicy};
@@ -657,6 +662,121 @@ pub fn fig_live(reg: &Registry, cfg: &FigConfig) -> Json {
     ])
 }
 
+// ------------------------------------------------------------ fig variants
+
+/// The variant plane's frontier (this repo's tentpole extension): on an
+/// accuracy-tiered *model-less* workload (requests carry `(accuracy
+/// floor, SLO)` only), compare
+/// - **variant-aware** — `Assignment::ModelLess`: every arrival resolves
+///   through the control plane's [`VariantSelector`] with its
+///   load-adaptive downgrade ladder;
+/// - **fixed-`<model>`** — every pool model as a pinned single-variant
+///   deployment (the INFaaS "one model serves all" strawmen);
+/// - **naive** — constraint-oblivious uniform selection (Fig 9c's
+///   baseline).
+///
+/// The claim mirrored from INFaaS/Cocktail: variant-aware control
+/// strictly dominates every fixed variant — cheaper at equal-or-better
+/// accuracy-floor attainment, or strictly better attainment outright —
+/// and undercuts naive selection at higher attainment.
+///
+/// [`VariantSelector`]: crate::variants::VariantSelector
+pub fn fig_variants(reg: &Registry, cfg: &FigConfig) -> Json {
+    let m4 = crate::cloud::pricing::vm_type("m4.large").unwrap();
+    let c5 = crate::cloud::pricing::vm_type("c5.large").unwrap();
+    let palette: Vec<&'static VmType> = vec![m4, c5];
+    let kind = TraceKind::Berkeley;
+    let trace = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+    let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, cfg.seed ^ 0x7a);
+    let run = |assignment: Assignment| -> SimReport {
+        let mut scheme = scheduler::by_name("paragon").expect("paragon scheme");
+        simulate(scheme.as_mut(), reg, &reqs, kind.name(), &SimConfig {
+            vm_types: palette.clone(),
+            assignment,
+            seed: cfg.seed,
+            ..SimConfig::default()
+        })
+    };
+
+    println!("\nFigure variants: model-less variant plane vs fixed variants \
+              (berkeley, accuracy-tiered, m4.large+c5.large)");
+    hline(78);
+    println!("{:<22} {:>10} {:>9} {:>8} {:>10} {:>9}", "policy", "cost $",
+             "attain %", "viol %", "mean VMs", "lambda %");
+    hline(78);
+    let mut rows = Vec::new();
+    let record = |name: &str, r: &SimReport, rows: &mut Vec<Json>| {
+        println!("{:<22} {:>10.3} {:>8.1}% {:>7.1}% {:>10.1} {:>8.1}%",
+                 name, r.total_cost(), r.attainment_pct(), r.violation_pct(),
+                 r.mean_vms(), r.lambda_share_pct());
+        rows.push(Json::obj(vec![
+            ("policy", name.into()),
+            ("cost_usd", r.total_cost().into()),
+            ("attainment_pct", r.attainment_pct().into()),
+            ("violation_pct", r.violation_pct().into()),
+            ("mean_vms", r.mean_vms().into()),
+            ("lambda_share_pct", r.lambda_share_pct().into()),
+            ("dropped", (r.dropped as usize).into()),
+        ]));
+    };
+
+    let aware = run(Assignment::ModelLess);
+    record("variant-aware", &aware, &mut rows);
+    let naive = run(Assignment::Policy(SelectionPolicy::Naive));
+    record("naive-selection", &naive, &mut rows);
+    // Every pool model as a fixed single-variant deployment.
+    let eps = 0.5; // attainment slack, percentage points
+    let mut dominates_all_fixed = true;
+    for m in &reg.models {
+        let r = run(Assignment::Fixed(m.idx));
+        record(&format!("fixed-{}", m.name), &r, &mut rows);
+        // Dominance: better attainment outright, or cheaper at
+        // equal-or-better attainment.
+        let dominated = aware.attainment_pct() > r.attainment_pct() + eps
+            || (aware.attainment_pct() >= r.attainment_pct() - eps
+                && aware.total_cost() < r.total_cost());
+        if !dominated {
+            dominates_all_fixed = false;
+        }
+    }
+    let beats_naive = aware.total_cost() < naive.total_cost()
+        && aware.attainment_pct() >= naive.attainment_pct() - eps;
+    println!("{:<22} {}", "variant-aware",
+             if dominates_all_fixed && beats_naive {
+                 "DOMINATES every fixed variant and naive selection"
+             } else {
+                 "does not dominate"
+             });
+
+    // The realized variant mix of the model-less run.
+    let mix: Vec<Json> = reg
+        .models
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("model", m.name.as_str().into()),
+                ("served", (aware.served_by_model.get(m.idx).copied()
+                    .unwrap_or(0) as usize).into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("figure", "fig_variants".into()),
+        ("trace", kind.name().into()),
+        ("palette", Json::Arr(palette.iter().map(|t| Json::from(t.name)).collect())),
+        ("rows", Json::Arr(rows)),
+        ("aware_mix", Json::Arr(mix)),
+        ("summary", Json::obj(vec![
+            ("dominates_all_fixed", Json::Bool(dominates_all_fixed)),
+            ("beats_naive", Json::Bool(beats_naive)),
+            ("aware_cost_usd", aware.total_cost().into()),
+            ("aware_attainment_pct", aware.attainment_pct().into()),
+            ("naive_cost_usd", naive.total_cost().into()),
+            ("naive_attainment_pct", naive.attainment_pct().into()),
+        ])),
+    ])
+}
+
 // ----------------------------------------------------------------- fig 10
 
 /// Fig 10 (§V): PPO learning curve vs heuristics on the serving env.
@@ -907,6 +1027,45 @@ mod tests {
         );
         assert!(live_lambda < 0.6, "valve must stay a burst valve: {j}");
         assert!(get("server-fleet", "lambda_cost_usd") > 0.0);
+    }
+
+    #[test]
+    fn fig_variants_aware_dominates_fixed_and_naive() {
+        let j = fig_variants(&reg(), &FigConfig::quick());
+        let summary = j.get("summary");
+        assert_eq!(summary.get("dominates_all_fixed").as_bool(), Some(true),
+                   "variant-aware must dominate every fixed variant: {j}");
+        assert_eq!(summary.get("beats_naive").as_bool(), Some(true),
+                   "variant-aware must beat naive selection: {j}");
+        // The frontier's shape: the aware row attains ~all feasible floors
+        // at a cost below the cheapest fixed variant that also does.
+        let rows = j.get("rows").as_arr().unwrap();
+        let get = |name: &str, field: &str| {
+            rows.iter()
+                .find(|r| r.get("policy").as_str() == Some(name))
+                .unwrap_or_else(|| panic!("missing row {name}"))
+                .get(field)
+                .as_f64()
+                .unwrap()
+        };
+        let aware_att = get("variant-aware", "attainment_pct");
+        let aware_cost = get("variant-aware", "cost_usd");
+        assert!(aware_att > 99.0, "feasible floors must be attained: {aware_att}");
+        for name in ["fixed-inception_v3", "fixed-resnet152"] {
+            let att = get(name, "attainment_pct");
+            let cost = get(name, "cost_usd");
+            assert!(att > 99.0, "{name} attains all floors by construction");
+            assert!(aware_cost < cost,
+                    "aware ${aware_cost} must undercut {name} ${cost}");
+        }
+        // Low-accuracy fixed variants cannot attain the tight tiers.
+        assert!(get("fixed-mobilenet_025", "attainment_pct") < 60.0);
+        // The aware run really mixes variants.
+        let mix = j.get("aware_mix").as_arr().unwrap();
+        let active = mix.iter()
+            .filter(|m| m.get("served").as_usize().unwrap_or(0) > 0)
+            .count();
+        assert!(active >= 3, "expected a variant mix: {j}");
     }
 
     #[test]

@@ -35,3 +35,4 @@ pub mod serving;
 pub mod sim;
 pub mod trace;
 pub mod util;
+pub mod variants;

@@ -93,6 +93,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     if want("live") {
         figures::save(&out, "fig_live", &figures::fig_live(&reg, &cfg))?;
     }
+    if want("variants") {
+        figures::save(&out, "fig_variants", &figures::fig_variants(&reg, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -124,13 +127,21 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let workload = match args.get_or("workload", "mixed-slo").as_str() {
         "mixed-slo" => WorkloadKind::MixedSlo,
         "constraints" => WorkloadKind::VarConstraints,
+        "tiered" => WorkloadKind::AccuracyTiered,
         other => anyhow::bail!("unknown workload {other}"),
     };
     let selection = match args.get_or("selection", "random").as_str() {
         "random" => Assignment::RandomFeasible,
         "naive" => Assignment::Policy(SelectionPolicy::Naive),
         "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
-        other => anyhow::bail!("unknown selection {other}"),
+        "modelless" => Assignment::ModelLess,
+        other => match other.strip_prefix("fixed:") {
+            // Same spelling the config layer round-trips (fixed:<idx>).
+            Some(idx) => Assignment::Fixed(idx.parse().map_err(|_| {
+                anyhow::anyhow!("--selection fixed:<model-index>, got {other:?}")
+            })?),
+            None => anyhow::bail!("unknown selection {other}"),
+        },
     };
 
     let trace = if let Some(path) = args.get("trace-file") {
@@ -206,10 +217,10 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het|live  --out results
+  figures     --fig all|2..10|het|rl_het|live|variants  --out results
               [--quick|--duration S --rate R]
-  simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints]
-              [--selection random|naive|paragon] [--trace-file F.csv]
+  simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
+              [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]
               [--vm-types m4.large,c5.xlarge] [--instance-cap N]
   profile     --iters N          (needs artifacts/)
   train-rl    --iters N          (needs artifacts/)

@@ -110,6 +110,37 @@ impl PpoManifest {
         }
         Ok(())
     }
+
+    /// Joint-space counterpart of [`Self::check_palette`]: reject
+    /// artifacts not lowered for this `(palette size, family size)` pair.
+    /// The joint layout demands `act_dim = 9*T*V` and
+    /// `obs_dim = obs_dim_joint(T, V)` exactly — the two dimensions
+    /// factor ambiguously, so both must match. Note a one-member family
+    /// is NOT the legacy layout: the joint observation always carries its
+    /// per-variant block (`obs_dim_joint(T, 1) = obs_dim(T) + 2`), so
+    /// artifacts driving a `VariantServeEnv` must be lowered for the
+    /// joint layout even at `V = 1` (python/compile/ppo.py,
+    /// `JOINT_VARIANTS`); legacy [`ServeEnv`](crate::rl::env::ServeEnv)
+    /// artifacts keep using [`Self::check_palette`].
+    pub fn check_family(&self, n_types: usize, n_variants: usize) -> Result<()> {
+        if n_variants == 0 {
+            bail!("empty variant family");
+        }
+        let want_act = env::act_dim_joint(n_types, n_variants);
+        let want_obs = env::obs_dim_joint(n_types, n_variants);
+        if self.act_dim != want_act || self.obs_dim != want_obs {
+            bail!(
+                "agent artifacts (obs_dim {}, act_dim {}) were not lowered \
+                 for a {n_variants}-variant, {n_types}-type joint space \
+                 (needs obs_dim {want_obs}, act_dim {want_act}) — re-lower \
+                 the PPO graphs (python/compile/ppo.py, N_TYPES = {n_types}, \
+                 N_VARIANTS = {n_variants}, JOINT_VARIANTS = True)",
+                self.obs_dim,
+                self.act_dim
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Aggregated stats over one `update` call.
@@ -205,6 +236,12 @@ impl PpoAgent {
     /// lowered for exactly `n_types` instance types.
     pub fn check_palette(&self, n_types: usize) -> Result<()> {
         self.manifest.check_palette(n_types)
+    }
+
+    /// See [`PpoManifest::check_family`]: errors unless the artifacts were
+    /// lowered for exactly this `(palette, family)` size pair.
+    pub fn check_family(&self, n_types: usize, n_variants: usize) -> Result<()> {
+        self.manifest.check_family(n_types, n_variants)
     }
 
     fn ensure_param_bufs(&mut self) -> Result<()> {

@@ -54,6 +54,26 @@
 //! so `a % 3` is the offload policy, `(a % 9) / 3 - 1` the scale delta and
 //! `a / 9` the type index. A one-entry palette reproduces the original
 //! 9-action single-type space id-for-id.
+//!
+//! # Joint (variant × type) encoding
+//!
+//! The variant plane ([`crate::variants`]) adds a model dimension: over a
+//! `V`-member family and a `T`-type palette the joint space
+//! `variant × vm_type × delta × offload` flattens to
+//! `act_dim_joint(T, V) = V * T * 9` ids:
+//!
+//! ```text
+//!   a = v * (T * 9) + k * 9 + (delta + 1) * 3 + offload
+//!     v ∈ 0..V   family member whose sub-fleet the delta scales
+//!     k, delta, offload   as above
+//! ```
+//!
+//! so `a / (T * 9)` is the variant and `a % (T * 9)` is exactly a legacy
+//! typed action id — a one-member family reproduces the PR-2 space
+//! id-for-id. Joint observations append, per family member, the usual
+//! 5-float per-type blocks plus a [`PER_VARIANT_OBS`]-float variant block
+//! (accuracy, recent routed share):
+//! `obs_dim_joint(T, V) = BASE_OBS + 5*T*V + 2*V` (see [`JointObsLayout`]).
 
 use crate::cloud::pricing::VmType;
 use crate::control::{FleetActuator, FluidFleet};
@@ -66,6 +86,9 @@ use crate::util::rng::Pcg;
 pub const BASE_OBS: usize = 13;
 /// Observation features appended per palette entry.
 pub const PER_TYPE_OBS: usize = 5;
+/// Observation features appended per family member in the joint layout
+/// (accuracy, recent routed share).
+pub const PER_VARIANT_OBS: usize = 2;
 /// Sub-actions per palette entry: delta {-1,0,+1} × offload {None,Strict,All}.
 pub const ACTIONS_PER_TYPE: usize = 9;
 
@@ -77,6 +100,19 @@ pub fn obs_dim(n_types: usize) -> usize {
 /// Action-space cardinality for an `n_types`-entry palette.
 pub fn act_dim(n_types: usize) -> usize {
     ACTIONS_PER_TYPE * n_types
+}
+
+/// Observation dimensionality of the joint `(variant, vm_type)` layout:
+/// one per-type block per `(member, palette entry)` pair plus one
+/// [`PER_VARIANT_OBS`]-float block per member.
+pub fn obs_dim_joint(n_types: usize, n_variants: usize) -> usize {
+    BASE_OBS + PER_TYPE_OBS * n_types * n_variants + PER_VARIANT_OBS * n_variants
+}
+
+/// Action-space cardinality of the joint `(variant, vm_type, delta,
+/// offload)` space (see the module docs for the index math).
+pub fn act_dim_joint(n_types: usize, n_variants: usize) -> usize {
+    ACTIONS_PER_TYPE * n_types * n_variants
 }
 
 /// Penalty per SLO violation, in USD-equivalents (tunes the cost/SLO
@@ -107,6 +143,30 @@ pub fn encode_action(vm_type_index: usize, delta: i32, offload: usize) -> usize 
     debug_assert!((-1..=1).contains(&delta));
     debug_assert!(offload < 3);
     vm_type_index * ACTIONS_PER_TYPE + ((delta + 1) as usize) * 3 + offload
+}
+
+/// Decode a joint action id into `(variant, vm_type_index, scale_delta,
+/// offload)` — `a = v*(T*9) + k*9 + (delta+1)*3 + offload` (module docs).
+/// Inverse of [`encode_action_joint`]; a one-member family degenerates to
+/// [`decode_action`] id-for-id.
+pub fn decode_action_joint(a: usize, n_types: usize, n_variants: usize)
+                           -> (usize, usize, i32, OffloadPolicy) {
+    assert!(n_variants > 0, "empty variant family");
+    assert!(
+        a < act_dim_joint(n_types, n_variants),
+        "action {a} out of range for a {n_variants}-variant, {n_types}-type space"
+    );
+    let per_variant = ACTIONS_PER_TYPE * n_types;
+    let v = a / per_variant;
+    let (k, delta, off) = decode_action(a % per_variant, n_types);
+    (v, k, delta, off)
+}
+
+/// Encode `(variant, vm_type_index, scale_delta, offload_index)` to the
+/// flat joint action id. Inverse of [`decode_action_joint`].
+pub fn encode_action_joint(variant: usize, vm_type_index: usize, delta: i32,
+                           offload: usize, n_types: usize) -> usize {
+    variant * ACTIONS_PER_TYPE * n_types + encode_action(vm_type_index, delta, offload)
 }
 
 /// Normalizers and static palette facts needed to render one observation
@@ -204,6 +264,124 @@ impl ObsLayout {
             obs.push((c.vm_type.boot_mean_s / 120.0) as f32);
             obs.push((c.cost_per_slot_second() / self.max_slot_price) as f32);
             obs.push((c.slots_per_vm as f64 / self.max_slots) as f32);
+        }
+        debug_assert_eq!(obs.len(), self.obs_dim());
+        obs
+    }
+}
+
+/// Joint-layout analogue of [`ObsLayout`]: normalizers plus static family
+/// facts for the `(variant, vm_type)` observation space — the base block,
+/// one 5-float per-type block per `(member, palette entry)` pair (member-
+/// major, palette order within a member), then one
+/// [`PER_VARIANT_OBS`]-float block per member (accuracy/100, recent routed
+/// share of the variant plane's traffic).
+#[derive(Debug, Clone)]
+pub struct JointObsLayout {
+    /// Per family member: per-type capacities, palette order.
+    pub families: Vec<Vec<TypeCap>>,
+    /// Per family member accuracy, percent.
+    pub accuracies: Vec<f64>,
+    pub rate_scale: f64,
+    pub fleet_scale: f64,
+    pub max_slots: f64,
+    pub max_slot_price: f64,
+    pub horizon_s: f64,
+}
+
+impl JointObsLayout {
+    /// Normalizers derived from the workload's mean rate; the fleet scale
+    /// anchors on the cheapest member's primary type (the sub-fleet warm
+    /// starts land on), mirroring [`ObsLayout::new`].
+    pub fn new(families: Vec<Vec<TypeCap>>, accuracies: Vec<f64>, mean_rate: f64,
+               horizon_s: f64) -> JointObsLayout {
+        assert!(!families.is_empty(), "empty variant family");
+        assert!(!families[0].is_empty(), "empty vm-type palette");
+        assert_eq!(families.len(), accuracies.len());
+        let c0 = &families[0][0];
+        let fleet_scale =
+            (mean_rate * c0.service_s / c0.slots_per_vm as f64).max(1.0) * 2.0;
+        let max_slots = families
+            .iter()
+            .flatten()
+            .map(|c| c.slots_per_vm)
+            .max()
+            .unwrap() as f64;
+        let max_slot_price = families
+            .iter()
+            .flatten()
+            .map(|c| c.cost_per_slot_second())
+            .fold(f64::MIN, f64::max);
+        JointObsLayout {
+            families,
+            accuracies,
+            rate_scale: (mean_rate * 2.0).max(1.0),
+            fleet_scale,
+            max_slots,
+            max_slot_price,
+            horizon_s: horizon_s.max(1.0),
+        }
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.families[0].len()
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.families.len()
+    }
+
+    /// Observation dimensionality of this layout.
+    pub fn obs_dim(&self) -> usize {
+        obs_dim_joint(self.n_types(), self.n_variants())
+    }
+
+    /// Render one joint observation. `running`/`booting` are `(variant,
+    /// palette entry)` count matrices; `routed_share` is each member's
+    /// recent share of the variant plane's routed traffic.
+    pub fn render(&self, s: &ObsSignals, running: &[Vec<u32>],
+                  booting: &[Vec<u32>], routed_share: &[f64]) -> Vec<f32> {
+        debug_assert_eq!(running.len(), self.n_variants());
+        debug_assert_eq!(booting.len(), self.n_variants());
+        debug_assert_eq!(routed_share.len(), self.n_variants());
+        let cap: f64 = running
+            .iter()
+            .zip(&self.families)
+            .flat_map(|(row, fam)| {
+                row.iter()
+                    .zip(fam)
+                    .map(|(&n, c)| n as f64 * c.slots_per_vm as f64 / c.service_s)
+            })
+            .sum();
+        let util = if cap > 0.0 { (s.rate_now / cap).min(1.5) } else { 1.5 };
+        let free = (cap - s.rate_now).max(0.0);
+        let tod = 2.0 * std::f64::consts::PI * s.t_s / self.horizon_s;
+        let mut obs = Vec::with_capacity(self.obs_dim());
+        obs.push((s.rate_now / self.rate_scale) as f32);
+        obs.push((s.rate_ewma / self.rate_scale) as f32);
+        obs.push((s.rate_pred / self.rate_scale) as f32);
+        obs.push((s.peak_to_median / 4.0) as f32);
+        obs.push(util as f32);
+        obs.push((free / (self.fleet_scale * self.max_slots)) as f32);
+        obs.push((s.queue / 100.0).min(2.0) as f32);
+        obs.push(s.lambda_share as f32);
+        obs.push(s.viol_share.min(2.0) as f32);
+        obs.push(s.strict_share as f32);
+        obs.push(tod.sin() as f32);
+        obs.push(tod.cos() as f32);
+        obs.push(1.0);
+        for (v, fam) in self.families.iter().enumerate() {
+            for (k, c) in fam.iter().enumerate() {
+                obs.push((running[v][k] as f64 / self.fleet_scale) as f32);
+                obs.push((booting[v][k] as f64 / self.fleet_scale) as f32);
+                obs.push((c.vm_type.boot_mean_s / 120.0) as f32);
+                obs.push((c.cost_per_slot_second() / self.max_slot_price) as f32);
+                obs.push((c.slots_per_vm as f64 / self.max_slots) as f32);
+            }
+        }
+        for (v, &acc) in self.accuracies.iter().enumerate() {
+            obs.push((acc / 100.0) as f32);
+            obs.push(routed_share[v].min(1.0) as f32);
         }
         debug_assert_eq!(obs.len(), self.obs_dim());
         obs
@@ -574,6 +752,22 @@ mod tests {
         // Factored index math: a = k*9 + (delta+1)*3 + offload.
         assert_eq!(decode_action(ACTIONS_PER_TYPE + 2 * 3 + 2, 2),
                    (1, 1, OffloadPolicy::All));
+    }
+
+    #[test]
+    fn joint_action_decoding_embeds_legacy_space() {
+        // One-member family: joint ids == legacy typed ids.
+        for a in 0..act_dim(2) {
+            let (v, k, d, o) = decode_action_joint(a, 2, 1);
+            assert_eq!(v, 0);
+            assert_eq!((k, d, o), decode_action(a, 2));
+        }
+        // Index math: a = v*(T*9) + legacy id.
+        let a = encode_action_joint(2, 1, -1, 2, 2);
+        assert_eq!(a, 2 * 18 + 9 + 2);
+        assert_eq!(decode_action_joint(a, 2, 3), (2, 1, -1, OffloadPolicy::All));
+        assert_eq!(obs_dim_joint(2, 1), obs_dim(2) + PER_VARIANT_OBS);
+        assert_eq!(act_dim_joint(7, 8), 9 * 7 * 8);
     }
 
     #[test]

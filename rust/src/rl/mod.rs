@@ -16,14 +16,22 @@
 //! [`env::act_dim`]); the AOT artifacts are lowered for one palette size
 //! and checked against the environment before acting
 //! ([`agent::PpoManifest::check_palette`]).
+//!
+//! The variant plane (PR 5) adds the *model* dimension: the joint
+//! `(variant, vm_type, delta, offload)` space over a whole model family
+//! ([`env::act_dim_joint`], [`variant_env::VariantServeEnv`]), with the
+//! family-size compatibility check
+//! ([`agent::PpoManifest::check_family`]).
 
 pub mod agent;
 pub mod baselines;
 pub mod buffer;
 pub mod env;
 pub mod trainer;
+pub mod variant_env;
 
 pub use agent::{PpoAgent, PpoManifest, UpdateStats};
 pub use buffer::Rollout;
 pub use env::{act_dim, decode_action, encode_action, obs_dim, ObsLayout, ObsSignals,
               ServeEnv};
+pub use variant_env::VariantServeEnv;

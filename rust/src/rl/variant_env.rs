@@ -1,0 +1,503 @@
+//! Joint-control RL environment: the serving system as an MDP over a
+//! *model family* × *instance palette* — both heterogeneity axes at once.
+//!
+//! [`VariantServeEnv`] generalizes [`ServeEnv`](super::env::ServeEnv) from
+//! one pinned model to a [`VariantFamily`]: the agent's action is the
+//! joint `(variant, vm_type, delta, offload)` id of
+//! [`super::env::decode_action_joint`], capacity lives in a multi-variant
+//! [`FluidFleet`], and the *workload is model-less* — arrivals carry
+//! accuracy-floor tiers, and each tier's mass is resolved to a concrete
+//! variant by the fleet's [`VariantPlane`](crate::variants::VariantPlane)
+//! (the same selector/ladder the sim engine and the live fleet route
+//! through). The agent therefore manages capacity *for the mix the
+//! selector produces*, exactly the closed loop the paper's self-managed
+//! end state requires.
+//!
+//! Observations follow [`JointObsLayout`]; rewards are the
+//! [`ServeEnv`](super::env::ServeEnv) reward over the summed family fleet
+//! (per-second VM billing + valve billing + violation penalty).
+
+use super::env::{act_dim_joint, decode_action_joint, obs_dim_joint, JointObsLayout,
+                 ObsSignals, StepResult, VIOLATION_PENALTY_USD};
+use crate::cloud::pricing::VmType;
+use crate::control::{FleetActuator, FluidFleet};
+use crate::models::Registry;
+use crate::scheduler::{Action, LoadMonitor, OffloadPolicy};
+use crate::trace::Trace;
+use crate::util::rng::Pcg;
+use crate::variants::{family_caps, VariantFamily, VariantSelector};
+
+/// Accuracy-floor tiers of the model-less workload: `(floor %, share of
+/// arrivals)`. Floors are member accuracies, so every tier is feasible by
+/// construction; tiers with floors below this bound also carry an
+/// interactive (500 ms) strict half, mirroring the request-level
+/// [`AccuracyTiered`](crate::trace::WorkloadKind) workload.
+const STRICT_FLOOR_BOUND: f64 = 70.0;
+
+fn default_tiers(accs: &[f64]) -> Vec<(f64, f64)> {
+    let hi = (accs[accs.len() - 1] - 1.0).max(0.0);
+    let mid = accs[accs.len() / 2].min(hi);
+    vec![(0.0, 0.40), (mid, 0.35), (hi, 0.25)]
+}
+
+/// Fluid-flow serving environment over one trace, one variant family and
+/// one instance palette (see the module docs).
+pub struct VariantServeEnv {
+    trace: Trace,
+    reg: Registry,
+    family: VariantFamily,
+    palette: Vec<&'static VmType>,
+    layout: JointObsLayout,
+    /// `(accuracy floor %, share of arrivals)` — the model-less demand mix.
+    tiers: Vec<(f64, f64)>,
+
+    // dynamic state
+    t: usize,
+    /// Multi-variant fluid fleet with a serverless valve and the variant
+    /// plane installed ([`FluidFleet::with_family`]).
+    fleet: FluidFleet,
+    /// Per-variant fluid queues by SLO class.
+    q_strict: Vec<f64>,
+    q_relaxed: Vec<f64>,
+    monitor: LoadMonitor,
+    rng: Pcg,
+    recent_lambda: f64,
+    recent_viol: f64,
+    /// Per-variant recent routed share (0.8/0.2 EWMA) — the dynamic half
+    /// of the observation's variant block.
+    routed_share: Vec<f64>,
+    pub episode_cost: f64,
+    pub episode_violations: f64,
+    pub episode_requests: f64,
+    /// Request mass the serverless valve absorbed over the episode.
+    pub episode_lambda: f64,
+    /// Floor-carrying request mass, and the share of it routed to a
+    /// variant meeting its floor.
+    pub episode_floor_mass: f64,
+    pub episode_attained: f64,
+}
+
+impl VariantServeEnv {
+    /// Environment over `family` and an explicit palette (head entry
+    /// primary, as everywhere else in the codebase).
+    pub fn new(reg: &Registry, trace: Trace, family: VariantFamily, seed: u64,
+               palette: Vec<&'static VmType>) -> VariantServeEnv {
+        assert!(!palette.is_empty(), "empty vm-type palette");
+        assert!(!family.is_empty(), "empty variant family");
+        // One capacity-derivation path for the whole variant plane: the
+        // layout's normalizers and the selector's costing share it.
+        let families = family_caps(reg, &family, &palette);
+        let accs: Vec<f64> =
+            family.members.iter().map(|&m| reg.models[m].accuracy).collect();
+        let mean = trace.mean_rate();
+        let horizon_s = trace.duration_s().max(1) as f64;
+        let tiers = default_tiers(&accs);
+        let layout = JointObsLayout::new(families, accs, mean, horizon_s);
+        let fleet = FluidFleet::with_family(reg, &family, palette.clone());
+        let nv = family.len();
+        VariantServeEnv {
+            trace,
+            reg: reg.clone(),
+            family,
+            palette,
+            layout,
+            tiers,
+            t: 0,
+            fleet,
+            q_strict: vec![0.0; nv],
+            q_relaxed: vec![0.0; nv],
+            monitor: LoadMonitor::new(),
+            rng: Pcg::new(seed, 0xe9f),
+            recent_lambda: 0.0,
+            recent_viol: 0.0,
+            routed_share: vec![0.0; nv],
+            episode_cost: 0.0,
+            episode_violations: 0.0,
+            episode_requests: 0.0,
+            episode_lambda: 0.0,
+            episode_floor_mass: 0.0,
+            episode_attained: 0.0,
+        }
+    }
+
+    pub fn horizon(&self) -> usize {
+        self.trace.duration_s()
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.palette.len()
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.family.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        obs_dim_joint(self.n_types(), self.n_variants())
+    }
+
+    pub fn act_dim(&self) -> usize {
+        act_dim_joint(self.n_types(), self.n_variants())
+    }
+
+    pub fn obs_layout(&self) -> &JointObsLayout {
+        &self.layout
+    }
+
+    pub fn family(&self) -> &VariantFamily {
+        &self.family
+    }
+
+    /// Running VMs of family member `v` on palette entry `k`.
+    pub fn running_of(&self, v: usize, k: usize) -> u32 {
+        self.fleet.running_all()[v][k]
+    }
+
+    /// In-flight boots of family member `v` on palette entry `k`.
+    pub fn booting_of(&self, v: usize, k: usize) -> u32 {
+        self.fleet.booting_all()[v][k]
+    }
+
+    /// Cumulative variant mix routed by the fleet's plane.
+    pub fn routed_mix(&self) -> Vec<f64> {
+        self.fleet
+            .variants()
+            .map(|p| p.mix().to_vec())
+            .unwrap_or_default()
+    }
+
+    /// Slo class of a tier's traffic (see [`STRICT_FLOOR_BOUND`]).
+    fn tier_slos(floor: f64) -> (f64, f64) {
+        if floor < STRICT_FLOOR_BOUND {
+            (500.0, 20_000.0)
+        } else {
+            (20_000.0, 20_000.0)
+        }
+    }
+
+    /// Reset to t=0 with each tier's pressure-free floor pick warmed on
+    /// the primary type (the joint analogue of [`ServeEnv`]'s warm
+    /// steady-state reset).
+    ///
+    /// [`ServeEnv`]: super::env::ServeEnv
+    pub fn reset(&mut self) -> Vec<f32> {
+        self.t = 0;
+        let rate0 = self.trace.rates.first().copied().unwrap_or(0.0);
+        self.fleet = FluidFleet::with_family(&self.reg, &self.family,
+                                             self.palette.clone());
+        let selector =
+            VariantSelector::new(&self.reg, self.family.clone(), &self.palette);
+        let mut warm = vec![0u32; self.family.len()];
+        for &(floor, share) in &self.tiers {
+            let (_, relaxed_slo) = Self::tier_slos(floor);
+            let v = selector.select(floor, relaxed_slo).variant;
+            let c = &self.layout.families[v][0];
+            warm[v] += ((rate0 * share * c.service_s / c.slots_per_vm as f64)
+                .ceil() as u32)
+                .max(1);
+        }
+        for (v, &n) in warm.iter().enumerate() {
+            if n > 0 {
+                self.fleet.force_running_of(v, 0, n);
+            }
+        }
+        let nv = self.family.len();
+        self.q_strict = vec![0.0; nv];
+        self.q_relaxed = vec![0.0; nv];
+        self.monitor = LoadMonitor::new();
+        self.recent_lambda = 0.0;
+        self.recent_viol = 0.0;
+        self.routed_share = vec![0.0; nv];
+        self.episode_cost = 0.0;
+        self.episode_violations = 0.0;
+        self.episode_requests = 0.0;
+        self.episode_lambda = 0.0;
+        self.episode_floor_mass = 0.0;
+        self.episode_attained = 0.0;
+        self.observe(rate0)
+    }
+
+    fn observe(&self, rate_now: f64) -> Vec<f32> {
+        let horizon = self.palette[0].boot_mean_s / 2.0;
+        let queue: f64 = self.q_strict.iter().sum::<f64>()
+            + self.q_relaxed.iter().sum::<f64>();
+        let signals = ObsSignals {
+            t_s: self.t as f64,
+            rate_now,
+            rate_ewma: self.monitor.rate_ewma(),
+            rate_pred: self.monitor.rate_pred(horizon),
+            peak_to_median: self.monitor.peak_to_median(),
+            queue,
+            lambda_share: self.recent_lambda,
+            viol_share: self.recent_viol,
+            strict_share: 0.5,
+        };
+        self.layout.render(&signals, self.fleet.running_all(),
+                           self.fleet.booting_all(), &self.routed_share)
+    }
+
+    /// Advance one second under joint action `a` (see
+    /// [`super::env::decode_action_joint`] for the encoding). Scaling goes
+    /// through the control-plane contract; model-less tier masses route
+    /// through the fleet's variant plane before serving.
+    pub fn step(&mut self, a: usize) -> (Vec<f32>, StepResult) {
+        let nv = self.family.len();
+        let (v, k, delta, offload) = decode_action_joint(a, self.palette.len(), nv);
+        let now = self.t as f64;
+        self.fleet.set_offload(offload);
+        let step_sz =
+            ((self.fleet.total_running() as f64 * 0.05).ceil() as usize).max(1);
+        let target_model = self.family.members[v];
+        if delta > 0 {
+            self.fleet.apply(
+                &Action::Spawn {
+                    model: target_model,
+                    vm_type: self.palette[k],
+                    count: step_sz,
+                },
+                now,
+            );
+        } else if delta < 0 {
+            self.fleet.apply(
+                &Action::Drain {
+                    model: target_model,
+                    vm_type: self.palette[k],
+                    count: step_sz,
+                },
+                now,
+            );
+        }
+        // Boots land and the plane's ladder advances on current capacity.
+        self.fleet.advance(now);
+
+        // Arrivals this second, split across accuracy tiers and routed
+        // through the plane (strict halves only on the low tiers).
+        let rate = self.trace.rates.get(self.t).copied().unwrap_or(0.0);
+        let arrivals = self.rng.poisson(rate) as f64;
+        for _ in 0..arrivals as u64 {
+            self.monitor.on_arrival();
+        }
+        self.monitor.tick();
+        self.episode_requests += arrivals;
+
+        let mut new_strict = vec![0.0; nv];
+        let mut new_relaxed = vec![0.0; nv];
+        let mut routed_now = vec![0.0; nv];
+        for ti in 0..self.tiers.len() {
+            let (floor, share) = self.tiers[ti];
+            let mass = arrivals * share;
+            if mass <= 0.0 {
+                continue;
+            }
+            let (strict_slo, relaxed_slo) = Self::tier_slos(floor);
+            let strict_mass = if floor < STRICT_FLOOR_BOUND { mass * 0.5 } else { 0.0 };
+            let relaxed_mass = mass - strict_mass;
+            if strict_mass > 0.0 {
+                if let Some(c) = self.fleet
+                    .route_modelless_weighted(floor, strict_slo, strict_mass)
+                {
+                    new_strict[c.variant] += strict_mass;
+                    routed_now[c.variant] += strict_mass;
+                    if floor > 0.0 {
+                        self.episode_floor_mass += strict_mass;
+                        if self.layout.accuracies[c.variant] >= floor {
+                            self.episode_attained += strict_mass;
+                        }
+                    }
+                }
+            }
+            if relaxed_mass > 0.0 {
+                if let Some(c) = self.fleet
+                    .route_modelless_weighted(floor, relaxed_slo, relaxed_mass)
+                {
+                    new_relaxed[c.variant] += relaxed_mass;
+                    routed_now[c.variant] += relaxed_mass;
+                    if floor > 0.0 {
+                        self.episode_floor_mass += relaxed_mass;
+                        if self.layout.accuracies[c.variant] >= floor {
+                            self.episode_attained += relaxed_mass;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Serve each variant's sub-fleet: queued first (FIFO priority),
+        // then arrivals; overflow offloads per policy or queues. Mirrors
+        // ServeEnv's fluid serving model, per variant.
+        let serve = |q: &mut f64, cap: &mut f64| {
+            let s = q.min(*cap);
+            *q -= s;
+            *cap -= s;
+        };
+        let mut viol = 0.0;
+        let mut lambda_n = 0.0;
+        let mut lambda_cost = 0.0;
+        for vi in 0..nv {
+            let cap: f64 = self.fleet.running_all()[vi]
+                .iter()
+                .zip(&self.layout.families[vi])
+                .map(|(&n, c)| n as f64 * c.slots_per_vm as f64 / c.service_s)
+                .sum();
+            let mut remaining = cap;
+            serve(&mut self.q_strict[vi], &mut remaining);
+            serve(&mut self.q_relaxed[vi], &mut remaining);
+            let mut ns = new_strict[vi];
+            let mut nr = new_relaxed[vi];
+            serve(&mut ns, &mut remaining);
+            serve(&mut nr, &mut remaining);
+            let mut offloaded = 0.0;
+            match offload {
+                OffloadPolicy::All => {
+                    offloaded = ns + nr + self.q_strict[vi] + self.q_relaxed[vi];
+                    ns = 0.0;
+                    nr = 0.0;
+                    self.q_strict[vi] = 0.0;
+                    self.q_relaxed[vi] = 0.0;
+                }
+                OffloadPolicy::StrictOnly => {
+                    offloaded = ns + self.q_strict[vi];
+                    ns = 0.0;
+                    self.q_strict[vi] = 0.0;
+                }
+                OffloadPolicy::None => {}
+            }
+            // Newly-queued strict work violates its sub-second SLO by
+            // construction; queued relaxed work violates past a ~4 s
+            // fluid wait. Counted once, at queueing time.
+            viol += ns;
+            let wait_s = if cap > 0.0 {
+                ((self.q_relaxed[vi] + nr) / cap).min(600.0)
+            } else {
+                600.0
+            };
+            if wait_s > 4.0 {
+                viol += nr;
+            }
+            self.q_strict[vi] += ns;
+            self.q_relaxed[vi] += nr;
+            if offloaded > 0.0 {
+                let model = self.family.members[vi];
+                lambda_cost += self
+                    .fleet
+                    .valve_mut()
+                    .expect("family fleets always carry a valve")
+                    .absorb(model, offloaded);
+                lambda_n += offloaded;
+            }
+        }
+
+        // Costs: per-second per-(variant, type) VM billing (booting VMs
+        // bill too) + the valve's fluid lambda billing above.
+        let mut vm_cost = 0.0;
+        for vi in 0..nv {
+            for (kk, t) in self.palette.iter().enumerate() {
+                let alive = self.fleet.running_all()[vi][kk] as f64
+                    + self.fleet.booting_all()[vi][kk] as f64;
+                vm_cost += alive * t.price.per_second();
+            }
+        }
+        let cost = vm_cost + lambda_cost;
+        self.episode_lambda += lambda_n;
+        self.episode_cost += cost;
+        self.episode_violations += viol;
+        self.recent_lambda = 0.9 * self.recent_lambda
+            + 0.1 * if arrivals > 0.0 { lambda_n / arrivals } else { 0.0 };
+        self.recent_viol = 0.9 * self.recent_viol
+            + 0.1 * if arrivals > 0.0 { viol / arrivals } else { 0.0 };
+        for (vi, share) in self.routed_share.iter_mut().enumerate() {
+            let now_share =
+                if arrivals > 0.0 { routed_now[vi] / arrivals } else { 0.0 };
+            *share = 0.8 * *share + 0.2 * now_share;
+        }
+
+        let reward = -(cost + viol * VIOLATION_PENALTY_USD) * 100.0;
+        self.t += 1;
+        let done = self.t >= self.trace.duration_s();
+        let obs = self.observe(rate);
+        (obs, StepResult { reward, cost_usd: cost, violations: viol, done })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+    use crate::rl::env::encode_action_joint;
+    use crate::trace::generators;
+
+    fn env3() -> VariantServeEnv {
+        let reg = Registry::builtin();
+        let trace = generators::constant(40.0, 200);
+        let family = VariantFamily::from_members(&reg, "trio", vec![0, 3, 6]);
+        let palette = vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        VariantServeEnv::new(&reg, trace, family, 7, palette)
+    }
+
+    #[test]
+    fn reset_warms_per_tier_floor_picks_and_obs_has_joint_dims() {
+        let mut e = env3();
+        let obs = e.reset();
+        assert_eq!(obs.len(), obs_dim_joint(2, 3));
+        assert_eq!(obs.len(), e.obs_dim());
+        assert_eq!(e.act_dim(), 9 * 2 * 3);
+        for (i, &x) in obs.iter().enumerate() {
+            assert!(x.is_finite() && x.abs() <= 4.0, "obs[{i}]={x}");
+        }
+        // Every tier's floor pick holds warm capacity on the primary type.
+        let warmed = (0..3).filter(|&v| e.running_of(v, 0) > 0).count();
+        assert!(warmed >= 2, "tier floor picks must be warmed, got {warmed}");
+    }
+
+    #[test]
+    fn joint_actions_land_on_their_variant_and_type() {
+        let mut e = env3();
+        e.reset();
+        // Spawn on (variant 2, type 1): boots must land exactly there.
+        e.step(encode_action_joint(2, 1, 1, 0, 2));
+        assert!(e.booting_of(2, 1) >= 1, "boot must target (v=2, k=1)");
+        assert_eq!(e.booting_of(0, 1), 0);
+        assert_eq!(e.booting_of(1, 0), 0);
+        // Drain on (variant 2, type 1) cancels those boots first.
+        let before = e.booting_of(2, 1);
+        e.step(encode_action_joint(2, 1, -1, 0, 2));
+        assert!(e.booting_of(2, 1) < before, "drain must cancel its own boots");
+    }
+
+    #[test]
+    fn modelless_tiers_route_and_attain_floors() {
+        let mut e = env3();
+        e.reset();
+        for _ in 0..e.horizon() {
+            // Hold the fleet, offload strict overflow.
+            let (_, r) = e.step(encode_action_joint(0, 0, 0, 1, 2));
+            if r.done {
+                break;
+            }
+        }
+        assert!(e.episode_requests > 0.0);
+        assert!(e.episode_floor_mass > 0.0, "tiers must demand floors");
+        let attain = e.episode_attained / e.episode_floor_mass;
+        assert!(attain > 0.999, "feasible floors must be attained: {attain}");
+        // The plane's mix spans more than one variant.
+        let mix = e.routed_mix();
+        assert!(mix.iter().filter(|&&m| m > 0.0).count() >= 2, "mix {mix:?}");
+        assert!(e.episode_cost > 0.0);
+    }
+
+    #[test]
+    fn episode_terminates_after_horizon() {
+        let mut e = env3();
+        e.reset();
+        let mut steps = 0;
+        loop {
+            let (_, r) = e.step(encode_action_joint(0, 0, 0, 0, 2));
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps <= e.horizon());
+        }
+        assert_eq!(steps, e.horizon());
+    }
+}

@@ -128,6 +128,11 @@ pub struct ModelDemand {
     pub slots_per_vm: u32,
     /// Requests currently queued for this model.
     pub queued: usize,
+    /// Recent mean delivered accuracy of this model's variant-plane
+    /// traffic, percent (EWMA; 0.0 when the backend routes no model-less
+    /// queries through a plane). Lets accuracy-aware schemes see what the
+    /// variant ladder is actually serving, not just how much.
+    pub delivered_acc: f64,
     /// Full palette capacities for this model, in palette order (empty in
     /// legacy single-type observations: schemes then fall back to the
     /// primary-type fields above).
@@ -311,6 +316,7 @@ pub(crate) mod testutil {
             service_s: 0.1,
             slots_per_vm: 2,
             queued: 0,
+            delivered_acc: 0.0,
             types: vec![TypeCap {
                 vm_type: default_vm_type(),
                 service_s: 0.1,
@@ -345,6 +351,7 @@ mod tests {
     fn vms_for_rate_ceil() {
         let d = ModelDemand {
             model: 0, rate: 0.0, service_s: 0.5, slots_per_vm: 2, queued: 0,
+            delivered_acc: 0.0,
             types: vec![],
         };
         // one VM serves 4 q/s; 9 q/s needs 3 VMs.

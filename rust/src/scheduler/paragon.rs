@@ -151,6 +151,7 @@ mod tests {
         }
         let demands = vec![ModelDemand {
             model: 0, rate: 80.0, service_s: 0.1, slots_per_vm: 2, queued: 0,
+            delivered_acc: 0.0,
             types: vec![],
         }];
         let fleet = FleetView::empty(60.0);

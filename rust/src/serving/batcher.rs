@@ -41,6 +41,14 @@ impl Batcher {
         self.queues.iter().map(|q| q.len()).sum()
     }
 
+    /// Per-model pending queue depths (model-indexed). The server mirrors
+    /// these into shared counters after every batcher-loop iteration so
+    /// the control plane can observe attached-mode backlog
+    /// ([`Server::queued_by_model`](crate::serving::Server)).
+    pub fn depths(&self) -> Vec<usize> {
+        self.queues.iter().map(VecDeque::len).collect()
+    }
+
     /// Flush any model whose queue is full-batch-ready or — when
     /// `allow_partial` — whose oldest request has waited past the timeout.
     /// `allow_partial` should reflect downstream idleness: flushing a

@@ -64,6 +64,14 @@ impl Router {
         self.candidates.iter().find(|c| c.idx == model).map(|c| c.cost)
     }
 
+    /// Registry indices of the loaded candidate models, ascending cost —
+    /// the member set an engine-attached fleet hands to
+    /// [`VariantFamily::from_members`](crate::variants::VariantFamily) so
+    /// its variant plane only ever selects models the engine can execute.
+    pub fn loaded_models(&self) -> Vec<usize> {
+        self.candidates.iter().map(|c| c.idx).collect()
+    }
+
     /// Pick a model for constraints (slo_ms, min_accuracy).
     pub fn route(&self, slo_ms: f64, min_accuracy: f64) -> usize {
         match self.policy {

@@ -96,6 +96,9 @@ pub struct Server {
     threads: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     input_dim: usize,
+    /// Per-model batcher queue depths, mirrored by the batcher loop after
+    /// each iteration (see [`Server::queued_by_model`]).
+    depths: Arc<Vec<AtomicU64>>,
 }
 
 impl Server {
@@ -118,12 +121,15 @@ impl Server {
         let counters = Arc::new(Counters::default());
         let latency = Arc::new(Mutex::new(LogHistogram::latency_ms()));
         let stop = Arc::new(AtomicBool::new(false));
+        let depths: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_models).map(|_| AtomicU64::new(0)).collect());
         let mut threads = Vec::new();
 
         // --- batcher loop -------------------------------------------------
         {
             let counters = counters.clone();
             let stop = stop.clone();
+            let depths = depths.clone();
             let timeout = cfg.batch_timeout_ms;
             let max_batch = cfg.max_batch;
             threads.push(
@@ -149,6 +155,9 @@ impl Server {
                                     for b in batcher.drain_all() {
                                         let _ = batch_tx.send(b);
                                     }
+                                    for d in depths.iter() {
+                                        d.store(0, Ordering::Relaxed);
+                                    }
                                     break;
                                 }
                             }
@@ -164,6 +173,12 @@ impl Server {
                                 if batch_tx.send(b).is_err() {
                                     return;
                                 }
+                            }
+                            // Mirror per-model queue depths for external
+                            // observers (the control plane's attached-mode
+                            // demand snapshots read these).
+                            for (m, d) in batcher.depths().into_iter().enumerate() {
+                                depths[m].store(d as u64, Ordering::Relaxed);
                             }
                             if stop.load(Ordering::Relaxed) && batcher.pending() == 0 {
                                 break;
@@ -253,7 +268,17 @@ impl Server {
             threads,
             next_id: AtomicU64::new(0),
             input_dim: engine.input_dim,
+            depths,
         }
+    }
+
+    /// Per-model batcher queue depths (model-indexed), as last mirrored by
+    /// the batcher loop. This is the attached-mode backlog the control
+    /// plane folds into its demand snapshots — pools own their batcher
+    /// queues, so without this export queue-aware schemes fly blind
+    /// against engine-attached fleets.
+    pub fn queued_by_model(&self) -> Vec<u64> {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect()
     }
 
     /// Submit one typed request; returns the response receiver, or a typed

@@ -23,6 +23,7 @@ use crate::scheduler::{Action, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
 use crate::util::stats::LogHistogram;
+use crate::variants::{VariantFamily, VariantPlane, VariantSelector};
 use std::collections::VecDeque;
 
 /// How each request is mapped to a pool model.
@@ -33,6 +34,15 @@ pub enum Assignment {
     RandomFeasible,
     /// Model-selection policy (workload-2, Fig 9c).
     Policy(SelectionPolicy),
+    /// Every request pinned to one registry model — the fixed-variant
+    /// baselines `fig_variants` sweeps.
+    Fixed(usize),
+    /// Model-less queries (INFaaS-style): requests carry only
+    /// `(min_accuracy, slo_ms)`; at arrival time the actuator's variant
+    /// plane ([`crate::variants`]) resolves the concrete variant through
+    /// the load-adaptive selector — the same selector the fluid and live
+    /// backends route through.
+    ModelLess,
 }
 
 #[derive(Debug, Clone)]
@@ -97,15 +107,37 @@ struct Queued {
     slo_ms: f64,
     arrival: f64,
     strict: bool,
+    /// The request carried an accuracy floor its assigned model meets;
+    /// attainment is credited only when the request is actually served.
+    floor_ok: bool,
 }
 
 /// Assign a model to every request up front (deterministic given seed).
+/// `ModelLess` assignments are a *static approximation* here — the
+/// pressure-free floor pick of the variant selector — used only for
+/// warm-start sizing; at run time every model-less arrival re-resolves
+/// through the actuator's live variant plane.
 pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<usize> {
     let mut rng = Pcg::new(cfg.seed, 0xa551);
     let vm = cfg.primary();
+    let palette: Vec<&'static VmType> = if cfg.vm_types.is_empty() {
+        vec![crate::cloud::default_vm_type()]
+    } else {
+        cfg.vm_types.clone()
+    };
+    let selector = VariantSelector::new(reg, VariantFamily::full_pool(reg), &palette);
     reqs.iter()
         .map(|r| match cfg.assignment {
             Assignment::Policy(p) => select(reg, vm, p, r),
+            Assignment::Fixed(m) => {
+                // Fail fast: silently clamping would mislabel a whole
+                // fixed-variant baseline run.
+                assert!(m < reg.len(),
+                        "fixed model index {m} out of range (pool has {} models)",
+                        reg.len());
+                m
+            }
+            Assignment::ModelLess => selector.select(r.min_accuracy, r.slo_ms).model,
             Assignment::RandomFeasible => {
                 let feasible: Vec<usize> = reg
                     .models
@@ -175,6 +207,17 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     // and the control loop owns the demand monitor/EWMAs.
     let mut actuator =
         ClusterActuator::new(reg, palette.clone(), cfg.instance_cap, cfg.seed ^ 0xc11);
+    // Model-less runs resolve variants at arrival time through the
+    // actuator's variant plane — the same selector/ladder the fluid and
+    // live backends carry (`rust/tests/variant_conformance.rs`).
+    let modelless = cfg.assignment == Assignment::ModelLess;
+    if modelless {
+        actuator.install_variants(VariantPlane::new(
+            reg,
+            VariantFamily::full_pool(reg),
+            &palette,
+        ));
+    }
     let mut cl = ControlLoop::new(reg, palette.clone());
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
     let mut completions: SimCore<Completion> = SimCore::new();
@@ -188,6 +231,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     let mut rep = SimReport {
         scheme: scheme.name().to_string(),
         trace: trace_name.to_string(),
+        served_by_model: vec![0; n_models],
         ..Default::default()
     };
     let mut lat_hist = LogHistogram::latency_ms();
@@ -269,6 +313,10 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                     record(&mut rep, &mut lat_hist, &mut lat_samples,
                            latency_ms, q.slo_ms, q.strict);
                     rep.served_vm += 1;
+                    rep.served_by_model[c.model] += 1;
+                    if q.floor_ok {
+                        rep.attained += 1;
+                    }
                     completions.schedule_at(done, Completion { vm_id, model: c.model });
                 } else {
                     queues[c.model].push_front(q);
@@ -277,10 +325,25 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         } else if t_arr <= t_tick {
             // --- arrival
             let r = &reqs[req_i];
-            let m = models[req_i];
+            // Model-less mode resolves the variant NOW through the
+            // actuator's plane (load-adaptive ladder); other assignments
+            // use the precomputed table.
+            let m = if modelless {
+                actuator
+                    .route_modelless(r.min_accuracy, r.slo_ms)
+                    .map(|c| c.model)
+                    .unwrap_or(models[req_i])
+            } else {
+                models[req_i]
+            };
             req_i += 1;
             actuator.note_arrival(m);
             rep.requests += 1;
+            let floor_ok =
+                r.min_accuracy > 0.0 && reg.models[m].accuracy >= r.min_accuracy;
+            if r.min_accuracy > 0.0 {
+                rep.floor_requests += 1;
+            }
 
             if let Some((vm_id, k)) = route_best(&mut actuator.cluster, m, r.slo_ms) {
                 let svc = caps[m][k].service_s;
@@ -288,6 +351,10 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 record(&mut rep, &mut lat_hist, &mut lat_samples,
                        svc * 1000.0, r.slo_ms, r.strictness == Strictness::Strict);
                 rep.served_vm += 1;
+                rep.served_by_model[m] += 1;
+                if floor_ok {
+                    rep.attained += 1;
+                }
                 completions.schedule_at(done, Completion { vm_id, model: m });
             } else {
                 // Overflow: the actuator's serverless valve (shared with
@@ -299,8 +366,12 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                     Some(out) => {
                         rep.cost_lambda += out.cost_usd;
                         rep.served_lambda += 1;
+                        rep.served_by_model[m] += 1;
                         if out.cold {
                             rep.lambda_cold_starts += 1;
+                        }
+                        if floor_ok {
+                            rep.attained += 1;
                         }
                         record(&mut rep, &mut lat_hist, &mut lat_samples,
                                out.latency_ms, r.slo_ms, strict);
@@ -310,6 +381,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                             slo_ms: r.slo_ms,
                             arrival: now,
                             strict,
+                            floor_ok,
                         });
                     }
                 }
@@ -344,6 +416,10 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             let needed_slots: f64 =
                 tick.demands.iter().map(|d| d.rate * d.service_s).sum();
             actuator.cluster.tick(now, 1.0, needed_slots);
+            // The engine ticks its cluster directly (real dt + needed
+            // slots), so the variant ladder is advanced here rather than
+            // through `advance` — post-boot capacity, pre-next-arrival.
+            actuator.refresh_variants(now);
             rep.peak_vms = rep.peak_vms.max(actuator.cluster.total_alive());
             // Newly-booted VMs can absorb queued work.
             for m in 0..n_models {
@@ -356,6 +432,10 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                             record(&mut rep, &mut lat_hist, &mut lat_samples,
                                    latency_ms, head.slo_ms, head.strict);
                             rep.served_vm += 1;
+                            rep.served_by_model[m] += 1;
+                            if head.floor_ok {
+                                rep.attained += 1;
+                            }
                             completions.schedule_at(done, Completion { vm_id, model: m });
                         }
                         None => break,
@@ -568,6 +648,52 @@ mod tests {
         // not deadlock.
         assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests);
         assert!(rep.dropped > 0, "a 3-VM quota at 30 q/s must shed load");
+    }
+
+    #[test]
+    fn modelless_assignment_attains_floors_and_mixes_variants() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(20.0, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, 7);
+        let cfg = SimConfig {
+            assignment: Assignment::ModelLess,
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("paragon").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests);
+        assert!(rep.floor_requests > 0, "tiered workload must demand floors");
+        assert!(
+            rep.attainment_pct() > 95.0,
+            "feasible floors must be attained: {}%",
+            rep.attainment_pct()
+        );
+        // The run must actually mix variants, and the mix must conserve
+        // the served count.
+        let mixed = rep.served_by_model.iter().filter(|&&n| n > 0).count();
+        assert!(mixed >= 3, "expected a variant mix: {:?}", rep.served_by_model);
+        let total: u64 = rep.served_by_model.iter().sum();
+        assert_eq!(total, rep.served_vm + rep.served_lambda);
+    }
+
+    #[test]
+    fn fixed_assignment_pins_every_request() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(10.0, 120);
+        let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, 3);
+        let cfg = SimConfig {
+            assignment: Assignment::Fixed(2), // mobilenet_10, 72%
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("reactive").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        let total: u64 = rep.served_by_model.iter().sum();
+        assert_eq!(rep.served_by_model[2], total, "all traffic pinned to model 2");
+        // A 72%-accurate fixed variant attains the 0/65 tiers but must
+        // miss the 78/86 tiers.
+        assert!(rep.floor_requests > 0);
+        assert!(rep.attainment_pct() < 100.0);
+        assert!(rep.attainment_pct() > 20.0);
     }
 
     #[test]

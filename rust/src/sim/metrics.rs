@@ -21,6 +21,14 @@ pub struct SimReport {
     /// VMs launched per instance type over the run (heterogeneous fleets
     /// report their realized mix; single-type runs have one entry).
     pub vms_by_type: Vec<(String, u64)>,
+    /// Requests served per registry model (VM + lambda) — the realized
+    /// variant mix of a model-less run (empty for reports built by hand).
+    pub served_by_model: Vec<u64>,
+    /// Requests that carried a non-zero accuracy floor.
+    pub floor_requests: u64,
+    /// Floor-carrying requests that were served (not dropped) by a model
+    /// meeting their floor — the accuracy-attainment numerator.
+    pub attained: u64,
     /// Billed cost, USD.
     pub cost_vm: f64,
     pub cost_lambda: f64,
@@ -64,6 +72,18 @@ impl SimReport {
         }
     }
 
+    /// Share of floor-carrying requests served at or above their accuracy
+    /// floor, percent (100 when nothing demanded a floor — nothing was
+    /// missed). Dropped requests count against attainment: their floor
+    /// was demanded and never delivered.
+    pub fn attainment_pct(&self) -> f64 {
+        if self.floor_requests == 0 {
+            100.0
+        } else {
+            self.attained as f64 / self.floor_requests as f64 * 100.0
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", self.scheme.as_str().into()),
@@ -81,6 +101,15 @@ impl SimReport {
                     .map(|(name, n)| (name.clone(), Json::from(*n as usize)))
                     .collect(),
             )),
+            ("served_by_model", Json::Arr(
+                self.served_by_model
+                    .iter()
+                    .map(|&n| Json::from(n as usize))
+                    .collect(),
+            )),
+            ("floor_requests", (self.floor_requests as usize).into()),
+            ("attained", (self.attained as usize).into()),
+            ("attainment_pct", self.attainment_pct().into()),
             ("cost_vm_usd", self.cost_vm.into()),
             ("cost_lambda_usd", self.cost_lambda.into()),
             ("cost_total_usd", self.total_cost().into()),

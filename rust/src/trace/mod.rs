@@ -104,13 +104,20 @@ pub struct Request {
     pub strictness: Strictness,
 }
 
-/// Paper workload types (§IV-B).
+/// Paper workload types (§IV-B), plus this repo's model-less extension.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WorkloadKind {
     /// Workload-1: mixed strict/relaxed latency SLOs, no accuracy demands.
     MixedSlo,
     /// Workload-2: per-query (accuracy, latency) constraints.
     VarConstraints,
+    /// Model-less accuracy tiers: four floor classes spanning the pool's
+    /// Fig 2 envelope (none / 65% / 78% / 86%), interactive SLOs only on
+    /// the low tiers (high floors force slow variants no sub-second SLO
+    /// could meet — every tier stays feasible by construction, which is
+    /// what lets the variant plane attain ~100% of floors). The workload
+    /// the `fig_variants` frontier replays.
+    AccuracyTiered,
 }
 
 /// Expand a rate trace into a concrete request stream (Poisson arrivals
@@ -142,6 +149,27 @@ pub fn synthesize_requests(trace: &Trace, kind: WorkloadKind, seed: u64) -> Vec<
                     let acc = rng.uniform(50.0, 88.0);
                     let slo = rng.uniform(400.0, 6000.0);
                     (slo, acc, Strictness::from_slo_ms(slo))
+                }
+                WorkloadKind::AccuracyTiered => {
+                    // Four floor tiers: 40% unconstrained, 25% ≥65, 20%
+                    // ≥78, 15% ≥86. Tight floors arrive relaxed (their
+                    // cheapest meeting variant is slow); loose floors mix
+                    // interactive and queue-tolerant SLOs like workload-1.
+                    let roll = rng.f64();
+                    let floor = if roll < 0.40 {
+                        0.0
+                    } else if roll < 0.65 {
+                        65.0
+                    } else if roll < 0.85 {
+                        78.0
+                    } else {
+                        86.0
+                    };
+                    if floor < 70.0 && rng.bool(0.5) {
+                        (rng.uniform(400.0, 1000.0), floor, Strictness::Strict)
+                    } else {
+                        (rng.uniform(20_000.0, 120_000.0), floor, Strictness::Relaxed)
+                    }
                 }
             };
             out.push(Request {
@@ -209,6 +237,23 @@ mod tests {
             .iter()
             .filter(|r| r.strictness == Strictness::Strict)
             .all(|r| r.slo_ms <= 1000.0));
+    }
+
+    #[test]
+    fn accuracy_tiered_floors_are_feasible_classes() {
+        let t = flat_trace(30.0, 100);
+        let reqs = synthesize_requests(&t, WorkloadKind::AccuracyTiered, 4);
+        let mut floors = std::collections::BTreeSet::new();
+        for r in &reqs {
+            floors.insert(r.min_accuracy as u64);
+            if r.min_accuracy >= 70.0 {
+                assert_eq!(r.strictness, Strictness::Relaxed,
+                           "tight floors must arrive queue-tolerant");
+                assert!(r.slo_ms >= 20_000.0);
+            }
+        }
+        let want: std::collections::BTreeSet<u64> = [0u64, 65, 78, 86].into_iter().collect();
+        assert_eq!(floors, want, "all four tiers must appear");
     }
 
     #[test]

@@ -15,6 +15,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (bench targets that emit JSON result files,
+    /// e.g. `bench_variants` → `results/BENCH_5.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_ns", self.mean_ns.into()),
+            ("p50_ns", self.p50_ns.into()),
+            ("p95_ns", self.p95_ns.into()),
+        ])
+    }
+
     pub fn print(&self) {
         println!(
             "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p95 {:>12}",

@@ -1,0 +1,364 @@
+//! The variant plane: model choice as a first-class control dimension.
+//!
+//! The paper's core argument is that prior systems optimize *model*
+//! heterogeneity (INFaaS, Cocktail) or *resource* heterogeneity (typed
+//! fleets), never both. The fleet axis is already typed end to end
+//! ([`crate::control`]); this module adds the second axis: an INFaaS-style
+//! **model-less query** abstraction — clients state an accuracy floor and
+//! a latency SLO, the system picks the concrete variant — combined with
+//! Cocktail-style load-adaptive variant switching.
+//!
+//! Three pieces:
+//! - [`VariantFamily`] groups [`Registry`] profiles into an
+//!   accuracy-ordered family (ascending order asserted at construction;
+//!   for the paper's pool the envelope is also latency/cost-monotone —
+//!   more accurate ⇒ slower ⇒ costlier per query, pinned by the registry
+//!   tests — so the least-accurate member meeting a floor is also the
+//!   cost-optimal one);
+//! - [`VariantSelector`] maps a model-less query `(min_accuracy, slo_ms)`
+//!   to a concrete `(variant, vm_type)` pair, with a **load-adaptive
+//!   downgrade ladder**: under pressure it serves the cheapest variant
+//!   still meeting the accuracy floor; when headroom returns it climbs
+//!   back toward the most accurate SLO-feasible variant (bounded by
+//!   `ladder_cap`). The floor is *never* crossed while any feasible
+//!   variant exists — `rust/tests/variant_conformance.rs` holds that as a
+//!   property under arbitrary load sequences;
+//! - [`VariantPlane`](plane::VariantPlane) packages the selector for the
+//!   control plane: every [`FleetActuator`](crate::control::FleetActuator)
+//!   backend carries one and routes model-less streams through the *same*
+//!   selector, so the sim engine, the fluid RL fleet and the live server
+//!   fleet produce the same variant mix for the same script.
+
+pub mod plane;
+
+pub use plane::{AccuracyUsage, VariantPlane};
+
+use crate::cloud::pricing::VmType;
+use crate::models::Registry;
+use crate::scheduler::TypeCap;
+
+/// An accuracy-ordered group of pool models serving the same task — the
+/// unit over which model-less queries are resolved.
+#[derive(Debug, Clone)]
+pub struct VariantFamily {
+    pub name: String,
+    /// Registry indices, ascending accuracy (and, for the paper's pool,
+    /// ascending latency and cost — the Fig 2 envelope).
+    pub members: Vec<usize>,
+}
+
+impl VariantFamily {
+    /// The whole model pool as one family (the paper's pool serves a
+    /// single classification task, so this is the default).
+    pub fn full_pool(reg: &Registry) -> VariantFamily {
+        Self::from_members(reg, "pool", (0..reg.len()).collect())
+    }
+
+    /// A family over an explicit member set (e.g. only the models loaded
+    /// in a live engine). Members are sorted ascending by accuracy.
+    pub fn from_members(reg: &Registry, name: &str, mut members: Vec<usize>) -> VariantFamily {
+        assert!(!members.is_empty(), "empty variant family");
+        members.sort_by(|&a, &b| {
+            reg.models[a]
+                .accuracy
+                .partial_cmp(&reg.models[b].accuracy)
+                .unwrap()
+        });
+        VariantFamily { name: name.to_string(), members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Family position of a registry model, if it is a member.
+    pub fn position_of(&self, model: usize) -> Option<usize> {
+        self.members.iter().position(|&m| m == model)
+    }
+}
+
+/// Per-`(family member, palette entry)` capacity table — the one way the
+/// variant plane and its consumers derive service times and slots (the
+/// family-indexed analogue of
+/// [`palette_caps`](crate::control::palette_caps)).
+pub fn family_caps(reg: &Registry, family: &VariantFamily,
+                   palette: &[&'static VmType]) -> Vec<Vec<TypeCap>> {
+    family
+        .members
+        .iter()
+        .map(|&m| {
+            let prof = &reg.models[m];
+            palette
+                .iter()
+                .map(|&t| TypeCap {
+                    vm_type: t,
+                    service_s: prof.service_time_s(t),
+                    slots_per_vm: prof.slots_on(t),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// A resolved model-less query: which family member serves it and which
+/// palette entry the selector costed it on. `vm_type_index` is advisory —
+/// serving backends still place the request on whichever sub-fleet has a
+/// free slot — but it is what capacity planning for the variant should
+/// target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VariantChoice {
+    /// Position in the family (0 = least accurate / cheapest).
+    pub variant: usize,
+    /// Registry index of the chosen member.
+    pub model: usize,
+    /// Palette index of the cheapest SLO-feasible instance type for the
+    /// chosen member.
+    pub vm_type_index: usize,
+}
+
+/// Maps `(min_accuracy, slo_ms)` queries to family members under a
+/// load-adaptive upgrade/downgrade ladder (see the module docs).
+#[derive(Debug, Clone)]
+pub struct VariantSelector {
+    family: VariantFamily,
+    /// Per-member accuracy, percent (family order).
+    accs: Vec<f64>,
+    /// Per-member palette capacities (family order × palette order).
+    caps: Vec<Vec<TypeCap>>,
+    /// Current upgrade rung: 0 = serve the cheapest variant meeting the
+    /// floor (the pressure regime), `ladder_cap` = serve up to that many
+    /// variants above it (the headroom regime).
+    rung: usize,
+    /// Upper bound on the upgrade rung. 0 pins the selector to the
+    /// cost-optimal floor pick regardless of load.
+    ladder_cap: usize,
+    /// Pressure above this downgrades one rung per observation.
+    high_watermark: f64,
+    /// Pressure below this upgrades one rung per observation.
+    low_watermark: f64,
+}
+
+impl VariantSelector {
+    /// Selector over `family` costed against `palette`. Default ladder:
+    /// one bonus rung, downgrade above 0.75 pressure, upgrade below 0.40.
+    pub fn new(reg: &Registry, family: VariantFamily,
+               palette: &[&'static VmType]) -> VariantSelector {
+        assert!(!palette.is_empty(), "empty vm-type palette");
+        let accs: Vec<f64> = family.members.iter().map(|&m| reg.models[m].accuracy).collect();
+        assert!(
+            accs.windows(2).all(|w| w[0] <= w[1]),
+            "family members must be accuracy-sorted"
+        );
+        let caps = family_caps(reg, &family, palette);
+        VariantSelector {
+            family,
+            accs,
+            caps,
+            rung: 0,
+            ladder_cap: 1,
+            high_watermark: 0.75,
+            low_watermark: 0.40,
+        }
+    }
+
+    /// Override the ladder's maximum upgrade rung.
+    pub fn with_ladder_cap(mut self, cap: usize) -> VariantSelector {
+        self.ladder_cap = cap;
+        self
+    }
+
+    pub fn family(&self) -> &VariantFamily {
+        &self.family
+    }
+
+    /// Per-member palette capacities (family order × palette order).
+    pub fn caps(&self) -> &[Vec<TypeCap>] {
+        &self.caps
+    }
+
+    /// Accuracy (percent) of family member `variant`.
+    pub fn accuracy_of(&self, variant: usize) -> f64 {
+        self.accs[variant]
+    }
+
+    /// Current upgrade rung (observable for figures/tests).
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    /// Feed one load observation into the ladder. `pressure` is demand
+    /// over capacity (≈ utilization had every request been VM-served);
+    /// above the high watermark the selector steps one rung down toward
+    /// the floor pick, below the low watermark it climbs one rung back.
+    /// The band between the watermarks holds the rung (hysteresis — the
+    /// ladder must not oscillate on every noisy tick).
+    pub fn observe(&mut self, pressure: f64) {
+        if pressure >= self.high_watermark {
+            self.rung = self.rung.saturating_sub(1);
+        } else if pressure <= self.low_watermark && self.rung < self.ladder_cap {
+            self.rung += 1;
+        }
+    }
+
+    /// Cheapest SLO-feasible palette entry for member `v` (by effective
+    /// $/query), or `None` when no palette type serves it within `slo_ms`.
+    fn feasible_type(&self, v: usize, slo_ms: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (k, c) in self.caps[v].iter().enumerate() {
+            if c.service_s * 1000.0 > slo_ms {
+                continue;
+            }
+            best = match best {
+                Some(b) if self.caps[v][b].cost_per_query() <= c.cost_per_query() => Some(b),
+                _ => Some(k),
+            };
+        }
+        best
+    }
+
+    /// Fastest palette entry for member `v` (the infeasible-SLO fallback).
+    fn fastest_type(&self, v: usize) -> usize {
+        let mut best = 0;
+        for (k, c) in self.caps[v].iter().enumerate() {
+            if c.service_s < self.caps[v][best].service_s {
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Resolve one model-less query. Candidates are the members meeting
+    /// the accuracy floor that some palette type can serve within the SLO;
+    /// the ladder rung picks within that band (rung 0 = the least-accurate
+    /// candidate — the cost-optimal floor pick for the pool's monotone
+    /// accuracy/cost envelope). The accuracy floor is never crossed while
+    /// any candidate exists. Infeasible pairs honor latency first — the most
+    /// accurate SLO-feasible member, else the fastest member outright —
+    /// mirroring [`crate::models::select`]'s fallback so no query is
+    /// dropped at selection time.
+    pub fn select(&self, min_accuracy: f64, slo_ms: f64) -> VariantChoice {
+        // (variant, vm_type_index) candidates, ascending accuracy.
+        let band: Vec<(usize, usize)> = (0..self.family.len())
+            .filter(|&v| self.accs[v] >= min_accuracy)
+            .filter_map(|v| self.feasible_type(v, slo_ms).map(|k| (v, k)))
+            .collect();
+        if let Some(&(lo_v, _)) = band.first() {
+            let idx = self.rung.min(band.len() - 1);
+            let (v, k) = band[idx];
+            debug_assert!(v >= lo_v);
+            return VariantChoice {
+                variant: v,
+                model: self.family.members[v],
+                vm_type_index: k,
+            };
+        }
+        // Floor infeasible within the SLO: most accurate member any type
+        // still serves in time (accuracy-maximizing within latency)...
+        let fallback = (0..self.family.len())
+            .rev()
+            .find_map(|v| self.feasible_type(v, slo_ms).map(|k| (v, k)));
+        // ...else the fastest member on its fastest type.
+        let (v, k) = fallback.unwrap_or_else(|| (0, self.fastest_type(0)));
+        VariantChoice {
+            variant: v,
+            model: self.family.members[v],
+            vm_type_index: k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+
+    fn selector() -> VariantSelector {
+        let reg = Registry::builtin();
+        let palette = [vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        VariantSelector::new(&reg, VariantFamily::full_pool(&reg), &palette)
+    }
+
+    #[test]
+    fn family_sorts_and_indexes() {
+        let reg = Registry::builtin();
+        let fam = VariantFamily::from_members(&reg, "rev", vec![4, 0, 2]);
+        assert_eq!(fam.members, vec![0, 2, 4], "must sort ascending accuracy");
+        assert_eq!(fam.position_of(2), Some(1));
+        assert_eq!(fam.position_of(7), None);
+        assert_eq!(VariantFamily::full_pool(&reg).len(), reg.len());
+    }
+
+    #[test]
+    fn floor_pick_is_cheapest_meeting_floor() {
+        let reg = Registry::builtin();
+        let s = selector(); // rung 0
+        // Accuracy ≥ 75 with a loose SLO: resnet18 (79.5) is the cheapest
+        // member at or above the floor.
+        let c = s.select(75.0, 60_000.0);
+        assert_eq!(reg.models[c.model].name, "resnet18");
+        // No floor: the cheapest member outright.
+        let c = s.select(0.0, 60_000.0);
+        assert_eq!(reg.models[c.model].name, "mobilenet_025");
+    }
+
+    #[test]
+    fn ladder_upgrades_under_headroom_and_downgrades_under_pressure() {
+        let reg = Registry::builtin();
+        let mut s = selector().with_ladder_cap(2);
+        // Sustained headroom: climb to the cap, serving above the floor.
+        for _ in 0..4 {
+            s.observe(0.1);
+        }
+        assert_eq!(s.rung(), 2);
+        let up = s.select(75.0, 60_000.0);
+        assert_eq!(reg.models[up.model].name, "densenet121", "floor + 2 rungs");
+        // Sustained pressure: back to the floor pick.
+        for _ in 0..4 {
+            s.observe(0.95);
+        }
+        assert_eq!(s.rung(), 0);
+        let down = s.select(75.0, 60_000.0);
+        assert_eq!(reg.models[down.model].name, "resnet18");
+        // Mid-band pressure holds the rung (hysteresis).
+        s.observe(0.6);
+        assert_eq!(s.rung(), 0);
+    }
+
+    #[test]
+    fn floor_never_crossed_even_at_full_pressure() {
+        let mut s = selector();
+        for _ in 0..10 {
+            s.observe(1.5);
+        }
+        let c = s.select(80.0, 60_000.0);
+        assert!(s.accuracy_of(c.variant) >= 80.0, "pressure must not cross the floor");
+    }
+
+    #[test]
+    fn slo_bounds_the_band_and_infeasible_pairs_honor_latency() {
+        let reg = Registry::builtin();
+        let s = selector();
+        // 500 ms SLO excludes resnet50+ even on c5.large; accuracy 75
+        // forces resnet18 (480 ms on m4, 384 ms on c5).
+        let c = s.select(75.0, 500.0);
+        assert_eq!(reg.models[c.model].name, "resnet18");
+        // 89% within 100 ms is impossible: fall back to the most accurate
+        // member some type still serves within 100 ms (squeezenet on c5).
+        let c = s.select(89.0, 100.0);
+        assert!(reg.models[c.model].service_time_s(
+            s.caps()[c.variant][c.vm_type_index].vm_type) * 1000.0 <= 100.0);
+        assert_eq!(reg.models[c.model].name, "squeezenet");
+    }
+
+    #[test]
+    fn chosen_type_is_cheapest_feasible_palette_entry() {
+        let s = selector();
+        let c = s.select(0.0, 60_000.0);
+        // c5.large undercuts m4.large per query for every pool model.
+        assert_eq!(s.caps()[c.variant][c.vm_type_index].vm_type.name, "c5.large");
+    }
+}

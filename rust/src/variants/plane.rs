@@ -1,0 +1,267 @@
+//! [`VariantPlane`]: the selector packaged for the control plane.
+//!
+//! Each [`FleetActuator`](crate::control::FleetActuator) backend owns an
+//! optional plane and exposes it through
+//! `route_modelless`/`refresh_variants`; because the plane derives its
+//! pressure signal from the backend-agnostic [`FleetView`] (routed demand
+//! over family capacity — not from backend-specific serving internals),
+//! two backends holding the same capacity and fed the same model-less
+//! script make identical variant decisions. That is the invariant
+//! `rust/tests/variant_conformance.rs` pins across the sim cluster, the
+//! fluid fleet and the dry-run server fleet.
+
+use super::{VariantChoice, VariantFamily, VariantSelector};
+use crate::cloud::pricing::VmType;
+use crate::control::FleetView;
+use crate::models::Registry;
+
+/// Cumulative delivered-accuracy accounting of a variant plane (weights
+/// are requests, or fluid request mass). Reported per-backend through
+/// [`FleetView::accuracy`](crate::control::FleetView), the accuracy
+/// counterpart of [`LambdaUsage`](crate::control::LambdaUsage).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AccuracyUsage {
+    /// Model-less requests routed through the plane.
+    pub routed: f64,
+    /// Σ (weight × accuracy of the chosen variant), percent-weighted.
+    pub acc_sum: f64,
+    /// Routed requests that carried a non-zero accuracy floor.
+    pub floor_routed: f64,
+    /// Floor-carrying requests whose chosen variant meets the floor.
+    pub floor_attained: f64,
+}
+
+impl AccuracyUsage {
+    /// Mean delivered accuracy over everything routed, percent.
+    pub fn mean_accuracy(&self) -> f64 {
+        if self.routed <= 0.0 { 0.0 } else { self.acc_sum / self.routed }
+    }
+
+    /// Share of floor-carrying requests whose floor was met (1.0 when no
+    /// request carried a floor — nothing demanded, nothing missed).
+    pub fn attainment(&self) -> f64 {
+        if self.floor_routed <= 0.0 {
+            1.0
+        } else {
+            self.floor_attained / self.floor_routed
+        }
+    }
+}
+
+/// A [`VariantSelector`] plus the demand/capacity bookkeeping one fleet
+/// backend needs to drive its ladder and report delivered accuracy.
+#[derive(Debug, Clone)]
+pub struct VariantPlane {
+    selector: VariantSelector,
+    usage: AccuracyUsage,
+    /// Per-registry-model (sum of weighted accuracy, routed weight) since
+    /// the last [`Self::drain_acc`] — the demand-snapshot deltas.
+    acc_delta: Vec<(f64, f64)>,
+    /// Cumulative routed weight per family member (the variant mix).
+    routed_by_variant: Vec<f64>,
+    /// Weight routed since the last refresh (the pressure numerator).
+    window_routed: f64,
+    last_refresh: f64,
+    /// Smoothed demand-over-capacity pressure feeding the ladder.
+    pressure: f64,
+    /// Family serving capacity (req/s) at the last refresh.
+    capacity: f64,
+}
+
+impl VariantPlane {
+    pub fn new(reg: &Registry, family: VariantFamily,
+               palette: &[&'static VmType]) -> VariantPlane {
+        let n_models = reg.len();
+        let n_variants = family.len();
+        VariantPlane {
+            selector: VariantSelector::new(reg, family, palette),
+            usage: AccuracyUsage::default(),
+            acc_delta: vec![(0.0, 0.0); n_models],
+            routed_by_variant: vec![0.0; n_variants],
+            window_routed: 0.0,
+            last_refresh: 0.0,
+            pressure: 0.0,
+            capacity: 0.0,
+        }
+    }
+
+    /// Override the selector's ladder cap (see
+    /// [`VariantSelector::with_ladder_cap`]).
+    pub fn with_ladder_cap(mut self, cap: usize) -> VariantPlane {
+        self.selector = self.selector.with_ladder_cap(cap);
+        self
+    }
+
+    pub fn selector(&self) -> &VariantSelector {
+        &self.selector
+    }
+
+    pub fn family(&self) -> &VariantFamily {
+        self.selector.family()
+    }
+
+    /// Smoothed demand-over-capacity pressure (what the ladder sees).
+    pub fn pressure(&self) -> f64 {
+        self.pressure
+    }
+
+    /// Family serving capacity at the last refresh, req/s.
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    /// Cumulative routed weight per family member.
+    pub fn mix(&self) -> &[f64] {
+        &self.routed_by_variant
+    }
+
+    pub fn usage(&self) -> AccuracyUsage {
+        self.usage
+    }
+
+    /// Advance the ladder from the backend's own fleet snapshot: family
+    /// capacity is what the view's running sub-fleets can serve, pressure
+    /// is the routed rate since the last refresh over that capacity
+    /// (0.7/0.3 EWMA). Call once per control tick — every backend does so
+    /// from `advance` — so equal capacity plus an equal script gives an
+    /// equal ladder state on every backend.
+    pub fn refresh(&mut self, view: &FleetView, now: f64) {
+        let caps = self.selector.caps();
+        let mut capacity = 0.0;
+        for (v, &m) in self.selector.family().members.iter().enumerate() {
+            for c in &caps[v] {
+                capacity += view.running_typed(m, c.vm_type) as f64
+                    * c.slots_per_vm as f64
+                    / c.service_s;
+            }
+        }
+        self.refresh_with_capacity(capacity, now);
+    }
+
+    /// [`Self::refresh`] with the family capacity (req/s) already in hand
+    /// — the hot-path variant for backends that can derive it in O(V·T)
+    /// from their own counters (the fluid fleet's count matrices) without
+    /// materializing a `FleetView`. Ladder semantics are identical to
+    /// `refresh`, so the conformance suites hold across both entry points.
+    pub fn refresh_with_capacity(&mut self, capacity: f64, now: f64) {
+        self.capacity = capacity;
+        let dt = now - self.last_refresh;
+        if dt > 1e-9 {
+            let rate = self.window_routed / dt;
+            let p = if capacity > 0.0 {
+                (rate / capacity).min(2.0)
+            } else if rate > 0.0 {
+                2.0
+            } else {
+                0.0
+            };
+            self.pressure = 0.7 * self.pressure + 0.3 * p;
+            self.selector.observe(self.pressure);
+            self.window_routed = 0.0;
+            self.last_refresh = now;
+        }
+    }
+
+    /// Resolve one model-less request (weight 1).
+    pub fn route(&mut self, min_accuracy: f64, slo_ms: f64) -> VariantChoice {
+        self.route_weighted(min_accuracy, slo_ms, 1.0)
+    }
+
+    /// Resolve a weighted model-less demand (fluid backends route whole
+    /// per-tier masses). Updates the pressure window, the variant mix and
+    /// the delivered-accuracy ledgers.
+    pub fn route_weighted(&mut self, min_accuracy: f64, slo_ms: f64,
+                          weight: f64) -> VariantChoice {
+        let choice = self.selector.select(min_accuracy, slo_ms);
+        let acc = self.selector.accuracy_of(choice.variant);
+        self.window_routed += weight;
+        self.routed_by_variant[choice.variant] += weight;
+        self.usage.routed += weight;
+        self.usage.acc_sum += weight * acc;
+        if min_accuracy > 0.0 {
+            self.usage.floor_routed += weight;
+            if acc >= min_accuracy {
+                self.usage.floor_attained += weight;
+            }
+        }
+        let slot = &mut self.acc_delta[choice.model];
+        slot.0 += weight * acc;
+        slot.1 += weight;
+        choice
+    }
+
+    /// Drain the per-model delivered-accuracy deltas accumulated since the
+    /// last call: `(Σ weighted accuracy, routed weight)` per registry
+    /// model — the [`DemandSnapshot`](crate::control::DemandSnapshot)
+    /// accuracy fields.
+    pub fn drain_acc(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.acc_delta.len();
+        let drained = std::mem::replace(&mut self.acc_delta, vec![(0.0, 0.0); n]);
+        drained.into_iter().unzip()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+    use crate::control::{FleetViewBuilder, VmPhase};
+
+    fn plane() -> VariantPlane {
+        let reg = Registry::builtin();
+        let palette = [vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        VariantPlane::new(&reg, VariantFamily::full_pool(&reg), &palette)
+    }
+
+    #[test]
+    fn routing_tracks_mix_and_accuracy_usage() {
+        let reg = Registry::builtin();
+        let mut p = plane();
+        let a = p.route(0.0, 60_000.0); // cheapest: mobilenet_025
+        let b = p.route(80.0, 60_000.0); // resnet50
+        assert_eq!(reg.models[a.model].name, "mobilenet_025");
+        assert_eq!(reg.models[b.model].name, "resnet50");
+        assert_eq!(p.mix()[a.variant], 1.0);
+        assert_eq!(p.mix()[b.variant], 1.0);
+        let u = p.usage();
+        assert_eq!(u.routed, 2.0);
+        assert_eq!(u.floor_routed, 1.0);
+        assert_eq!(u.floor_attained, 1.0);
+        assert!((u.attainment() - 1.0).abs() < 1e-12);
+        assert!((u.mean_accuracy() - (52.0 + 82.0) / 2.0).abs() < 1e-9);
+        // The per-model deltas drain once.
+        let (sums, routed) = p.drain_acc();
+        assert_eq!(routed[a.model], 1.0);
+        assert!((sums[b.model] - 82.0).abs() < 1e-9);
+        let (sums2, _) = p.drain_acc();
+        assert!(sums2.iter().all(|&x| x == 0.0), "deltas must drain");
+    }
+
+    #[test]
+    fn pressure_rises_with_routed_demand_over_capacity() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut p = plane();
+        // One m4.large running resnet18 ≈ 2 slots / 0.48 s ≈ 4.2 q/s.
+        let mut b = FleetViewBuilder::new();
+        b.add(3, m4, VmPhase::Running, 0.5);
+        let view = b.build(1.0);
+        // Route 40 q over one second: pressure must climb and eventually
+        // pin the ladder to the floor pick.
+        for t in 1..=6 {
+            for _ in 0..40 {
+                p.route(0.0, 60_000.0);
+            }
+            p.refresh(&view, t as f64);
+        }
+        assert!(p.capacity() > 0.0);
+        assert!(p.pressure() > 0.75, "pressure {} must exceed the watermark", p.pressure());
+        assert_eq!(p.selector().rung(), 0);
+        // An idle stretch recovers headroom.
+        for t in 7..=40 {
+            p.refresh(&view, t as f64);
+        }
+        assert!(p.pressure() < 0.40, "pressure {} must decay", p.pressure());
+        assert_eq!(p.selector().rung(), 1, "default ladder cap is one rung");
+    }
+}

@@ -84,6 +84,7 @@ fn prop_schemes_never_negative_fleet_and_converge() {
                 service_s: 0.2,
                 slots_per_vm: 2,
                 queued: 0,
+                delivered_acc: 0.0,
                 types: vec![],
             }];
             let palette = [default_vm_type()];

@@ -1,13 +1,17 @@
 //! Integration coverage for the typed, factored RL action space (PR 2):
 //! exhaustive encode/decode round-trip over the full 7-type palette, typed
 //! boots landing on the chosen sub-fleet after exactly that type's boot
-//! latency, and agent-manifest/palette compatibility rejection.
+//! latency, and agent-manifest/palette compatibility rejection — plus the
+//! joint `(variant, vm_type, delta, offload)` space (PR 5): exhaustive
+//! round-trip over palette × family grids and the family-size manifest
+//! check.
 
 use paragon::cloud::pricing::{vm_type, VM_TYPES};
 use paragon::models::Registry;
 use paragon::rl::agent::PpoManifest;
-use paragon::rl::env::{act_dim, decode_action, encode_action, obs_dim, ServeEnv,
-                       ACTIONS_PER_TYPE};
+use paragon::rl::env::{act_dim, act_dim_joint, decode_action, decode_action_joint,
+                       encode_action, encode_action_joint, obs_dim, obs_dim_joint,
+                       ServeEnv, ACTIONS_PER_TYPE};
 use paragon::scheduler::OffloadPolicy;
 use paragon::trace::generators;
 
@@ -45,6 +49,57 @@ fn decode_encode_roundtrip_exhaustive_over_7_type_palette() {
 #[should_panic]
 fn decode_rejects_actions_outside_the_palette_space() {
     decode_action(act_dim(3), 3);
+}
+
+#[test]
+fn joint_decode_encode_roundtrip_exhaustive_over_palette_x_family_grids() {
+    // Every (palette, family) size pair the repo exercises, including the
+    // full 7-type palette over the full 8-model pool (504 actions).
+    for (nt, nv) in [(1usize, 1usize), (2, 2), (2, 8), (7, 8), (3, 5)] {
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..act_dim_joint(nt, nv) {
+            let (v, k, delta, off) = decode_action_joint(a, nt, nv);
+            assert!(v < nv, "variant {v} out of family");
+            assert!(k < nt, "type index {k} out of palette");
+            assert!((-1..=1).contains(&delta));
+            let off_idx = match off {
+                OffloadPolicy::None => 0,
+                OffloadPolicy::StrictOnly => 1,
+                OffloadPolicy::All => 2,
+            };
+            assert_eq!(
+                encode_action_joint(v, k, delta, off_idx, nt),
+                a,
+                "joint round trip broke at {a} ({nt} types, {nv} variants)"
+            );
+            seen.insert((v, k, delta, off_idx));
+        }
+        assert_eq!(
+            seen.len(),
+            act_dim_joint(nt, nv),
+            "variant x vm_type x delta x offload must be a bijection \
+             ({nt} types, {nv} variants)"
+        );
+    }
+    // A one-member family embeds the legacy space id-for-id.
+    for a in 0..act_dim(7) {
+        let (v, k, delta, off) = decode_action_joint(a, 7, 1);
+        assert_eq!(v, 0);
+        assert_eq!((k, delta, off), decode_action(a, 7));
+    }
+    // The documented index math: a = v*(T*9) + k*9 + (delta+1)*3 + off.
+    assert_eq!(
+        decode_action_joint(3 * (2 * ACTIONS_PER_TYPE) + ACTIONS_PER_TYPE + 2 * 3 + 2,
+                            2, 4),
+        (3, 1, 1, OffloadPolicy::All)
+    );
+    assert_eq!(act_dim_joint(7, 8), 504);
+}
+
+#[test]
+#[should_panic]
+fn joint_decode_rejects_actions_outside_the_family_space() {
+    decode_action_joint(act_dim_joint(2, 3), 2, 3);
 }
 
 #[test]
@@ -104,4 +159,23 @@ fn agent_manifest_rejects_mismatched_palette_with_clear_error() {
     assert!(mk(obs_dim(2), act_dim(3)).palette_size().is_err());
     assert!(mk(17, act_dim(1)).palette_size().is_err());
     assert!(mk(obs_dim(1), 10).palette_size().is_err());
+
+    // Family check: a joint-space manifest accepts exactly its
+    // (palette, family) pair.
+    let joint = mk(obs_dim_joint(2, 3), act_dim_joint(2, 3));
+    joint.check_family(2, 3).unwrap();
+    let err = joint.check_family(2, 4).unwrap_err().to_string();
+    assert!(
+        err.contains("4-variant") && err.contains("N_VARIANTS"),
+        "error must name the family size and the re-lower knob: {err}"
+    );
+    assert!(joint.check_family(3, 2).is_err(),
+            "T and V factor ambiguously; both must match");
+    // A one-member family is still the JOINT layout (its per-variant
+    // block is always rendered): legacy artifacts must be rejected with
+    // the re-lower hint, and joint single-member artifacts accepted.
+    mk(obs_dim_joint(2, 1), act_dim_joint(2, 1)).check_family(2, 1).unwrap();
+    let err = mk(obs_dim(2), act_dim(2)).check_family(2, 1).unwrap_err().to_string();
+    assert!(err.contains("JOINT_VARIANTS"), "legacy dims need the joint hint: {err}");
+    assert!(mk(obs_dim(2), act_dim(2)).check_family(2, 2).is_err());
 }

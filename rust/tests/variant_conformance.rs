@@ -1,0 +1,236 @@
+//! Variant-plane conformance: model-less queries resolve identically on
+//! all three [`FleetActuator`] backends, and the selector's accuracy
+//! floor is inviolable.
+//!
+//! - Property: under ANY load trajectory (arbitrary ladder observations,
+//!   any rung cap), [`VariantSelector::select`] never returns a variant
+//!   below a *feasible* accuracy floor, and the chosen `(variant,
+//!   vm_type)` pair honors the SLO whenever any pair can.
+//! - Conformance (mirroring PR 4's offload suite): the same capacity
+//!   script plus the same model-less query script produce the same
+//!   `(variant, vm_type)` decision sequence, the same ladder rung
+//!   trajectory and the same delivered-accuracy usage on the sim
+//!   `ClusterActuator`, the family `FluidFleet` and the dry-run
+//!   `ServerFleet` (zero-jitter palette so capacity transitions are
+//!   deterministic) — including across a pressure→headroom transition
+//!   that moves the downgrade ladder.
+//! - Live end-to-end: `ServerFleet::ingest_modelless` serves a model-less
+//!   stream with full request conservation and 100% floor attainment.
+
+use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::control::{ClusterActuator, FleetActuator, FleetView, FluidFleet,
+                       ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::prop_assert;
+use paragon::scheduler::Action;
+use paragon::util::prop::check;
+use paragon::variants::{VariantFamily, VariantPlane, VariantSelector};
+
+/// Leak a zero-jitter instance type so every backend boots at exactly the
+/// mean latency (the sim cluster normally samples jitter per spawn).
+fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        vcpus: 2,
+        mem_gb: 8.0,
+        price: VmPrice { hourly_usd: hourly },
+        speed,
+        boot_mean_s: boot_s,
+        boot_jitter_s: 0.0,
+    }))
+}
+
+/// Comparable capacity summary: (model, type, running, booting) rows.
+fn fingerprint(v: &FleetView) -> Vec<(usize, String, usize, usize)> {
+    v.subfleets()
+        .iter()
+        .map(|s| (s.model, s.vm_type.name.to_string(), s.running, s.booting))
+        .collect()
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn prop_selector_never_violates_feasible_floor() {
+    let reg = Registry::builtin();
+    let palette: Vec<&'static VmType> = vec![
+        leak_type("vprop.m", 0.10, 1.0, 100.0),
+        leak_type("vprop.c", 0.085, 1.25, 60.0),
+    ];
+    check("selector-floor", 64, |rng| {
+        let cap = rng.below(4) as usize;
+        let mut sel =
+            VariantSelector::new(&reg, VariantFamily::full_pool(&reg), &palette)
+                .with_ladder_cap(cap);
+        for _ in 0..60 {
+            // Arbitrary load trajectory: saturation, idleness, noise.
+            sel.observe(rng.uniform(0.0, 2.0));
+            let floor = rng.uniform(0.0, 95.0);
+            let slo = rng.uniform(50.0, 60_000.0);
+            let c = sel.select(floor, slo);
+            let feasible_exists = reg.models.iter().any(|m| {
+                m.accuracy >= floor
+                    && palette
+                        .iter()
+                        .any(|&t| m.service_time_s(t) * 1000.0 <= slo)
+            });
+            if feasible_exists {
+                prop_assert!(
+                    reg.models[c.model].accuracy >= floor,
+                    "floor {floor} crossed at rung {}: chose {} ({}%)",
+                    sel.rung(),
+                    reg.models[c.model].name,
+                    reg.models[c.model].accuracy
+                );
+                prop_assert!(
+                    reg.models[c.model]
+                        .service_time_s(palette[c.vm_type_index]) * 1000.0
+                        <= slo,
+                    "slo {slo} violated by the chosen (variant, type)"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The scripted model-less query at (tick, slot): floors cycle the four
+/// accuracy tiers; loose-floor queries alternate interactive/relaxed SLOs.
+fn query_at(t: usize, i: usize) -> (f64, f64) {
+    let floor = [0.0, 65.0, 78.0, 86.0][(t + i) % 4];
+    let slo = if floor < 70.0 && (t * 4 + i) % 2 == 0 { 500.0 } else { 20_000.0 };
+    (floor, slo)
+}
+
+#[test]
+fn same_modelless_script_same_variant_decisions_on_all_backends() {
+    let reg = Registry::builtin();
+    let ta = leak_type("vconf.m", 0.10, 1.0, 60.0);
+    let tb = leak_type("vconf.c", 0.085, 1.25, 60.0);
+    let palette = vec![ta, tb];
+    let family = VariantFamily::full_pool(&reg);
+
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    sim.install_variants(VariantPlane::new(&reg, family.clone(), &palette));
+    let mut fluid = FluidFleet::with_family(&reg, &family, palette.clone());
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 100,
+        ..ServerFleetConfig::default()
+    });
+    live.install_variants(VariantPlane::new(&reg, family.clone(), &palette));
+
+    // Decision log per backend: (variant, vm_type_index) per query.
+    let mut decisions: Vec<Vec<(usize, usize)>> = vec![Vec::new(); 3];
+    let mut early_floor0: Option<usize> = None;
+    let mut late_floor0: Option<usize> = None;
+    for t in 0..120usize {
+        let now = t as f64;
+        let step = |b: &mut dyn FleetActuator, log: &mut Vec<(usize, usize)>| {
+            if t == 5 {
+                // Capacity arrives mid-run: pressure→headroom transition
+                // once the boots land, moving the upgrade ladder.
+                b.apply(&Action::Spawn { model: 1, vm_type: ta, count: 6 }, now);
+                b.apply(&Action::Spawn { model: 6, vm_type: tb, count: 4 }, now);
+            }
+            b.advance(now);
+            for i in 0..4usize {
+                let (floor, slo) = query_at(t, i);
+                let c = b.route_modelless(floor, slo)
+                    .expect("plane installed on every backend");
+                log.push((c.variant, c.vm_type_index));
+            }
+        };
+        step(&mut sim, &mut decisions[0]);
+        step(&mut fluid, &mut decisions[1]);
+        step(&mut live, &mut decisions[2]);
+
+        // Capacity, ladder rung and accuracy usage agree at every tick.
+        let views = [sim.view(), fluid.view(), live.view()];
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[1]),
+                   "sim/fluid capacity diverged at t={t}");
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[2]),
+                   "sim/live capacity diverged at t={t}");
+        let rungs = [
+            sim.variants().unwrap().selector().rung(),
+            fluid.variants().unwrap().selector().rung(),
+            live.variants().unwrap().selector().rung(),
+        ];
+        assert!(rungs[0] == rungs[1] && rungs[0] == rungs[2],
+                "ladder rung diverged at t={t}: {rungs:?}");
+        for v in &views[1..] {
+            assert!(close(views[0].accuracy.routed, v.accuracy.routed));
+            assert!(close(views[0].accuracy.acc_sum, v.accuracy.acc_sum),
+                    "delivered accuracy diverged at t={t}");
+        }
+
+        // Track the ladder's effect on the floor-0 pick (query_at(t,0)
+        // with t % 4 == 0 is a floor-0 query).
+        if t % 4 == 0 {
+            let variant = decisions[0][decisions[0].len() - 4].0;
+            if t <= 40 && early_floor0.is_none() {
+                early_floor0 = Some(variant);
+            } else if t >= 100 {
+                late_floor0 = Some(variant);
+            }
+        }
+    }
+
+    assert_eq!(decisions[0], decisions[1], "sim/fluid decisions diverged");
+    assert_eq!(decisions[0], decisions[2], "sim/live decisions diverged");
+    // The script really exercised the ladder: under pressure (no capacity
+    // yet) floor-0 queries get the cheapest member; once the mid-run
+    // capacity lands and pressure decays, the selector upgrades one rung.
+    assert_eq!(early_floor0, Some(0), "pressure regime must serve the floor pick");
+    assert_eq!(late_floor0, Some(1), "headroom must upgrade one rung");
+    // Every floor-carrying query was feasible, so attainment is perfect —
+    // on every backend (the usage trajectories already matched).
+    let u = sim.variants().unwrap().usage();
+    assert!(u.floor_routed > 0.0);
+    assert!((u.attainment() - 1.0).abs() < 1e-12);
+    // And the realized mix spans several variants (the ladder + tier mix).
+    let mix = sim.variants().unwrap().mix();
+    assert!(mix.iter().filter(|&&m| m > 0.0).count() >= 3,
+            "variant mix too narrow: {mix:?}");
+}
+
+#[test]
+fn live_fleet_serves_modelless_stream_with_conservation() {
+    let reg = Registry::builtin();
+    let ta = leak_type("vlive.m", 0.10, 1.0, 50.0);
+    let palette = vec![ta];
+    let mut fleet = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        ..ServerFleetConfig::default()
+    });
+    // Rung cap 0 pins the selector to its floor picks, so the stream's
+    // two tiers resolve to exactly the two provisioned models.
+    fleet.install_variants(
+        VariantPlane::new(&reg, VariantFamily::full_pool(&reg), &palette)
+            .with_ladder_cap(0),
+    );
+    fleet.apply(&Action::Spawn { model: 0, vm_type: ta, count: 1 }, 0.0);
+    fleet.apply(&Action::Spawn { model: 3, vm_type: ta, count: 1 }, 0.0);
+    fleet.advance(60.0); // both replicas running
+
+    for t in 0..40usize {
+        let now = 60.0 + t as f64;
+        let a = fleet.ingest_modelless(0.0, 20_000.0, now).unwrap();
+        assert_eq!(a.model, 0, "floor pick for unconstrained queries");
+        let b = fleet.ingest_modelless(75.0, 20_000.0, now).unwrap();
+        assert_eq!(b.model, 3, "cheapest member above a 75% floor");
+        fleet.advance(now);
+    }
+    fleet.advance(300.0); // drain the tail
+    let rep = fleet.report(300.0); // conservation asserted inside
+    assert_eq!(rep.served, 80, "every model-less request must serve");
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.queued, 0);
+    let v = fleet.view();
+    assert!((v.accuracy.attainment() - 1.0).abs() < 1e-12);
+    assert!(v.accuracy.routed >= 80.0);
+    let mix = fleet.variants().unwrap().mix().to_vec();
+    assert!(mix[0] > 0.0 && mix[3] > 0.0, "both tiers must appear: {mix:?}");
+}
