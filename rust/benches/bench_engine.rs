@@ -1,0 +1,184 @@
+//! The 10M-request engine benchmark: end-to-end throughput of the
+//! discrete-event engine serial vs sharded (per-model streams on worker
+//! threads) vs hybrid fidelity (quiet streams fluid), at 100k / 1M and —
+//! with `--full` — 10M requests. Emits `results/BENCH_6.json` with
+//! req/s, peak RSS and build provenance.
+//!
+//! `--check` is the CI no-regression gate: it runs the 100k serial and
+//! sharded configurations and fails (exit 1) when measured req/s drops
+//! below 0.85x the floors recorded in the committed
+//! `results/BENCH_6.json`. Floors are deliberately conservative (well
+//! under a dev box's numbers) so the gate catches algorithmic
+//! regressions, not runner jitter; an intentional slowdown lands with
+//! the `perf-override` label on the PR (see `.github/workflows/ci.yml`).
+
+use paragon::models::Registry;
+use paragon::scheduler::{self, Scheme};
+use paragon::sim::{available_threads, simulate, simulate_sharded, FidelityConfig,
+                   SimConfig};
+use paragon::trace::{generators, synthesize_requests, Request, WorkloadKind};
+use paragon::util::bench::{bench_meta, bench_throughput, peak_rss_mb};
+use paragon::util::json::Json;
+
+const SCHEME: &str = "reactive";
+
+fn workload(rate: f64, secs: usize) -> Vec<Request> {
+    let trace = generators::constant(rate, secs);
+    synthesize_requests(&trace, WorkloadKind::MixedSlo, 7)
+}
+
+fn hybrid_cfg() -> SimConfig {
+    SimConfig { fidelity: FidelityConfig::hybrid(), ..SimConfig::default() }
+}
+
+/// One timed configuration; returns (result json, req/s).
+fn run(name: &str, reqs: &[Request], iters: usize,
+       f: impl FnMut() -> paragon::sim::SimReport) -> (Json, f64) {
+    let r = bench_throughput(name, 0, iters, reqs.len() as f64, f);
+    let rps = reqs.len() as f64 / (r.mean_ns / 1e9);
+    let mut j = r.to_json();
+    if let Json::Obj(map) = &mut j {
+        map.insert("requests".into(), reqs.len().into());
+        map.insert("rps".into(), rps.into());
+        // Process-wide high-water mark: monotone across runs, so each
+        // entry records the peak up to and including itself.
+        map.insert("peak_rss_mb".into(), peak_rss_mb().into());
+    }
+    (j, rps)
+}
+
+fn check_gate(measured: &[(String, f64)]) -> ! {
+    let text = match std::fs::read_to_string("results/BENCH_6.json") {
+        Ok(t) => t,
+        Err(e) => {
+            // First run on a branch with no committed baseline: nothing
+            // to regress against.
+            println!("perf gate: no committed results/BENCH_6.json ({e}); passing");
+            std::process::exit(0);
+        }
+    };
+    let j = Json::parse(&text).expect("parse committed BENCH_6.json");
+    let ci = j.get("ci");
+    let mut failed = false;
+    for (key, name) in [("floor_rps_serial_100k", "engine[serial-100k]"),
+                        ("floor_rps_sharded_100k", "engine[sharded-100k]")] {
+        let Some(floor) = ci.get(key).as_f64() else {
+            println!("perf gate: committed file lacks ci.{key}; skipping");
+            continue;
+        };
+        let Some(&(_, rps)) = measured.iter().find(|(n, _)| n == name) else {
+            continue;
+        };
+        let bar = floor * 0.85;
+        if rps < bar {
+            eprintln!("perf gate FAIL: {name} at {rps:.0} req/s, \
+                       below 0.85x committed floor {floor:.0} (bar {bar:.0})");
+            failed = true;
+        } else {
+            println!("perf gate ok: {name} at {rps:.0} req/s (bar {bar:.0})");
+        }
+    }
+    if failed {
+        eprintln!("perf gate: regression >15% vs committed BENCH_6.json. \
+                   If intentional, add the `perf-override` label to the PR.");
+        std::process::exit(1);
+    }
+    std::process::exit(0);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let check = args.iter().any(|a| a == "--check");
+    let reg = Registry::builtin();
+    let threads = available_threads();
+    let factory: &(dyn Fn() -> Box<dyn Scheme> + Sync) =
+        &|| scheduler::by_name(SCHEME).unwrap();
+
+    // (label, rate q/s, seconds, timed iters): requests ~= rate x secs.
+    let mut scales: Vec<(&str, f64, usize, usize)> =
+        vec![("100k", 200.0, 500, 3), ("1m", 1000.0, 1000, 1)];
+    if full {
+        scales.push(("10m", 4000.0, 2500, 1));
+    }
+    if check {
+        scales.truncate(1);
+    }
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    for (label, rate, secs, iters) in scales {
+        println!("== {label} requests ({rate} q/s x {secs}s, {SCHEME}) ==");
+        let reqs = workload(rate, secs);
+        let serial_cfg = SimConfig::default();
+
+        let name = format!("engine[serial-{label}]");
+        let (j, rps) = run(&name, &reqs, iters, || {
+            let mut s = scheduler::by_name(SCHEME).unwrap();
+            simulate(s.as_mut(), &reg, &reqs, "bench", &serial_cfg)
+        });
+        results.push(j);
+        measured.push((name, rps));
+
+        let name = format!("engine[sharded-{label}]");
+        let (j, rps) = run(&name, &reqs, iters, || {
+            simulate_sharded(factory, &reg, &reqs, "bench", &serial_cfg, threads)
+        });
+        results.push(j);
+        measured.push((name, rps));
+
+        if !check {
+            let hybrid = hybrid_cfg();
+            let name = format!("engine[hybrid-{label}]");
+            let (j, rps) = run(&name, &reqs, iters, || {
+                let mut s = scheduler::by_name(SCHEME).unwrap();
+                simulate(s.as_mut(), &reg, &reqs, "bench", &hybrid)
+            });
+            results.push(j);
+            measured.push((name, rps));
+
+            let name = format!("engine[sharded-hybrid-{label}]");
+            let (j, rps) = run(&name, &reqs, iters, || {
+                simulate_sharded(factory, &reg, &reqs, "bench", &hybrid, threads)
+            });
+            results.push(j);
+            measured.push((name, rps));
+        }
+        println!();
+    }
+
+    if check {
+        check_gate(&measured);
+    }
+
+    let rps_of = |name: &str| {
+        measured
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, r)| r)
+            .unwrap_or(0.0)
+    };
+    // Committed floors: 0.4x this box's numbers, so slower CI runners
+    // pass while a real algorithmic regression (>2x slowdown vs any
+    // plausible hardware) still trips the 0.85x bar.
+    let out = Json::obj(vec![
+        ("bench", "BENCH_6".into()),
+        ("meta", bench_meta()),
+        ("scheme", SCHEME.into()),
+        ("threads", threads.into()),
+        ("results", Json::Arr(results)),
+        ("ci", Json::obj(vec![
+            ("note",
+             "req/s floors; CI fails below 0.85x (override: perf-override label)"
+                 .into()),
+            ("floor_rps_serial_100k",
+             (rps_of("engine[serial-100k]") * 0.4).into()),
+            ("floor_rps_sharded_100k",
+             (rps_of("engine[sharded-100k]") * 0.4).into()),
+        ])),
+    ]);
+    std::fs::create_dir_all("results").expect("create results/");
+    std::fs::write("results/BENCH_6.json", out.to_string())
+        .expect("write results/BENCH_6.json");
+    println!("[saved results/BENCH_6.json]");
+}

@@ -67,6 +67,10 @@ pub struct ExperimentConfig {
     pub workload: WorkloadKind,
     pub assignment: Assignment,
     pub seed: u64,
+    /// `"fidelity": "hybrid"` runs quiet model streams at fluid
+    /// (aggregate) fidelity ([`crate::sim::fidelity`]); `"discrete"` (the
+    /// default) keeps every stream request-accurate.
+    pub hybrid_fidelity: bool,
     pub paragon: ParagonKnobs,
 }
 
@@ -94,6 +98,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadKind::MixedSlo,
             assignment: Assignment::RandomFeasible,
             seed: 42,
+            hybrid_fidelity: false,
             paragon: ParagonKnobs::default(),
         }
     }
@@ -185,6 +190,13 @@ impl ExperimentConfig {
         if let Some(x) = j.get("seed").as_f64() {
             cfg.seed = x as u64;
         }
+        if let Some(s) = j.get("fidelity").as_str() {
+            cfg.hybrid_fidelity = match s {
+                "discrete" => false,
+                "hybrid" => true,
+                other => bail!("unknown fidelity {other:?} (discrete|hybrid)"),
+            };
+        }
         let p = j.get("paragon");
         if p.as_obj().is_some() {
             if let Some(x) = p.get("p2m_gate").as_f64() {
@@ -237,6 +249,8 @@ impl ExperimentConfig {
             ("workload", wl.into()),
             ("selection", sel.into()),
             ("seed", (self.seed as usize).into()),
+            ("fidelity",
+             if self.hybrid_fidelity { "hybrid" } else { "discrete" }.into()),
             ("paragon", Json::obj(vec![("p2m_gate", self.paragon.p2m_gate.into())])),
         ];
         if let Some(f) = &self.trace_file {
@@ -337,12 +351,24 @@ mod tests {
             r#"{"scheme":"bogus"}"#,
             r#"{"workload":"wat"}"#,
             r#"{"selection":"wat"}"#,
+            r#"{"fidelity":"wat"}"#,
             r#"{"paragon":{"p2m_gate":0.5}}"#,
             r#"[1,2,3]"#,
             r#"not json"#,
         ] {
             assert!(ExperimentConfig::from_str_json(bad).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn fidelity_parses_and_round_trips() {
+        let c = ExperimentConfig::from_str_json(r#"{"fidelity":"hybrid"}"#).unwrap();
+        assert!(c.hybrid_fidelity);
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!(c2.hybrid_fidelity);
+        let d = ExperimentConfig::from_str_json(r#"{"fidelity":"discrete"}"#).unwrap();
+        assert!(!d.hybrid_fidelity);
+        assert!(!ExperimentConfig::from_str_json("{}").unwrap().hybrid_fidelity);
     }
 
     #[test]

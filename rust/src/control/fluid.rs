@@ -323,6 +323,67 @@ impl FleetActuator for FluidFleet {
     }
 }
 
+/// Credit-based fluid service integrator: the continuous half of the
+/// hybrid-fidelity engine ([`crate::sim::fidelity`]).
+///
+/// Capacity accrues as fractional request-credits at `cap_rate` (Σ running
+/// slots / service time over the lane's sub-fleets — the same aggregate
+/// [`FluidFleet::refresh_variants`] integrates); each served request burns
+/// one credit. Banked credit is clamped to `burst` (the fleet's total slot
+/// count: a fully idle discrete fleet can absorb exactly that many
+/// arrivals at one instant, so the fluid lane may too). Everything is
+/// plain arithmetic over caller-supplied timestamps — no RNG, no events —
+/// so a fluid lane is deterministic by construction and switching a stream
+/// between this integrator and the discrete event heap never creates or
+/// destroys a request: un-served arrivals stay in the caller's queue.
+#[derive(Debug, Clone, Default)]
+pub struct FluidCredit {
+    credit: f64,
+    last_t: f64,
+    /// Serviceable requests/s of the sub-fleets behind this lane.
+    pub cap_rate: f64,
+    /// Maximum banked credit (total running slots, >= 1 once any capacity
+    /// exists).
+    pub burst: f64,
+}
+
+impl FluidCredit {
+    /// Zero the bank and re-anchor the clock — called at every
+    /// fidelity switch so credit never leaks across modes.
+    pub fn reset(&mut self, now: f64) {
+        self.credit = 0.0;
+        self.last_t = now;
+    }
+
+    /// Integrate capacity up to `now` (monotone; stale calls are no-ops).
+    pub fn accrue(&mut self, now: f64) {
+        if now > self.last_t {
+            self.credit =
+                (self.credit + (now - self.last_t) * self.cap_rate).min(self.burst);
+            self.last_t = now;
+        }
+    }
+
+    /// Burn one credit for one request, if a full credit is banked.
+    pub fn try_serve(&mut self) -> bool {
+        if self.credit >= 1.0 {
+            self.credit -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-clamp after the caller updates `burst` (fleet shrank mid-run).
+    pub fn clamp(&mut self) {
+        self.credit = self.credit.min(self.burst);
+    }
+
+    pub fn credit(&self) -> f64 {
+        self.credit
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,5 +462,40 @@ mod tests {
         let snap2 = f.demand();
         assert!(snap2.acc_routed.iter().all(|&x| x == 0.0), "acc deltas drain");
         assert!(f.view().accuracy.routed > 0.0, "view reports accuracy usage");
+    }
+
+    #[test]
+    fn fluid_credit_integrates_and_conserves() {
+        let mut c = FluidCredit { cap_rate: 2.0, burst: 4.0, ..Default::default() };
+        c.reset(0.0);
+        assert!(!c.try_serve(), "no credit banked yet");
+        c.accrue(1.0); // 2 credits
+        assert!(c.try_serve());
+        assert!(c.try_serve());
+        assert!(!c.try_serve(), "exactly rate * dt credits, no more");
+        // Banked credit saturates at burst.
+        c.accrue(100.0);
+        assert!((c.credit() - 4.0).abs() < 1e-12);
+        let mut served = 0;
+        while c.try_serve() {
+            served += 1;
+        }
+        assert_eq!(served, 4);
+        // Stale accrue calls never rewind or double-count.
+        c.accrue(50.0);
+        assert!(!c.try_serve());
+    }
+
+    #[test]
+    fn fluid_credit_reset_and_clamp() {
+        let mut c = FluidCredit { cap_rate: 10.0, burst: 8.0, ..Default::default() };
+        c.accrue(5.0);
+        assert!(c.credit() > 0.0);
+        c.reset(5.0);
+        assert_eq!(c.credit(), 0.0, "fidelity switches zero the bank");
+        c.accrue(6.0);
+        c.burst = 2.0; // fleet shrank
+        c.clamp();
+        assert!(c.credit() <= 2.0);
     }
 }

@@ -44,7 +44,7 @@ pub mod live;
 pub mod sim;
 pub mod valve;
 
-pub use fluid::FluidFleet;
+pub use fluid::{FluidCredit, FluidFleet};
 pub use live::{LiveReport, ServerFleet, ServerFleetConfig};
 pub use sim::{cluster_view, ClusterActuator};
 pub use valve::{LambdaOutcome, LambdaUsage, ServerlessValve};
@@ -354,10 +354,12 @@ pub fn palette_caps(reg: &Registry, palette: &[&'static VmType]) -> Vec<Vec<Type
 
 /// Outcome of one scheme tick: the actions applied and the demand
 /// observation they were decided on (callers reuse `demands` for, e.g.,
-/// needed-slot accounting).
-pub struct TickResult {
+/// needed-slot accounting). `demands` borrows the control loop's cached
+/// table — rebuilt *in place* each tick rather than reallocated, which
+/// keeps the per-tick hot path of a 10M-request run allocation-free.
+pub struct TickResult<'a> {
     pub actions: Vec<Action>,
-    pub demands: Vec<ModelDemand>,
+    pub demands: &'a [ModelDemand],
 }
 
 /// Ticks any decider against any [`FleetActuator`] at 1 Hz: pulls the
@@ -384,6 +386,12 @@ pub struct ControlLoop {
     /// variant plane (0.9/0.1 EWMA; 0 until something routes) — the
     /// tick_policy counterpart of the per-model EWMAs above.
     recent_acc: f64,
+    /// Cached demand table handed to schemes each tick. The static fields
+    /// (`model`, `service_s`, `slots_per_vm`, `types`) are filled once at
+    /// construction; `tick_scheme` refreshes only the per-tick signals
+    /// (`rate`, `queued`, `delivered_acc`) in place, so the old per-tick
+    /// `Vec<ModelDemand>` + per-model `caps.clone()` churn is gone.
+    demands: Vec<ModelDemand>,
 }
 
 impl ControlLoop {
@@ -392,6 +400,19 @@ impl ControlLoop {
         let caps = palette_caps(reg, &palette);
         let rates = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
         let accs = (0..reg.len()).map(|_| Ewma::new(0.15)).collect();
+        let demands = caps
+            .iter()
+            .enumerate()
+            .map(|(m, c)| ModelDemand {
+                model: m,
+                rate: 0.0,
+                service_s: c[0].service_s,
+                slots_per_vm: c[0].slots_per_vm,
+                queued: 0,
+                delivered_acc: 0.0,
+                types: c.clone(),
+            })
+            .collect();
         ControlLoop {
             palette,
             caps,
@@ -401,6 +422,7 @@ impl ControlLoop {
             recent_lambda: 0.0,
             recent_viol: 0.0,
             recent_acc: 0.0,
+            demands,
         }
     }
 
@@ -437,12 +459,12 @@ impl ControlLoop {
     /// [`SchedObs`] (with the actuator's [`FleetView`]) → typed actions →
     /// `actuator.apply`. The caller advances the actuator's clock
     /// (backends tie `advance` to their own event loops).
-    pub fn tick_scheme(&mut self, scheme: &mut dyn Scheme,
-                       actuator: &mut dyn FleetActuator, now: f64) -> TickResult {
+    pub fn tick_scheme<'a>(&'a mut self, scheme: &mut dyn Scheme,
+                           actuator: &mut dyn FleetActuator, now: f64)
+                           -> TickResult<'a> {
         let snap = actuator.demand();
         self.absorb(&snap);
-        let mut demands = Vec::with_capacity(self.caps.len());
-        for (m, caps) in self.caps.iter().enumerate() {
+        for m in 0..self.caps.len() {
             let arrived = snap.arrivals.get(m).copied().unwrap_or(0) as f64;
             let rate = self.rates[m].push(arrived);
             // Delivered accuracy: EWMA of the plane's per-tick mean; holds
@@ -454,22 +476,17 @@ impl ControlLoop {
             } else {
                 self.accs[m].get()
             };
-            demands.push(ModelDemand {
-                model: m,
-                rate,
-                service_s: caps[0].service_s,
-                slots_per_vm: caps[0].slots_per_vm,
-                queued: snap.queued.get(m).copied().unwrap_or(0),
-                delivered_acc,
-                types: caps.clone(),
-            });
+            let d = &mut self.demands[m];
+            d.rate = rate;
+            d.queued = snap.queued.get(m).copied().unwrap_or(0);
+            d.delivered_acc = delivered_acc;
         }
         let view = actuator.view();
         let actions = {
             let obs = SchedObs {
                 now,
                 monitor: &self.monitor,
-                demands: &demands,
+                demands: &self.demands,
                 fleet: &view,
                 vm_types: &self.palette,
             };
@@ -482,7 +499,7 @@ impl ControlLoop {
         // valve until the next tick (pre-valve, only the simulator's
         // arrival loop honored it — the live path dropped it).
         actuator.set_offload(scheme.offload());
-        TickResult { actions, demands }
+        TickResult { actions, demands: &self.demands }
     }
 
     /// One 1 Hz control tick of an RL-environment policy over `model`'s

@@ -162,13 +162,36 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         Some(spec) => parse_vm_type_list(spec)?,
         None => SimConfig::default().vm_types,
     };
-    let rep = simulate(scheme.as_mut(), &reg, &reqs, &trace.name, &SimConfig {
+    let fidelity = match args.get_or("fidelity", "discrete").as_str() {
+        "discrete" => paragon::sim::FidelityConfig::default(),
+        "hybrid" => paragon::sim::FidelityConfig::hybrid(),
+        other => anyhow::bail!("unknown fidelity {other} (discrete|hybrid)"),
+    };
+    // `--threads N` runs the workload sharded per model stream (`auto` =
+    // host parallelism); the merge is deterministic, see sim::shard.
+    let threads = match args.get("threads") {
+        None => 1usize,
+        Some("auto") => paragon::sim::available_threads(),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads N|auto, got {s:?}"))?,
+    };
+    let sim_cfg = SimConfig {
         vm_types,
         assignment: selection,
         seed: cfg.seed,
         instance_cap: args.get_usize("instance-cap", 5000)?,
+        fidelity,
         ..SimConfig::default()
-    });
+    };
+    let rep = if threads > 1 {
+        let factory: &(dyn Fn() -> Box<dyn scheduler::Scheme> + Sync) =
+            &|| scheduler::by_name(&scheme_name).unwrap();
+        paragon::sim::simulate_sharded(factory, &reg, &reqs, &trace.name,
+                                       &sim_cfg, threads)
+    } else {
+        simulate(scheme.as_mut(), &reg, &reqs, &trace.name, &sim_cfg)
+    };
     println!("{}", rep.to_json());
     Ok(())
 }
@@ -222,6 +245,7 @@ SUBCOMMANDS
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
               [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]
               [--vm-types m4.large,c5.xlarge] [--instance-cap N]
+              [--threads N|auto] [--fidelity discrete|hybrid]
   profile     --iters N          (needs artifacts/)
   train-rl    --iters N          (needs artifacts/)
   traces      --out DIR

@@ -12,17 +12,25 @@
 //! the fleet sits behind a [`ClusterActuator`] and each scheduler tick is
 //! one [`ControlLoop::tick_scheme`] — the same loop that drives the live
 //! [`ServerFleet`](crate::control::ServerFleet).
+//!
+//! The body of [`simulate`] is one *stream*: a self-contained run over a
+//! pre-assigned request slice. [`super::shard::simulate_sharded`]
+//! partitions a multi-model workload into per-model streams and runs them
+//! on threads — model sub-fleets share no state (disjoint VMs, queues,
+//! valves), so a stream is the natural parallel unit. With
+//! [`SimConfig::fidelity`] enabled, quiet streams additionally drop to
+//! fluid (aggregate) fidelity per [`super::fidelity`].
 
 use super::core::SimCore;
+use super::fidelity::{Fidelity, FidelityConfig, FidelityGovernor, FluidLane};
 use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
-use crate::cloud::Cluster;
+use crate::cloud::{Cluster, VmState};
 use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator};
 use crate::models::{select, Registry, SelectionPolicy};
 use crate::scheduler::{Action, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
-use crate::util::stats::LogHistogram;
 use crate::variants::{VariantFamily, VariantPlane, VariantSelector};
 use std::collections::VecDeque;
 
@@ -65,6 +73,10 @@ pub struct SimConfig {
     /// Requests queued longer than this are dropped and counted in
     /// [`SimReport::dropped`] (no real serving system queues forever).
     pub queue_timeout_s: f64,
+    /// Hybrid fluid↔discrete fidelity thresholds ([`super::fidelity`]).
+    /// Disabled by default: every stream stays request-accurate and the
+    /// engine behaves exactly as before this knob existed.
+    pub fidelity: FidelityConfig,
 }
 
 impl Default for SimConfig {
@@ -76,6 +88,7 @@ impl Default for SimConfig {
             warm_start: true,
             instance_cap: 5000,
             queue_timeout_s: 300.0,
+            fidelity: FidelityConfig::default(),
         }
     }
 }
@@ -120,45 +133,97 @@ struct Queued {
 pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<usize> {
     let mut rng = Pcg::new(cfg.seed, 0xa551);
     let vm = cfg.primary();
-    let palette: Vec<&'static VmType> = if cfg.vm_types.is_empty() {
-        vec![crate::cloud::default_vm_type()]
-    } else {
-        cfg.vm_types.clone()
-    };
-    let selector = VariantSelector::new(reg, VariantFamily::full_pool(reg), &palette);
-    reqs.iter()
-        .map(|r| match cfg.assignment {
-            Assignment::Policy(p) => select(reg, vm, p, r),
-            Assignment::Fixed(m) => {
-                // Fail fast: silently clamping would mislabel a whole
-                // fixed-variant baseline run.
-                assert!(m < reg.len(),
-                        "fixed model index {m} out of range (pool has {} models)",
-                        reg.len());
-                m
-            }
-            Assignment::ModelLess => selector.select(r.min_accuracy, r.slo_ms).model,
-            Assignment::RandomFeasible => {
-                let feasible: Vec<usize> = reg
-                    .models
-                    .iter()
-                    .filter(|m| m.service_time_s(vm) * 1000.0 <= r.slo_ms)
-                    .map(|m| m.idx)
-                    .collect();
-                if feasible.is_empty() {
-                    0
-                } else {
-                    feasible[rng.below(feasible.len() as u64) as usize]
-                }
-            }
-        })
-        .collect()
+    // Borrowed palette — the old per-call `cfg.vm_types.clone()` is gone;
+    // an empty palette falls back to a stack-local one-entry slice.
+    let fallback = [crate::cloud::default_vm_type()];
+    let palette: &[&'static VmType] =
+        if cfg.vm_types.is_empty() { &fallback } else { &cfg.vm_types };
+    match cfg.assignment {
+        Assignment::Policy(p) => {
+            reqs.iter().map(|r| select(reg, vm, p, r)).collect()
+        }
+        Assignment::Fixed(m) => {
+            // Fail fast: silently clamping would mislabel a whole
+            // fixed-variant baseline run.
+            assert!(m < reg.len(),
+                    "fixed model index {m} out of range (pool has {} models)",
+                    reg.len());
+            vec![m; reqs.len()]
+        }
+        Assignment::ModelLess => {
+            let selector =
+                VariantSelector::new(reg, VariantFamily::full_pool(reg), palette);
+            reqs.iter()
+                .map(|r| selector.select(r.min_accuracy, r.slo_ms).model)
+                .collect()
+        }
+        Assignment::RandomFeasible => {
+            // Feasibility depends only on (model, SLO): precompute the
+            // service times once and evaluate a u64 feasibility bitset per
+            // request instead of rebuilding a `Vec<usize>` per request.
+            // Set bits enumerate in ascending model order — the exact
+            // iteration order of the old filter().collect() — so the RNG
+            // draws, and therefore every downstream result, stay
+            // bit-identical to the allocating path.
+            let svc_ms: Vec<f64> = reg
+                .models
+                .iter()
+                .map(|m| m.service_time_s(vm) * 1000.0)
+                .collect();
+            assert!(reg.len() <= 64, "feasibility bitset holds up to 64 models");
+            reqs.iter()
+                .map(|r| {
+                    let mut mask: u64 = 0;
+                    for (i, &s) in svc_ms.iter().enumerate() {
+                        if s <= r.slo_ms {
+                            mask |= 1u64 << i;
+                        }
+                    }
+                    let n = u64::from(mask.count_ones());
+                    if n == 0 {
+                        0
+                    } else {
+                        // Clear the `pick` lowest set bits; the next one
+                        // is the chosen model.
+                        let mut rest = mask;
+                        for _ in 0..rng.below(n) {
+                            rest &= rest - 1;
+                        }
+                        reg.models[rest.trailing_zeros() as usize].idx
+                    }
+                })
+                .collect()
+        }
+    }
 }
 
 /// Run `scheme` over the request stream. Requests must be arrival-sorted.
 pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 trace_name: &str, cfg: &SimConfig) -> SimReport {
     let models = assign_models(reqs, reg, cfg);
+    let mut out = simulate_stream(scheme, reg, reqs, &models, trace_name, cfg);
+    super::metrics::finalize_latency(&mut out.rep, &mut out.lat_ms);
+    out.rep
+}
+
+/// One stream's raw outcome: the report minus latency statistics, plus
+/// the per-request latency samples in record order. The sharded runner
+/// concatenates shard samples (in shard order) before finalizing, so
+/// merged percentiles are exact rather than shard-averaged.
+pub(crate) struct StreamOutcome {
+    pub(crate) rep: SimReport,
+    pub(crate) lat_ms: Vec<f64>,
+}
+
+/// The engine proper: run `scheme` over one pre-assigned request stream.
+/// `models[i]` is the registry model of `reqs[i]`. Latency stats are NOT
+/// finalized here — [`simulate`] and
+/// [`super::shard::simulate_sharded`] both finish through
+/// [`super::metrics::finalize_latency`].
+pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
+                              reqs: &[Request], models: &[usize],
+                              trace_name: &str, cfg: &SimConfig)
+                              -> StreamOutcome {
     let n_models = reg.len();
     let palette: Vec<&'static VmType> = if cfg.vm_types.is_empty() {
         vec![crate::cloud::default_vm_type()]
@@ -228,13 +293,20 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     // read-`scheme.offload()`-per-arrival behavior.
     actuator.set_offload(scheme.offload());
 
+    // Hybrid fidelity: per-model governor + fluid lanes. With the
+    // (default) disabled config, `hybrid` is false and no fluid branch
+    // below is ever taken — the stream is bit-identical to the
+    // pre-fidelity engine.
+    let hybrid = cfg.fidelity.enabled;
+    let mut gov = FidelityGovernor::new(cfg.fidelity.clone(), n_models);
+    let mut lanes: Vec<FluidLane> = vec![FluidLane::default(); n_models];
+
     let mut rep = SimReport {
         scheme: scheme.name().to_string(),
         trace: trace_name.to_string(),
         served_by_model: vec![0; n_models],
         ..Default::default()
     };
-    let mut lat_hist = LogHistogram::latency_ms();
     let mut lat_samples: Vec<f64> = Vec::with_capacity(reqs.len());
 
     // Warm start: provision the steady-state fleet for the load observed
@@ -266,10 +338,8 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         actuator.cluster.tick(0.0, 0.0, 0.0); // boots complete before t=0
     }
 
-    let record = |rep: &mut SimReport, lat_hist: &mut LogHistogram,
-                      lat_samples: &mut Vec<f64>, latency_ms: f64, slo_ms: f64,
-                      strict: bool| {
-        lat_hist.record(latency_ms);
+    let record = |rep: &mut SimReport, lat_samples: &mut Vec<f64>,
+                      latency_ms: f64, slo_ms: f64, strict: bool| {
         lat_samples.push(latency_ms);
         if latency_ms > slo_ms {
             rep.violations += 1;
@@ -302,24 +372,31 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
 
         if t_cmp <= t_arr && t_cmp <= t_tick {
             // --- completion: free the slot, pull from this model's queue.
+            // A stream that switched to fluid mid-flight still has its
+            // in-flight completions on the heap; its queue now belongs to
+            // the fluid lane, so a fluid stream's completion must only
+            // release the slot, never dispatch (double-serving a queued
+            // request would break conservation).
             let (_, c) = completions.next().unwrap();
             actuator.cluster.release(c.vm_id, now);
-            if let Some(q) = queues[c.model].pop_front() {
-                if let Some((vm_id, k)) =
-                    route_best(&mut actuator.cluster, c.model, q.slo_ms)
-                {
-                    let done = now + caps[c.model][k].service_s;
-                    let latency_ms = (done - q.arrival) * 1000.0;
-                    record(&mut rep, &mut lat_hist, &mut lat_samples,
-                           latency_ms, q.slo_ms, q.strict);
-                    rep.served_vm += 1;
-                    rep.served_by_model[c.model] += 1;
-                    if q.floor_ok {
-                        rep.attained += 1;
+            if !(hybrid && gov.is_fluid(c.model)) {
+                if let Some(q) = queues[c.model].pop_front() {
+                    if let Some((vm_id, k)) =
+                        route_best(&mut actuator.cluster, c.model, q.slo_ms)
+                    {
+                        let done = now + caps[c.model][k].service_s;
+                        let latency_ms = (done - q.arrival) * 1000.0;
+                        record(&mut rep, &mut lat_samples,
+                               latency_ms, q.slo_ms, q.strict);
+                        rep.served_vm += 1;
+                        rep.served_by_model[c.model] += 1;
+                        if q.floor_ok {
+                            rep.attained += 1;
+                        }
+                        completions.schedule_at(done, Completion { vm_id, model: c.model });
+                    } else {
+                        queues[c.model].push_front(q);
                     }
-                    completions.schedule_at(done, Completion { vm_id, model: c.model });
-                } else {
-                    queues[c.model].push_front(q);
                 }
             }
         } else if t_arr <= t_tick {
@@ -345,11 +422,58 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 rep.floor_requests += 1;
             }
 
-            if let Some((vm_id, k)) = route_best(&mut actuator.cluster, m, r.slo_ms) {
+            let strict = r.strictness == Strictness::Strict;
+            if hybrid && gov.is_fluid(m) {
+                // Fluid lane: one credit integration, no heap event, no
+                // slot occupancy. Latency prices as the discrete router
+                // would on an idle fleet ([`FluidLane::svc_for`]).
+                lanes[m].credit.accrue(now);
+                let mut fluid_served = None;
+                if let Some(svc) = lanes[m].svc_for(r.slo_ms) {
+                    if lanes[m].credit.try_serve() {
+                        fluid_served = Some(svc);
+                    }
+                }
+                if let Some(svc) = fluid_served {
+                    record(&mut rep, &mut lat_samples, svc * 1000.0, r.slo_ms, strict);
+                    rep.served_vm += 1;
+                    rep.served_fluid += 1;
+                    rep.served_by_model[m] += 1;
+                    if floor_ok {
+                        rep.attained += 1;
+                    }
+                } else {
+                    // Out of credit (or nothing running): same overflow
+                    // path as the discrete router — valve, else queue.
+                    match actuator.try_offload(m, r.slo_ms, strict, now) {
+                        Some(out) => {
+                            rep.cost_lambda += out.cost_usd;
+                            rep.served_lambda += 1;
+                            rep.served_by_model[m] += 1;
+                            if out.cold {
+                                rep.lambda_cold_starts += 1;
+                            }
+                            if floor_ok {
+                                rep.attained += 1;
+                            }
+                            record(&mut rep, &mut lat_samples,
+                                   out.latency_ms, r.slo_ms, strict);
+                        }
+                        None => {
+                            queues[m].push_back(Queued {
+                                slo_ms: r.slo_ms,
+                                arrival: now,
+                                strict,
+                                floor_ok,
+                            });
+                        }
+                    }
+                }
+            } else if let Some((vm_id, k)) = route_best(&mut actuator.cluster, m, r.slo_ms) {
                 let svc = caps[m][k].service_s;
                 let done = now + svc;
-                record(&mut rep, &mut lat_hist, &mut lat_samples,
-                       svc * 1000.0, r.slo_ms, r.strictness == Strictness::Strict);
+                record(&mut rep, &mut lat_samples,
+                       svc * 1000.0, r.slo_ms, strict);
                 rep.served_vm += 1;
                 rep.served_by_model[m] += 1;
                 if floor_ok {
@@ -361,7 +485,6 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                 // the live backend) sizes, cold-starts and bills the
                 // invocation — or refuses under the current policy, in
                 // which case the request queues.
-                let strict = r.strictness == Strictness::Strict;
                 match actuator.try_offload(m, r.slo_ms, strict, now) {
                     Some(out) => {
                         rep.cost_lambda += out.cost_usd;
@@ -373,7 +496,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
                         if floor_ok {
                             rep.attained += 1;
                         }
-                        record(&mut rep, &mut lat_hist, &mut lat_samples,
+                        record(&mut rep, &mut lat_samples,
                                out.latency_ms, r.slo_ms, strict);
                     }
                     None => {
@@ -421,15 +544,73 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
             // through `advance` — post-boot capacity, pre-next-arrival.
             actuator.refresh_variants(now);
             rep.peak_vms = rep.peak_vms.max(actuator.cluster.total_alive());
-            // Newly-booted VMs can absorb queued work.
+            if hybrid {
+                // Refresh every lane from the post-scaling fleet, then let
+                // the governor re-judge each stream. Credit accrues at the
+                // *old* rate up to `now` before the rate changes — the
+                // integrator is piecewise-linear in capacity.
+                for m in 0..n_models {
+                    lanes[m].credit.accrue(now);
+                    let mut cap_rate = 0.0;
+                    let mut slots = 0.0;
+                    lanes[m].svc_by_cost.clear();
+                    for &k in &order[m] {
+                        let c = &caps[m][k];
+                        let n_run = actuator
+                            .cluster
+                            .count_typed(m, c.vm_type, VmState::Running);
+                        if n_run > 0 {
+                            cap_rate +=
+                                n_run as f64 * c.slots_per_vm as f64 / c.service_s;
+                            slots += n_run as f64 * c.slots_per_vm as f64;
+                            lanes[m].svc_by_cost.push(c.service_s);
+                        }
+                    }
+                    lanes[m].credit.cap_rate = cap_rate;
+                    lanes[m].credit.burst = slots.max(1.0);
+                    lanes[m].credit.clamp();
+                    if gov.observe(m, tick.demands[m].rate, cap_rate,
+                                   queues[m].len())
+                        == Some(Fidelity::Fluid)
+                    {
+                        // Fresh lane starts with an empty credit bank —
+                        // capacity never time-travels across the switch.
+                        lanes[m].credit.reset(now);
+                    }
+                }
+            }
+            // Newly-booted VMs can absorb queued work (a fluid stream's
+            // backlog drains through its credit bank instead).
             for m in 0..n_models {
+                if hybrid && gov.is_fluid(m) {
+                    while let Some(&head) = queues[m].front() {
+                        let svc = match lanes[m].svc_for(head.slo_ms) {
+                            Some(s) => s,
+                            None => break,
+                        };
+                        if !lanes[m].credit.try_serve() {
+                            break;
+                        }
+                        queues[m].pop_front();
+                        let latency_ms = (now - head.arrival + svc) * 1000.0;
+                        record(&mut rep, &mut lat_samples,
+                               latency_ms, head.slo_ms, head.strict);
+                        rep.served_vm += 1;
+                        rep.served_fluid += 1;
+                        rep.served_by_model[m] += 1;
+                        if head.floor_ok {
+                            rep.attained += 1;
+                        }
+                    }
+                    continue;
+                }
                 while let Some(&head) = queues[m].front() {
                     match route_best(&mut actuator.cluster, m, head.slo_ms) {
                         Some((vm_id, k)) => {
                             queues[m].pop_front();
                             let done = now + caps[m][k].service_s;
                             let latency_ms = (done - head.arrival) * 1000.0;
-                            record(&mut rep, &mut lat_hist, &mut lat_samples,
+                            record(&mut rep, &mut lat_samples,
                                    latency_ms, head.slo_ms, head.strict);
                             rep.served_vm += 1;
                             rep.served_by_model[m] += 1;
@@ -461,9 +642,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
     rep.provisioned_slot_seconds = cluster.provisioned_slot_seconds;
     rep.excess_slot_seconds = cluster.excess_slot_seconds;
     rep.duration_s = end;
-    rep.latency_mean_ms = lat_hist.mean();
-    rep.latency_p50_ms = crate::util::stats::percentile(&mut lat_samples, 50.0);
-    rep.latency_p99_ms = crate::util::stats::percentile(&mut lat_samples, 99.0);
+    rep.fidelity_switches = gov.switches();
     rep.vms_by_type = cluster
         .spawned_by_type
         .iter()
@@ -478,7 +657,7 @@ pub fn simulate(scheme: &mut dyn Scheme, reg: &Registry, reqs: &[Request],
         rep.trace
     );
     debug_assert_eq!(rep.served_vm + rep.served_lambda, lat_samples.len() as u64);
-    rep
+    StreamOutcome { rep, lat_ms: lat_samples }
 }
 
 #[cfg(test)]
@@ -694,6 +873,45 @@ mod tests {
         assert!(rep.floor_requests > 0);
         assert!(rep.attainment_pct() < 100.0);
         assert!(rep.attainment_pct() > 20.0);
+    }
+
+    #[test]
+    fn hybrid_fidelity_conserves_and_goes_fluid_when_quiet() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(4.0, 900);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let mut scheme = scheduler::by_name("reactive").unwrap();
+        let cfg = SimConfig {
+            fidelity: crate::sim::fidelity::FidelityConfig::hybrid(),
+            ..SimConfig::default()
+        };
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        // Conservation must survive every fluid↔discrete handoff.
+        assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests);
+        assert!(rep.fidelity_switches > 0, "quiet 4 q/s load must go fluid");
+        assert!(rep.served_fluid > 0, "fluid lanes must actually serve");
+        assert!(rep.served_fluid <= rep.served_vm);
+        let total: u64 = rep.served_by_model.iter().sum();
+        assert_eq!(total, rep.served_vm + rep.served_lambda);
+    }
+
+    #[test]
+    fn disabled_fidelity_matches_legacy_engine_exactly() {
+        // `enabled: false` must be byte-identical to a config that never
+        // heard of fidelity — same RNG draws, same report.
+        let a = run_scheme("paragon", 12.0);
+        let reg = Registry::builtin();
+        let trace = generators::constant(12.0, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let mut scheme = scheduler::by_name("paragon").unwrap();
+        let cfg = SimConfig {
+            fidelity: crate::sim::fidelity::FidelityConfig::default(),
+            ..SimConfig::default()
+        };
+        let b = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        assert_eq!(a, b, "disabled hybrid must not perturb the engine");
+        assert_eq!(b.served_fluid, 0);
+        assert_eq!(b.fidelity_switches, 0);
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Hybrid fluid↔discrete fidelity for the request-level simulator.
+//!
+//! The paper's workloads are heavy-tailed across the model pool: at any
+//! moment most `(model, vm_type)` sub-fleets are *quiet* (arrival rate
+//! well under capacity, empty queue) while a few are *hot*. A quiet
+//! sub-fleet contributes almost nothing to the metrics a scheme
+//! comparison cares about — every request is served at its bare service
+//! time — yet the discrete engine still pays two heap events plus a
+//! routing scan per request for it. The [`FidelityGovernor`] therefore
+//! runs quiet model streams through the fluid credit integrator
+//! ([`FluidCredit`](crate::control::fluid::FluidCredit) — the same
+//! per-second aggregate the RL fluid fleet integrates) and hot streams
+//! request-accurate, switching per model on queue-pressure /
+//! arrival-rate thresholds with hysteresis.
+//!
+//! **Conservation across switches is structural, not reconciled.** Both
+//! modes share the engine's per-model FIFO queue: a fluid lane that runs
+//! out of credit pushes into the *same* queue the discrete router pops
+//! from, and a switch in either direction only changes who serves the
+//! queue next — no request is created, duplicated, or lost at a
+//! handoff, so `ingested == served + dropped + offloaded + queued` holds
+//! at every instant by construction (asserted by the engine's existing
+//! conservation check and by `rust/tests/shard_determinism.rs`).
+//!
+//! Fidelity semantics of a fluid-served request: latency is the cheapest
+//! feasible running type's service time (plus queue wait if it had to
+//! queue) — exactly what the discrete router produces for an
+//! under-loaded fleet, which is the only regime the governor admits into
+//! fluid mode. Fluid serving does not occupy VM slots, so per-VM
+//! utilization reads idle while a lane is fluid; rate-driven schemes
+//! (the paper's) are unaffected, and the governor's hot threshold flips
+//! the lane back to request-accurate before utilization detail matters.
+//! Disabled (the default) the engine takes no fluid branch anywhere and
+//! behaves bit-for-bit as before.
+
+use crate::control::fluid::FluidCredit;
+
+/// Serving mode of one model stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Request-accurate: per-request routing, slot occupancy, completion
+    /// events on the heap.
+    Discrete,
+    /// Aggregate: credit integration, no heap events, no slot occupancy.
+    Fluid,
+}
+
+/// Thresholds of the hybrid-fidelity governor. `enabled: false` (the
+/// default) keeps every stream discrete and the engine byte-identical to
+/// the pre-hybrid behavior.
+#[derive(Debug, Clone)]
+pub struct FidelityConfig {
+    pub enabled: bool,
+    /// Demand pressure (EWMA rate / fluid capacity) at or above which a
+    /// fluid stream flips back to discrete.
+    pub hot_pressure: f64,
+    /// Pressure at or below which a discrete stream counts as quiet.
+    pub cool_pressure: f64,
+    /// Consecutive quiet ticks before a discrete stream goes fluid
+    /// (hysteresis: one calm second must not flip a bursty stream).
+    pub cool_ticks: u32,
+    /// Queue depth that flips a fluid stream hot regardless of pressure.
+    pub hot_queue: usize,
+}
+
+impl Default for FidelityConfig {
+    fn default() -> Self {
+        FidelityConfig {
+            enabled: false,
+            hot_pressure: 0.5,
+            cool_pressure: 0.25,
+            cool_ticks: 5,
+            hot_queue: 4,
+        }
+    }
+}
+
+impl FidelityConfig {
+    /// The hybrid preset: governor on, default thresholds.
+    pub fn hybrid() -> Self {
+        FidelityConfig { enabled: true, ..FidelityConfig::default() }
+    }
+}
+
+/// Per-model fidelity state machine. One [`observe`](Self::observe) call
+/// per model per 1 Hz tick; decisions depend only on the observed
+/// `(rate, capacity, queued)` triple, so the governor is deterministic
+/// given the (deterministic) simulation that feeds it.
+pub struct FidelityGovernor {
+    cfg: FidelityConfig,
+    mode: Vec<Fidelity>,
+    quiet_streak: Vec<u32>,
+    switches: u64,
+}
+
+impl FidelityGovernor {
+    pub fn new(cfg: FidelityConfig, n_models: usize) -> FidelityGovernor {
+        FidelityGovernor {
+            cfg,
+            mode: vec![Fidelity::Discrete; n_models],
+            quiet_streak: vec![0; n_models],
+            switches: 0,
+        }
+    }
+
+    pub fn mode(&self, m: usize) -> Fidelity {
+        self.mode[m]
+    }
+
+    pub fn is_fluid(&self, m: usize) -> bool {
+        self.mode[m] == Fidelity::Fluid
+    }
+
+    /// Total fidelity switches over the run (reported in
+    /// [`SimReport::fidelity_switches`](super::metrics::SimReport)).
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// One governor decision for model `m`: `rate` is the control loop's
+    /// EWMA arrival rate, `capacity` the lane's fluid service rate
+    /// (req/s), `queued` the stream's current backlog. Returns the new
+    /// mode when this call switched the stream, `None` otherwise.
+    pub fn observe(&mut self, m: usize, rate: f64, capacity: f64,
+                   queued: usize) -> Option<Fidelity> {
+        let pressure =
+            if capacity > 0.0 { rate / capacity } else { f64::INFINITY };
+        match self.mode[m] {
+            Fidelity::Discrete => {
+                if pressure <= self.cfg.cool_pressure && queued == 0 {
+                    self.quiet_streak[m] += 1;
+                    if self.quiet_streak[m] >= self.cfg.cool_ticks {
+                        self.quiet_streak[m] = 0;
+                        self.mode[m] = Fidelity::Fluid;
+                        self.switches += 1;
+                        return Some(Fidelity::Fluid);
+                    }
+                } else {
+                    self.quiet_streak[m] = 0;
+                }
+                None
+            }
+            Fidelity::Fluid => {
+                if pressure >= self.cfg.hot_pressure || queued > self.cfg.hot_queue {
+                    self.quiet_streak[m] = 0;
+                    self.mode[m] = Fidelity::Discrete;
+                    self.switches += 1;
+                    Some(Fidelity::Discrete)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// One model stream's fluid lane: the credit bank plus the service times
+/// of its *running* sub-fleets in cost order (refreshed each tick from
+/// the fleet view), used to price fluid-served latency exactly as the
+/// discrete router would for an idle fleet.
+#[derive(Debug, Clone, Default)]
+pub struct FluidLane {
+    pub credit: FluidCredit,
+    /// Service seconds of palette types with running capacity, cheapest
+    /// effective $/query first (the discrete router's preference order).
+    pub svc_by_cost: Vec<f64>,
+}
+
+impl FluidLane {
+    /// Service time a fluid-served request observes: the cheapest running
+    /// type meeting the SLO, else the cheapest running type at all (the
+    /// discrete router's two-pass rule), `None` when nothing runs.
+    pub fn svc_for(&self, slo_ms: f64) -> Option<f64> {
+        self.svc_by_cost
+            .iter()
+            .copied()
+            .find(|s| s * 1000.0 <= slo_ms)
+            .or_else(|| self.svc_by_cost.first().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_is_the_default() {
+        let cfg = FidelityConfig::default();
+        assert!(!cfg.enabled);
+        assert!(FidelityConfig::hybrid().enabled);
+    }
+
+    #[test]
+    fn governor_needs_a_quiet_streak_to_go_fluid() {
+        let mut g = FidelityGovernor::new(FidelityConfig::hybrid(), 2);
+        // 4 quiet ticks: still discrete (cool_ticks = 5).
+        for _ in 0..4 {
+            assert_eq!(g.observe(0, 1.0, 10.0, 0), None);
+        }
+        // A hot tick resets the streak.
+        assert_eq!(g.observe(0, 9.0, 10.0, 0), None);
+        for _ in 0..4 {
+            assert_eq!(g.observe(0, 1.0, 10.0, 0), None);
+        }
+        assert_eq!(g.observe(0, 1.0, 10.0, 0), Some(Fidelity::Fluid));
+        assert!(g.is_fluid(0));
+        assert!(!g.is_fluid(1), "decisions are per model");
+        assert_eq!(g.switches(), 1);
+    }
+
+    #[test]
+    fn governor_flips_hot_on_pressure_or_backlog() {
+        let mut g = FidelityGovernor::new(FidelityConfig::hybrid(), 1);
+        for _ in 0..5 {
+            g.observe(0, 1.0, 10.0, 0);
+        }
+        assert!(g.is_fluid(0));
+        // Low pressure, small queue: stays fluid.
+        assert_eq!(g.observe(0, 1.0, 10.0, 2), None);
+        // Deep backlog flips immediately.
+        assert_eq!(g.observe(0, 1.0, 10.0, 50), Some(Fidelity::Discrete));
+        // Back to fluid, then a pressure spike flips it.
+        for _ in 0..5 {
+            g.observe(0, 1.0, 10.0, 0);
+        }
+        assert!(g.is_fluid(0));
+        assert_eq!(g.observe(0, 8.0, 10.0, 0), Some(Fidelity::Discrete));
+        assert_eq!(g.switches(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_reads_infinitely_hot() {
+        let mut g = FidelityGovernor::new(FidelityConfig::hybrid(), 1);
+        for _ in 0..20 {
+            assert_eq!(g.observe(0, 0.0, 0.0, 0), None, "never goes fluid");
+        }
+        assert!(!g.is_fluid(0));
+    }
+
+    #[test]
+    fn lane_prices_like_the_discrete_router() {
+        let lane = FluidLane {
+            svc_by_cost: vec![0.5, 0.1],
+            ..Default::default()
+        };
+        // Cheapest feasible wins; infeasible SLO falls back to cheapest.
+        assert_eq!(lane.svc_for(600.0), Some(0.5));
+        assert_eq!(lane.svc_for(200.0), Some(0.1));
+        assert_eq!(lane.svc_for(50.0), Some(0.5), "two-pass fallback");
+        let empty = FluidLane::default();
+        assert_eq!(empty.svc_for(1000.0), None);
+    }
+}

@@ -14,6 +14,12 @@ pub struct SimReport {
     /// Requests served on VMs / on serverless.
     pub served_vm: u64,
     pub served_lambda: u64,
+    /// Subset of `served_vm` that was served by a fluid lane while its
+    /// model stream was in aggregate fidelity (zero unless the run's
+    /// [`FidelityConfig`](super::fidelity::FidelityConfig) is enabled).
+    pub served_fluid: u64,
+    /// Fidelity-governor mode switches over the run (hybrid runs only).
+    pub fidelity_switches: u64,
     /// Requests dropped after exceeding the queue wait timeout
     /// (`served_vm + served_lambda + dropped == requests` always holds).
     pub dropped: u64,
@@ -84,6 +90,53 @@ impl SimReport {
         }
     }
 
+    /// Fold one shard's report into this one (sharded execution,
+    /// [`super::shard::simulate_sharded`]). Counters and costs sum;
+    /// `duration_s` is the slowest shard's; `peak_vms` sums shard peaks
+    /// (an upper bound on the joint peak — shards tick independently, so
+    /// the exact joint maximum is not observable). Latency stats are NOT
+    /// merged here: the caller concatenates raw samples in shard order
+    /// and runs [`finalize_latency`], so merged percentiles are exact,
+    /// not shard-averaged. Callers MUST absorb shards in ascending shard
+    /// index — f64 accumulation order is part of the determinism
+    /// contract (same seed ⇒ bit-identical report at any thread count).
+    pub fn absorb_shard(&mut self, o: &SimReport) {
+        self.requests += o.requests;
+        self.violations += o.violations;
+        self.violations_strict += o.violations_strict;
+        self.violations_relaxed += o.violations_relaxed;
+        self.served_vm += o.served_vm;
+        self.served_lambda += o.served_lambda;
+        self.served_fluid += o.served_fluid;
+        self.fidelity_switches += o.fidelity_switches;
+        self.dropped += o.dropped;
+        self.lambda_cold_starts += o.lambda_cold_starts;
+        self.floor_requests += o.floor_requests;
+        self.attained += o.attained;
+        self.cost_vm += o.cost_vm;
+        self.cost_lambda += o.cost_lambda;
+        self.alive_vm_seconds += o.alive_vm_seconds;
+        self.boot_seconds += o.boot_seconds;
+        self.provisioned_slot_seconds += o.provisioned_slot_seconds;
+        self.excess_slot_seconds += o.excess_slot_seconds;
+        self.peak_vms += o.peak_vms;
+        self.duration_s = self.duration_s.max(o.duration_s);
+        if self.served_by_model.len() < o.served_by_model.len() {
+            self.served_by_model.resize(o.served_by_model.len(), 0);
+        }
+        for (i, &n) in o.served_by_model.iter().enumerate() {
+            self.served_by_model[i] += n;
+        }
+        // vms_by_type entries merge by type name; the result stays sorted
+        // by name (both inputs are), so merged reports diff cleanly.
+        for (name, n) in &o.vms_by_type {
+            match self.vms_by_type.binary_search_by(|(s, _)| s.as_str().cmp(name)) {
+                Ok(i) => self.vms_by_type[i].1 += n,
+                Err(i) => self.vms_by_type.insert(i, (name.clone(), *n)),
+            }
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", self.scheme.as_str().into()),
@@ -93,6 +146,8 @@ impl SimReport {
             ("violation_pct", self.violation_pct().into()),
             ("served_vm", (self.served_vm as usize).into()),
             ("served_lambda", (self.served_lambda as usize).into()),
+            ("served_fluid", (self.served_fluid as usize).into()),
+            ("fidelity_switches", (self.fidelity_switches as usize).into()),
             ("dropped", (self.dropped as usize).into()),
             ("lambda_cold_starts", (self.lambda_cold_starts as usize).into()),
             ("vms_by_type", Json::Obj(
@@ -124,6 +179,21 @@ impl SimReport {
     }
 }
 
+/// Fill a report's latency stats from the raw per-request samples: mean
+/// by summation in record order (deterministic), percentiles via the O(n)
+/// selection path ([`crate::util::stats::percentile_select`] — value-
+/// identical to the old sort-based computation). Shared by the serial
+/// path and the sharded merge, so both price latency identically.
+pub fn finalize_latency(rep: &mut SimReport, samples: &mut [f64]) {
+    rep.latency_mean_ms = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
+    };
+    rep.latency_p50_ms = crate::util::stats::percentile_select(samples, 50.0);
+    rep.latency_p99_ms = crate::util::stats::percentile_select(samples, 99.0);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +223,62 @@ mod tests {
         assert_eq!(r.mean_vms(), 0.0);
         let j = r.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(0));
+        assert_eq!(j.get("served_fluid").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn absorb_shard_sums_counters_and_merges_types() {
+        let mut a = SimReport {
+            requests: 100,
+            served_vm: 90,
+            served_lambda: 5,
+            dropped: 5,
+            cost_vm: 1.0,
+            peak_vms: 3,
+            duration_s: 50.0,
+            served_by_model: vec![60, 30],
+            vms_by_type: vec![("c5.large".into(), 2), ("m4.large".into(), 4)],
+            ..Default::default()
+        };
+        let b = SimReport {
+            requests: 40,
+            served_vm: 40,
+            cost_vm: 0.5,
+            peak_vms: 2,
+            duration_s: 80.0,
+            served_by_model: vec![0, 10, 30],
+            vms_by_type: vec![("m4.large".into(), 1), ("t3.small".into(), 7)],
+            ..Default::default()
+        };
+        a.absorb_shard(&b);
+        assert_eq!(a.requests, 140);
+        assert_eq!(a.served_vm, 130);
+        assert_eq!(a.served_vm + a.served_lambda + a.dropped, a.requests);
+        assert_eq!(a.peak_vms, 5, "shard peaks sum (upper bound)");
+        assert_eq!(a.duration_s, 80.0, "slowest shard wins");
+        assert_eq!(a.served_by_model, vec![60, 40, 30]);
+        assert_eq!(
+            a.vms_by_type,
+            vec![
+                ("c5.large".to_string(), 2),
+                ("m4.large".to_string(), 5),
+                ("t3.small".to_string(), 7),
+            ],
+            "name-merged and still sorted"
+        );
+        assert!((a.cost_vm - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn finalize_latency_fills_stats() {
+        let mut r = SimReport::default();
+        let mut samples = vec![10.0, 20.0, 30.0, 40.0];
+        finalize_latency(&mut r, &mut samples);
+        assert!((r.latency_mean_ms - 25.0).abs() < 1e-12);
+        assert!((r.latency_p50_ms - 25.0).abs() < 1e-12);
+        let mut empty: Vec<f64> = Vec::new();
+        let mut r2 = SimReport::default();
+        finalize_latency(&mut r2, &mut empty);
+        assert_eq!(r2.latency_mean_ms, 0.0);
     }
 }

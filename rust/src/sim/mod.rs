@@ -4,14 +4,23 @@
 //! VM routing/queueing/booting, serverless offload with warm pools and cold
 //! starts, per-second scheduler ticks, and full cost + SLO accounting. All
 //! scheme-comparison figures (5, 6, 9) run through [`engine::simulate`].
+//!
+//! Two performance planes ride on the same engine: [`shard`] partitions
+//! multi-model workloads into per-model streams on worker threads with a
+//! deterministic merge, and [`fidelity`] lets quiet model streams drop to
+//! fluid (aggregate) fidelity while hot ones stay request-accurate.
 
 pub mod core;
 pub mod engine;
+pub mod fidelity;
 pub mod metrics;
+pub mod shard;
 
 pub use self::core::{EventQueue, SimCore};
 pub use engine::{assign_models, simulate, Assignment, SimConfig};
+pub use fidelity::{Fidelity, FidelityConfig, FidelityGovernor};
 pub use metrics::SimReport;
+pub use shard::{available_threads, simulate_sharded};
 
 use crate::config::ExperimentConfig;
 use crate::models::Registry;
@@ -42,5 +51,10 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
         warm_start: true,
         instance_cap: cfg.instance_cap,
         queue_timeout_s: cfg.queue_timeout_s,
+        fidelity: if cfg.hybrid_fidelity {
+            fidelity::FidelityConfig::hybrid()
+        } else {
+            fidelity::FidelityConfig::default()
+        },
     }))
 }

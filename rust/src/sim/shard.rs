@@ -1,0 +1,199 @@
+//! Parallel sharded execution of the discrete-event engine.
+//!
+//! Model sub-fleets share no state: a model's VMs, FIFO queue, serverless
+//! valve accounting and control-loop EWMAs never touch another model's
+//! (`rust/tests/offload_conformance.rs` leans on the same isolation). A
+//! multi-model workload therefore partitions into independent per-model
+//! *streams*, each a self-contained [`simulate_stream`] run on its own
+//! event heap, executed on its own thread and merged deterministically.
+//!
+//! **Determinism contract.** The partition is a pure function of the
+//! (seeded) model assignment — never of the thread count — and shard
+//! outcomes are merged in ascending shard index whether one worker ran
+//! them all or sixteen raced over the work queue. Identical seeds
+//! therefore produce bit-for-bit identical [`SimReport`]s at any
+//! `threads` value, which `rust/tests/shard_determinism.rs` property-
+//! tests. (A sharded run is *not* bit-identical to the serial
+//! [`simulate`](super::simulate): each shard warm-starts and ticks its
+//! own control loop, and [`SimConfig::instance_cap`] binds per shard.
+//! Serial-vs-sharded agreement is statistical; sharded-vs-sharded
+//! agreement is exact.)
+//!
+//! Model-less workloads resolve variants through one shared load-adaptive
+//! plane, which couples every request to every model — they run as a
+//! single stream (no parallelism, still the same merge path).
+
+use super::engine::{assign_models, simulate_stream, StreamOutcome};
+use super::metrics::{finalize_latency, SimReport};
+use super::{Assignment, SimConfig};
+use crate::models::Registry;
+use crate::scheduler::Scheme;
+use crate::trace::Request;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One independent stream: a request slice plus its aligned model
+/// assignment, as produced by [`partition`].
+#[derive(Default)]
+struct Shard {
+    reqs: Vec<Request>,
+    models: Vec<usize>,
+}
+
+/// Worker threads the host offers (≥ 1); the default `--threads auto`.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split a pre-assigned workload into independent streams, ascending
+/// model index, arrival order preserved within each. The split depends
+/// only on `(reqs, models)` — never on the thread count.
+fn partition(reqs: &[Request], models: &[usize], n_models: usize,
+             single_stream: bool) -> Vec<Shard> {
+    if single_stream || reqs.is_empty() {
+        return vec![Shard { reqs: reqs.to_vec(), models: models.to_vec() }];
+    }
+    let mut by_model: Vec<Shard> = (0..n_models).map(|_| Shard::default()).collect();
+    for (r, &m) in reqs.iter().zip(models) {
+        by_model[m].reqs.push(r.clone());
+        by_model[m].models.push(m);
+    }
+    by_model.retain(|s| !s.reqs.is_empty());
+    by_model
+}
+
+/// Run `reqs` sharded over up to `threads` worker threads (clamped to the
+/// shard count; `0` means [`available_threads`]). Each shard gets a fresh
+/// scheme from `factory` — schemes carry per-run state, so one instance
+/// cannot be shared. Returns the deterministically merged report; see the
+/// module docs for the exact determinism contract.
+pub fn simulate_sharded(factory: &(dyn Fn() -> Box<dyn Scheme> + Sync),
+                        reg: &Registry, reqs: &[Request], trace_name: &str,
+                        cfg: &SimConfig, threads: usize) -> SimReport {
+    let models = assign_models(reqs, reg, cfg);
+    let single_stream = cfg.assignment == Assignment::ModelLess;
+    let shards = partition(reqs, &models, reg.len(), single_stream);
+    let threads = if threads == 0 { available_threads() } else { threads };
+    let n_workers = threads.min(shards.len()).max(1);
+
+    let run_shard = |s: &Shard| -> StreamOutcome {
+        let mut scheme = factory();
+        simulate_stream(scheme.as_mut(), reg, &s.reqs, &s.models, trace_name, cfg)
+    };
+
+    // Work-stealing over an atomic cursor: workers race for shard
+    // indices, but every outcome is tagged with its index and merged in
+    // ascending order below — scheduling jitter cannot reach the report.
+    let mut outcomes: Vec<(usize, StreamOutcome)> = if n_workers <= 1 {
+        shards.iter().enumerate().map(|(i, s)| (i, run_shard(s))).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let mut collected = Vec::with_capacity(shards.len());
+        std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    let next = &next;
+                    let shards = &shards;
+                    let run_shard = &run_shard;
+                    sc.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= shards.len() {
+                                break;
+                            }
+                            local.push((i, run_shard(&shards[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                collected.extend(h.join().expect("shard worker panicked"));
+            }
+        });
+        collected
+    };
+    outcomes.sort_by_key(|(i, _)| *i);
+
+    let mut rep = SimReport {
+        scheme: factory().name().to_string(),
+        trace: trace_name.to_string(),
+        served_by_model: vec![0; reg.len()],
+        ..Default::default()
+    };
+    let total: usize = outcomes.iter().map(|(_, o)| o.lat_ms.len()).sum();
+    let mut samples: Vec<f64> = Vec::with_capacity(total);
+    for (_, o) in &outcomes {
+        rep.absorb_shard(&o.rep);
+        samples.extend_from_slice(&o.lat_ms);
+    }
+    finalize_latency(&mut rep, &mut samples);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler;
+    use crate::trace::{generators, synthesize_requests, WorkloadKind};
+
+    fn workload(rate: f64, secs: usize) -> Vec<Request> {
+        let trace = generators::constant(rate, secs);
+        synthesize_requests(&trace, WorkloadKind::MixedSlo, 7)
+    }
+
+    #[test]
+    fn partition_is_thread_count_free_and_total() {
+        let reg = Registry::builtin();
+        let reqs = workload(20.0, 120);
+        let cfg = SimConfig::default();
+        let models = assign_models(&reqs, &reg, &cfg);
+        let shards = partition(&reqs, &models, reg.len(), false);
+        let total: usize = shards.iter().map(|s| s.reqs.len()).sum();
+        assert_eq!(total, reqs.len(), "partition must be a partition");
+        for s in &shards {
+            assert_eq!(s.reqs.len(), s.models.len());
+            // One model per shard, arrivals still sorted.
+            assert!(s.models.windows(2).all(|w| w[0] == w[1]));
+            assert!(s
+                .reqs
+                .windows(2)
+                .all(|w| w[0].arrival_s <= w[1].arrival_s));
+        }
+    }
+
+    #[test]
+    fn modelless_runs_as_one_stream() {
+        let reg = Registry::builtin();
+        let reqs = workload(10.0, 60);
+        let models = vec![0; reqs.len()];
+        let shards = partition(&reqs, &models, reg.len(), true);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].reqs.len(), reqs.len());
+    }
+
+    #[test]
+    fn sharded_run_conserves_and_matches_itself() {
+        let reg = Registry::builtin();
+        let reqs = workload(15.0, 300);
+        let cfg = SimConfig::default();
+        let factory: &(dyn Fn() -> Box<dyn Scheme> + Sync) =
+            &|| scheduler::by_name("reactive").unwrap();
+        let a = simulate_sharded(factory, &reg, &reqs, "flat", &cfg, 1);
+        let b = simulate_sharded(factory, &reg, &reqs, "flat", &cfg, 4);
+        assert_eq!(a.served_vm + a.served_lambda + a.dropped, a.requests);
+        assert_eq!(a, b, "thread count leaked into the report");
+        assert!(a.requests as usize == reqs.len());
+    }
+
+    #[test]
+    fn empty_workload_is_safe() {
+        let reg = Registry::builtin();
+        let cfg = SimConfig::default();
+        let factory: &(dyn Fn() -> Box<dyn Scheme> + Sync) =
+            &|| scheduler::by_name("reactive").unwrap();
+        let rep = simulate_sharded(factory, &reg, &[], "flat", &cfg, 4);
+        assert_eq!(rep.requests, 0);
+        assert_eq!(rep.latency_mean_ms, 0.0);
+    }
+}

@@ -85,6 +85,55 @@ pub fn bench_throughput<T>(name: &str, warmup: usize, iters: usize, items_per_it
     r
 }
 
+/// `git describe --always --dirty` of the tree the binary was built from,
+/// best-effort (`"unknown"` outside a repo or without git on PATH).
+/// Stamped into bench result files so a committed `results/BENCH_*.json`
+/// is traceable to the commit that produced it.
+pub fn git_describe() -> String {
+    std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Peak resident set size of this process in MiB (`VmHWM` from
+/// `/proc/self/status`), 0.0 where procfs is unavailable (non-Linux).
+pub fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Provenance block shared by bench result files: build commit, profile,
+/// host parallelism. Attach under a `"meta"` key next to the results.
+pub fn bench_meta() -> crate::util::json::Json {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    crate::util::json::Json::obj(vec![
+        ("git", git_describe().as_str().into()),
+        ("profile", if cfg!(debug_assertions) { "debug" } else { "release" }.into()),
+        ("host_threads", threads.into()),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +150,15 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert!(r.p50_ns <= r.p95_ns);
         assert_eq!(r.iters, 16);
+    }
+
+    #[test]
+    fn meta_and_rss_are_total() {
+        // Never panics, whatever the environment provides.
+        let m = bench_meta();
+        assert!(m.get("git").as_str().is_some());
+        assert!(m.get("host_threads").as_usize().unwrap_or(0) >= 1);
+        assert!(peak_rss_mb() >= 0.0);
     }
 
     #[test]

@@ -72,6 +72,30 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// [`percentile`] without the full sort: `select_nth_unstable` partitions
+/// around the lower closest rank in O(n), the upper rank is the minimum of
+/// the right partition, and the same linear interpolation runs between
+/// them — value-identical to the sort-based path (asserted below), but the
+/// engine's finalization no longer pays O(n log n) twice over millions of
+/// latency samples. Reorders `samples` (partially) like `percentile` does
+/// (fully).
+pub fn percentile_select(samples: &mut [f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let rank = q / 100.0 * (samples.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let (_, &mut lo_v, rest) =
+        samples.select_nth_unstable_by(lo, |a, b| a.total_cmp(b));
+    if rank <= lo as f64 || rest.is_empty() {
+        return lo_v;
+    }
+    let hi_v = rest.iter().copied().fold(f64::INFINITY, f64::min);
+    let w = rank - lo as f64;
+    lo_v * (1.0 - w) + hi_v * w
+}
+
 pub fn median(samples: &mut [f64]) -> f64 {
     percentile(samples, 50.0)
 }
@@ -291,6 +315,21 @@ mod tests {
         assert_eq!(percentile(&mut v, 100.0), 5.0);
         assert_eq!(percentile(&mut v, 25.0), 2.0);
         assert_eq!(percentile(&mut [].as_mut_slice(), 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_select_matches_sort_based() {
+        let mut rng = crate::util::rng::Pcg::seeded(9);
+        let base: Vec<f64> = (0..5000).map(|_| rng.exp(0.01)).collect();
+        for q in [0.0, 1.0, 25.0, 50.0, 73.3, 99.0, 100.0] {
+            let mut a = base.clone();
+            let mut b = base.clone();
+            let sel = percentile_select(&mut a, q);
+            let srt = percentile(&mut b, q);
+            assert_eq!(sel, srt, "q{q}: select {sel} != sort {srt}");
+        }
+        assert_eq!(percentile_select(&mut [].as_mut_slice(), 50.0), 0.0);
+        assert_eq!(percentile_select(&mut [7.0], 99.0), 7.0);
     }
 
     #[test]

@@ -1,0 +1,135 @@
+//! PR-6 perf-plane contracts, property-tested end to end:
+//!
+//! 1. **Shard determinism** — `simulate_sharded` with identical seeds
+//!    produces a bit-for-bit identical [`SimReport`] at every thread
+//!    count (1, 2, 4, 8), including the served-by-model mix and derived
+//!    attainment, for plain and hybrid-fidelity runs alike.
+//! 2. **Fluid↔discrete conservation** — a workload engineered to force
+//!    quiet→fluid and hot→discrete switches mid-run never creates,
+//!    duplicates or loses a request across the handoffs.
+//! 3. **Hybrid accuracy** — on a quiet fleet (the regime the governor
+//!    admits into fluid mode) hybrid fidelity matches the full-discrete
+//!    engine within 1% on cost and attainment.
+
+use paragon::models::Registry;
+use paragon::scheduler::{self, Scheme};
+use paragon::sim::{simulate, simulate_sharded, FidelityConfig, SimConfig};
+use paragon::trace::{generators, synthesize_requests, Request, Trace, TraceKind,
+                     WorkloadKind};
+
+type Factory<'a> = &'a (dyn Fn() -> Box<dyn Scheme> + Sync);
+
+fn bursty_workload() -> Vec<Request> {
+    let trace = generators::generate_with(TraceKind::Berkeley, 3, 900, 40.0);
+    synthesize_requests(&trace, WorkloadKind::MixedSlo, 7)
+}
+
+#[test]
+fn report_identical_across_thread_counts() {
+    let reg = Registry::builtin();
+    let reqs = bursty_workload();
+    let cfg = SimConfig::default();
+    for scheme in ["reactive", "mixed", "paragon"] {
+        let f: Factory = &move || scheduler::by_name(scheme).unwrap();
+        let base = simulate_sharded(f, &reg, &reqs, "berkeley", &cfg, 1);
+        assert_eq!(base.served_vm + base.served_lambda + base.dropped,
+                   base.requests, "{scheme}: conservation");
+        assert!(base.requests as usize == reqs.len());
+        for threads in [2, 4, 8] {
+            let rep = simulate_sharded(f, &reg, &reqs, "berkeley", &cfg, threads);
+            // Full structural equality — counters, costs, latency stats,
+            // per-model mix, realized type mix.
+            assert_eq!(base, rep, "{scheme}: T=1 vs T={threads} diverged");
+            // And the derived figures schemes are judged on.
+            assert_eq!(base.served_by_model, rep.served_by_model);
+            assert_eq!(base.attainment_pct(), rep.attainment_pct());
+            assert_eq!(base.violation_pct(), rep.violation_pct());
+            assert_eq!(base.total_cost(), rep.total_cost());
+        }
+    }
+}
+
+#[test]
+fn determinism_holds_under_hybrid_fidelity() {
+    let reg = Registry::builtin();
+    let reqs = bursty_workload();
+    let cfg = SimConfig {
+        fidelity: FidelityConfig::hybrid(),
+        ..SimConfig::default()
+    };
+    let f: Factory = &|| scheduler::by_name("reactive").unwrap();
+    let base = simulate_sharded(f, &reg, &reqs, "berkeley", &cfg, 1);
+    for threads in [2, 8] {
+        let rep = simulate_sharded(f, &reg, &reqs, "berkeley", &cfg, threads);
+        assert_eq!(base, rep, "hybrid T=1 vs T={threads} diverged");
+    }
+    assert_eq!(base.served_vm + base.served_lambda + base.dropped, base.requests);
+}
+
+#[test]
+fn fluid_discrete_handoffs_conserve_requests() {
+    // Quiet (lanes go fluid) → 25x burst (queues build, lanes flip
+    // discrete) → quiet again (lanes return to fluid): every handoff
+    // direction exercised in one run.
+    let mut rates = vec![3.0; 300];
+    rates.extend(vec![80.0; 300]);
+    rates.extend(vec![3.0; 300]);
+    let trace = Trace { name: "step-burst".into(), rates };
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+    let reg = Registry::builtin();
+    let cfg = SimConfig {
+        fidelity: FidelityConfig::hybrid(),
+        ..SimConfig::default()
+    };
+    let mut scheme = scheduler::by_name("reactive").unwrap();
+    let rep = simulate(scheme.as_mut(), &reg, &reqs, "step-burst", &cfg);
+    assert_eq!(
+        rep.served_vm + rep.served_lambda + rep.dropped,
+        rep.requests,
+        "a fluid/discrete handoff created or lost requests"
+    );
+    let total: u64 = rep.served_by_model.iter().sum();
+    assert_eq!(total, rep.served_vm + rep.served_lambda);
+    assert!(rep.fidelity_switches >= 2,
+            "expected fluid->discrete->fluid switching, saw {}",
+            rep.fidelity_switches);
+    assert!(rep.served_fluid > 0, "quiet phases must serve fluid");
+    assert!(rep.served_fluid < rep.served_vm,
+            "the burst must be served discretely");
+}
+
+#[test]
+fn hybrid_matches_discrete_within_one_percent_when_quiet() {
+    // 4 q/s across the pool is deep inside the governor's quiet regime —
+    // the fidelity claim is that aggregate integration is indistinguishable
+    // from request accuracy exactly here.
+    let trace = generators::constant(4.0, 1200);
+    let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, 7);
+    let reg = Registry::builtin();
+    let discrete_cfg = SimConfig::default();
+    let hybrid_cfg = SimConfig {
+        fidelity: FidelityConfig::hybrid(),
+        ..SimConfig::default()
+    };
+    let mut s1 = scheduler::by_name("reactive").unwrap();
+    let d = simulate(s1.as_mut(), &reg, &reqs, "flat", &discrete_cfg);
+    let mut s2 = scheduler::by_name("reactive").unwrap();
+    let h = simulate(s2.as_mut(), &reg, &reqs, "flat", &hybrid_cfg);
+
+    assert!(h.served_fluid > 0, "quiet run must actually go fluid");
+    assert_eq!(h.served_vm + h.served_lambda + h.dropped, h.requests);
+    let cost_d = d.total_cost();
+    let cost_h = h.total_cost();
+    assert!(cost_d > 0.0);
+    assert!(
+        (cost_h - cost_d).abs() <= 0.01 * cost_d,
+        "hybrid cost {cost_h} vs discrete {cost_d} drifted >1%"
+    );
+    assert!(d.floor_requests > 0, "tiered workload must demand floors");
+    assert!(
+        (h.attainment_pct() - d.attainment_pct()).abs() <= 1.0,
+        "attainment drifted >1pt: hybrid {} vs discrete {}",
+        h.attainment_pct(),
+        d.attainment_pct()
+    );
+}
