@@ -2,18 +2,24 @@
 //! discrete-event engine serial vs sharded (per-model streams on worker
 //! threads) vs hybrid fidelity (quiet streams fluid), at 100k / 1M and —
 //! with `--full` — 10M requests. Emits `results/BENCH_6.json` with
-//! req/s, peak RSS and build provenance.
+//! req/s, peak RSS and build provenance. The live-path configuration —
+//! 100k requests ingested through a dry-run `ServerFleet` (per-replica
+//! bin-packing, valve, 1 Hz advances) — lands in `results/BENCH_7.json`
+//! with its own floor.
 //!
-//! `--check` is the CI no-regression gate: it runs the 100k serial and
-//! sharded configurations and fails (exit 1) when measured req/s drops
-//! below 0.85x the floors recorded in the committed
-//! `results/BENCH_6.json`. Floors are deliberately conservative (well
-//! under a dev box's numbers) so the gate catches algorithmic
-//! regressions, not runner jitter; an intentional slowdown lands with
-//! the `perf-override` label on the PR (see `.github/workflows/ci.yml`).
+//! `--check` is the CI no-regression gate: it runs the 100k serial,
+//! sharded and live configurations and fails (exit 1) when measured
+//! req/s drops below 0.85x the floors recorded in the committed
+//! `results/BENCH_6.json` / `results/BENCH_7.json`. Floors are
+//! deliberately conservative (well under a dev box's numbers) so the
+//! gate catches algorithmic regressions, not runner jitter; an
+//! intentional slowdown lands with the `perf-override` label on the PR
+//! (see `.github/workflows/ci.yml`).
 
+use paragon::control::{palette_caps, FleetActuator, LiveReport, ServerFleet,
+                       ServerFleetConfig};
 use paragon::models::Registry;
-use paragon::scheduler::{self, Scheme};
+use paragon::scheduler::{self, Action, Scheme};
 use paragon::sim::{available_threads, simulate, simulate_sharded, FidelityConfig,
                    SimConfig};
 use paragon::trace::{generators, synthesize_requests, Request, WorkloadKind};
@@ -21,6 +27,10 @@ use paragon::util::bench::{bench_meta, bench_throughput, peak_rss_mb};
 use paragon::util::json::Json;
 
 const SCHEME: &str = "reactive";
+/// The live-path bench serves one model (resnet18) on one type: the point
+/// is the `ServerFleet` hot path (ingest → per-replica bin-packing →
+/// completion heap → queue drain), not scheme decisions.
+const LIVE_MODEL: usize = 3;
 
 fn workload(rate: f64, secs: usize) -> Vec<Request> {
     let trace = generators::constant(rate, secs);
@@ -31,9 +41,46 @@ fn hybrid_cfg() -> SimConfig {
     SimConfig { fidelity: FidelityConfig::hybrid(), ..SimConfig::default() }
 }
 
+/// Drive 100k-scale ingest through the dry-run live fleet: a warm,
+/// load-sized `ServerFleet` of one type, per-request `ingest` plus 1 Hz
+/// `advance` ticks — the same hot path `drive_fleet` and attached serving
+/// exercise, minus the scheme (capacity is provisioned up front).
+fn run_live(reg: &Registry, reqs: &[Request], secs: usize) -> LiveReport {
+    let vm = paragon::cloud::vm_type("m4.large").unwrap();
+    let palette = vec![vm];
+    let caps = palette_caps(reg, &palette);
+    let cap = &caps[LIVE_MODEL][0];
+    let rate = reqs.len() as f64 / secs as f64;
+    // 25% slot headroom over the offered load so queues stay transient.
+    let vms = (rate * cap.service_s / cap.slots_per_vm as f64 * 1.25).ceil()
+        as u32 + 2;
+    let mut fleet = ServerFleet::new(reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 10_000,
+        ..ServerFleetConfig::default()
+    });
+    fleet.apply(&Action::Spawn { model: LIVE_MODEL, vm_type: vm, count: vms as usize },
+                0.0);
+    // Warm start: land the boots before the first arrival.
+    let warm = vm.boot_mean_s + 5.0;
+    fleet.advance(warm);
+    let mut next_tick = warm + 1.0;
+    for r in reqs {
+        let now = warm + r.arrival_s;
+        while now >= next_tick {
+            fleet.advance(next_tick);
+            next_tick += 1.0;
+        }
+        fleet.ingest(LIVE_MODEL, r.slo_ms, now);
+    }
+    let end = warm + secs as f64 + 300.0;
+    fleet.advance(end); // drain the tail (conservation asserted in report)
+    fleet.report(end)
+}
+
 /// One timed configuration; returns (result json, req/s).
-fn run(name: &str, reqs: &[Request], iters: usize,
-       f: impl FnMut() -> paragon::sim::SimReport) -> (Json, f64) {
+fn run<T>(name: &str, reqs: &[Request], iters: usize,
+          f: impl FnMut() -> T) -> (Json, f64) {
     let r = bench_throughput(name, 0, iters, reqs.len() as f64, f);
     let rps = reqs.len() as f64 / (r.mean_ns / 1e9);
     let mut j = r.to_json();
@@ -48,38 +95,46 @@ fn run(name: &str, reqs: &[Request], iters: usize,
 }
 
 fn check_gate(measured: &[(String, f64)]) -> ! {
-    let text = match std::fs::read_to_string("results/BENCH_6.json") {
-        Ok(t) => t,
-        Err(e) => {
-            // First run on a branch with no committed baseline: nothing
-            // to regress against.
-            println!("perf gate: no committed results/BENCH_6.json ({e}); passing");
-            std::process::exit(0);
-        }
-    };
-    let j = Json::parse(&text).expect("parse committed BENCH_6.json");
-    let ci = j.get("ci");
+    let files: [(&str, &[(&str, &str)]); 2] = [
+        ("results/BENCH_6.json",
+         &[("floor_rps_serial_100k", "engine[serial-100k]"),
+           ("floor_rps_sharded_100k", "engine[sharded-100k]")]),
+        ("results/BENCH_7.json",
+         &[("floor_rps_live_100k", "engine[live-100k]")]),
+    ];
     let mut failed = false;
-    for (key, name) in [("floor_rps_serial_100k", "engine[serial-100k]"),
-                        ("floor_rps_sharded_100k", "engine[sharded-100k]")] {
-        let Some(floor) = ci.get(key).as_f64() else {
-            println!("perf gate: committed file lacks ci.{key}; skipping");
-            continue;
+    for (path, checks) in files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                // First run on a branch with no committed baseline:
+                // nothing to regress against.
+                println!("perf gate: no committed {path} ({e}); passing");
+                continue;
+            }
         };
-        let Some(&(_, rps)) = measured.iter().find(|(n, _)| n == name) else {
-            continue;
-        };
-        let bar = floor * 0.85;
-        if rps < bar {
-            eprintln!("perf gate FAIL: {name} at {rps:.0} req/s, \
-                       below 0.85x committed floor {floor:.0} (bar {bar:.0})");
-            failed = true;
-        } else {
-            println!("perf gate ok: {name} at {rps:.0} req/s (bar {bar:.0})");
+        let j = Json::parse(&text).unwrap_or_else(|e| panic!("parse {path}: {e:?}"));
+        let ci = j.get("ci");
+        for &(key, name) in checks {
+            let Some(floor) = ci.get(key).as_f64() else {
+                println!("perf gate: {path} lacks ci.{key}; skipping");
+                continue;
+            };
+            let Some(&(_, rps)) = measured.iter().find(|(n, _)| n == name) else {
+                continue;
+            };
+            let bar = floor * 0.85;
+            if rps < bar {
+                eprintln!("perf gate FAIL: {name} at {rps:.0} req/s, \
+                           below 0.85x committed floor {floor:.0} (bar {bar:.0})");
+                failed = true;
+            } else {
+                println!("perf gate ok: {name} at {rps:.0} req/s (bar {bar:.0})");
+            }
         }
     }
     if failed {
-        eprintln!("perf gate: regression >15% vs committed BENCH_6.json. \
+        eprintln!("perf gate: regression >15% vs committed floors. \
                    If intentional, add the `perf-override` label to the PR.");
         std::process::exit(1);
     }
@@ -106,6 +161,7 @@ fn main() {
     }
 
     let mut results: Vec<Json> = Vec::new();
+    let mut live_results: Vec<Json> = Vec::new();
     let mut measured: Vec<(String, f64)> = Vec::new();
     for (label, rate, secs, iters) in scales {
         println!("== {label} requests ({rate} q/s x {secs}s, {SCHEME}) ==");
@@ -126,6 +182,18 @@ fn main() {
         });
         results.push(j);
         measured.push((name, rps));
+
+        if label == "100k" {
+            // The live path (dry-run ServerFleet) only at the 100k scale:
+            // per-replica bin-packing is inherently heavier than the
+            // engine's typed sub-fleet routing, and the floor guards the
+            // hot path, not a 10M soak.
+            let name = format!("engine[live-{label}]");
+            let (j, rps) =
+                run(&name, &reqs, iters, || run_live(&reg, &reqs, secs));
+            live_results.push(j);
+            measured.push((name, rps));
+        }
 
         if !check {
             let hybrid = hybrid_cfg();
@@ -181,4 +249,24 @@ fn main() {
     std::fs::write("results/BENCH_6.json", out.to_string())
         .expect("write results/BENCH_6.json");
     println!("[saved results/BENCH_6.json]");
+
+    // The live-path trajectory is committed separately so the engine and
+    // fleet floors can move independently.
+    let live_out = Json::obj(vec![
+        ("bench", "BENCH_7".into()),
+        ("meta", bench_meta()),
+        ("model", LIVE_MODEL.into()),
+        ("vm_type", "m4.large".into()),
+        ("results", Json::Arr(live_results)),
+        ("ci", Json::obj(vec![
+            ("note",
+             "req/s floors; CI fails below 0.85x (override: perf-override label)"
+                 .into()),
+            ("floor_rps_live_100k",
+             (rps_of("engine[live-100k]") * 0.4).into()),
+        ])),
+    ]);
+    std::fs::write("results/BENCH_7.json", live_out.to_string())
+        .expect("write results/BENCH_7.json");
+    println!("[saved results/BENCH_7.json]");
 }

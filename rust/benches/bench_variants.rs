@@ -21,6 +21,7 @@ fn leak_type(i: usize) -> &'static VmType {
         speed: 1.0 + 0.05 * (i % 8) as f64,
         boot_mean_s: 60.0 + (i % 5) as f64 * 10.0,
         boot_jitter_s: 0.0,
+        spot: None,
     }))
 }
 

@@ -141,7 +141,55 @@ impl Cluster {
         }
     }
 
+    /// Select reclaim victims for a preemption event. The fraction applies
+    /// *per `(model, type)` sub-fleet* (`ceil(frac × alive)` in each), with
+    /// Booting victims first then Running by ascending busy — the same
+    /// order as [`Self::scale_down_where`]. Per-sub-fleet application keeps
+    /// reclaims shard-invariant: a sharded run (per-model clusters) selects
+    /// exactly the victims the serial run does. Does not mutate: the caller
+    /// cancels in-flight work, then drains each victim.
+    pub fn reclaim_victims(&self, event: &super::spot::PreemptionEvent) -> Vec<u64> {
+        let mut by_model: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (i, v) in self.vms.iter().enumerate() {
+            if v.vm_type.name == event.type_name
+                && matches!(v.state, VmState::Running | VmState::Booting)
+            {
+                by_model.entry(v.model).or_default().push(i);
+            }
+        }
+        let mut out = Vec::new();
+        for (_, mut idx) in by_model {
+            let n = event.victims(idx.len());
+            idx.sort_by_key(|&i| {
+                let v = &self.vms[i];
+                (v.state == VmState::Running, v.busy)
+            });
+            out.extend(idx.into_iter().take(n).map(|i| self.vms[i].id));
+        }
+        out
+    }
+
     // ---- aggregates -------------------------------------------------------
+
+    /// Alive VMs on spot types, plus the alive-weighted effective spot
+    /// price multiplier vs on-demand at `now` (1.0 with no spot capacity).
+    pub fn spot_usage(&self, now: f64) -> (usize, f64) {
+        let mut n = 0usize;
+        let mut mult = 0.0;
+        for v in &self.vms {
+            if matches!(v.state, VmState::Running | VmState::Booting) {
+                if let Some(s) = v.vm_type.spot {
+                    n += 1;
+                    mult += s.discount * v.vm_type.price_mult(now);
+                }
+            }
+        }
+        if n == 0 {
+            (0, 1.0)
+        } else {
+            (n, mult / n as f64)
+        }
+    }
 
     pub fn count(&self, model: usize, state: VmState) -> usize {
         self.vms
@@ -347,6 +395,47 @@ mod tests {
         assert_eq!(c.alive_typed(0, c5), 1);
         assert_eq!(c.spawned_by_type.get("m4.large"), Some(&1));
         assert_eq!(c.spawned_by_type.get("c5.xlarge"), Some(&1));
+    }
+
+    #[test]
+    fn reclaim_victims_mirror_scale_down_order() {
+        use crate::cloud::pricing::{spot_twin, vm_type, SpotSpec};
+        use crate::cloud::spot::PreemptionEvent;
+        let spot = spot_twin(vm_type("c5.large").unwrap(), SpotSpec::market());
+        let m4 = vm_type("m4.large").unwrap();
+        let mut c = Cluster::new(9);
+        c.spawn(spot, 0, 2, 0.0); // id 0
+        c.spawn(spot, 0, 2, 0.0); // id 1
+        c.spawn(m4, 0, 2, 0.0); // id 2, on-demand — never a victim
+        c.tick(500.0, 0.0, 0.0);
+        let busy = c.route_typed(0, spot).unwrap();
+        c.spawn(spot, 0, 2, 500.0); // id 3, booting
+        let ev = PreemptionEvent { t: 501.0, type_name: spot.name.to_string(), frac: 0.5 };
+        // ceil(0.5 × 3 alive spot) = 2 victims: the booting VM, then the idle one.
+        let victims = c.reclaim_victims(&ev);
+        assert_eq!(victims.len(), 2);
+        assert!(victims.contains(&3), "booting VM reclaimed first");
+        assert!(!victims.contains(&busy), "busiest VM spared at frac 0.5");
+        assert!(!victims.contains(&2), "on-demand capacity never reclaimed");
+        let storm = PreemptionEvent { t: 501.0, type_name: spot.name.to_string(), frac: 1.0 };
+        assert_eq!(c.reclaim_victims(&storm).len(), 3, "frac 1.0 takes the sub-fleet");
+        // Spot usage aggregates: 3 alive spot VMs at the discounted multiplier.
+        let (n, mult) = c.spot_usage(501.0);
+        assert_eq!(n, 3);
+        assert!(mult < 1.0 && mult > 0.2, "discounted multiplier, got {mult}");
+    }
+
+    #[test]
+    fn spot_vm_bills_discounted() {
+        use crate::cloud::pricing::{spot_twin, vm_type, SpotSpec};
+        let base = vm_type("m4.large").unwrap();
+        let flat = SpotSpec { price_jitter: 0.0, ..SpotSpec::market() };
+        let spot = spot_twin(base, flat);
+        let mut c = Cluster::new(10);
+        c.spawn(spot, 0, 2, 0.0);
+        c.tick(3600.0, 0.0, 0.0);
+        let cost = c.total_cost(3600.0);
+        assert!((cost - 0.10 * 0.35).abs() < 1e-9, "one spot m4.large-hour: {cost}");
     }
 
     #[test]

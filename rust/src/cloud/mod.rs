@@ -8,9 +8,13 @@
 pub mod cluster;
 pub mod pricing;
 pub mod serverless;
+pub mod spot;
 pub mod vm;
 
 pub use cluster::Cluster;
-pub use pricing::{default_vm_type, vm_type, LambdaPricing, VmPrice, VmType, VM_TYPES};
+pub use pricing::{
+    default_vm_type, spot_twin, vm_type, LambdaPricing, SpotSpec, VmPrice, VmType, VM_TYPES,
+};
 pub use serverless::{LambdaFn, WarmPool};
+pub use spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 pub use vm::{Vm, VmState};

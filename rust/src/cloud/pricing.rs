@@ -55,6 +55,53 @@ impl LambdaPricing {
     }
 }
 
+/// Spot-market semantics for a transient instance type (the Cocktail
+/// scenario): discounted, price-jittered capacity that the provider can
+/// reclaim with a short notice window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotSpec {
+    /// Spot price as a fraction of the on-demand rate (0.35 ⇒ 65% cheaper).
+    pub discount: f64,
+    /// Half-width of the deterministic market price trace around
+    /// `discount` (fraction of it). 0 ⇒ flat spot price.
+    pub price_jitter: f64,
+    /// Mean reclaim (interruption) events per hour for this type.
+    /// 0 ⇒ never preempted (an on-demand twin, used by conformance tests).
+    pub events_per_hour: f64,
+    /// Fraction of the alive sub-fleet reclaimed per event (ceil'd, ≥1).
+    pub reclaim_frac: f64,
+    /// Interruption notice window, seconds (AWS gives 120 s).
+    pub notice_s: f64,
+}
+
+impl SpotSpec {
+    /// A realistic 2020 spot market: ~65% discount, mild price noise,
+    /// roughly one interruption event per hour taking half the sub-fleet,
+    /// with AWS's two-minute notice.
+    pub const fn market() -> Self {
+        SpotSpec {
+            discount: 0.35,
+            price_jitter: 0.15,
+            events_per_hour: 1.0,
+            reclaim_frac: 0.5,
+            notice_s: 120.0,
+        }
+    }
+
+    /// A spot twin that is economically and behaviourally identical to
+    /// on-demand capacity (discount 1, flat price, zero reclaims) — the
+    /// bit-for-bit anchor for the preemption conformance property.
+    pub const fn inert() -> Self {
+        SpotSpec {
+            discount: 1.0,
+            price_jitter: 0.0,
+            events_per_hour: 0.0,
+            reclaim_frac: 0.0,
+            notice_s: 120.0,
+        }
+    }
+}
+
 /// An EC2 instance type. Slots per model are derived from `vcpus`/`mem_gb`
 /// by offline profiling (§IV-A: "by offline profiling, we estimate the
 /// number of model instances each VM can execute in parallel"); boot
@@ -72,6 +119,114 @@ pub struct VmType {
     pub boot_mean_s: f64,
     /// Uniform jitter half-width around the boot mean, seconds.
     pub boot_jitter_s: f64,
+    /// `Some` ⇒ this is transient (spot) capacity with the given market
+    /// semantics; `None` ⇒ regular on-demand.
+    pub spot: Option<SpotSpec>,
+}
+
+/// splitmix64 finalizer — a pure bit mixer, deliberately *not* the sim's
+/// `Pcg` so the price trace never perturbs any simulation RNG stream.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58476d1ce4e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+fn hash_str(s: &str) -> u64 {
+    // FNV-1a, then mixed.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    mix64(h)
+}
+
+/// Spot market price windows are piecewise-constant over this span.
+pub const SPOT_PRICE_WINDOW_S: f64 = 600.0;
+
+impl VmType {
+    pub fn is_spot(&self) -> bool {
+        self.spot.is_some()
+    }
+
+    /// Deterministic market multiplier at time `t` (1.0 for on-demand and
+    /// for jitter-free spot). Piecewise-constant over 600 s windows, a pure
+    /// hash of `(type name, window index)` — no RNG state is consumed, so
+    /// adding a price trace never shifts simulation draws.
+    pub fn price_mult(&self, t: f64) -> f64 {
+        match self.spot {
+            Some(s) if s.price_jitter > 0.0 => {
+                let window = (t.max(0.0) / SPOT_PRICE_WINDOW_S) as u64;
+                let h = mix64(hash_str(self.name) ^ window.wrapping_mul(0x9e3779b97f4a7c15));
+                let u = (h >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+                1.0 + s.price_jitter * (2.0 * u - 1.0)
+            }
+            _ => 1.0,
+        }
+    }
+
+    /// Planning-time effective rate, USD/s: the spot discount applied to
+    /// the book rate (market jitter averages out — schemes and the RL
+    /// observation layer plan on the mean). On-demand types return the
+    /// book rate untouched, so non-spot palettes see the exact pre-spot
+    /// arithmetic.
+    pub fn effective_per_second(&self) -> f64 {
+        match self.spot {
+            Some(s) => self.price.per_second() * s.discount,
+            None => self.price.per_second(),
+        }
+    }
+
+    /// Effective hourly rate at time `t` (discount × market multiplier for
+    /// spot; the on-demand book rate otherwise).
+    pub fn effective_hourly(&self, t: f64) -> f64 {
+        match self.spot {
+            Some(s) => self.price.hourly_usd * s.discount * self.price_mult(t),
+            None => self.price.hourly_usd,
+        }
+    }
+
+    /// Billed cost of a VM of this type alive over `[t0, t1]`, honouring the
+    /// 60 s minimum. On-demand types bill exactly `price.cost_for(t1-t0)`;
+    /// jitter-free spot bills that times the discount (an exact f64 identity
+    /// at discount 1.0, which the conformance property relies on); jittered
+    /// spot integrates the piecewise-constant market trace over the billed
+    /// span.
+    pub fn cost_between(&self, t0: f64, t1: f64) -> f64 {
+        let dur = (t1 - t0).max(0.0);
+        let spec = match self.spot {
+            None => return self.price.cost_for(dur),
+            Some(s) => s,
+        };
+        if spec.price_jitter <= 0.0 {
+            return self.price.cost_for(dur) * spec.discount;
+        }
+        let billed = dur.max(60.0);
+        let (start, end) = (t0, t0 + billed);
+        let per_s = self.price.per_second() * spec.discount;
+        let mut cost = 0.0;
+        let mut t = start;
+        while t < end {
+            let next = ((t / SPOT_PRICE_WINDOW_S).floor() + 1.0) * SPOT_PRICE_WINDOW_S;
+            let seg_end = next.min(end);
+            cost += per_s * self.price_mult(t) * (seg_end - t);
+            t = seg_end;
+        }
+        cost
+    }
+}
+
+/// Leak a spot twin of `base`: identical compute/boot characteristics under
+/// the name `"<base>:spot"`, with `spec` market semantics. Leaked so the
+/// `&'static` palette contract holds; palettes are built once per run.
+pub fn spot_twin(base: &VmType, spec: SpotSpec) -> &'static VmType {
+    let mut t = base.clone();
+    t.name = Box::leak(format!("{}:spot", t.name).into_boxed_str());
+    t.spot = Some(spec);
+    Box::leak(Box::new(t))
 }
 
 /// The instance types used in the paper's evaluation (§IV-A: "all the c5
@@ -79,19 +234,19 @@ pub struct VmType {
 /// 2020. Linearity in size is visible within each family.
 pub const VM_TYPES: &[VmType] = &[
     VmType { name: "m4.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.10 },
-             speed: 1.0,  boot_mean_s: 100.0, boot_jitter_s: 20.0 },
+             speed: 1.0,  boot_mean_s: 100.0, boot_jitter_s: 20.0, spot: None },
     VmType { name: "m5.large",   vcpus: 2, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.096 },
-             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0, spot: None },
     VmType { name: "m5.xlarge",  vcpus: 4, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.192 },
-             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0, spot: None },
     VmType { name: "m5.2xlarge", vcpus: 8, mem_gb: 32.0, price: VmPrice { hourly_usd: 0.384 },
-             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0 },
+             speed: 1.1,  boot_mean_s: 70.0,  boot_jitter_s: 15.0, spot: None },
     VmType { name: "c5.large",   vcpus: 2, mem_gb: 4.0,  price: VmPrice { hourly_usd: 0.085 },
-             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0, spot: None },
     VmType { name: "c5.xlarge",  vcpus: 4, mem_gb: 8.0,  price: VmPrice { hourly_usd: 0.17 },
-             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0, spot: None },
     VmType { name: "c5.2xlarge", vcpus: 8, mem_gb: 16.0, price: VmPrice { hourly_usd: 0.34 },
-             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0 },
+             speed: 1.25, boot_mean_s: 60.0,  boot_jitter_s: 15.0, spot: None },
 ];
 
 pub fn vm_type(name: &str) -> Option<&'static VmType> {
@@ -100,15 +255,21 @@ pub fn vm_type(name: &str) -> Option<&'static VmType> {
 
 /// Parse a comma-separated list of type names (`--vm-types m4.large,c5.xlarge`,
 /// config `"vm_types"`). The first entry is the palette's *primary* type:
-/// homogeneous schemes pin it, and warm starts provision on it.
+/// homogeneous schemes pin it, and warm starts provision on it. A `:spot`
+/// suffix (`c5.large:spot`) leaks a transient twin of the base type with
+/// `SpotSpec::market()` semantics.
 pub fn parse_vm_type_list(spec: &str) -> anyhow::Result<Vec<&'static VmType>> {
     let mut out = Vec::new();
     for name in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-        let t = vm_type(name).ok_or_else(|| {
+        let (base_name, is_spot) = match name.strip_suffix(":spot") {
+            Some(base) => (base, true),
+            None => (name, false),
+        };
+        let t = vm_type(base_name).ok_or_else(|| {
             let known: Vec<&str> = VM_TYPES.iter().map(|t| t.name).collect();
-            anyhow::anyhow!("unknown vm type {name:?} (one of {known:?})")
+            anyhow::anyhow!("unknown vm type {base_name:?} (one of {known:?}; append :spot for a transient twin)")
         })?;
-        out.push(t);
+        out.push(if is_spot { spot_twin(t, SpotSpec::market()) } else { t });
     }
     if out.is_empty() {
         anyhow::bail!("empty vm type list {spec:?}");
@@ -181,6 +342,65 @@ mod tests {
         );
         assert!(parse_vm_type_list("t2.nano").is_err());
         assert!(parse_vm_type_list("  ,").is_err());
+    }
+
+    #[test]
+    fn spot_twin_discounts_and_parses() {
+        let base = vm_type("c5.large").unwrap();
+        let spot = spot_twin(base, SpotSpec::market());
+        assert_eq!(spot.name, "c5.large:spot");
+        assert!(spot.is_spot() && !base.is_spot());
+        assert_eq!(spot.speed, base.speed);
+        // Jittered market rate stays inside the jitter band around the
+        // discounted rate, and varies across windows.
+        let s = SpotSpec::market();
+        let lo = base.price.hourly_usd * s.discount * (1.0 - s.price_jitter);
+        let hi = base.price.hourly_usd * s.discount * (1.0 + s.price_jitter);
+        let mut distinct = std::collections::BTreeSet::new();
+        for w in 0..8 {
+            let r = spot.effective_hourly(w as f64 * SPOT_PRICE_WINDOW_S);
+            assert!(r >= lo - 1e-12 && r <= hi + 1e-12, "rate {r} outside [{lo},{hi}]");
+            distinct.insert(format!("{r:.12}"));
+        }
+        assert!(distinct.len() > 1, "price trace should move across windows");
+
+        let parsed = parse_vm_type_list("m4.large,c5.large:spot").unwrap();
+        assert_eq!(parsed[1].name, "c5.large:spot");
+        assert!(parsed[1].is_spot());
+        assert!(parse_vm_type_list("t2.nano:spot").is_err());
+    }
+
+    #[test]
+    fn inert_spot_twin_bills_exactly_on_demand() {
+        let base = vm_type("m4.large").unwrap();
+        let inert = spot_twin(base, SpotSpec::inert());
+        for (t0, t1) in [(0.0, 10.0), (5.0, 3700.0), (1234.5, 9876.5)] {
+            // Exact f64 identity, not approximate — satellite 1 relies on it.
+            assert_eq!(inert.cost_between(t0, t1), base.cost_between(t0, t1));
+            assert_eq!(base.cost_between(t0, t1), base.price.cost_for(t1 - t0));
+        }
+    }
+
+    #[test]
+    fn jittered_spot_billing_integrates_trace_with_minimum() {
+        let base = vm_type("c5.large").unwrap();
+        let spot = spot_twin(base, SpotSpec::market());
+        // 10 s alive still bills a 60 s minimum at spot rates.
+        let short = spot.cost_between(0.0, 10.0);
+        let min = spot.cost_between(0.0, 60.0);
+        assert!((short - min).abs() < 1e-12);
+        // Integration across windows ≈ sum of per-window segments, and is
+        // strictly cheaper than on-demand at a 0.35 discount + 0.15 jitter.
+        let spand = spot.cost_between(0.0, 3.0 * SPOT_PRICE_WINDOW_S);
+        let ond = base.cost_between(0.0, 3.0 * SPOT_PRICE_WINDOW_S);
+        assert!(spand < ond * 0.5, "spot {spand} should undercut on-demand {ond}");
+        let manual: f64 = (0..3)
+            .map(|w| {
+                let t = w as f64 * SPOT_PRICE_WINDOW_S;
+                spot.price.per_second() * 0.35 * spot.price_mult(t) * SPOT_PRICE_WINDOW_S
+            })
+            .sum();
+        assert!((spand - manual).abs() < 1e-9);
     }
 
     #[test]

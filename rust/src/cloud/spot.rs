@@ -1,0 +1,238 @@
+//! Spot-market preemption: seeded interruption events against transient
+//! palette entries, shared by all three fleet backends.
+//!
+//! A [`PreemptionProcess`] is an explicit, time-sorted script of
+//! [`PreemptionEvent`]s — either hand-written (conformance tests, trace
+//! files) or synthesized from each spot type's `events_per_hour` with a
+//! dedicated `Pcg` stream keyed off the type *name*, so adding an
+//! interruption process never perturbs any other simulation RNG draw and
+//! zero-rate spot twins consume **zero** draws (the bit-for-bit anchor for
+//! the preemption conformance property). Backends consume events through a
+//! cursor (`drain_due`), so engine-driven ticks and `advance()` can never
+//! double-fire the same reclaim.
+
+use super::pricing::VmType;
+use crate::util::rng::Pcg;
+
+/// One provider interruption: at time `t`, reclaim `frac` of the alive
+/// sub-fleet of the named (spot) type. The reclaim *notice* window comes
+/// from the type's [`super::pricing::SpotSpec::notice_s`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PreemptionEvent {
+    pub t: f64,
+    pub type_name: String,
+    /// Fraction of the alive sub-fleet reclaimed (ceil'd to ≥1 VM when the
+    /// sub-fleet is non-empty).
+    pub frac: f64,
+}
+
+impl PreemptionEvent {
+    /// VMs to reclaim out of `alive` of this type: `ceil(frac × alive)`,
+    /// at least one whenever any are alive and `frac > 0`.
+    pub fn victims(&self, alive: usize) -> usize {
+        if alive == 0 || self.frac <= 0.0 {
+            return 0;
+        }
+        ((self.frac * alive as f64).ceil() as usize).clamp(1, alive)
+    }
+}
+
+/// A cursor over a time-sorted interruption script. `Clone` hands every
+/// backend its own independent cursor over the *same* script — the
+/// conformance suite's definition of "same preemption scenario".
+#[derive(Debug, Clone, Default)]
+pub struct PreemptionProcess {
+    events: Vec<PreemptionEvent>,
+    cursor: usize,
+}
+
+fn hash_name(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl PreemptionProcess {
+    /// Build from an explicit event list (sorted by time; stable for ties).
+    pub fn from_events(mut events: Vec<PreemptionEvent>) -> Self {
+        events.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        PreemptionProcess { events, cursor: 0 }
+    }
+
+    /// Synthesize a script for `horizon_s` from the palette's spot specs:
+    /// exponential inter-arrivals at `events_per_hour` per spot type, each
+    /// type on `Pcg::new(seed ^ hash(name), …)`. Types with rate 0 (and all
+    /// on-demand types) contribute nothing and consume no draws.
+    pub fn synthesize(palette: &[&'static VmType], horizon_s: f64, seed: u64) -> Self {
+        let mut events = Vec::new();
+        for t in palette {
+            let spec = match t.spot {
+                Some(s) if s.events_per_hour > 0.0 => s,
+                _ => continue,
+            };
+            let rate_per_s = spec.events_per_hour / 3600.0;
+            let mut rng = Pcg::new(seed ^ hash_name(t.name), 0x5b07_7e0e);
+            let mut at = rng.exp(rate_per_s);
+            while at < horizon_s {
+                events.push(PreemptionEvent {
+                    t: at,
+                    type_name: t.name.to_string(),
+                    frac: spec.reclaim_frac,
+                });
+                at += rng.exp(rate_per_s);
+            }
+        }
+        Self::from_events(events)
+    }
+
+    /// Parse a trace file: one `t,type_name,frac` line per event (blank
+    /// lines and `#` comments ignored) — the `--preemption-trace` format.
+    pub fn parse_trace(text: &str) -> anyhow::Result<Self> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split(',').map(str::trim).collect();
+            if parts.len() != 3 {
+                anyhow::bail!("preemption trace line {}: want `t,type,frac`, got {line:?}", i + 1);
+            }
+            let t: f64 = parts[0]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("preemption trace line {}: bad time: {e}", i + 1))?;
+            let frac: f64 = parts[2]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("preemption trace line {}: bad frac: {e}", i + 1))?;
+            if !(0.0..=1.0).contains(&frac) || t < 0.0 {
+                anyhow::bail!("preemption trace line {}: t must be ≥0, frac in [0,1]", i + 1);
+            }
+            events.push(PreemptionEvent { t, type_name: parts[1].to_string(), frac });
+        }
+        Ok(Self::from_events(events))
+    }
+
+    /// The full script, cursor-independent — for callers that install the
+    /// events into a `SimConfig` rather than consuming the cursor.
+    pub fn into_events(self) -> Vec<PreemptionEvent> {
+        self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Time of the next unconsumed event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.events.get(self.cursor).map(|e| e.t)
+    }
+
+    /// Consume and return every event with `t <= now`. The cursor only
+    /// moves forward: a reclaim fires exactly once no matter which code
+    /// path (engine tick or `advance`) drains it first.
+    pub fn drain_due(&mut self, now: f64) -> &[PreemptionEvent] {
+        let start = self.cursor;
+        while self.cursor < self.events.len() && self.events[self.cursor].t <= now {
+            self.cursor += 1;
+        }
+        &self.events[start..self.cursor]
+    }
+
+    /// Rewind the cursor (fresh run over the same script).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// Spot-market observability carried on `FleetView`: what a scheme or RL
+/// policy needs to hedge — how much capacity sits on transient types, what
+/// the market charges right now, and how hard the provider is reclaiming.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpotUsage {
+    /// Alive (booting + running) VMs on spot types.
+    pub spot_vms: usize,
+    /// Current effective spot price multiplier vs on-demand (alive-VM
+    /// weighted mean of `discount × price_mult(now)`; 1.0 with no spot
+    /// capacity).
+    pub price_mult: f64,
+    /// Reclaim events that fired since the previous view refresh.
+    pub reclaims_tick: usize,
+    /// Total reclaim events fired so far this run.
+    pub reclaims_total: usize,
+}
+
+impl Default for SpotUsage {
+    fn default() -> Self {
+        SpotUsage { spot_vms: 0, price_mult: 1.0, reclaims_tick: 0, reclaims_total: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::{spot_twin, vm_type, SpotSpec};
+
+    #[test]
+    fn victims_ceil_and_clamp() {
+        let e = PreemptionEvent { t: 0.0, type_name: "x".into(), frac: 0.5 };
+        assert_eq!(e.victims(0), 0);
+        assert_eq!(e.victims(1), 1);
+        assert_eq!(e.victims(3), 2);
+        assert_eq!(e.victims(4), 2);
+        let all = PreemptionEvent { t: 0.0, type_name: "x".into(), frac: 1.0 };
+        assert_eq!(all.victims(5), 5);
+        let none = PreemptionEvent { t: 0.0, type_name: "x".into(), frac: 0.0 };
+        assert_eq!(none.victims(5), 0);
+    }
+
+    #[test]
+    fn synthesize_is_seeded_and_rate_scaled() {
+        let spot = spot_twin(vm_type("c5.large").unwrap(), SpotSpec::market());
+        let a = PreemptionProcess::synthesize(&[spot], 36_000.0, 7);
+        let b = PreemptionProcess::synthesize(&[spot], 36_000.0, 7);
+        assert_eq!(a.events, b.events, "same seed ⇒ same script");
+        // ~1/hour over 10h ⇒ a handful of events, not zero, not hundreds.
+        assert!(a.len() >= 2 && a.len() <= 40, "got {} events", a.len());
+        let c = PreemptionProcess::synthesize(&[spot], 36_000.0, 8);
+        assert_ne!(a.events, c.events, "different seed ⇒ different script");
+        // Zero-rate spot and on-demand palettes synthesize nothing.
+        let inert = spot_twin(vm_type("c5.large").unwrap(), SpotSpec::inert());
+        assert!(PreemptionProcess::synthesize(&[inert], 36_000.0, 7).is_empty());
+        assert!(PreemptionProcess::synthesize(&[vm_type("m4.large").unwrap()], 36_000.0, 7)
+            .is_empty());
+    }
+
+    #[test]
+    fn drain_due_is_single_shot() {
+        let mut p = PreemptionProcess::from_events(vec![
+            PreemptionEvent { t: 30.0, type_name: "a".into(), frac: 1.0 },
+            PreemptionEvent { t: 10.0, type_name: "b".into(), frac: 0.5 },
+            PreemptionEvent { t: 20.0, type_name: "c".into(), frac: 0.5 },
+        ]);
+        assert_eq!(p.peek_time(), Some(10.0));
+        let first: Vec<String> = p.drain_due(20.0).iter().map(|e| e.type_name.clone()).collect();
+        assert_eq!(first, vec!["b", "c"], "sorted and drained through t=20");
+        assert!(p.drain_due(20.0).is_empty(), "cursor never re-delivers");
+        assert_eq!(p.drain_due(100.0).len(), 1);
+        assert!(p.drain_due(1e9).is_empty());
+        p.reset();
+        assert_eq!(p.peek_time(), Some(10.0));
+    }
+
+    #[test]
+    fn trace_round_trip() {
+        let text = "# storm\n600, c5.large:spot, 0.5\n1200,c5.large:spot,1.0\n";
+        let p = PreemptionProcess::parse_trace(text).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.peek_time(), Some(600.0));
+        assert!(PreemptionProcess::parse_trace("bad line").is_err());
+        assert!(PreemptionProcess::parse_trace("10,x,1.5").is_err());
+    }
+}

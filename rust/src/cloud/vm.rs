@@ -127,10 +127,12 @@ impl Vm {
         }
     }
 
-    /// Billed cost if the VM dies (or is observed) at `now`.
+    /// Billed cost if the VM dies (or is observed) at `now`. Spot types
+    /// bill at the discounted market trace ([`VmType::cost_between`]);
+    /// on-demand types bill the flat book rate exactly as before.
     pub fn cost_until(&self, now: f64) -> f64 {
         let end = self.terminated_at.unwrap_or(now);
-        self.vm_type.price.cost_for((end - self.launched_at).max(0.0))
+        self.vm_type.cost_between(self.launched_at, end)
     }
 }
 

@@ -24,9 +24,15 @@
 //! ```
 //!
 //! `vm_type` configures a homogeneous run; `vm_types` (a list, first entry
-//! primary) opens a heterogeneous palette and overrides `vm_type`.
+//! primary) opens a heterogeneous palette and overrides `vm_type`. A
+//! `:spot` suffix on a `vm_types` entry (`"c5.large:spot"`) opens a
+//! transient twin, or set `"spot": true` to twin the whole palette;
+//! `"spot_rate"` overrides the synthetic interruption rate (events/hour),
+//! `"preemption_trace"` replays an explicit `t,type,frac` reclaim CSV, and
+//! `"ensemble": N` lets model-less floor queries vote across N cheap
+//! variants.
 
-use crate::cloud::pricing::{vm_type, VmType};
+use crate::cloud::pricing::{parse_vm_type_list, vm_type, SpotSpec, VmType};
 use crate::models::SelectionPolicy;
 use crate::sim::Assignment;
 use crate::trace::{TraceKind, WorkloadKind};
@@ -71,6 +77,19 @@ pub struct ExperimentConfig {
     /// (aggregate) fidelity ([`crate::sim::fidelity`]); `"discrete"` (the
     /// default) keeps every stream request-accurate.
     pub hybrid_fidelity: bool,
+    /// `"spot": true` extends the palette with a market-priced spot twin
+    /// of every on-demand entry (equivalent to listing each one with a
+    /// `:spot` suffix in `vm_types`).
+    pub spot: bool,
+    /// Synthetic interruption rate override, events/hour/spot-type
+    /// (`SpotSpec::market().events_per_hour` when absent).
+    pub spot_rate: Option<f64>,
+    /// Explicit reclaim script CSV (`t,type,frac` per line); overrides the
+    /// seeded synthetic interruption process.
+    pub preemption_trace: Option<String>,
+    /// Maximum ensemble members per model-less floor query (0 disables;
+    /// the engine requires ≥3 before voting kicks in).
+    pub ensemble: usize,
     pub paragon: ParagonKnobs,
 }
 
@@ -81,6 +100,32 @@ impl ExperimentConfig {
             .first()
             .copied()
             .unwrap_or_else(crate::cloud::default_vm_type)
+    }
+
+    /// The palette the run actually procures from: `vm_types` as listed,
+    /// plus (`"spot": true`) a market spot twin of every on-demand entry,
+    /// with `"spot_rate"` re-speccing every spot entry's interruption rate.
+    pub fn effective_vm_types(&self) -> Vec<&'static VmType> {
+        let mut out = self.vm_types.clone();
+        if self.spot {
+            out.extend(
+                self.vm_types
+                    .iter()
+                    .filter(|t| !t.is_spot())
+                    .map(|t| crate::cloud::pricing::spot_twin(t, SpotSpec::market())),
+            );
+        }
+        if let Some(rate) = self.spot_rate {
+            let spec = SpotSpec { events_per_hour: rate, ..SpotSpec::market() };
+            for t in out.iter_mut() {
+                if t.is_spot() {
+                    if let Some(base) = t.name.strip_suffix(":spot").and_then(vm_type) {
+                        *t = crate::cloud::pricing::spot_twin(base, spec);
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -99,6 +144,10 @@ impl Default for ExperimentConfig {
             assignment: Assignment::RandomFeasible,
             seed: 42,
             hybrid_fidelity: false,
+            spot: false,
+            spot_rate: None,
+            preemption_trace: None,
+            ensemble: 0,
             paragon: ParagonKnobs::default(),
         }
     }
@@ -130,15 +179,18 @@ impl ExperimentConfig {
             cfg.duration_s = x;
         }
         if let Some(s) = j.get("vm_type").as_str() {
-            cfg.vm_types =
-                vec![vm_type(s).with_context(|| format!("unknown vm_type {s:?}"))?];
+            // parse_vm_type_list so a `:spot` suffix opens a transient twin
+            // here exactly as it does on the CLI.
+            cfg.vm_types = parse_vm_type_list(s)
+                .with_context(|| format!("bad vm_type {s:?}"))?;
         }
         if let Some(list) = j.get("vm_types").as_arr() {
             let mut types = Vec::new();
             for v in list {
                 let name = v.as_str().context("vm_types entries must be strings")?;
-                types.push(
-                    vm_type(name).with_context(|| format!("unknown vm_type {name:?}"))?,
+                types.extend(
+                    parse_vm_type_list(name)
+                        .with_context(|| format!("bad vm_types entry {name:?}"))?,
                 );
             }
             if types.is_empty() {
@@ -197,6 +249,24 @@ impl ExperimentConfig {
                 other => bail!("unknown fidelity {other:?} (discrete|hybrid)"),
             };
         }
+        if let Some(b) = j.get("spot").as_bool() {
+            cfg.spot = b;
+        }
+        if let Some(x) = j.get("spot_rate").as_f64() {
+            if x < 0.0 {
+                bail!("spot_rate must be >= 0 (events/hour)");
+            }
+            cfg.spot_rate = Some(x);
+        }
+        if let Some(s) = j.get("preemption_trace").as_str() {
+            cfg.preemption_trace = Some(s.to_string());
+        }
+        if let Some(x) = j.get("ensemble").as_usize() {
+            if x == 1 || x == 2 {
+                bail!("ensemble must be 0 (off) or >= 3 voting members");
+            }
+            cfg.ensemble = x;
+        }
         let p = j.get("paragon");
         if p.as_obj().is_some() {
             if let Some(x) = p.get("p2m_gate").as_f64() {
@@ -251,10 +321,18 @@ impl ExperimentConfig {
             ("seed", (self.seed as usize).into()),
             ("fidelity",
              if self.hybrid_fidelity { "hybrid" } else { "discrete" }.into()),
+            ("spot", self.spot.into()),
+            ("ensemble", self.ensemble.into()),
             ("paragon", Json::obj(vec![("p2m_gate", self.paragon.p2m_gate.into())])),
         ];
         if let Some(f) = &self.trace_file {
             fields.push(("trace_file", f.as_str().into()));
+        }
+        if let Some(r) = self.spot_rate {
+            fields.push(("spot_rate", r.into()));
+        }
+        if let Some(p) = &self.preemption_trace {
+            fields.push(("preemption_trace", p.as_str().into()));
         }
         Json::obj(fields)
     }
@@ -337,6 +415,55 @@ mod tests {
     }
 
     #[test]
+    fn spot_keys_parse_and_round_trip() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"vm_types":["m4.large","c5.large:spot"],"spot_rate":4.0,
+                "ensemble":3,"preemption_trace":"storm.csv"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            c.vm_types.iter().map(|t| t.name).collect::<Vec<_>>(),
+            vec!["m4.large", "c5.large:spot"]
+        );
+        assert!(c.vm_types[1].is_spot() && !c.vm_types[0].is_spot());
+        assert!(!c.spot);
+        assert_eq!(c.spot_rate, Some(4.0));
+        assert_eq!(c.ensemble, 3);
+        assert_eq!(c.preemption_trace.as_deref(), Some("storm.csv"));
+        // spot_rate re-specs the listed twin's interruption rate.
+        let eff = c.effective_vm_types();
+        assert_eq!(eff.len(), 2);
+        assert_eq!(eff[1].spot.unwrap().events_per_hour, 4.0);
+
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.spot_rate, Some(4.0));
+        assert_eq!(c2.ensemble, 3);
+        assert_eq!(c2.preemption_trace.as_deref(), Some("storm.csv"));
+        assert!(c2.vm_types[1].is_spot());
+    }
+
+    #[test]
+    fn spot_flag_twins_the_whole_palette() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"vm_types":["m4.large","c5.large"],"spot":true}"#,
+        )
+        .unwrap();
+        assert!(c.spot);
+        let eff = c.effective_vm_types();
+        assert_eq!(
+            eff.iter().map(|t| t.name).collect::<Vec<_>>(),
+            vec!["m4.large", "c5.large", "m4.large:spot", "c5.large:spot"]
+        );
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!(c2.spot);
+        assert_eq!(c2.effective_vm_types().len(), 4);
+        // Defaults: no spot tier, no ensemble.
+        let d = ExperimentConfig::from_str_json("{}").unwrap();
+        assert!(!d.spot && d.spot_rate.is_none() && d.ensemble == 0);
+        assert_eq!(d.effective_vm_types().len(), 1);
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for bad in [
             r#"{"trace":"nope"}"#,
@@ -345,7 +472,11 @@ mod tests {
             r#"{"vm_type":"t2.nano"}"#,
             r#"{"vm_types":[]}"#,
             r#"{"vm_types":["t2.nano"]}"#,
+            r#"{"vm_types":["t2.nano:spot"]}"#,
             r#"{"vm_types":[42]}"#,
+            r#"{"spot_rate":-1}"#,
+            r#"{"ensemble":2}"#,
+            r#"{"ensemble":1}"#,
             r#"{"instance_cap":0}"#,
             r#"{"queue_timeout_s":0}"#,
             r#"{"scheme":"bogus"}"#,

@@ -19,10 +19,11 @@
 use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
+use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::models::Registry;
 use crate::scheduler::{Action, OffloadPolicy};
 use crate::sim::core::SimCore;
-use crate::variants::{VariantChoice, VariantFamily, VariantPlane};
+use crate::variants::{EnsembleChoice, VariantChoice, VariantFamily, VariantPlane};
 
 /// Fluid sub-fleets over a model family's palette. Drains cancel the
 /// target sub-fleet's newest boots first (LIFO within the `(variant,
@@ -55,6 +56,12 @@ pub struct FluidFleet {
     /// Variant plane (model-less query routing); installed by
     /// [`FluidFleet::with_family`] or `install_variants`.
     plane: Option<VariantPlane>,
+    /// Spot preemption script (reclaim fault injection) when installed.
+    preemption: Option<PreemptionProcess>,
+    /// VMs reclaimed during the most recent reclaim sweep.
+    reclaims_tick: usize,
+    /// VMs reclaimed over the fleet's lifetime.
+    reclaims_total: usize,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
@@ -77,6 +84,9 @@ impl FluidFleet {
             boots: SimCore::new(),
             valve: None,
             plane: None,
+            preemption: None,
+            reclaims_tick: 0,
+            reclaims_total: 0,
             clock: 0.0,
         }
     }
@@ -172,6 +182,45 @@ impl FluidFleet {
             .as_mut()
             .map(|p| p.route_weighted(min_accuracy, slo_ms, weight))
     }
+
+    /// Apply due preemption events to the count matrices: the reclaim
+    /// fraction hits each `(member, type)` sub-fleet independently —
+    /// exactly [`Cluster::reclaim_victims`](crate::cloud::Cluster)'s
+    /// grouping — cancelling in-flight boots first (LIFO, the fleet's
+    /// documented drain order), then cutting running capacity. Reclaims
+    /// are provider-initiated and therefore bypass the one-VM drain
+    /// floor: a spot storm CAN take the whole sub-fleet. Returns the
+    /// VMs reclaimed by this sweep.
+    pub fn process_reclaims(&mut self, now: f64) -> usize {
+        self.reclaims_tick = 0;
+        let Some(proc_) = self.preemption.as_mut() else { return 0 };
+        let due: Vec<PreemptionEvent> = proc_.drain_due(now).to_vec();
+        for ev in due {
+            let Some(k) = self.palette.iter().position(|t| t.name == ev.type_name)
+            else {
+                continue;
+            };
+            for v in 0..self.members.len() {
+                let alive = (self.booting[v][k] + self.running[v][k]) as usize;
+                let mut n = ev.victims(alive);
+                self.reclaims_tick += n;
+                self.reclaims_total += n;
+                while n > 0
+                    && self.booting[v][k] > 0
+                    && self
+                        .boots
+                        .cancel_latest_matching(|&(bv, bk)| bv == v && bk == k)
+                        .is_some()
+                {
+                    self.booting[v][k] -= 1;
+                    n -= 1;
+                }
+                let cut = (n as u32).min(self.running[v][k]);
+                self.running[v][k] -= cut;
+            }
+        }
+        self.reclaims_tick
+    }
 }
 
 impl FleetActuator for FluidFleet {
@@ -217,6 +266,7 @@ impl FleetActuator for FluidFleet {
             self.running[v][k] += 1;
             self.booting[v][k] = self.booting[v][k].saturating_sub(1);
         }
+        self.process_reclaims(now);
         self.refresh_variants(now);
     }
 
@@ -238,6 +288,24 @@ impl FleetActuator for FluidFleet {
         if let Some(p) = &self.plane {
             b.set_accuracy(p.usage());
         }
+        // Alive-weighted spot aggregate, mirroring `Cluster::spot_usage`.
+        let mut spot_vms = 0usize;
+        let mut mult = 0.0;
+        for (k, t) in self.palette.iter().enumerate() {
+            if let Some(s) = t.spot {
+                let alive: u32 = (0..self.members.len())
+                    .map(|v| self.running[v][k] + self.booting[v][k])
+                    .sum();
+                spot_vms += alive as usize;
+                mult += alive as f64 * s.discount * t.price_mult(self.clock);
+            }
+        }
+        b.set_spot(SpotUsage {
+            spot_vms,
+            price_mult: if spot_vms == 0 { 1.0 } else { mult / spot_vms as f64 },
+            reclaims_tick: self.reclaims_tick,
+            reclaims_total: self.reclaims_total,
+        });
         b.build(self.clock)
     }
 
@@ -320,6 +388,19 @@ impl FleetActuator for FluidFleet {
             }
         }
         p.refresh_with_capacity(capacity, now);
+    }
+
+    fn install_preemption(&mut self, process: PreemptionProcess) {
+        self.preemption = Some(process);
+    }
+
+    fn reclaims_total(&self) -> usize {
+        self.reclaims_total
+    }
+
+    fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<EnsembleChoice> {
+        self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
     }
 }
 
@@ -462,6 +543,40 @@ mod tests {
         let snap2 = f.demand();
         assert!(snap2.acc_routed.iter().all(|&x| x == 0.0), "acc deltas drain");
         assert!(f.view().accuracy.routed > 0.0, "view reports accuracy usage");
+    }
+
+    #[test]
+    fn reclaims_cancel_boots_first_and_bypass_the_drain_floor() {
+        use crate::cloud::pricing::{spot_twin, SpotSpec};
+        let m4 = vm_type("m4.large").unwrap();
+        let spot = spot_twin(m4, SpotSpec::market());
+        let mut f = FluidFleet::new(0, vec![spot, m4]);
+        f.force_running(0, 3); // 3 running on the spot entry
+        f.force_running(1, 1); // 1 on-demand survivor
+        f.apply(&Action::Spawn { model: 0, vm_type: spot, count: 2 }, 0.0);
+        f.install_preemption(PreemptionProcess::from_events(vec![
+            PreemptionEvent { t: 10.0, type_name: spot.name.to_string(), frac: 0.4 },
+            PreemptionEvent { t: 20.0, type_name: spot.name.to_string(), frac: 1.0 },
+        ]));
+        // frac 0.4 of 5 alive -> 2 victims, both taken from in-flight boots.
+        f.advance(10.0);
+        assert_eq!(f.booting(), &[0, 0], "boots cancelled first");
+        assert_eq!(f.running(), &[3, 0]);
+        assert_eq!(f.reclaims_total(), 2);
+        // The storm takes the whole spot sub-fleet: reclaims ignore the
+        // one-VM drain floor (only the on-demand VM survives).
+        f.advance(20.0);
+        assert_eq!(f.running_all()[0], vec![0, 0]);
+        assert_eq!(f.running_all()[1], vec![0, 1], "on-demand untouched");
+        assert_eq!(f.reclaims_total(), 5);
+        let v = f.view();
+        assert_eq!(v.spot.reclaims_total, 5);
+        assert_eq!(v.spot.spot_vms, 0);
+        assert_eq!(v.spot.price_mult, 1.0, "no spot capacity left");
+        // Quiet ticks reset the per-sweep counter but not the lifetime one.
+        f.advance(30.0);
+        assert_eq!(f.view().spot.reclaims_tick, 0);
+        assert_eq!(f.view().spot.reclaims_total, 5);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
+use crate::cloud::spot::{PreemptionProcess, SpotUsage};
 use crate::models::Registry;
 use crate::runtime::engine::EngineHandle;
 use crate::scheduler::{Action, OffloadPolicy, TypeCap};
@@ -42,7 +43,7 @@ use crate::serving::{LiveResponse, Server, ServerConfig, ServerStats, SubmitErro
                      SubmitRequest};
 use crate::sim::core::SimCore;
 use crate::trace::Strictness;
-use crate::variants::{VariantChoice, VariantPlane};
+use crate::variants::{EnsembleChoice, VariantChoice, VariantPlane};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -104,6 +105,24 @@ struct Replica {
 struct DryQueued {
     slo_ms: f64,
     arrival: f64,
+    /// Already re-queued once by a spot reclaim; a second reclaim drops it.
+    requeued: bool,
+}
+
+/// Dry-run in-flight record. `done` duplicates the heap key so reclaim
+/// cancel predicates — which only see the payload — can compare against
+/// the notice deadline; the booking fields (`wait_ms`, `violated`) let a
+/// reclaim reverse the dispatch-time accounting exactly.
+#[derive(Debug, Clone, Copy)]
+struct DryInflight {
+    replica: u64,
+    model: usize,
+    arrival: f64,
+    slo_ms: f64,
+    done: f64,
+    wait_ms: f64,
+    violated: bool,
+    requeued: bool,
 }
 
 /// End-of-run summary of a [`ServerFleet`] drive.
@@ -122,8 +141,15 @@ pub struct LiveReport {
     ///
     /// Conservation (asserted by [`ServerFleet::report`], mirroring the
     /// simulator's `SimReport` invariant):
-    /// served + dropped + offloaded + queued = ingested.
+    /// served + dropped + offloaded + queued + preempted = ingested.
     pub queued: usize,
+    /// Requests lost to spot reclaims after their one re-queue allowance
+    /// (each also counted as a violation).
+    pub preempted: u64,
+    /// Requests re-queued exactly once off a reclaimed replica.
+    pub requeued: u64,
+    /// Replicas reclaimed by the installed preemption process.
+    pub reclaims: usize,
     /// Total replica billing (per-second EC2 pricing, 60 s minimum).
     pub cost_usd: f64,
     /// Total serverless billing (per-invocation, GB-seconds).
@@ -149,8 +175,9 @@ pub struct ServerFleet {
     arrivals: Vec<u64>,
     /// Dry-run admission queues, FIFO per model.
     queues: Vec<VecDeque<DryQueued>>,
-    /// Dry-run in-flight completions: payload (replica id, model).
-    completions: SimCore<(u64, usize)>,
+    /// Dry-run in-flight completions, full booking payload so reclaims
+    /// can reverse dispatch-time accounting ([`DryInflight`]).
+    completions: SimCore<DryInflight>,
     /// The serverless valve: absorbs overflow when the control loop opens
     /// it ([`FleetActuator::set_offload`]).
     valve: ServerlessValve,
@@ -168,6 +195,14 @@ pub struct ServerFleet {
     viol_delta: Vec<u64>,
     dropped: u64,
     offloaded: u64,
+    /// Requests lost to reclaims after their one re-queue allowance.
+    preempted: u64,
+    /// Requests re-queued off reclaimed replicas.
+    requeued: u64,
+    /// Spot preemption script (reclaim fault injection) when installed.
+    preemption: Option<PreemptionProcess>,
+    reclaims_tick: usize,
+    reclaims_total: usize,
     wait_ms_sum: f64,
     peak_replicas: usize,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
@@ -236,6 +271,11 @@ impl ServerFleet {
             viol_delta: vec![0; n],
             dropped: 0,
             offloaded: 0,
+            preempted: 0,
+            requeued: 0,
+            preemption: None,
+            reclaims_tick: 0,
+            reclaims_total: 0,
             wait_ms_sum: 0.0,
             peak_replicas: 0,
             clock: 0.0,
@@ -273,19 +313,13 @@ impl ServerFleet {
             + self
                 .replicas
                 .iter()
-                .map(|r| {
-                    self.cfg.vm_types[r.k]
-                        .price
-                        .cost_for((now - r.launched_at).max(0.0))
-                })
+                .map(|r| self.cfg.vm_types[r.k].cost_between(r.launched_at, now))
                 .sum::<f64>()
     }
 
     fn retire(&mut self, idx: usize, now: f64) {
         let r = self.replicas.swap_remove(idx);
-        self.retired_cost += self.cfg.vm_types[r.k]
-            .price
-            .cost_for((now - r.launched_at).max(0.0));
+        self.retired_cost += self.cfg.vm_types[r.k].cost_between(r.launched_at, now);
     }
 
     /// Record one arrival for `model` without admitting it — demand-only
@@ -305,13 +339,17 @@ impl ServerFleet {
     pub fn ingest(&mut self, model: usize, slo_ms: f64, now: f64) {
         self.arrivals[model] += 1;
         self.ingested += 1;
-        if self.try_dispatch(model, slo_ms, now, now) {
+        if self.try_dispatch(model, slo_ms, now, now, false) {
             return;
         }
         if self.valve.admits(Strictness::from_slo_ms(slo_ms) == Strictness::Strict) {
             self.offload_one(model, slo_ms, now, now);
         } else {
-            self.queues[model].push_back(DryQueued { slo_ms, arrival: now });
+            self.queues[model].push_back(DryQueued {
+                slo_ms,
+                arrival: now,
+                requeued: false,
+            });
         }
     }
 
@@ -347,7 +385,7 @@ impl ServerFleet {
     }
 
     fn try_dispatch(&mut self, model: usize, slo_ms: f64, arrival: f64,
-                    now: f64) -> bool {
+                    now: f64, requeued: bool) -> bool {
         for oi in 0..self.order[model].len() {
             let k = self.order[model][oi];
             let mut best: Option<usize> = None;
@@ -365,11 +403,21 @@ impl ServerFleet {
                 let svc = self.caps[model][k].service_s;
                 self.replicas[i].busy += 1;
                 let id = self.replicas[i].id;
-                self.completions.schedule_at(now + svc, (id, model));
                 let wait_ms = (now - arrival) * 1000.0;
+                let violated = wait_ms + svc * 1000.0 > slo_ms;
+                self.completions.schedule_at(now + svc, DryInflight {
+                    replica: id,
+                    model,
+                    arrival,
+                    slo_ms,
+                    done: now + svc,
+                    wait_ms,
+                    violated,
+                    requeued,
+                });
                 self.served += 1;
                 self.wait_ms_sum += wait_ms;
-                if wait_ms + svc * 1000.0 > slo_ms {
+                if violated {
                     self.note_violation(model);
                 }
                 return true;
@@ -435,7 +483,7 @@ impl ServerFleet {
                     self.note_violation(m); // a drop is by definition a violation
                     continue;
                 }
-                if self.try_dispatch(m, head.slo_ms, head.arrival, t) {
+                if self.try_dispatch(m, head.slo_ms, head.arrival, t, head.requeued) {
                     self.queues[m].pop_front();
                     continue;
                 }
@@ -447,6 +495,83 @@ impl ServerFleet {
                     continue;
                 }
                 break;
+            }
+        }
+    }
+
+    /// Apply due preemption events: select victims exactly as
+    /// [`Cluster::reclaim_victims`](crate::cloud::Cluster) does (fraction
+    /// per `(model, type)` sub-fleet, Booting victims first then Running
+    /// by ascending busy), cancel in-flight work that cannot finish inside
+    /// the reclaim notice — reversing its dispatch-time booking and
+    /// re-queueing it exactly once (a second reclaim counts it preempted)
+    /// — and retire the victims at the event time. Work whose completion
+    /// lands inside the notice window was booked served at dispatch and
+    /// stays served: the notice is precisely the window the provider
+    /// guarantees.
+    fn process_reclaims(&mut self, now: f64) {
+        self.reclaims_tick = 0;
+        let Some(proc_) = self.preemption.as_mut() else { return };
+        let due: Vec<crate::cloud::spot::PreemptionEvent> =
+            proc_.drain_due(now).to_vec();
+        for ev in due {
+            let Some(k) = self
+                .cfg
+                .vm_types
+                .iter()
+                .position(|t| t.name == ev.type_name)
+            else {
+                continue;
+            };
+            let notice = self.cfg.vm_types[k].spot.map_or(0.0, |s| s.notice_s);
+            let deadline = now + notice;
+            let mut by_model: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (i, r) in self.replicas.iter().enumerate() {
+                if r.k == k
+                    && matches!(r.state,
+                                ReplicaState::Booting | ReplicaState::Running)
+                {
+                    by_model.entry(r.model).or_default().push(i);
+                }
+            }
+            let mut victims: Vec<u64> = Vec::new();
+            for (_, mut idx) in by_model {
+                let n = ev.victims(idx.len());
+                idx.sort_by_key(|&i| {
+                    let r = &self.replicas[i];
+                    (r.state == ReplicaState::Running, r.busy)
+                });
+                victims.extend(idx.into_iter().take(n).map(|i| self.replicas[i].id));
+            }
+            self.reclaims_tick += victims.len();
+            self.reclaims_total += victims.len();
+            for id in victims {
+                while let Some(c) = self
+                    .completions
+                    .cancel_latest_matching(|c| c.replica == id && c.done > deadline)
+                {
+                    self.served -= 1;
+                    self.wait_ms_sum -= c.wait_ms;
+                    if c.violated {
+                        self.violations = self.violations.saturating_sub(1);
+                        self.viol_delta[c.model] =
+                            self.viol_delta[c.model].saturating_sub(1);
+                    }
+                    if c.requeued {
+                        self.preempted += 1;
+                        self.note_violation(c.model); // a preempted drop violates
+                    } else {
+                        self.requeued += 1;
+                        self.queues[c.model].push_back(DryQueued {
+                            slo_ms: c.slo_ms,
+                            arrival: c.arrival,
+                            requeued: true,
+                        });
+                    }
+                }
+                if let Some(i) = self.replicas.iter().position(|r| r.id == id) {
+                    self.retire(i, now);
+                }
             }
         }
     }
@@ -518,10 +643,12 @@ impl ServerFleet {
         let queued: usize = self.queues.iter().map(VecDeque::len).sum();
         assert_eq!(
             self.ingested,
-            self.served + self.dropped + self.offloaded + queued as u64,
+            self.served + self.dropped + self.offloaded + queued as u64
+                + self.preempted,
             "request conservation violated: {} ingested vs {} served + {} \
-             dropped + {} offloaded + {queued} queued",
-            self.ingested, self.served, self.dropped, self.offloaded
+             dropped + {} offloaded + {queued} queued + {} preempted",
+            self.ingested, self.served, self.dropped, self.offloaded,
+            self.preempted
         );
         LiveReport {
             served: self.served,
@@ -529,6 +656,9 @@ impl ServerFleet {
             dropped: self.dropped,
             offloaded: self.offloaded,
             queued,
+            preempted: self.preempted,
+            requeued: self.requeued,
+            reclaims: self.reclaims_total,
             cost_usd: self.total_cost(now),
             lambda_cost_usd: self.valve.usage().cost_usd,
             mean_wait_ms: if self.served == 0 {
@@ -621,6 +751,10 @@ impl FleetActuator for ServerFleet {
 
     fn advance(&mut self, now: f64) {
         self.clock = self.clock.max(now);
+        // Reclaims first: cancelled work re-queues before the replay loop
+        // below, so surviving capacity absorbs it this same tick (the
+        // engine's cluster backend orders the two phases identically).
+        self.process_reclaims(now);
         // Replay capacity events (boot landings, dry-run completions) in
         // time order up to `now`, dispatching queued work at each event's
         // OWN time — a large time jump (end-of-run queue drain) therefore
@@ -655,8 +789,10 @@ impl FleetActuator for ServerFleet {
             } else {
                 // One completion releases its slot; drained idle replicas
                 // retire at their completion time.
-                let (done_at, (id, _model)) = self.completions.pop_due(now).unwrap();
-                if let Some(i) = self.replicas.iter().position(|r| r.id == id) {
+                let (done_at, inf) = self.completions.pop_due(now).unwrap();
+                if let Some(i) =
+                    self.replicas.iter().position(|r| r.id == inf.replica)
+                {
                     self.replicas[i].busy = self.replicas[i].busy.saturating_sub(1);
                     if self.replicas[i].state == ReplicaState::Draining
                         && self.replicas[i].busy == 0
@@ -713,6 +849,23 @@ impl FleetActuator for ServerFleet {
         if let Some(p) = &self.plane {
             b.set_accuracy(p.usage());
         }
+        // Alive-weighted spot aggregate, mirroring `Cluster::spot_usage`.
+        let mut spot_vms = 0usize;
+        let mut mult = 0.0;
+        for r in &self.replicas {
+            if matches!(r.state, ReplicaState::Booting | ReplicaState::Running) {
+                if let Some(s) = self.cfg.vm_types[r.k].spot {
+                    spot_vms += 1;
+                    mult += s.discount * self.cfg.vm_types[r.k].price_mult(self.clock);
+                }
+            }
+        }
+        b.set_spot(SpotUsage {
+            spot_vms,
+            price_mult: if spot_vms == 0 { 1.0 } else { mult / spot_vms as f64 },
+            reclaims_tick: self.reclaims_tick,
+            reclaims_total: self.reclaims_total,
+        });
         b.build(self.clock)
     }
 
@@ -798,6 +951,19 @@ impl FleetActuator for ServerFleet {
                 p.refresh(&view, now);
             }
         }
+    }
+
+    fn install_preemption(&mut self, process: PreemptionProcess) {
+        self.preemption = Some(process);
+    }
+
+    fn reclaims_total(&self) -> usize {
+        self.reclaims_total
+    }
+
+    fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<EnsembleChoice> {
+        self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
     }
 }
 
@@ -1007,6 +1173,65 @@ mod tests {
             let _ = rx.recv();
         }
         f.shutdown_pools();
+    }
+
+    #[test]
+    fn reclaims_requeue_in_flight_once_then_preempt() {
+        use crate::cloud::pricing::{spot_twin, SpotSpec};
+        use crate::cloud::spot::{PreemptionEvent, PreemptionProcess};
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        // Zero notice: nothing in flight can finish before the reclaim.
+        let spot = spot_twin(m4, SpotSpec { notice_s: 0.0, ..SpotSpec::market() });
+        let mut f = ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: vec![spot],
+            ..ServerFleetConfig::default()
+        });
+        f.apply(&Action::Spawn { model: 3, vm_type: spot, count: 2 }, 0.0);
+        f.advance(100.0);
+        let slots = f.caps[3][0].slots_per_vm as u64;
+        for _ in 0..2 * slots {
+            f.ingest(3, 10_000.0, 100.0); // resnet18: 480 ms in flight
+        }
+        assert_eq!(f.served, 2 * slots);
+        let v = f.view();
+        assert_eq!(v.spot.spot_vms, 2);
+        assert!(v.spot.price_mult < 1.0, "market discount must show in the view");
+        f.install_preemption(PreemptionProcess::from_events(vec![
+            PreemptionEvent { t: 100.2, type_name: spot.name.to_string(), frac: 0.5 },
+            PreemptionEvent { t: 100.6, type_name: spot.name.to_string(), frac: 1.0 },
+        ]));
+        // First reclaim takes one replica: its in-flight work un-books and
+        // re-queues (requeue allowance spent), the other replica survives.
+        f.advance(100.2);
+        assert_eq!(f.served, slots);
+        assert_eq!(f.requeued, slots);
+        assert_eq!(f.reclaims_total(), 1);
+        assert_eq!(f.total_alive(), 1);
+        // The survivor finishes its batch at 100.48 and absorbs the
+        // re-queued work at that instant.
+        f.advance(100.5);
+        assert_eq!(f.served, 2 * slots);
+        assert_eq!(f.queues[3].len(), 0);
+        // The storm reclaims the survivor mid-batch: the re-queued work's
+        // allowance is spent, so it is preempted-dropped, counted once.
+        f.advance(100.7);
+        let rep = f.report(101.0); // conservation asserted inside
+        assert_eq!(rep.served, slots);
+        assert_eq!(rep.preempted, slots);
+        assert_eq!(rep.requeued, slots);
+        assert_eq!(rep.reclaims, 2);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.violations, slots, "each preemption violates exactly once");
+        // Reclaimed replicas billed at the spot rate up to the reclaim.
+        assert!(rep.cost_usd > 0.0);
+        assert!(
+            rep.cost_usd < 2.0 * m4.price.cost_for(101.0),
+            "spot billing must stay below the on-demand book rate"
+        );
+        let v = f.view();
+        assert_eq!(v.spot.spot_vms, 0);
+        assert_eq!(v.spot.reclaims_total, 2);
     }
 
     #[test]

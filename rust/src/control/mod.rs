@@ -50,6 +50,7 @@ pub use sim::{cluster_view, ClusterActuator};
 pub use valve::{LambdaOutcome, LambdaUsage, ServerlessValve};
 
 use crate::cloud::pricing::VmType;
+use crate::cloud::spot::{PreemptionProcess, SpotUsage};
 use crate::models::Registry;
 use crate::rl::baselines::EnvPolicy;
 use crate::rl::env::{decode_action, ObsLayout, ObsSignals};
@@ -92,6 +93,11 @@ pub struct FleetView {
     /// Cumulative delivered-accuracy usage of the fleet's variant plane
     /// (zero for backends without one).
     pub accuracy: AccuracyUsage,
+    /// Spot-market state of the fleet behind this view: transient capacity,
+    /// the current effective spot price multiplier, and reclaim pressure
+    /// (defaults for backends without spot palette entries) — what schemes
+    /// and RL policies hedge on.
+    pub spot: SpotUsage,
 }
 
 impl FleetView {
@@ -148,6 +154,16 @@ impl FleetView {
         self.subfleets.iter().map(|s| s.running + s.booting).sum()
     }
 
+    /// Alive (Running + Booting) members on transient (spot) palette
+    /// entries, across every model.
+    pub fn spot_alive(&self) -> usize {
+        self.subfleets
+            .iter()
+            .filter(|s| s.vm_type.is_spot())
+            .map(|s| s.running + s.booting)
+            .sum()
+    }
+
     /// Mean utilization over `model`'s Running members — 1.0 when none are
     /// running, so a fully missing fleet reads saturated and prompts
     /// scale-up (mirrors [`Cluster::utilization`](crate::cloud::Cluster)).
@@ -179,6 +195,7 @@ pub struct FleetViewBuilder {
     map: BTreeMap<(usize, &'static str), SubFleet>,
     lambda: LambdaUsage,
     accuracy: AccuracyUsage,
+    spot: SpotUsage,
 }
 
 impl Default for FleetViewBuilder {
@@ -193,6 +210,7 @@ impl FleetViewBuilder {
             map: BTreeMap::new(),
             lambda: LambdaUsage::default(),
             accuracy: AccuracyUsage::default(),
+            spot: SpotUsage::default(),
         }
     }
 
@@ -204,6 +222,11 @@ impl FleetViewBuilder {
     /// Attach the fleet's cumulative variant-plane accuracy usage.
     pub fn set_accuracy(&mut self, usage: AccuracyUsage) {
         self.accuracy = usage;
+    }
+
+    /// Attach the fleet's spot-market state (capacity, price, reclaims).
+    pub fn set_spot(&mut self, usage: SpotUsage) {
+        self.spot = usage;
     }
 
     /// Record one alive fleet member. `utilization` is busy/slots and is
@@ -234,7 +257,7 @@ impl FleetViewBuilder {
             subfleets.push(s);
         }
         FleetView { now, subfleets, index, lambda: self.lambda,
-                    accuracy: self.accuracy }
+                    accuracy: self.accuracy, spot: self.spot }
     }
 }
 
@@ -332,6 +355,31 @@ pub trait FleetActuator {
     /// embedding loops that bypass `advance` (the request-level simulator
     /// ticks its cluster directly) call it once per control tick.
     fn refresh_variants(&mut self, _now: f64) {}
+
+    /// Install a spot preemption process: from here on, every time the
+    /// backend's clock advances it drains due interruption events and
+    /// executes drain-on-reclaim on the matching spot sub-fleets. Backends
+    /// without spot support ignore it. Embedding loops that bypass
+    /// `advance` (the request-level simulator) drain the events themselves
+    /// so in-flight work can be rescued before the VM dies.
+    fn install_preemption(&mut self, _process: PreemptionProcess) {}
+
+    /// Spot VMs reclaimed so far by the installed preemption process
+    /// (conformance observable; 0 for backends without spot support).
+    fn reclaims_total(&self) -> usize {
+        0
+    }
+
+    /// Resolve one model-less query to an *ensemble* — N cheap variants
+    /// whose weighted vote meets the floor at lower cost than any single
+    /// qualifying variant ([`crate::variants::plane::EnsembleChoice`]).
+    /// `None` when no plane with ensemble mode is installed, or when no
+    /// ensemble beats the single pick (callers fall back to
+    /// [`Self::route_modelless`]). Pure selection, like `route_modelless`.
+    fn route_ensemble(&mut self, _min_accuracy: f64, _slo_ms: f64)
+                      -> Option<crate::variants::EnsembleChoice> {
+        None
+    }
 }
 
 /// Per-`(model, palette entry)` capacity table — the one way every

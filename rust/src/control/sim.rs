@@ -9,10 +9,11 @@
 use super::valve::{LambdaOutcome, ServerlessValve};
 use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
 use crate::cloud::pricing::VmType;
+use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::cloud::{Cluster, VmState};
 use crate::models::Registry;
 use crate::scheduler::{Action, OffloadPolicy, TypeCap};
-use crate::variants::{VariantChoice, VariantPlane};
+use crate::variants::{EnsembleChoice, VariantChoice, VariantPlane};
 
 /// Build a [`FleetView`] snapshot of any cluster (scheme unit tests build
 /// observations straight from a hand-assembled [`Cluster`]).
@@ -50,6 +51,12 @@ pub struct ClusterActuator {
     /// Variant plane: resolves the embedding loop's model-less queries
     /// ([`FleetActuator::route_modelless`]) when installed.
     plane: Option<VariantPlane>,
+    /// Spot preemption script (reclaim fault injection) when installed.
+    preemption: Option<PreemptionProcess>,
+    /// VMs reclaimed during the most recent [`Self::process_reclaims`].
+    reclaims_tick: usize,
+    /// VMs reclaimed over the actuator's lifetime.
+    reclaims_total: usize,
     /// Latest time seen by `apply`/`advance` (the `view()` timestamp).
     clock: f64,
 }
@@ -69,6 +76,9 @@ impl ClusterActuator {
             queued: vec![0; n],
             valve: ServerlessValve::new(reg),
             plane: None,
+            preemption: None,
+            reclaims_tick: 0,
+            reclaims_total: 0,
             clock: 0.0,
         }
     }
@@ -90,6 +100,41 @@ impl ClusterActuator {
             .iter()
             .position(|t| t.name == vm_type.name)
             .expect("action targets a type outside the palette")
+    }
+
+    /// Drain due preemption events and select their victims, WITHOUT
+    /// draining the VMs: the embedding event loop must first cancel (and
+    /// requeue or drop) the in-flight work that cannot finish inside the
+    /// reclaim notice, then drain each victim itself. Standalone loops
+    /// get the drained-for-them variant through
+    /// [`FleetActuator::advance`]. Resets the per-tick reclaim counter.
+    pub fn process_reclaims(&mut self, now: f64)
+                            -> Vec<(PreemptionEvent, Vec<u64>)> {
+        self.reclaims_tick = 0;
+        let Some(proc_) = self.preemption.as_mut() else { return Vec::new() };
+        let due: Vec<PreemptionEvent> = proc_.drain_due(now).to_vec();
+        let mut out = Vec::with_capacity(due.len());
+        for ev in due {
+            let victims = self.cluster.reclaim_victims(&ev);
+            self.reclaims_tick += victims.len();
+            self.reclaims_total += victims.len();
+            out.push((ev, victims));
+        }
+        out
+    }
+
+    /// Plan an ensemble without booking ledgers (the embedding loop gates
+    /// on per-member free slots before committing).
+    pub fn plan_ensemble(&self, min_accuracy: f64, slo_ms: f64)
+                         -> Option<EnsembleChoice> {
+        self.plane.as_ref().and_then(|p| p.plan_ensemble(min_accuracy, slo_ms))
+    }
+
+    /// Book a served ensemble into the plane's accuracy ledgers.
+    pub fn commit_ensemble(&mut self, choice: &EnsembleChoice, min_accuracy: f64) {
+        if let Some(p) = self.plane.as_mut() {
+            p.commit_ensemble(choice, min_accuracy);
+        }
     }
 }
 
@@ -128,6 +173,16 @@ impl FleetActuator for ClusterActuator {
     fn advance(&mut self, now: f64) {
         self.cluster.tick(now, 0.0, 0.0);
         self.clock = self.clock.max(now);
+        // Standalone loops have no in-flight bookkeeping to unwind, so
+        // reclaim victims drain immediately (in-flight slots, if any,
+        // settle through the normal Draining path).
+        for (_, victims) in self.process_reclaims(now) {
+            for id in victims {
+                if let Some(vm) = self.cluster.get_mut(id) {
+                    vm.drain(now);
+                }
+            }
+        }
         self.refresh_variants(now);
     }
 
@@ -137,6 +192,13 @@ impl FleetActuator for ClusterActuator {
         if let Some(p) = &self.plane {
             v.accuracy = p.usage();
         }
+        let (spot_vms, price_mult) = self.cluster.spot_usage(self.clock);
+        v.spot = SpotUsage {
+            spot_vms,
+            price_mult,
+            reclaims_tick: self.reclaims_tick,
+            reclaims_total: self.reclaims_total,
+        };
         v
     }
 
@@ -191,6 +253,19 @@ impl FleetActuator for ClusterActuator {
             }
         }
     }
+
+    fn install_preemption(&mut self, process: PreemptionProcess) {
+        self.preemption = Some(process);
+    }
+
+    fn reclaims_total(&self) -> usize {
+        self.reclaims_total
+    }
+
+    fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<EnsembleChoice> {
+        self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +299,34 @@ mod tests {
         a.apply(&Action::Drain { model: 0, vm_type: m4, count: 2 }, 501.0);
         a.advance(502.0);
         assert_eq!(a.view().alive_typed(0, m4), 0);
+    }
+
+    #[test]
+    fn reclaims_drain_spot_victims_on_advance() {
+        use crate::cloud::{spot_twin, PreemptionEvent, PreemptionProcess, SpotSpec};
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let sm4 = spot_twin(m4, SpotSpec::market());
+        let mut a = ClusterActuator::new(&reg, vec![m4, sm4], 100, 2);
+        a.apply(&Action::Spawn { model: 0, vm_type: sm4, count: 4 }, 0.0);
+        a.apply(&Action::Spawn { model: 0, vm_type: m4, count: 2 }, 0.0);
+        a.install_preemption(PreemptionProcess::from_events(vec![PreemptionEvent {
+            t: 600.0,
+            type_name: sm4.name.to_string(),
+            frac: 0.5,
+        }]));
+        a.advance(500.0);
+        assert_eq!(a.view().spot.spot_vms, 4);
+        assert_eq!(a.reclaims_total(), 0, "script not due yet");
+        a.advance(600.0);
+        assert_eq!(a.reclaims_total(), 2, "half the spot sub-fleet reclaimed");
+        assert_eq!(a.view().spot.reclaims_tick, 2);
+        assert_eq!(a.cluster.total_alive(), 4, "on-demand VMs never victims");
+        a.advance(601.0);
+        let s = a.view().spot;
+        assert_eq!(s.reclaims_tick, 0, "per-tick counter resets");
+        assert_eq!(s.reclaims_total, 2);
+        assert_eq!(s.spot_vms, 2);
     }
 
     #[test]

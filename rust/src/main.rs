@@ -12,7 +12,8 @@
 //!   paragon simulate --scheme paragon --trace berkeley --rate 100
 //!   paragon train-rl --iters 20
 
-use paragon::cloud::pricing::parse_vm_type_list;
+use paragon::cloud::pricing::{parse_vm_type_list, spot_twin, SpotSpec};
+use paragon::cloud::spot::PreemptionProcess;
 use paragon::figures;
 use paragon::models::{profiler, Registry, SelectionPolicy};
 use paragon::scheduler;
@@ -96,6 +97,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     if want("variants") {
         figures::save(&out, "fig_variants", &figures::fig_variants(&reg, &cfg))?;
     }
+    if want("spot") {
+        figures::save(&out, "fig_spot", &figures::fig_spot(&reg, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -162,6 +166,30 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         Some(spec) => parse_vm_type_list(spec)?,
         None => SimConfig::default().vm_types,
     };
+    // Spot tier: `--spot` extends the palette with a market-priced spot
+    // twin of every entry (35% of on-demand, ±15% jitter, 120 s reclaim
+    // notice); `--spot-rate R` overrides the synthetic interruption rate
+    // (events/hour/type). `--preemption-trace F.csv` replays an explicit
+    // `t,type,frac` reclaim script instead of the seeded synthetic one.
+    let vm_types = if args.has("spot") {
+        let spec = SpotSpec {
+            events_per_hour: args
+                .get_f64("spot-rate", SpotSpec::market().events_per_hour)?,
+            ..SpotSpec::market()
+        };
+        let mut all = vm_types.clone();
+        all.extend(vm_types.iter().map(|t| spot_twin(t, spec)));
+        all
+    } else {
+        vm_types
+    };
+    let preemption = match args.get("preemption-trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            Some(PreemptionProcess::parse_trace(&text)?.into_events())
+        }
+        None => None,
+    };
     let fidelity = match args.get_or("fidelity", "discrete").as_str() {
         "discrete" => paragon::sim::FidelityConfig::default(),
         "hybrid" => paragon::sim::FidelityConfig::hybrid(),
@@ -182,6 +210,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         seed: cfg.seed,
         instance_cap: args.get_usize("instance-cap", 5000)?,
         fidelity,
+        ensemble: args.get_usize("ensemble", 0)?,
+        preemption,
         ..SimConfig::default()
     };
     let rep = if threads > 1 {
@@ -240,12 +270,14 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het|live|variants  --out results
+  figures     --fig all|2..10|het|rl_het|live|variants|spot  --out results
               [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
               [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]
               [--vm-types m4.large,c5.xlarge] [--instance-cap N]
               [--threads N|auto] [--fidelity discrete|hybrid]
+              [--spot [--spot-rate EV_PER_H] [--preemption-trace F.csv]]
+              [--ensemble N]
   profile     --iters N          (needs artifacts/)
   train-rl    --iters N          (needs artifacts/)
   traces      --out DIR

@@ -681,8 +681,10 @@ impl ServeEnv {
         self.queue_strict += new_strict;
         self.queue_relaxed += new_relaxed;
 
-        // Costs: per-second per-type VM billing (booting VMs bill too) +
-        // the valve's fluid lambda billing (warm price with a 5% cold-start
+        // Costs: per-second per-type VM billing (booting VMs bill too;
+        // spot palette entries bill at their discounted effective rate,
+        // identical to the on-demand book rate for non-spot types) + the
+        // valve's fluid lambda billing (warm price with a 5% cold-start
         // premium — the valve's absorb path, so the fluid backend's
         // FleetView reports the same offload usage the sim/live valves do).
         let vm_cost: f64 = self
@@ -691,7 +693,7 @@ impl ServeEnv {
             .enumerate()
             .map(|(j, t)| {
                 (self.fleet.running()[j] as f64 + self.fleet.booting()[j] as f64)
-                    * t.price.per_second()
+                    * t.effective_per_second()
             })
             .sum();
         let model = self.model;

@@ -388,13 +388,14 @@ impl VariantServeEnv {
         }
 
         // Costs: per-second per-(variant, type) VM billing (booting VMs
-        // bill too) + the valve's fluid lambda billing above.
+        // bill too; spot entries bill the discounted effective rate) +
+        // the valve's fluid lambda billing above.
         let mut vm_cost = 0.0;
         for vi in 0..nv {
             for (kk, t) in self.palette.iter().enumerate() {
                 let alive = self.fleet.running_all()[vi][kk] as f64
                     + self.fleet.booting_all()[vi][kk] as f64;
-                vm_cost += alive * t.price.per_second();
+                vm_cost += alive * t.effective_per_second();
             }
         }
         let cost = vm_cost + lambda_cost;

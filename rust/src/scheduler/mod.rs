@@ -84,7 +84,10 @@ impl TypeCap {
 
     /// Price of one concurrency slot for one second, USD.
     pub fn cost_per_slot_second(&self) -> f64 {
-        self.vm_type.price.per_second() / self.slots_per_vm as f64
+        // Spot capacity plans at its discounted rate: the greedy
+        // cheapest-type pick (and the RL price feature derived from it)
+        // sees the spot market without any observation-layout change.
+        self.vm_type.effective_per_second() / self.slots_per_vm as f64
     }
 
     /// Effective price of one served query at full utilization, USD —

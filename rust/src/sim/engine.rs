@@ -25,6 +25,7 @@ use super::core::SimCore;
 use super::fidelity::{Fidelity, FidelityConfig, FidelityGovernor, FluidLane};
 use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
+use crate::cloud::spot::{PreemptionEvent, PreemptionProcess};
 use crate::cloud::{Cluster, VmState};
 use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator};
 use crate::models::{select, Registry, SelectionPolicy};
@@ -77,6 +78,20 @@ pub struct SimConfig {
     /// Disabled by default: every stream stays request-accurate and the
     /// engine behaves exactly as before this knob existed.
     pub fidelity: FidelityConfig,
+    /// Spot preemption script. `None` synthesizes a seeded interruption
+    /// process from the palette's spot specs (empty when no palette entry
+    /// is spot — the on-demand engine is untouched); `Some(events)` plays
+    /// back an explicit reclaim trace (`--preemption-trace`). In sharded
+    /// runs every stream replays the same script — reclaim fractions
+    /// apply per `(model, type)` sub-fleet
+    /// ([`Cluster::reclaim_victims`]), so victim counts agree between the
+    /// serial cluster and per-model shards.
+    pub preemption: Option<Vec<PreemptionEvent>>,
+    /// Ensemble mode for model-less queries: maximum members per vote
+    /// (0 disables; ≥3 lets floor queries resolve to N cheap variants +
+    /// weighted voting when that undercuts the single pick —
+    /// [`crate::variants::select_ensemble`]).
+    pub ensemble: usize,
 }
 
 impl Default for SimConfig {
@@ -89,6 +104,8 @@ impl Default for SimConfig {
             instance_cap: 5000,
             queue_timeout_s: 300.0,
             fidelity: FidelityConfig::default(),
+            preemption: None,
+            ensemble: 0,
         }
     }
 }
@@ -108,11 +125,31 @@ impl SimConfig {
     }
 }
 
-/// An inference finishing on a VM (payload of the completion heap).
+/// An inference finishing on a VM (payload of the completion heap). The
+/// payload carries everything needed to *unbook* a dispatch-time record
+/// when a spot reclaim cancels it: ledger deltas reverse exactly, and the
+/// request requeues (once) or counts as preempted.
 #[derive(Debug)]
 struct Completion {
     vm_id: u64,
     model: usize,
+    /// Scheduled finish time (the heap key, duplicated for cancel
+    /// predicates, which only see the payload).
+    done: f64,
+    slo_ms: f64,
+    /// Original arrival time — requeues keep it, so waiting clocks and
+    /// timeout sweeps see through the preemption.
+    arrival: f64,
+    strict: bool,
+    floor_ok: bool,
+    /// Already requeued by one reclaim: a second reclaim drops it as
+    /// preempted (requeue-exactly-once).
+    requeued: bool,
+    /// Member of an ensemble vote (shadows and primary alike).
+    ensemble: bool,
+    /// Index of this dispatch's latency sample, to tombstone on cancel;
+    /// `usize::MAX` for ensemble shadows (which record nothing).
+    lat_idx: usize,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -123,6 +160,9 @@ struct Queued {
     /// The request carried an accuracy floor its assigned model meets;
     /// attainment is credited only when the request is actually served.
     floor_ok: bool,
+    /// Requeued off a reclaimed VM: a second reclaim must not requeue
+    /// again.
+    requeued: bool,
 }
 
 /// Assign a model to every request up front (deterministic given seed).
@@ -277,11 +317,10 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     // live backends carry (`rust/tests/variant_conformance.rs`).
     let modelless = cfg.assignment == Assignment::ModelLess;
     if modelless {
-        actuator.install_variants(VariantPlane::new(
-            reg,
-            VariantFamily::full_pool(reg),
-            &palette,
-        ));
+        actuator.install_variants(
+            VariantPlane::new(reg, VariantFamily::full_pool(reg), &palette)
+                .with_ensemble(cfg.ensemble),
+        );
     }
     let mut cl = ControlLoop::new(reg, palette.clone());
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
@@ -355,6 +394,22 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     let mut req_i = 0usize;
     let horizon = reqs.last().map(|r| r.arrival_s).unwrap_or(0.0);
 
+    // Spot preemption: explicit script, else a seeded interruption process
+    // synthesized from the palette's spot specs (empty — and free — when
+    // the palette is all on-demand). Synthesis consumes no engine RNG
+    // state, so enabling an inert spot type perturbs nothing.
+    let process = match &cfg.preemption {
+        Some(events) => PreemptionProcess::from_events(events.clone()),
+        None => PreemptionProcess::synthesize(
+            &palette,
+            horizon + cfg.queue_timeout_s + 2.0,
+            cfg.seed,
+        ),
+    };
+    if !process.is_empty() {
+        actuator.install_preemption(process);
+    }
+
     loop {
         let t_arr = reqs.get(req_i).map(|r| r.arrival_s).unwrap_or(f64::INFINITY);
         let t_cmp = completions.next_time().unwrap_or(f64::INFINITY);
@@ -393,7 +448,18 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                         if q.floor_ok {
                             rep.attained += 1;
                         }
-                        completions.schedule_at(done, Completion { vm_id, model: c.model });
+                        completions.schedule_at(done, Completion {
+                            vm_id,
+                            model: c.model,
+                            done,
+                            slo_ms: q.slo_ms,
+                            arrival: q.arrival,
+                            strict: q.strict,
+                            floor_ok: q.floor_ok,
+                            requeued: q.requeued,
+                            ensemble: false,
+                            lat_idx: lat_samples.len() - 1,
+                        });
                     } else {
                         queues[c.model].push_front(q);
                     }
@@ -402,6 +468,82 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
         } else if t_arr <= t_tick {
             // --- arrival
             let r = &reqs[req_i];
+            // Ensemble mode: a model-less floor query may resolve to N
+            // cheap members + weighted voting when that undercuts the
+            // single pick AND every member has a free slot *right now* —
+            // otherwise it falls through to the single-variant ladder
+            // below, whose floor guarantee is unconditional. The floor is
+            // therefore never at the mercy of spot capacity: losing
+            // ensemble headroom degrades cost, not delivered accuracy.
+            if modelless && cfg.ensemble >= 3 {
+                if let Some(e) = actuator.plan_ensemble(r.min_accuracy, r.slo_ms) {
+                    let pm = e.primary().model;
+                    let dispatchable = !(hybrid && gov.is_fluid(pm))
+                        && e.distinct_models().iter().all(|&dm| {
+                            let need = e.members.iter()
+                                .filter(|c| c.model == dm)
+                                .count() as u32;
+                            actuator.cluster.free_slots(dm) >= need
+                        });
+                    if dispatchable {
+                        req_i += 1;
+                        rep.requests += 1;
+                        rep.floor_requests += 1; // ensembles serve only floor queries
+                        let strict = r.strictness == Strictness::Strict;
+                        actuator.commit_ensemble(&e, r.min_accuracy);
+                        // Dispatch every member; the logical latency is
+                        // the slowest member's completion (the vote waits
+                        // for all ballots).
+                        let mut dispatched: Vec<(u64, usize, f64)> =
+                            Vec::with_capacity(e.len());
+                        for c in &e.members {
+                            actuator.note_arrival(c.model);
+                            let (vm_id, k) =
+                                route_best(&mut actuator.cluster, c.model, r.slo_ms)
+                                    .expect("free-slot gate admitted every member");
+                            dispatched.push((vm_id, c.model,
+                                             now + caps[c.model][k].service_s));
+                        }
+                        let max_i = dispatched
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| (a.1).2.total_cmp(&(b.1).2))
+                            .map(|(i, _)| i)
+                            .unwrap();
+                        let worst_done = dispatched[max_i].2;
+                        record(&mut rep, &mut lat_samples,
+                               (worst_done - now) * 1000.0, r.slo_ms, strict);
+                        rep.served_vm += 1;
+                        rep.served_by_model[dispatched[max_i].1] += 1;
+                        rep.ensemble_served += 1;
+                        rep.attained += 1; // the vote clears the floor by construction
+                        for (i, (vm_id, model, done)) in
+                            dispatched.into_iter().enumerate()
+                        {
+                            let primary = i == max_i;
+                            completions.schedule_at(done, Completion {
+                                vm_id,
+                                model,
+                                done,
+                                slo_ms: r.slo_ms,
+                                arrival: now,
+                                strict,
+                                // The one attainment credit rides the
+                                // primary; shadows book nothing.
+                                floor_ok: primary,
+                                requeued: false,
+                                ensemble: true,
+                                lat_idx: if primary {
+                                    lat_samples.len() - 1
+                                } else {
+                                    usize::MAX
+                                },
+                            });
+                        }
+                        continue;
+                    }
+                }
+            }
             // Model-less mode resolves the variant NOW through the
             // actuator's plane (load-adaptive ladder); other assignments
             // use the precomputed table.
@@ -465,6 +607,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                                 arrival: now,
                                 strict,
                                 floor_ok,
+                                requeued: false,
                             });
                         }
                     }
@@ -479,7 +622,18 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                 if floor_ok {
                     rep.attained += 1;
                 }
-                completions.schedule_at(done, Completion { vm_id, model: m });
+                completions.schedule_at(done, Completion {
+                    vm_id,
+                    model: m,
+                    done,
+                    slo_ms: r.slo_ms,
+                    arrival: now,
+                    strict,
+                    floor_ok,
+                    requeued: false,
+                    ensemble: false,
+                    lat_idx: lat_samples.len() - 1,
+                });
             } else {
                 // Overflow: the actuator's serverless valve (shared with
                 // the live backend) sizes, cold-starts and bills the
@@ -511,6 +665,75 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             }
         } else {
             // --- scheduler tick (1 Hz)
+            // Spot reclaims land at tick granularity: cancel in-flight
+            // work that cannot finish inside the reclaim notice, reverse
+            // its dispatch-time booking exactly, requeue it once (with
+            // its original arrival) or count it preempted, then drain
+            // the victim. Work finishing within the notice completes
+            // naturally through the Draining state.
+            for (ev, victims) in actuator.process_reclaims(now) {
+                rep.reclaims += victims.len() as u64;
+                let notice = palette
+                    .iter()
+                    .find(|t| t.name == ev.type_name)
+                    .and_then(|t| t.spot)
+                    .map(|s| s.notice_s)
+                    .unwrap_or(0.0);
+                let deadline = now + notice;
+                for id in victims {
+                    while let Some(c) = completions.cancel_latest_matching(
+                        |c: &Completion| c.vm_id == id && c.done > deadline,
+                    ) {
+                        actuator.cluster.release(id, now);
+                        if c.lat_idx == usize::MAX {
+                            continue; // ensemble shadow: nothing booked
+                        }
+                        rep.served_vm -= 1;
+                        rep.served_by_model[c.model] -= 1;
+                        if c.ensemble {
+                            rep.ensemble_served -= 1;
+                        }
+                        if c.floor_ok {
+                            rep.attained -= 1;
+                        }
+                        if lat_samples[c.lat_idx] > c.slo_ms {
+                            rep.violations -= 1;
+                            if c.strict {
+                                rep.violations_strict -= 1;
+                            } else {
+                                rep.violations_relaxed -= 1;
+                            }
+                        }
+                        lat_samples[c.lat_idx] = f64::NAN;
+                        if c.requeued {
+                            // Second reclaim: preempted, never requeued
+                            // again (preempted XOR dropped — the request
+                            // is billed exactly once).
+                            rep.preempted += 1;
+                            rep.violations += 1;
+                            if c.strict {
+                                rep.violations_strict += 1;
+                            } else {
+                                rep.violations_relaxed += 1;
+                            }
+                        } else {
+                            rep.requeued += 1;
+                            queues[c.model].push_back(Queued {
+                                slo_ms: c.slo_ms,
+                                arrival: c.arrival,
+                                strict: c.strict,
+                                // An ensemble retry serves one below-floor
+                                // member solo: never credit the floor.
+                                floor_ok: c.floor_ok && !c.ensemble,
+                                requeued: true,
+                            });
+                        }
+                    }
+                    if let Some(vm) = actuator.cluster.get_mut(id) {
+                        vm.drain(now);
+                    }
+                }
+            }
             // Expire queued requests past the wait timeout (queues are
             // FIFO by arrival, so only fronts can be stale). A dropped
             // request is by definition an SLO violation. Runs before the
@@ -617,7 +840,18 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                             if head.floor_ok {
                                 rep.attained += 1;
                             }
-                            completions.schedule_at(done, Completion { vm_id, model: m });
+                            completions.schedule_at(done, Completion {
+                                vm_id,
+                                model: m,
+                                done,
+                                slo_ms: head.slo_ms,
+                                arrival: head.arrival,
+                                strict: head.strict,
+                                floor_ok: head.floor_ok,
+                                requeued: head.requeued,
+                                ensemble: false,
+                                lat_idx: lat_samples.len() - 1,
+                            });
                         }
                         None => break,
                     }
@@ -648,9 +882,14 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
         .iter()
         .map(|(name, n)| (name.to_string(), *n))
         .collect();
-    // Conservation: every request is served exactly once or dropped.
+    // Unbooked (reclaim-cancelled) dispatches left NaN tombstones in the
+    // sample log; drop them before the stats see them.
+    lat_samples.retain(|x| !x.is_nan());
+    // Conservation: every request is served exactly once, dropped, or
+    // preempted — reclaim cancels reverse their booking exactly, so the
+    // identity holds (and is asserted) in release builds too.
     assert_eq!(
-        rep.served_vm + rep.served_lambda + rep.dropped,
+        rep.served_vm + rep.served_lambda + rep.dropped + rep.preempted,
         rep.requests,
         "request conservation violated ({}/{})",
         rep.scheme,
@@ -912,6 +1151,96 @@ mod tests {
         assert_eq!(a, b, "disabled hybrid must not perturb the engine");
         assert_eq!(b.served_fluid, 0);
         assert_eq!(b.fidelity_switches, 0);
+    }
+
+    #[test]
+    fn scripted_reclaims_requeue_once_and_conserve() {
+        use crate::cloud::{spot_twin, SpotSpec};
+        let reg = Registry::builtin();
+        let trace = generators::constant(20.0, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        // Zero-notice spot: every in-flight inference on a victim VM is
+        // past the deadline, so reclaims must actually cancel work.
+        let spec = SpotSpec { notice_s: 0.0, ..SpotSpec::market() };
+        let m4s = spot_twin(vm_type("m4.large").unwrap(), spec);
+        let cfg = SimConfig {
+            vm_types: vec![m4s],
+            preemption: Some(vec![
+                crate::cloud::PreemptionEvent {
+                    t: 120.0,
+                    type_name: m4s.name.to_string(),
+                    frac: 0.5,
+                },
+                crate::cloud::PreemptionEvent {
+                    t: 300.0,
+                    type_name: m4s.name.to_string(),
+                    frac: 1.0,
+                },
+            ]),
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("reactive").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        assert_eq!(
+            rep.served_vm + rep.served_lambda + rep.dropped + rep.preempted,
+            rep.requests,
+            "conservation with preemption"
+        );
+        assert!(rep.reclaims > 0, "scripted reclaims must fire");
+        assert!(rep.requeued > 0, "zero-notice reclaims must requeue in-flight work");
+        // Requeue-exactly-once: preempted requests never exceed requeues.
+        assert!(rep.preempted <= rep.requeued);
+        // The storm costs cheaper spot capacity, not correctness: the
+        // fleet rebuilds and serves the tail of the trace.
+        assert!(rep.served_vm > rep.requests / 2);
+    }
+
+    #[test]
+    fn inert_spot_palette_matches_on_demand_run() {
+        use crate::cloud::{spot_twin, SpotSpec};
+        let reg = Registry::builtin();
+        let trace = generators::constant(15.0, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let m4 = vm_type("m4.large").unwrap();
+        let run = |vm: &'static VmType| {
+            let mut scheme = scheduler::by_name("paragon").unwrap();
+            let cfg = SimConfig { vm_types: vec![vm], ..SimConfig::default() };
+            simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg)
+        };
+        let a = run(m4);
+        let mut b = run(spot_twin(m4, SpotSpec::inert()));
+        assert_eq!(b.reclaims, 0, "inert spot never preempts");
+        // Identical up to the type-name suffix in the procurement ledger.
+        for (name, _) in b.vms_by_type.iter_mut() {
+            *name = name.trim_end_matches(":spot").to_string();
+        }
+        assert_eq!(a, b, "inert spot must be bit-identical to on-demand");
+    }
+
+    #[test]
+    fn ensemble_mode_serves_floor_queries_and_conserves() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(20.0, 600);
+        let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, 7);
+        let mut scheme = scheduler::by_name("paragon").unwrap();
+        let cfg = SimConfig {
+            assignment: Assignment::ModelLess,
+            ensemble: 5,
+            ..SimConfig::default()
+        };
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+        assert_eq!(
+            rep.served_vm + rep.served_lambda + rep.dropped + rep.preempted,
+            rep.requests
+        );
+        assert!(rep.ensemble_served > 0, "floor tiers must trigger ensembles");
+        assert!(
+            rep.attainment_pct() > 95.0,
+            "ensembles must not cost attainment: {}%",
+            rep.attainment_pct()
+        );
+        let total: u64 = rep.served_by_model.iter().sum();
+        assert_eq!(total, rep.served_vm + rep.served_lambda);
     }
 
     #[test]

@@ -21,8 +21,23 @@ pub struct SimReport {
     /// Fidelity-governor mode switches over the run (hybrid runs only).
     pub fidelity_switches: u64,
     /// Requests dropped after exceeding the queue wait timeout
-    /// (`served_vm + served_lambda + dropped == requests` always holds).
+    /// (`served_vm + served_lambda + dropped + preempted == requests`
+    /// always holds).
     pub dropped: u64,
+    /// Requests lost to spot reclaims: in-flight work on a reclaimed VM is
+    /// re-queued exactly once within the notice window; a *second* reclaim
+    /// counts here instead (preempted XOR dropped — never both).
+    pub preempted: u64,
+    /// In-flight requests rescued off reclaimed VMs back into their queue
+    /// (each eventually re-serves, drops, or is preempted — `requeued` is
+    /// a flow count, not a conservation term).
+    pub requeued: u64,
+    /// Spot VMs actually reclaimed by preemption events over the run.
+    pub reclaims: u64,
+    /// Requests served by an ensemble fan-out (weighted-vote accuracy
+    /// booked instead of the primary member's; zero unless
+    /// `SimConfig::ensemble ≥ 2`).
+    pub ensemble_served: u64,
     pub lambda_cold_starts: u64,
     /// VMs launched per instance type over the run (heterogeneous fleets
     /// report their realized mix; single-type runs have one entry).
@@ -110,6 +125,10 @@ impl SimReport {
         self.served_fluid += o.served_fluid;
         self.fidelity_switches += o.fidelity_switches;
         self.dropped += o.dropped;
+        self.preempted += o.preempted;
+        self.requeued += o.requeued;
+        self.reclaims += o.reclaims;
+        self.ensemble_served += o.ensemble_served;
         self.lambda_cold_starts += o.lambda_cold_starts;
         self.floor_requests += o.floor_requests;
         self.attained += o.attained;
@@ -149,6 +168,10 @@ impl SimReport {
             ("served_fluid", (self.served_fluid as usize).into()),
             ("fidelity_switches", (self.fidelity_switches as usize).into()),
             ("dropped", (self.dropped as usize).into()),
+            ("preempted", (self.preempted as usize).into()),
+            ("requeued", (self.requeued as usize).into()),
+            ("reclaims", (self.reclaims as usize).into()),
+            ("ensemble_served", (self.ensemble_served as usize).into()),
             ("lambda_cold_starts", (self.lambda_cold_starts as usize).into()),
             ("vms_by_type", Json::Obj(
                 self.vms_by_type
@@ -241,8 +264,12 @@ mod tests {
             ..Default::default()
         };
         let b = SimReport {
-            requests: 40,
+            requests: 42,
             served_vm: 40,
+            preempted: 2,
+            requeued: 3,
+            reclaims: 1,
+            ensemble_served: 4,
             cost_vm: 0.5,
             peak_vms: 2,
             duration_s: 80.0,
@@ -251,9 +278,16 @@ mod tests {
             ..Default::default()
         };
         a.absorb_shard(&b);
-        assert_eq!(a.requests, 140);
+        assert_eq!(a.requests, 142);
         assert_eq!(a.served_vm, 130);
-        assert_eq!(a.served_vm + a.served_lambda + a.dropped, a.requests);
+        assert_eq!(a.preempted, 2);
+        assert_eq!(a.requeued, 3);
+        assert_eq!(a.reclaims, 1);
+        assert_eq!(a.ensemble_served, 4);
+        assert_eq!(
+            a.served_vm + a.served_lambda + a.dropped + a.preempted,
+            a.requests
+        );
         assert_eq!(a.peak_vms, 5, "shard peaks sum (upper bound)");
         assert_eq!(a.duration_s, 80.0, "slowest shard wins");
         assert_eq!(a.served_by_model, vec![60, 40, 30]);

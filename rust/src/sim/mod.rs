@@ -44,8 +44,19 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
         crate::scheduler::by_name(&cfg.scheme)
             .ok_or_else(|| anyhow::anyhow!("unknown scheme {}", cfg.scheme))?
     };
+    // An explicit reclaim trace overrides the seeded synthetic process the
+    // engine otherwise synthesizes from the palette's spot specs.
+    let preemption = match &cfg.preemption_trace {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading preemption trace {path:?}: {e}"))?;
+            Some(crate::cloud::spot::PreemptionProcess::parse_trace(&text)?
+                .into_events())
+        }
+        None => None,
+    };
     Ok(simulate(scheme.as_mut(), reg, &reqs, &trace.name, &SimConfig {
-        vm_types: cfg.vm_types.clone(),
+        vm_types: cfg.effective_vm_types(),
         assignment: cfg.assignment,
         seed: cfg.seed,
         warm_start: true,
@@ -56,5 +67,7 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
         } else {
             fidelity::FidelityConfig::default()
         },
+        preemption,
+        ensemble: cfg.ensemble,
     }))
 }

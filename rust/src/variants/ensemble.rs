@@ -1,0 +1,206 @@
+//! Ensemble serving: N cheap variants + weighted voting as an extra point
+//! on the cost–accuracy frontier.
+//!
+//! Cocktail's observation (and the paper's §II accuracy/cost envelope)
+//! is that an ensemble of cheap variants can deliver the accuracy of an
+//! expensive single model at lower cost: majority voting over K copies of
+//! a model with per-query accuracy `p` delivers `Σ_{j>K/2} C(K,j) p^j
+//! (1-p)^{K-j}`, which for p = 0.72, K = 3 already clears 80%. The
+//! variant plane exposes that as an *ensemble mode*: a model-less query
+//! may resolve to an [`EnsembleChoice`] — several member inferences whose
+//! weighted vote is the delivered answer — whenever the vote clears the
+//! accuracy floor at strictly lower cost than the cheapest single
+//! qualifying variant.
+//!
+//! Voting is weighted by member accuracy (the standard confidence proxy
+//! when per-query confidences are not simulated) and **ties count as
+//! wrong** — the conservative rule, so delivered accuracy is never
+//! overstated. Delivered accuracy flows through the same
+//! [`AccuracyUsage`](super::AccuracyUsage) ledgers as single-variant
+//! serving; `rust/tests/variant_conformance.rs` pins the closed form.
+
+use super::{VariantChoice, VariantSelector};
+
+/// Closed-form delivered accuracy (percent) of an accuracy-weighted
+/// majority vote over independent members with per-query accuracies
+/// `accs` (percent). Exact 2^N subset enumeration; ties go to wrong.
+pub fn ensemble_vote_accuracy(accs: &[f64]) -> f64 {
+    assert!(!accs.is_empty(), "empty ensemble");
+    let n = accs.len();
+    assert!(n <= 16, "ensemble too large for exact vote enumeration");
+    let p: Vec<f64> = accs.iter().map(|a| (a / 100.0).clamp(0.0, 1.0)).collect();
+    let total: f64 = accs.iter().sum();
+    let mut correct = 0.0;
+    for mask in 0u32..(1u32 << n) {
+        let mut prob = 1.0;
+        let mut weight = 0.0;
+        for i in 0..n {
+            if mask & (1 << i) != 0 {
+                prob *= p[i];
+                weight += accs[i];
+            } else {
+                prob *= 1.0 - p[i];
+            }
+        }
+        // Strict weight majority: a tie (e.g. a split pair) is wrong.
+        if weight * 2.0 > total {
+            correct += prob;
+        }
+    }
+    correct * 100.0
+}
+
+/// Pick the cheapest qualifying ensemble for a model-less query, or
+/// `None` when no ensemble beats the single pick.
+///
+/// Candidates are homogeneous ensembles — K copies of one SLO-feasible
+/// member whose solo accuracy is *below* the floor (members at or above
+/// the floor are the single pick's territory), K odd so the equal-weight
+/// vote cannot tie. A candidate qualifies when its vote accuracy clears
+/// the floor and its total per-query cost is strictly below the cheapest
+/// single variant that meets the floor. When the floor is infeasible even
+/// for single variants this returns `None`: ensembling cannot rescue an
+/// infeasible query, and the selector's latency-first fallback applies.
+pub fn select_ensemble(sel: &VariantSelector, min_accuracy: f64, slo_ms: f64,
+                       max_members: usize) -> Option<EnsembleChoice> {
+    if max_members < 3 || min_accuracy <= 0.0 {
+        return None;
+    }
+    let single = sel.select(min_accuracy, slo_ms);
+    if sel.accuracy_of(single.variant) < min_accuracy {
+        return None; // floor infeasible outright
+    }
+    let single_cost = sel.caps()[single.variant][single.vm_type_index].cost_per_query();
+    let mut best: Option<EnsembleChoice> = None;
+    for v in 0..sel.family().len() {
+        let acc = sel.accuracy_of(v);
+        if acc >= min_accuracy {
+            continue; // meets the floor alone: single-variant territory
+        }
+        let Some(t) = sel.feasible_type(v, slo_ms) else { continue };
+        let unit = sel.caps()[v][t].cost_per_query();
+        let mut k = 3;
+        while k <= max_members {
+            let cost = unit * k as f64;
+            if cost >= single_cost {
+                break; // larger K only costs more
+            }
+            let vote = ensemble_vote_accuracy(&vec![acc; k]);
+            if vote >= min_accuracy {
+                let member = VariantChoice {
+                    variant: v,
+                    model: sel.family().members[v],
+                    vm_type_index: t,
+                };
+                let cand = EnsembleChoice {
+                    members: vec![member; k],
+                    vote_accuracy: vote,
+                    cost_per_query: cost,
+                };
+                if best.as_ref().map_or(true, |b| cand.cost_per_query < b.cost_per_query) {
+                    best = Some(cand);
+                }
+                break;
+            }
+            k += 2;
+        }
+    }
+    best
+}
+
+/// A model-less query resolved to an ensemble: the member inferences to
+/// dispatch and the accuracy their weighted vote delivers. Serving
+/// backends dispatch every member (one logical request, K physical
+/// inferences) and record the *vote* accuracy against the floor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleChoice {
+    /// Member inferences (repeats allowed — homogeneous ensembles repeat
+    /// the same [`VariantChoice`]).
+    pub members: Vec<VariantChoice>,
+    /// Closed-form accuracy of the weighted vote, percent.
+    pub vote_accuracy: f64,
+    /// Summed per-query cost of all members on their chosen types.
+    pub cost_per_query: f64,
+}
+
+impl EnsembleChoice {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The member whose completion the serving backend records (all
+    /// members of a homogeneous ensemble are interchangeable).
+    pub fn primary(&self) -> VariantChoice {
+        self.members[0]
+    }
+
+    /// Deduplicated registry model indices across members (the models a
+    /// backend must hold capacity for to serve this ensemble).
+    pub fn distinct_models(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self.members.iter().map(|m| m.model).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+    use crate::models::Registry;
+    use crate::variants::VariantFamily;
+
+    fn selector() -> VariantSelector {
+        let reg = Registry::builtin();
+        let palette = [vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        VariantSelector::new(&reg, VariantFamily::full_pool(&reg), &palette)
+    }
+
+    #[test]
+    fn vote_accuracy_matches_closed_form() {
+        // Single member: the vote is the member.
+        assert!((ensemble_vote_accuracy(&[79.5]) - 79.5).abs() < 1e-9);
+        // 3 × 0.72 majority: p³ + 3p²(1-p) = 0.808704.
+        assert!((ensemble_vote_accuracy(&[72.0; 3]) - 80.8704).abs() < 1e-9);
+        // Even split ties are wrong: two coin flips only win together.
+        assert!((ensemble_vote_accuracy(&[50.0, 50.0]) - 25.0).abs() < 1e-9);
+        // Monotone: 5 members beat 3 for p > 0.5.
+        assert!(ensemble_vote_accuracy(&[72.0; 5]) > ensemble_vote_accuracy(&[72.0; 3]));
+    }
+
+    #[test]
+    fn select_builds_cheaper_ensemble_clearing_the_floor() {
+        let reg = Registry::builtin();
+        let s = selector();
+        let floor = 78.0;
+        let single = s.select(floor, 60_000.0);
+        let single_cost = s.caps()[single.variant][single.vm_type_index].cost_per_query();
+        let e = select_ensemble(&s, floor, 60_000.0, 5)
+            .expect("3×mobilenet_10 must beat resnet18 on cost at floor 78");
+        assert!(e.vote_accuracy >= floor, "vote {} under floor", e.vote_accuracy);
+        assert!(e.cost_per_query < single_cost,
+                "ensemble {} must undercut single {}", e.cost_per_query, single_cost);
+        assert_eq!(e.len() % 2, 1, "odd membership (no vote ties)");
+        assert_eq!(e.distinct_models().len(), 1, "homogeneous ensemble");
+        let member_acc = reg.models[e.primary().model].accuracy;
+        assert!(member_acc < floor, "members must sit below the floor solo");
+        // The closed form is what the choice carries.
+        let accs: Vec<f64> = e.members.iter().map(|m| s.accuracy_of(m.variant)).collect();
+        assert!((ensemble_vote_accuracy(&accs) - e.vote_accuracy).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_declines_when_ensembling_cannot_help() {
+        let s = selector();
+        // Disabled (max < 3) and floorless queries never ensemble.
+        assert!(select_ensemble(&s, 78.0, 60_000.0, 2).is_none());
+        assert!(select_ensemble(&s, 0.0, 60_000.0, 5).is_none());
+        // Floor infeasible even for singles: fall back to single routing.
+        assert!(select_ensemble(&s, 99.0, 60_000.0, 5).is_none());
+    }
+}

@@ -29,8 +29,10 @@
 //!   selector, so the sim engine, the fluid RL fleet and the live server
 //!   fleet produce the same variant mix for the same script.
 
+pub mod ensemble;
 pub mod plane;
 
+pub use ensemble::{ensemble_vote_accuracy, select_ensemble, EnsembleChoice};
 pub use plane::{AccuracyUsage, VariantPlane};
 
 use crate::cloud::pricing::VmType;

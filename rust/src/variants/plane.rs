@@ -10,6 +10,7 @@
 //! `rust/tests/variant_conformance.rs` pins across the sim cluster, the
 //! fluid fleet and the dry-run server fleet.
 
+use super::ensemble::{select_ensemble, EnsembleChoice};
 use super::{VariantChoice, VariantFamily, VariantSelector};
 use crate::cloud::pricing::VmType;
 use crate::control::FleetView;
@@ -66,6 +67,9 @@ pub struct VariantPlane {
     pressure: f64,
     /// Family serving capacity (req/s) at the last refresh.
     capacity: f64,
+    /// Ensemble mode: maximum member count for
+    /// [`Self::plan_ensemble`] (0 = ensembles disabled).
+    ensemble_max: usize,
 }
 
 impl VariantPlane {
@@ -82,6 +86,7 @@ impl VariantPlane {
             last_refresh: 0.0,
             pressure: 0.0,
             capacity: 0.0,
+            ensemble_max: 0,
         }
     }
 
@@ -90,6 +95,19 @@ impl VariantPlane {
     pub fn with_ladder_cap(mut self, cap: usize) -> VariantPlane {
         self.selector = self.selector.with_ladder_cap(cap);
         self
+    }
+
+    /// Enable ensemble mode: model-less queries may resolve to ensembles
+    /// of up to `max_members` members (see
+    /// [`select_ensemble`](super::ensemble::select_ensemble)). 0 disables.
+    pub fn with_ensemble(mut self, max_members: usize) -> VariantPlane {
+        self.ensemble_max = max_members;
+        self
+    }
+
+    /// Maximum ensemble member count (0 = ensembles disabled).
+    pub fn ensemble_max(&self) -> usize {
+        self.ensemble_max
     }
 
     pub fn selector(&self) -> &VariantSelector {
@@ -190,6 +208,49 @@ impl VariantPlane {
         choice
     }
 
+    /// Plan (without booking) the cheapest qualifying ensemble for a
+    /// model-less query, or `None` when ensembles are disabled or no
+    /// ensemble beats the single pick. Pure: serving backends gate on
+    /// their own capacity (every member must be dispatchable *now*)
+    /// before committing, so the accuracy ledgers only ever see ensembles
+    /// that actually served.
+    pub fn plan_ensemble(&self, min_accuracy: f64, slo_ms: f64) -> Option<EnsembleChoice> {
+        if self.ensemble_max < 3 {
+            return None;
+        }
+        select_ensemble(&self.selector, min_accuracy, slo_ms, self.ensemble_max)
+    }
+
+    /// Book a served ensemble into the ledgers: one logical request at
+    /// the *vote* accuracy in the delivered-accuracy ledgers, K physical
+    /// member inferences in the mix and the pressure window.
+    pub fn commit_ensemble(&mut self, choice: &EnsembleChoice, min_accuracy: f64) {
+        self.window_routed += choice.len() as f64;
+        for m in &choice.members {
+            self.routed_by_variant[m.variant] += 1.0;
+        }
+        self.usage.routed += 1.0;
+        self.usage.acc_sum += choice.vote_accuracy;
+        if min_accuracy > 0.0 {
+            self.usage.floor_routed += 1.0;
+            if choice.vote_accuracy >= min_accuracy {
+                self.usage.floor_attained += 1.0;
+            }
+        }
+        let slot = &mut self.acc_delta[choice.primary().model];
+        slot.0 += choice.vote_accuracy;
+        slot.1 += 1.0;
+    }
+
+    /// [`Self::plan_ensemble`] + [`Self::commit_ensemble`] in one step —
+    /// for backends with no capacity gate (fluid mass routing).
+    pub fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
+                          -> Option<EnsembleChoice> {
+        let choice = self.plan_ensemble(min_accuracy, slo_ms)?;
+        self.commit_ensemble(&choice, min_accuracy);
+        Some(choice)
+    }
+
     /// Drain the per-model delivered-accuracy deltas accumulated since the
     /// last call: `(Σ weighted accuracy, routed weight)` per registry
     /// model — the [`DemandSnapshot`](crate::control::DemandSnapshot)
@@ -235,6 +296,21 @@ mod tests {
         assert!((sums[b.model] - 82.0).abs() < 1e-9);
         let (sums2, _) = p.drain_acc();
         assert!(sums2.iter().all(|&x| x == 0.0), "deltas must drain");
+    }
+
+    #[test]
+    fn ensemble_routing_books_vote_accuracy() {
+        let mut p = plane().with_ensemble(5);
+        let e = p.route_ensemble(78.0, 60_000.0).expect("qualifying ensemble");
+        let u = p.usage();
+        assert_eq!(u.routed, 1.0, "one logical request");
+        assert!((u.mean_accuracy() - e.vote_accuracy).abs() < 1e-12);
+        assert_eq!(u.floor_routed, 1.0);
+        assert_eq!(u.floor_attained, 1.0, "vote must clear the floor");
+        assert_eq!(p.mix()[e.primary().variant], e.len() as f64,
+                   "K physical inferences land in the mix");
+        // Ensembles stay off unless enabled.
+        assert!(plane().plan_ensemble(78.0, 60_000.0).is_none());
     }
 
     #[test]

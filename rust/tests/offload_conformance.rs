@@ -35,6 +35,7 @@ fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64) -> &'static VmTyp
         speed,
         boot_mean_s: boot_s,
         boot_jitter_s: 0.0,
+        spot: None,
     }))
 }
 

@@ -1,0 +1,398 @@
+//! Preemption conformance: spot reclaims behave identically on all three
+//! [`FleetActuator`] backends.
+//!
+//! - The same scripted [`PreemptionProcess`] — spot spawns, a mid-boot
+//!   partial reclaim, a full storm — produces equivalent capacity,
+//!   reclaim-counter and spot-view trajectories on the sim
+//!   `ClusterActuator`, the RL `FluidFleet` and the dry-run `ServerFleet`
+//!   (zero-jitter palette so boot transitions are deterministic), with
+//!   matching sim↔live billing.
+//! - Property (het_equivalence style): a palette whose spot entries have
+//!   interruption rate 0 is *bit-for-bit* indistinguishable from the
+//!   equivalent on-demand palette — identical `SimReport`s through the
+//!   engine (serial and sharded, T ∈ {1,2,4,8}) and identical fleet
+//!   trajectories on the fluid and live backends, modulo the `:spot` name
+//!   suffix. The spot plane is strictly additive.
+//! - Regression: a request in flight on a reclaimed replica that would
+//!   *also* time out is counted exactly once — preempted XOR dropped,
+//!   one violation, never double-billed.
+
+use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::cloud::{spot_twin, PreemptionEvent, PreemptionProcess, SpotSpec};
+use paragon::control::{ClusterActuator, FleetActuator, FleetView, FluidFleet,
+                       ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::prop_assert;
+use paragon::scheduler::Action;
+use paragon::sim::{simulate, simulate_sharded, SimConfig, SimReport};
+use paragon::trace::{generators, synthesize_requests, WorkloadKind};
+use paragon::util::prop::check;
+use paragon::util::rng::Pcg;
+
+/// Leak a zero-jitter instance type so every backend boots at exactly the
+/// mean latency (the sim cluster normally samples jitter per spawn).
+fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64,
+             spot: Option<SpotSpec>) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        vcpus: 2,
+        mem_gb: 8.0,
+        price: VmPrice { hourly_usd: hourly },
+        speed,
+        boot_mean_s: boot_s,
+        boot_jitter_s: 0.0,
+        spot,
+    }))
+}
+
+/// Comparable capacity summary with spot-twin names normalized, so an
+/// inert-spot fleet and its on-demand double fingerprint identically.
+fn fingerprint(v: &FleetView) -> Vec<(usize, String, usize, usize)> {
+    v.subfleets()
+        .iter()
+        .map(|s| {
+            let name = s.vm_type.name.strip_suffix(":spot")
+                .unwrap_or(s.vm_type.name);
+            (s.model, name.to_string(), s.running, s.booting)
+        })
+        .collect()
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+}
+
+#[test]
+fn same_preemption_script_same_reclaim_trajectories_on_all_backends() {
+    let reg = Registry::builtin();
+    // Zero-notice spot spec: with no in-flight work to rescue, the notice
+    // window is irrelevant and reclaims settle at the event tick.
+    let spec = SpotSpec { notice_s: 0.0, ..SpotSpec::market() };
+    let od = leak_type("pre.od", 0.10, 1.0, 100.0, None);
+    let sp = leak_type("pre.sp", 0.10, 1.0, 60.0, Some(spec));
+    let palette = vec![od, sp];
+    let model = 3; // resnet18 (FluidFleet is single-model)
+
+    // The scripted storm: a partial reclaim lands while the spot sub-fleet
+    // is still BOOTING (victim selection must prefer boots everywhere),
+    // then a full reclaim wipes the running survivors. The on-demand
+    // sub-fleet must never be touched.
+    let script = PreemptionProcess::from_events(vec![
+        PreemptionEvent { t: 30.0, type_name: sp.name.to_string(), frac: 0.5 },
+        PreemptionEvent { t: 80.0, type_name: sp.name.to_string(), frac: 1.0 },
+    ]);
+
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    let mut fluid = FluidFleet::with_valve(&reg, model, palette.clone());
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 100,
+        ..ServerFleetConfig::default()
+    });
+    for b in [&mut sim as &mut dyn FleetActuator, &mut fluid, &mut live] {
+        b.install_preemption(script.clone());
+    }
+
+    let mut reclaim_traj: Vec<Vec<usize>> = vec![Vec::new(); 3];
+    let mut cost_traj: Vec<Vec<f64>> = vec![Vec::new(); 2]; // sim, live
+    for t in 0..120usize {
+        let now = t as f64;
+        let each = |b: &mut dyn FleetActuator| {
+            if t == 0 {
+                b.apply(&Action::Spawn { model, vm_type: od, count: 2 }, now);
+                b.apply(&Action::Spawn { model, vm_type: sp, count: 4 }, now);
+            }
+            b.advance(now);
+        };
+        each(&mut sim);
+        each(&mut fluid);
+        each(&mut live);
+
+        let views = [sim.view(), fluid.view(), live.view()];
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[1]),
+                   "sim/fluid capacity diverged at t={t}");
+        assert_eq!(fingerprint(&views[0]), fingerprint(&views[2]),
+                   "sim/live capacity diverged at t={t}");
+        for (v, w) in views.iter().skip(1).zip([&views[0], &views[0]]) {
+            assert_eq!(v.spot.spot_vms, w.spot.spot_vms,
+                       "spot sub-fleet count diverged at t={t}");
+            assert_eq!(v.spot.reclaims_tick, w.spot.reclaims_tick,
+                       "per-tick reclaim count diverged at t={t}");
+            assert_eq!(v.spot.reclaims_total, w.spot.reclaims_total,
+                       "total reclaim count diverged at t={t}");
+        }
+        let backends: [&dyn FleetActuator; 3] = [&sim, &fluid, &live];
+        for (traj, b) in reclaim_traj.iter_mut().zip(backends) {
+            traj.push(b.reclaims_total());
+        }
+        cost_traj[0].push(sim.cluster.total_cost(now));
+        cost_traj[1].push(live.total_cost(now));
+    }
+
+    assert_eq!(reclaim_traj[0], reclaim_traj[1], "sim/fluid reclaim trajectories");
+    assert_eq!(reclaim_traj[0], reclaim_traj[2], "sim/live reclaim trajectories");
+    // The storm actually landed as scripted: 2 of 4 booting spot VMs at
+    // t=30, the remaining 2 at t=80, on-demand capacity intact.
+    let total = *reclaim_traj[0].last().unwrap();
+    assert_eq!(total, 4, "script must reclaim the whole spot sub-fleet");
+    assert_eq!(reclaim_traj[0][29], 0);
+    assert_eq!(reclaim_traj[0][30], 2, "partial reclaim fires at t=30");
+    assert_eq!(reclaim_traj[0][79], 2);
+    assert_eq!(reclaim_traj[0][80], 4, "full reclaim fires at t=80");
+    let end = sim.view();
+    assert_eq!(end.spot.spot_vms, 0, "no spot capacity survives the storm");
+    assert_eq!(end.spot.price_mult, 1.0, "empty spot fleet reads par pricing");
+    assert_eq!(end.running_typed(model, od), 2, "on-demand fleet untouched");
+
+    // Both per-VM-billing backends agree at every tick: identical launch,
+    // reclaim and termination times on the identical price trace.
+    for (t, (&a, &b)) in cost_traj[0].iter().zip(&cost_traj[1]).enumerate() {
+        assert!(close(a, b), "sim/live billing diverged at t={t}: {a} vs {b}");
+    }
+    assert!(cost_traj[0].last().unwrap() > &0.0);
+}
+
+/// Engine half of the inert-spot property: all-spot palettes with
+/// interruption rate 0 reproduce the on-demand run bit-for-bit, serially
+/// and under every shard width.
+#[test]
+fn inert_spot_palette_is_bit_for_bit_on_demand_in_the_engine() {
+    let reg = Registry::builtin();
+    let m4 = paragon::cloud::vm_type("m4.large").unwrap();
+    let c5 = paragon::cloud::vm_type("c5.large").unwrap();
+    let on_demand: Vec<&'static VmType> = vec![m4, c5];
+    let inert: Vec<&'static VmType> = vec![
+        spot_twin(m4, SpotSpec::inert()),
+        spot_twin(c5, SpotSpec::inert()),
+    ];
+
+    let trace = generators::generate_with(
+        paragon::trace::TraceKind::Berkeley, 11, 600, 40.0);
+    let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 11 ^ 0x51);
+    let cfg_for = |vm_types: &[&'static VmType]| SimConfig {
+        vm_types: vm_types.to_vec(),
+        seed: 11,
+        ..SimConfig::default()
+    };
+
+    // Reports differ only in the palette's type *names*; normalize the
+    // `:spot` suffix and demand full structural equality.
+    let normalize = |mut r: SimReport| -> SimReport {
+        for (name, _) in r.vms_by_type.iter_mut() {
+            if let Some(base) = name.strip_suffix(":spot") {
+                *name = base.to_string();
+            }
+        }
+        r
+    };
+
+    let mut s1 = paragon::scheduler::by_name("paragon").unwrap();
+    let a = simulate(s1.as_mut(), &reg, &reqs, "berkeley", &cfg_for(&on_demand));
+    let mut s2 = paragon::scheduler::by_name("paragon").unwrap();
+    let b = normalize(simulate(s2.as_mut(), &reg, &reqs, "berkeley",
+                               &cfg_for(&inert)));
+    assert_eq!(a, b, "inert spot palette perturbed the serial engine");
+    assert_eq!(a.preempted, 0);
+    assert_eq!(a.reclaims, 0);
+
+    let factory: &(dyn Fn() -> Box<dyn paragon::scheduler::Scheme> + Sync) =
+        &|| paragon::scheduler::by_name("paragon").unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        let sa = simulate_sharded(factory, &reg, &reqs, "berkeley",
+                                  &cfg_for(&on_demand), threads);
+        let sb = normalize(simulate_sharded(factory, &reg, &reqs, "berkeley",
+                                            &cfg_for(&inert), threads));
+        assert_eq!(sa, sb, "inert spot palette perturbed the engine at T={threads}");
+    }
+}
+
+/// One step of a random action+ingest script (generated once, replayed on
+/// both fleets under comparison).
+#[derive(Debug, Clone)]
+enum Op {
+    Spawn { count: usize },
+    Drain { count: usize },
+    Ingest { slo_ms: f64 },
+}
+
+fn random_script(rng: &mut Pcg, ticks: usize) -> Vec<(f64, Vec<Op>)> {
+    (0..ticks)
+        .map(|t| {
+            let mut ops = Vec::new();
+            if rng.f64() < 0.3 {
+                let count = 1 + rng.below(3) as usize;
+                if rng.f64() < 0.6 {
+                    ops.push(Op::Spawn { count });
+                } else {
+                    ops.push(Op::Drain { count });
+                }
+            }
+            for _ in 0..rng.below(4) {
+                let slo = if rng.f64() < 0.5 { 500.0 } else { 20_000.0 };
+                ops.push(Op::Ingest { slo_ms: slo });
+            }
+            (t as f64, ops)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_inert_spot_fleet_matches_on_demand_on_fluid_and_live_backends() {
+    let reg = Registry::builtin();
+    let od = leak_type("pre.pod", 0.10, 1.0, 90.0, None);
+    // The inert twin inherits everything (including zero boot jitter) and
+    // bills the identity path; only the name carries the `:spot` mark.
+    let sp = spot_twin(od, SpotSpec::inert());
+    let model = 3;
+    check("inert-spot-additive", 8, |rng| {
+        let ticks = 40 + rng.below(40) as usize;
+        let script = random_script(rng, ticks);
+
+        // Live backend: same script on [on-demand] vs [inert spot twin],
+        // the twin carrying a (vacuous, rate-0) synthesized interruption
+        // process — the full spot plumbing engaged, producing nothing.
+        let mk = |t: &'static VmType| {
+            ServerFleet::new(&reg, ServerFleetConfig {
+                vm_types: vec![t],
+                instance_cap: 50,
+                ..ServerFleetConfig::default()
+            })
+        };
+        let mut a = mk(od);
+        let mut b = mk(sp);
+        b.install_preemption(PreemptionProcess::synthesize(
+            &[sp], ticks as f64 + 500.0, rng.next_u64()));
+        let mut fa = FluidFleet::with_valve(&reg, model, vec![od]);
+        let mut fb = FluidFleet::with_valve(&reg, model, vec![sp]);
+        fb.install_preemption(PreemptionProcess::synthesize(
+            &[sp], ticks as f64 + 500.0, rng.next_u64()));
+
+        for (now, ops) in &script {
+            for op in ops {
+                match *op {
+                    Op::Spawn { count } => {
+                        a.apply(&Action::Spawn { model, vm_type: od, count }, *now);
+                        b.apply(&Action::Spawn { model, vm_type: sp, count }, *now);
+                        fa.apply(&Action::Spawn { model, vm_type: od, count }, *now);
+                        fb.apply(&Action::Spawn { model, vm_type: sp, count }, *now);
+                    }
+                    Op::Drain { count } => {
+                        a.apply(&Action::Drain { model, vm_type: od, count }, *now);
+                        b.apply(&Action::Drain { model, vm_type: sp, count }, *now);
+                        fa.apply(&Action::Drain { model, vm_type: od, count }, *now);
+                        fb.apply(&Action::Drain { model, vm_type: sp, count }, *now);
+                    }
+                    Op::Ingest { slo_ms } => {
+                        a.ingest(model, slo_ms, *now);
+                        b.ingest(model, slo_ms, *now);
+                    }
+                }
+            }
+            a.advance(*now);
+            b.advance(*now);
+            fa.advance(*now);
+            fb.advance(*now);
+            prop_assert!(
+                fingerprint(&a.view()) == fingerprint(&b.view()),
+                "live views diverged at t={now}"
+            );
+            prop_assert!(
+                fingerprint(&fa.view()) == fingerprint(&fb.view()),
+                "fluid views diverged at t={now}"
+            );
+        }
+        let end = ticks as f64 + 400.0;
+        a.advance(end);
+        b.advance(end);
+        let (ra, rb) = (a.report(end), b.report(end));
+        prop_assert!(ra.served == rb.served && ra.dropped == rb.dropped
+                     && ra.violations == rb.violations
+                     && ra.queued == rb.queued
+                     && ra.mean_wait_ms == rb.mean_wait_ms
+                     && ra.peak_replicas == rb.peak_replicas,
+                     "serving outcomes diverged:\n  a: {ra:?}\n  b: {rb:?}");
+        // Billing identity is exact (`SpotSpec::inert` is the f64 identity
+        // path), and the rate-0 process must never reclaim or requeue.
+        prop_assert!(ra.cost_usd == rb.cost_usd,
+                     "billing diverged: {} vs {}", ra.cost_usd, rb.cost_usd);
+        prop_assert!(rb.reclaims == 0 && rb.preempted == 0 && rb.requeued == 0,
+                     "rate-0 spot palette must never reclaim: {rb:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn reclaimed_and_timed_out_request_counts_exactly_once() {
+    let reg = Registry::builtin();
+    // Zero reclaim notice: *every* in-flight request on a victim replica
+    // is cancelled, and service on this type takes 0.48 s (resnet18 at
+    // speed 1.0), so cancelled work is always "inside the notice window".
+    let spec = SpotSpec { notice_s: 0.0, ..SpotSpec::market() };
+    let sp = leak_type("pre.xor", 0.10, 1.0, 60.0, Some(spec));
+    let model = 3;
+    let slots = {
+        // One replica's concurrency on this type, from the same capacity
+        // table the fleet uses.
+        let caps = paragon::control::palette_caps(&reg, &[sp]);
+        caps[model][0].slots_per_vm as u64
+    };
+    let mk = |timeout: f64| {
+        ServerFleet::new(&reg, ServerFleetConfig {
+            vm_types: vec![sp],
+            instance_cap: 10,
+            queue_timeout_s: timeout,
+            ..ServerFleetConfig::default()
+        })
+    };
+
+    // Arm 1 — requeued work expires in the queue: DROPPED, not preempted.
+    // The reclaim rescues the in-flight work back into the queue with its
+    // ORIGINAL arrival stamp; with no surviving capacity the timeout sweep
+    // is what resolves it, and it must resolve it exactly once. (Zero
+    // notice means the cancel deadline is the advance time itself, so the
+    // drive steps exactly onto the event.)
+    let mut f = mk(50.0);
+    f.install_preemption(PreemptionProcess::from_events(vec![
+        PreemptionEvent { t: 100.2, type_name: sp.name.to_string(), frac: 1.0 },
+    ]));
+    f.apply(&Action::Spawn { model, vm_type: sp, count: 1 }, 0.0);
+    f.advance(100.0);
+    for _ in 0..slots {
+        f.ingest(model, 10_000.0, 100.0); // in flight, done ≈ 100.48
+    }
+    f.advance(100.2); // reclaim: done 100.48 > deadline 100.2 ⇒ requeue
+    f.advance(200.0); // queue timeout at 150 resolves the rescued work
+    let r = f.report(200.0);
+    assert_eq!(r.requeued, slots, "every in-flight request rescued once");
+    assert_eq!(r.dropped, slots, "rescued work expired in the queue");
+    assert_eq!(r.preempted, 0, "dropped work must not ALSO count preempted");
+    assert_eq!(r.served, 0);
+    assert_eq!(r.violations, slots, "one violation per lost request, not two");
+    assert_eq!(r.reclaims, 1);
+
+    // Arm 2 — requeued work is re-dispatched onto fresh capacity, then a
+    // second reclaim kills it in flight: PREEMPTED, not dropped, even
+    // though its queue wait (60 s, SLO 10 s) had long blown the SLO.
+    let mut f = mk(300.0);
+    f.install_preemption(PreemptionProcess::from_events(vec![
+        PreemptionEvent { t: 100.2, type_name: sp.name.to_string(), frac: 1.0 },
+        PreemptionEvent { t: 160.5, type_name: sp.name.to_string(), frac: 1.0 },
+    ]));
+    f.apply(&Action::Spawn { model, vm_type: sp, count: 1 }, 0.0);
+    f.advance(100.0);
+    for _ in 0..slots {
+        f.ingest(model, 10_000.0, 100.0);
+    }
+    f.advance(100.2); // first reclaim: all requeued
+    f.apply(&Action::Spawn { model, vm_type: sp, count: 1 }, 100.2);
+    f.advance(160.4); // replacement ready at 160.2: rescued work dispatches
+    f.advance(160.5); // second reclaim: done 160.68 > deadline 160.5
+    f.advance(300.0);
+    let r = f.report(300.0);
+    assert_eq!(r.requeued, slots, "the one re-queue allowance, spent");
+    assert_eq!(r.preempted, slots, "second reclaim exhausts the allowance");
+    assert_eq!(r.dropped, 0, "preempted work must not ALSO count dropped");
+    assert_eq!(r.served, 0);
+    assert_eq!(r.violations, slots, "one violation per lost request, not two");
+    assert_eq!(r.reclaims, 2);
+}

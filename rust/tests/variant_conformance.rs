@@ -16,15 +16,23 @@
 //!   that moves the downgrade ladder.
 //! - Live end-to-end: `ServerFleet::ingest_modelless` serves a model-less
 //!   stream with full request conservation and 100% floor attainment.
+//! - Ensemble accounting: the weighted-vote delivered accuracy each
+//!   backend books through its [`AccuracyUsage`] ledger is exactly the
+//!   closed form [`ensemble_vote_accuracy`], and the accuracy floor stays
+//!   inviolable when ensemble members land on (reclaimed) spot capacity.
 
-use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::cloud::pricing::{vm_type, VmPrice, VmType};
+use paragon::cloud::{spot_twin, PreemptionEvent, SpotSpec};
 use paragon::control::{ClusterActuator, FleetActuator, FleetView, FluidFleet,
                        ServerFleet, ServerFleetConfig};
 use paragon::models::Registry;
 use paragon::prop_assert;
 use paragon::scheduler::Action;
+use paragon::sim::{simulate, Assignment, SimConfig};
+use paragon::trace::{generators, synthesize_requests, WorkloadKind};
 use paragon::util::prop::check;
-use paragon::variants::{VariantFamily, VariantPlane, VariantSelector};
+use paragon::variants::{ensemble_vote_accuracy, EnsembleChoice, VariantFamily,
+                        VariantPlane, VariantSelector};
 
 /// Leak a zero-jitter instance type so every backend boots at exactly the
 /// mean latency (the sim cluster normally samples jitter per spawn).
@@ -37,6 +45,7 @@ fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64) -> &'static VmTyp
         speed,
         boot_mean_s: boot_s,
         boot_jitter_s: 0.0,
+        spot: None,
     }))
 }
 
@@ -233,4 +242,121 @@ fn live_fleet_serves_modelless_stream_with_conservation() {
     assert!(v.accuracy.routed >= 80.0);
     let mix = fleet.variants().unwrap().mix().to_vec();
     assert!(mix[0] > 0.0 && mix[3] > 0.0, "both tiers must appear: {mix:?}");
+}
+
+#[test]
+fn ensemble_vote_books_closed_form_accuracy_on_all_backends() {
+    let reg = Registry::builtin();
+    let ta = leak_type("vens.m", 0.10, 1.0, 60.0);
+    let tb = leak_type("vens.c", 0.085, 1.25, 60.0);
+    let palette = vec![ta, tb];
+    let family = VariantFamily::full_pool(&reg);
+    let plane = || {
+        VariantPlane::new(&reg, family.clone(), &palette).with_ensemble(5)
+    };
+
+    let mut sim = ClusterActuator::new(&reg, palette.clone(), 100, 7);
+    sim.install_variants(plane());
+    let mut fluid = FluidFleet::with_family(&reg, &family, palette.clone());
+    fluid.install_variants(plane());
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: palette.clone(),
+        instance_cap: 100,
+        ..ServerFleetConfig::default()
+    });
+    live.install_variants(plane());
+
+    // Four floor-78 queries per backend: each must resolve to the same
+    // cheapest qualifying ensemble, and each backend's ledger must book
+    // the *vote* accuracy (one logical request), not the member accuracy.
+    let floor = 78.0;
+    let mut picks: Vec<Vec<EnsembleChoice>> = Vec::new();
+    let mut usages = Vec::new();
+    for b in [
+        &mut sim as &mut dyn FleetActuator,
+        &mut fluid as &mut dyn FleetActuator,
+        &mut live as &mut dyn FleetActuator,
+    ] {
+        let mut log = Vec::new();
+        for _ in 0..4 {
+            log.push(b.route_ensemble(floor, 60_000.0)
+                .expect("3×mobilenet_10 undercuts resnet18 at floor 78"));
+        }
+        b.advance(1.0);
+        usages.push(b.view().accuracy);
+        picks.push(log);
+    }
+    assert_eq!(picks[0], picks[1], "sim/fluid ensemble choices diverged");
+    assert_eq!(picks[0], picks[2], "sim/live ensemble choices diverged");
+
+    let e = &picks[0][0];
+    assert_eq!(e.len(), 3, "cheapest qualifying ensemble at floor 78 is K=3");
+    assert_eq!(e.distinct_models().len(), 1, "homogeneous ensemble");
+    assert_eq!(reg.models[e.primary().model].name, "mobilenet_10");
+    // The choice carries exactly the closed form of its members' accuracies
+    // — which for 3 × 72% is p³ + 3p²(1-p) = 80.8704.
+    let accs: Vec<f64> =
+        e.members.iter().map(|m| reg.models[m.model].accuracy).collect();
+    let vote = ensemble_vote_accuracy(&accs);
+    assert!((e.vote_accuracy - vote).abs() < 1e-12);
+    assert!((vote - 80.8704).abs() < 1e-9);
+
+    for u in &usages {
+        assert_eq!(u.routed, 4.0, "one logical request per ensemble query");
+        assert_eq!(u.floor_routed, 4.0);
+        assert_eq!(u.floor_attained, 4.0, "the vote clears the floor");
+        assert!((u.mean_accuracy() - vote).abs() < 1e-9,
+                "ledger must deliver the closed-form vote accuracy, got {}",
+                u.mean_accuracy());
+        assert!((u.attainment() - 1.0).abs() < 1e-12);
+    }
+    // All K physical member inferences land in every backend's mix.
+    for m in [
+        sim.variants().unwrap().mix(),
+        fluid.variants().unwrap().mix(),
+        live.variants().unwrap().mix(),
+    ] {
+        assert_eq!(m[e.primary().variant], 12.0, "4 ensembles × 3 members");
+    }
+}
+
+#[test]
+fn ensemble_floor_survives_spot_reclaims_in_the_engine() {
+    let reg = Registry::builtin();
+    let base = vm_type("m4.large").unwrap();
+    let spot = spot_twin(base, SpotSpec::market());
+    let trace = generators::constant(20.0, 900);
+    let reqs = synthesize_requests(&trace, WorkloadKind::AccuracyTiered, 7);
+    // Preemption storm: reclaim half the alive spot sub-fleet every 100 s,
+    // so ensemble members repeatedly land on — and are torn off —
+    // transient capacity while the run is in steady state.
+    let storm: Vec<PreemptionEvent> = (1..=8)
+        .map(|i| PreemptionEvent {
+            t: 100.0 * i as f64,
+            type_name: spot.name.to_string(),
+            frac: 0.5,
+        })
+        .collect();
+    let mut scheme = paragon::scheduler::by_name("paragon").unwrap();
+    let cfg = SimConfig {
+        vm_types: vec![base, spot],
+        assignment: Assignment::ModelLess,
+        ensemble: 5,
+        preemption: Some(storm),
+        ..SimConfig::default()
+    };
+    let rep = simulate(scheme.as_mut(), &reg, &reqs, "flat", &cfg);
+    // Extended conservation with the preemption lane.
+    assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped + rep.preempted,
+               rep.requests);
+    assert!(rep.reclaims > 0, "the storm must actually reclaim spot VMs");
+    assert!(rep.ensemble_served > 0,
+            "floor tiers must keep triggering ensembles under the storm");
+    assert!(rep.floor_requests > 0);
+    // The engine's free-slot gate falls back to the single-variant ladder
+    // whenever a reclaim removes ensemble headroom, so losing spot
+    // capacity degrades cost — never the delivered accuracy floor.
+    assert!(rep.attainment_pct() > 95.0,
+            "spot reclaims may cost capacity, never the floor: {}%",
+            rep.attainment_pct());
 }
