@@ -53,11 +53,12 @@ use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionProcess, SpotUsage};
 use crate::models::Registry;
 use crate::rl::baselines::EnvPolicy;
-use crate::rl::env::{decode_action, ObsLayout, ObsSignals};
+use crate::rl::env::{decode_action, decode_action_joint, JointObsLayout, ObsLayout,
+                     ObsSignals};
 use crate::scheduler::{Action, LoadMonitor, ModelDemand, OffloadPolicy, SchedObs,
                        Scheme, TypeCap};
 use crate::util::stats::Ewma;
-use crate::variants::{AccuracyUsage, VariantChoice, VariantPlane};
+use crate::variants::{AccuracyUsage, VariantChoice, VariantFamily, VariantPlane};
 use std::collections::BTreeMap;
 
 /// One `(model, vm_type)` sub-fleet in a [`FleetView`] snapshot.
@@ -434,6 +435,11 @@ pub struct ControlLoop {
     /// variant plane (0.9/0.1 EWMA; 0 until something routes) — the
     /// tick_policy counterpart of the per-model EWMAs above.
     recent_acc: f64,
+    /// Per-variant recent routed share of the driven family's arrivals
+    /// (the joint env's 0.8/0.2 EWMA) — the dynamic half of the joint
+    /// observation's variant block, maintained by
+    /// [`Self::tick_policy_joint`]. Lazily sized to the family.
+    joint_routed: Vec<f64>,
     /// Cached demand table handed to schemes each tick. The static fields
     /// (`model`, `service_s`, `slots_per_vm`, `types`) are filled once at
     /// construction; `tick_scheme` refreshes only the per-tick signals
@@ -470,6 +476,7 @@ impl ControlLoop {
             recent_lambda: 0.0,
             recent_viol: 0.0,
             recent_acc: 0.0,
+            joint_routed: Vec::new(),
             demands,
         }
     }
@@ -630,6 +637,102 @@ impl ControlLoop {
         }
         a
     }
+
+    /// One 1 Hz control tick of a *joint* `(variant, vm_type, delta,
+    /// offload)` policy over a whole model family: renders the actuator's
+    /// state in the exact [`JointObsLayout`] the fluid
+    /// [`VariantServeEnv`](crate::rl::variant_env::VariantServeEnv) trains
+    /// against, so one trained joint policy actuates the fluid env, the
+    /// sim cluster and the live server fleet tick-for-tick — the joint
+    /// analogue of [`Self::tick_policy`], and the serving side of the
+    /// paper's self-managed loop.
+    ///
+    /// Same ordering contract as `tick_policy` (advance first, so boots
+    /// land before the policy observes); the demand/rate signals are
+    /// summed over the family's members, the per-variant routed shares
+    /// follow the joint env's 0.8/0.2 EWMA from the snapshot's
+    /// variant-plane deltas, and the decoded action lands on member `v`'s
+    /// `(vm_type)` sub-fleet (~5% of the family's running fleet, min 1)
+    /// with the offload component set on the fleet's valve. Returns the
+    /// joint action id.
+    pub fn tick_policy_joint(&mut self, policy: &mut dyn EnvPolicy,
+                             layout: &JointObsLayout, family: &VariantFamily,
+                             actuator: &mut dyn FleetActuator, now: f64) -> usize {
+        let nv = layout.n_variants();
+        let nt = layout.n_types();
+        assert_eq!(family.members.len(), nv, "family/layout size mismatch");
+        if self.joint_routed.len() != nv {
+            self.joint_routed = vec![0.0; nv];
+        }
+        actuator.advance(now);
+        let snap = actuator.demand();
+        let arrived: u64 = family
+            .members
+            .iter()
+            .map(|&m| snap.arrivals.get(m).copied().unwrap_or(0))
+            .sum();
+        self.monitor.on_arrivals(arrived);
+        self.monitor.tick();
+        let offl: f64 = family
+            .members
+            .iter()
+            .map(|&m| snap.offloaded.get(m).copied().unwrap_or(0.0))
+            .sum();
+        let viol: u64 = family
+            .members
+            .iter()
+            .map(|&m| snap.violations.get(m).copied().unwrap_or(0))
+            .sum();
+        let queued: usize = family
+            .members
+            .iter()
+            .map(|&m| snap.queued.get(m).copied().unwrap_or(0))
+            .sum();
+        let share = |x: f64| if arrived > 0 { x / arrived as f64 } else { 0.0 };
+        self.recent_lambda = 0.9 * self.recent_lambda + 0.1 * share(offl);
+        self.recent_viol = 0.9 * self.recent_viol + 0.1 * share(viol as f64);
+        for (v, &m) in family.members.iter().enumerate() {
+            let routed = snap.acc_routed.get(m).copied().unwrap_or(0.0);
+            self.joint_routed[v] = 0.8 * self.joint_routed[v] + 0.2 * share(routed);
+        }
+        let view = actuator.view();
+        let mut running = vec![vec![0u32; nt]; nv];
+        let mut booting = vec![vec![0u32; nt]; nv];
+        for (v, fam) in layout.families.iter().enumerate() {
+            let model = family.members[v];
+            for (k, c) in fam.iter().enumerate() {
+                running[v][k] = view.running_typed(model, c.vm_type) as u32;
+                booting[v][k] = view.booting_typed(model, c.vm_type) as u32;
+            }
+        }
+        let signals = ObsSignals {
+            t_s: now,
+            rate_now: arrived as f64,
+            rate_ewma: self.monitor.rate_ewma(),
+            rate_pred: self
+                .monitor
+                .rate_pred(layout.families[0][0].vm_type.boot_mean_s / 2.0),
+            peak_to_median: self.monitor.peak_to_median(),
+            queue: queued as f64,
+            lambda_share: self.recent_lambda,
+            viol_share: self.recent_viol,
+            strict_share: 0.5,
+        };
+        let obs = layout.render(&signals, &running, &booting, &self.joint_routed);
+        let a = policy.act(&obs);
+        let (v, k, delta, offload) = decode_action_joint(a, nt, nv);
+        actuator.set_offload(offload);
+        let total: u32 = running.iter().flatten().sum();
+        let step = ((total as f64 * 0.05).ceil() as usize).max(1);
+        let model = family.members[v];
+        let vm_type = layout.families[v][k].vm_type;
+        if delta > 0 {
+            actuator.apply(&Action::Spawn { model, vm_type, count: step }, now);
+        } else if delta < 0 {
+            actuator.apply(&Action::Drain { model, vm_type, count: step }, now);
+        }
+        a
+    }
 }
 
 #[cfg(test)]
@@ -726,5 +829,72 @@ mod tests {
         let v = FleetView::empty(0.0);
         assert_eq!(v.total_alive(), 0);
         assert_eq!(v.utilization(0), 1.0);
+    }
+
+    /// Scripted joint policy: always emits one fixed action id, recording
+    /// the observation width it was shown.
+    struct FixedJointPolicy {
+        action: usize,
+        seen_obs_len: usize,
+    }
+
+    impl EnvPolicy for FixedJointPolicy {
+        fn name(&self) -> &'static str {
+            "fixed-joint"
+        }
+        fn act(&mut self, obs: &[f32]) -> usize {
+            self.seen_obs_len = obs.len();
+            self.action
+        }
+    }
+
+    #[test]
+    fn joint_tick_renders_joint_layout_and_lands_on_the_member() {
+        use crate::cloud::pricing::vm_type;
+        use crate::rl::env::encode_action_joint;
+        use crate::variants::{family_caps, VariantFamily};
+        let reg = Registry::builtin();
+        let palette = vec![vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        let family = VariantFamily::from_members(&reg, "trio", vec![0, 3, 6]);
+        let layout = crate::rl::env::JointObsLayout::new(
+            family_caps(&reg, &family, &palette),
+            family.members.iter().map(|&m| reg.models[m].accuracy).collect(),
+            40.0,
+            200.0,
+        );
+        let mut cl = ControlLoop::new(&reg, palette);
+        // Spawn on (variant 2, type 1): must reach the actuator as a typed
+        // action on family member 2's model id and palette entry 1.
+        let mut policy = FixedJointPolicy {
+            action: encode_action_joint(2, 1, 1, 0, 2),
+            seen_obs_len: 0,
+        };
+        let mut mock = MockActuator {
+            applied: Vec::new(),
+            arrivals: vec![40; reg.len()],
+            view: FleetView::empty(0.0),
+        };
+        let a = cl.tick_policy_joint(&mut policy, &layout, &family, &mut mock, 1.0);
+        assert_eq!(a, encode_action_joint(2, 1, 1, 0, 2));
+        assert_eq!(policy.seen_obs_len, layout.obs_dim(),
+                   "policy must see the joint observation layout");
+        assert_eq!(mock.applied.len(), 1);
+        match &mock.applied[0].1 {
+            Action::Spawn { model, vm_type, count } => {
+                assert_eq!(*model, family.members[2]);
+                assert_eq!(vm_type.name, "c5.large");
+                assert_eq!(*count, 1, "empty fleet steps by the 1-VM minimum");
+            }
+            other => panic!("expected a spawn, got {other:?}"),
+        }
+        // A no-delta action must not touch the fleet.
+        let mut hold = FixedJointPolicy {
+            action: encode_action_joint(0, 0, 0, 1, 2),
+            seen_obs_len: 0,
+        };
+        mock.applied.clear();
+        mock.arrivals = vec![40; reg.len()];
+        cl.tick_policy_joint(&mut hold, &layout, &family, &mut mock, 2.0);
+        assert!(mock.applied.is_empty(), "delta 0 must apply nothing");
     }
 }

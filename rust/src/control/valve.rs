@@ -70,6 +70,10 @@ pub struct ServerlessValve {
     fluid_fns: Vec<LambdaFn>,
     /// Warm pools per `(model, memory bucket)` deployment.
     pools: BTreeMap<(usize, u32), WarmPool>,
+    /// Fluid-path deployments sized per `(model, SLO bits)` — the
+    /// variant-plane path ([`Self::absorb_for_slo`]), which sizes by the
+    /// routed variant's own profile instead of the family default.
+    sized_fns: BTreeMap<(usize, u64), LambdaFn>,
     usage: LambdaUsage,
     /// Per-model offloads since the last [`Self::drain_offloaded`] call.
     offloaded_delta: Vec<f64>,
@@ -88,6 +92,7 @@ impl ServerlessValve {
             policy: OffloadPolicy::None,
             fluid_fns,
             pools: BTreeMap::new(),
+            sized_fns: BTreeMap::new(),
             usage: LambdaUsage::default(),
             offloaded_delta: vec![0.0; reg.len()],
         }
@@ -131,6 +136,29 @@ impl ServerlessValve {
     /// Returns the billed cost.
     pub fn absorb(&mut self, model: usize, mass: f64) -> f64 {
         let cost = mass * self.fluid_fns[model].invoke_cost(false) * 1.05;
+        self.usage.served += mass;
+        self.usage.cost_usd += cost;
+        self.offloaded_delta[model] += mass;
+        cost
+    }
+
+    /// Fluid absorption, sized like the discrete path: bill `mass`
+    /// requests of `model` at the warm price of the deployment
+    /// [`Self::invoke`] would pick for `slo_ms` (`lambda_for_slo`,
+    /// max-memory fallback; cached per `(model, SLO)`), with the same 5%
+    /// cold-start premium as [`Self::absorb`]. Model-less traffic routed
+    /// across a variant ladder carries heterogeneous service profiles —
+    /// sizing by the *routed* variant fixes the over/under-billing a
+    /// family-default deployment causes (over-sized for relaxed queries,
+    /// under-sized for strict ones).
+    pub fn absorb_for_slo(&mut self, model: usize, slo_ms: f64, mass: f64) -> f64 {
+        let key = (model, slo_ms.to_bits());
+        if !self.sized_fns.contains_key(&key) {
+            let m = &self.reg.models[model];
+            let f = m.lambda_for_slo(slo_ms).unwrap_or_else(|| m.lambda_at(3.0));
+            self.sized_fns.insert(key, f);
+        }
+        let cost = mass * self.sized_fns[&key].invoke_cost(false) * 1.05;
         self.usage.served += mass;
         self.usage.cost_usd += cost;
         self.offloaded_delta[model] += mass;
@@ -194,6 +222,33 @@ mod tests {
         assert!((c - 10.0 * unit).abs() < 1e-12);
         assert_eq!(v.usage().served, 10.0);
         assert_eq!(v.usage().cold_starts, 0, "fluid path tracks no pools");
+    }
+
+    #[test]
+    fn slo_sized_absorb_matches_legacy_at_default_sizing() {
+        // fluid_fns are sized for a 1000 ms SLO at construction; the
+        // SLO-aware path at that same SLO must bill identically.
+        let mut a = valve();
+        let mut b = valve();
+        let legacy = a.absorb(3, 7.0);
+        let sized = b.absorb_for_slo(3, 1000.0, 7.0);
+        assert!((legacy - sized).abs() < 1e-15, "{legacy} vs {sized}");
+        assert_eq!(b.usage().served, 7.0);
+        assert_eq!(b.drain_offloaded()[3], 7.0);
+    }
+
+    #[test]
+    fn slo_sized_absorb_prices_strict_above_relaxed() {
+        let reg = Registry::builtin();
+        let sq = reg.models.iter().position(|m| m.name == "squeezenet").unwrap();
+        let mut v = valve();
+        // A strict SLO forces a larger deployment than a relaxed one
+        // (see registry::lambda_for_slo_right_sizes_memory), and lambda
+        // invocation cost grows with memory — per-unit billing must
+        // reflect the routed request's own class, not a family default.
+        let strict = v.absorb_for_slo(sq, 150.0, 1.0);
+        let relaxed = v.absorb_for_slo(sq, 2000.0, 1.0);
+        assert!(strict > relaxed, "strict {strict} <= relaxed {relaxed}");
     }
 
     #[test]

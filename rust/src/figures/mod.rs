@@ -29,6 +29,12 @@
 //!           storm, a spot-hedged fleet undercuts all-on-demand, and
 //!           spot + ensemble serving meets the accuracy floors at strictly
 //!           lower cost with equal SLO attainment (this repo's extension)
+//!   fig_joint the self-managed loop closed in-repo: a native-PPO-trained
+//!           joint (variant, vm_type, delta, offload) policy served through
+//!           ControlLoop::tick_policy_joint on the dry-run ServerFleet
+//!           tracks its fluid-env decisions and beats the typed-greedy
+//!           projection on cost at equal-or-better SLO attainment (this
+//!           repo's tentpole extension)
 
 use crate::cloud::pricing::{default_vm_type, VmType, VM_TYPES};
 use crate::models::{Registry, SelectionPolicy};
@@ -906,6 +912,359 @@ pub fn fig_spot(reg: &Registry, cfg: &FigConfig) -> Json {
     ])
 }
 
+// ------------------------------------------------------------- fig joint
+
+/// [`TypedGreedyPolicy`](crate::rl::baselines::TypedGreedyPolicy)
+/// projected into the joint `(variant, vm_type, delta, offload)` space,
+/// pinned to one family member: it reads the base block plus member `v`'s
+/// per-type blocks of a [`JointObsLayout`](crate::rl::env::JointObsLayout)
+/// observation and emits the legacy action re-based onto `v`'s sub-space.
+/// The strongest single-variant embedding of the heuristic — what serving
+/// everything on one model costs when the policy cannot touch the family's
+/// other members.
+struct JointTypedGreedy {
+    inner: crate::rl::baselines::TypedGreedyPolicy,
+    v: usize,
+    n_types: usize,
+    n_variants: usize,
+}
+
+impl JointTypedGreedy {
+    fn new(layout: &crate::rl::env::JointObsLayout, v: usize) -> JointTypedGreedy {
+        JointTypedGreedy {
+            inner: crate::rl::baselines::TypedGreedyPolicy::new(&layout.families[v]),
+            v,
+            n_types: layout.n_types(),
+            n_variants: layout.n_variants(),
+        }
+    }
+}
+
+impl crate::rl::baselines::EnvPolicy for JointTypedGreedy {
+    fn name(&self) -> &'static str {
+        "typed-greedy"
+    }
+
+    fn act(&mut self, obs: &[f32]) -> usize {
+        use crate::rl::env::{act_dim, obs_dim_joint, BASE_OBS, PER_TYPE_OBS};
+        assert_eq!(obs.len(), obs_dim_joint(self.n_types, self.n_variants),
+                   "joint observation shape mismatch");
+        let start = BASE_OBS + PER_TYPE_OBS * self.n_types * self.v;
+        let mut legacy = Vec::with_capacity(BASE_OBS + PER_TYPE_OBS * self.n_types);
+        legacy.extend_from_slice(&obs[..BASE_OBS]);
+        legacy.extend_from_slice(&obs[start..start + PER_TYPE_OBS * self.n_types]);
+        // Joint ids are member-major: v's sub-space is one legacy space.
+        self.v * act_dim(self.n_types) + self.inner.act(&legacy)
+    }
+}
+
+/// Shared inputs of one live-backend arm of fig_joint.
+struct JointCtx<'a> {
+    reg: &'a Registry,
+    seed: u64,
+    trace: &'a crate::trace::Trace,
+    family: &'a crate::variants::VariantFamily,
+    palette: &'a [&'static VmType],
+    layout: &'a crate::rl::env::JointObsLayout,
+    /// `(accuracy floor %, share)` demand mix — the env's own tiers.
+    tiers: &'a [(f64, f64)],
+}
+
+/// Outcome of one live arm (cost window and SLO math match fig_live).
+struct JointLiveArm {
+    cost_usd: f64,
+    requests: f64,
+    violations: f64,
+    /// Share of floor-carrying requests routed to a floor-meeting variant.
+    attained_pct: f64,
+    /// 100 × (1 − violations/requests) on the live report.
+    slo_attain_pct: f64,
+    lambda_share: f64,
+    /// Per-tick decisions, when the arm's controller reports them.
+    actions: Vec<usize>,
+}
+
+/// Replay the joint env's model-less workload — identical Poisson arrival
+/// realization (the env's own Pcg substream) and accuracy-tier mix — into
+/// a dry-run [`ServerFleet`](crate::control::ServerFleet) with the variant
+/// plane installed, ticking `drive` once per second. The control seam of
+/// the self-managed loop: the same harness serves the trained joint
+/// policy, its typed-greedy projection and the procurement schemes.
+fn run_joint_live(
+    cx: &JointCtx,
+    drive: &mut dyn FnMut(&mut crate::control::ControlLoop,
+                          &mut crate::control::ServerFleet, f64) -> Option<usize>,
+) -> JointLiveArm {
+    use crate::control::{ControlLoop, FleetActuator, ServerFleet, ServerFleetConfig};
+    use crate::rl::VariantServeEnv;
+    use crate::scheduler::Action;
+    use crate::util::rng::Pcg;
+    use crate::variants::{VariantPlane, VariantSelector};
+
+    let mut fleet = ServerFleet::new(cx.reg, ServerFleetConfig {
+        vm_types: cx.palette.to_vec(),
+        ..ServerFleetConfig::default()
+    });
+    fleet.install_variants(VariantPlane::new(cx.reg, cx.family.clone(), cx.palette));
+    // Warm start mirroring VariantServeEnv::reset: each tier's
+    // pressure-free floor pick sized for its share of the first second's
+    // rate on the primary type.
+    let selector = VariantSelector::new(cx.reg, cx.family.clone(), cx.palette);
+    let rate0 = cx.trace.rates.first().copied().unwrap_or(0.0);
+    for &(floor, share) in cx.tiers {
+        let (_, relaxed_slo) = VariantServeEnv::tier_slos(floor);
+        let v = selector.select(floor, relaxed_slo).variant;
+        let c = &cx.layout.families[v][0];
+        let n = ((rate0 * share * c.service_s / c.slots_per_vm as f64).ceil() as usize)
+            .max(1);
+        fleet.apply(
+            &Action::Spawn { model: cx.family.members[v], vm_type: cx.palette[0], count: n },
+            -200.0,
+        );
+    }
+    fleet.advance(0.0);
+    // Billing window [0, duration) as in fig_live: warm boots and the
+    // post-run drain sit outside the comparison.
+    let cost_at_t0 = fleet.total_cost(0.0);
+    let mut cl = ControlLoop::new(cx.reg, cx.palette.to_vec());
+    let mut arrival_rng = Pcg::new(cx.seed, 0xe9f); // == the env's stream
+    let mut tier_rng = Pcg::new(cx.seed, 0x71e5);
+    let shares: Vec<f64> = cx.tiers.iter().map(|&(_, s)| s).collect();
+    let mut tier_count = vec![0u64; cx.tiers.len()];
+    let mut reqs = 0.0f64;
+    let mut floor_mass = 0.0f64;
+    let mut attained = 0.0f64;
+    let mut actions = Vec::new();
+    for t in 0..cx.trace.duration_s() {
+        let now = t as f64 + 1.0;
+        let n = arrival_rng.poisson(cx.trace.rates[t]);
+        for _ in 0..n {
+            let ti = tier_rng.weighted(&shares);
+            let (floor, _) = cx.tiers[ti];
+            let (strict_slo, relaxed_slo) = VariantServeEnv::tier_slos(floor);
+            // The env sends half of each sub-bound tier interactive:
+            // alternate deterministically for the same 50/50 SLO mix.
+            tier_count[ti] += 1;
+            let slo = if strict_slo < relaxed_slo && tier_count[ti] % 2 == 1 {
+                strict_slo
+            } else {
+                relaxed_slo
+            };
+            if let Some(c) = fleet.ingest_modelless(floor, slo, now) {
+                if floor > 0.0 {
+                    floor_mass += 1.0;
+                    if cx.layout.accuracies[c.variant] >= floor {
+                        attained += 1.0;
+                    }
+                }
+            }
+        }
+        reqs += n as f64;
+        if let Some(a) = drive(&mut cl, &mut fleet, now) {
+            actions.push(a);
+        }
+    }
+    let cost = fleet.total_cost(cx.trace.duration_s() as f64) - cost_at_t0;
+    let lambda = fleet.view().lambda;
+    fleet.set_offload(crate::scheduler::OffloadPolicy::None);
+    let end = cx.trace.duration_s() as f64 + 120.0;
+    fleet.advance(end); // drain the queue tail
+    let rep = fleet.report(end);
+    let reqs = reqs.max(1.0);
+    JointLiveArm {
+        cost_usd: cost + lambda.cost_usd,
+        requests: reqs,
+        violations: rep.violations as f64,
+        attained_pct: 100.0 * attained / floor_mass.max(1e-9),
+        slo_attain_pct: 100.0 * (1.0 - rep.violations as f64 / reqs),
+        lambda_share: lambda.served / reqs,
+        actions,
+    }
+}
+
+/// The self-managed loop, closed in-repo (this repo's tentpole
+/// extension): train the joint `(variant, vm_type, delta, offload)`
+/// policy with the *native* PPO trainer — pure Rust, zero XLA/Python
+/// artifacts — on the fluid
+/// [`VariantServeEnv`](crate::rl::VariantServeEnv), then serve the same
+/// trained net through
+/// [`ControlLoop::tick_policy_joint`](crate::control::ControlLoop::tick_policy_joint)
+/// against a dry-run [`ServerFleet`](crate::control::ServerFleet) fed the
+/// identical arrival realization and accuracy-tier mix. Compared on the
+/// live backend with the typed-greedy heuristic pinned to the
+/// top-accuracy member and with every procurement scheme ticked through
+/// the same control plane.
+pub fn fig_joint(reg: &Registry, cfg: &FigConfig) -> Json {
+    use crate::rl::baselines::EnvPolicy;
+    use crate::rl::{train_native, NativePpoAgent, NativePpoPolicy, NativeTrainConfig,
+                    VariantServeEnv};
+
+    let m4 = crate::cloud::pricing::vm_type("m4.large").unwrap();
+    let c5 = crate::cloud::pricing::vm_type("c5.large").unwrap();
+    let palette: Vec<&'static VmType> = vec![m4, c5];
+    let family = crate::variants::VariantFamily::from_members(reg, "trio", vec![0, 3, 6]);
+    let trace = generators::generate_with(TraceKind::Berkeley, cfg.seed,
+                                          cfg.duration_s, cfg.mean_rate);
+
+    // --- train in-repo: native PPO over the fluid joint env.
+    println!("\nFigure joint: in-repo-trained joint policy on the live backend \
+              (berkeley, trio family, m4.large+c5.large)");
+    hline(86);
+    let mut env = VariantServeEnv::new(reg, trace.clone(), family.clone(), cfg.seed,
+                                       palette.clone());
+    let mut agent = NativePpoAgent::new(env.obs_dim(), env.act_dim(), cfg.seed);
+    let tcfg = NativeTrainConfig { horizon: 512, epochs: 4, iterations: 12 };
+    let curve = train_native(&mut env, &mut agent, &tcfg);
+    for c in &curve {
+        println!("train iter {:>3}  reward/step {:>9.4}  loss {:>9.4}  entropy {:>7.4}",
+                 c.iter, c.mean_reward, c.loss, c.entropy);
+    }
+
+    // --- greedy evaluation on a fresh fluid env, recording decisions.
+    let mut policy = NativePpoPolicy::new(agent);
+    let mut fenv = VariantServeEnv::new(reg, trace.clone(), family.clone(), cfg.seed,
+                                        palette.clone());
+    let mut obs = fenv.reset();
+    let mut fluid_actions: Vec<usize> = Vec::new();
+    loop {
+        let a = policy.act(&obs);
+        fluid_actions.push(a);
+        let (next, r) = fenv.step(a);
+        if r.done {
+            break;
+        }
+        obs = next;
+    }
+    let f_reqs = fenv.episode_requests.max(1.0);
+    let fluid_slo_attain = 100.0 * (1.0 - fenv.episode_violations / f_reqs);
+    let fluid_attained =
+        100.0 * fenv.episode_attained / fenv.episode_floor_mass.max(1e-9);
+    let layout = fenv.obs_layout().clone();
+    let tiers = fenv.tiers().to_vec();
+    let cx = JointCtx {
+        reg,
+        seed: cfg.seed,
+        trace: &trace,
+        family: &family,
+        palette: &palette,
+        layout: &layout,
+        tiers: &tiers,
+    };
+
+    // --- the SAME trained net on the live backend via the joint tick.
+    let ppo_live = run_joint_live(&cx, &mut |cl, fleet, now| {
+        Some(cl.tick_policy_joint(&mut policy, &layout, &family, fleet, now))
+    });
+    // --- typed-greedy pinned to the top-accuracy member, same harness.
+    let mut typed = JointTypedGreedy::new(&layout, family.len() - 1);
+    let typed_live = run_joint_live(&cx, &mut |cl, fleet, now| {
+        Some(cl.tick_policy_joint(&mut typed, &layout, &family, fleet, now))
+    });
+    // --- every procurement scheme through the same control plane.
+    let mut scheme_arms: Vec<(&'static str, JointLiveArm)> = Vec::new();
+    for name in scheduler::ALL_SCHEMES {
+        let mut scheme = scheduler::by_name(name).expect("registered scheme");
+        let arm = run_joint_live(&cx, &mut |cl, fleet, now| {
+            fleet.advance(now); // tick_scheme leaves the clock to the caller
+            cl.tick_scheme(scheme.as_mut(), fleet, now);
+            None
+        });
+        scheme_arms.push((name, arm));
+    }
+    let (best_name, best_scheme) = scheme_arms
+        .iter()
+        .map(|(n, a)| (*n, a))
+        .min_by(|a, b| a.1.cost_usd.total_cmp(&b.1.cost_usd))
+        .expect("at least one scheme");
+
+    // Fluid-vs-live decision parity of the trained policy: the live tick
+    // at now = t+1 corresponds to the env's decision after step t.
+    let compared = ppo_live.actions.len().min(fluid_actions.len().saturating_sub(1));
+    let matches = (0..compared)
+        .filter(|&t| ppo_live.actions[t] == fluid_actions[t + 1])
+        .count();
+    let agreement = matches as f64 / compared.max(1) as f64;
+    let arrivals_match = (ppo_live.requests - f_reqs).abs() < 0.5;
+
+    // Dominance on the live backend (fig_variants' tolerance convention).
+    let eps_slo = 1.0;
+    let beats_typed = ppo_live.cost_usd < typed_live.cost_usd
+        && ppo_live.slo_attain_pct >= typed_live.slo_attain_pct - eps_slo;
+    let beats_best_scheme = ppo_live.cost_usd < best_scheme.cost_usd
+        && ppo_live.slo_attain_pct >= best_scheme.slo_attain_pct - eps_slo;
+
+    hline(96);
+    println!("{:<24} {:>10} {:>10} {:>10} {:>10} {:>10}", "arm", "cost $",
+             "slo att %", "floor att%", "lambda %", "requests");
+    hline(96);
+    println!("{:<24} {:>10.3} {:>10.2} {:>10.2} {:>10.2} {:>10.0}",
+             "native-ppo (fluid)", fenv.episode_cost, fluid_slo_attain,
+             fluid_attained, fenv.episode_lambda / f_reqs * 100.0, f_reqs);
+    let mut rows = vec![Json::obj(vec![
+        ("arm", "native-ppo-fluid".into()),
+        ("cost_usd", fenv.episode_cost.into()),
+        ("slo_attain_pct", fluid_slo_attain.into()),
+        ("attainment_pct", fluid_attained.into()),
+        ("requests", f_reqs.into()),
+    ])];
+    let mut push_live = |name: &str, a: &JointLiveArm| {
+        println!("{:<24} {:>10.3} {:>10.2} {:>10.2} {:>10.2} {:>10.0}", name,
+                 a.cost_usd, a.slo_attain_pct, a.attained_pct,
+                 a.lambda_share * 100.0, a.requests);
+        rows.push(Json::obj(vec![
+            ("arm", name.into()),
+            ("cost_usd", a.cost_usd.into()),
+            ("slo_attain_pct", a.slo_attain_pct.into()),
+            ("attainment_pct", a.attained_pct.into()),
+            ("lambda_share", a.lambda_share.into()),
+            ("violations", a.violations.into()),
+            ("requests", a.requests.into()),
+        ]));
+    };
+    push_live("native-ppo-live", &ppo_live);
+    push_live("typed-greedy-live", &typed_live);
+    for (name, arm) in &scheme_arms {
+        push_live(&format!("scheme-{name}"), arm);
+    }
+    println!("decision agreement (fluid vs live): {:.1}%  best scheme: {}",
+             agreement * 100.0, best_name);
+    println!("{:<24} {}", "native-ppo-live",
+             if beats_typed {
+                 "BEATS typed-greedy on cost at equal-or-better SLO attainment"
+             } else {
+                 "does not beat typed-greedy"
+             });
+
+    let curve_json: Vec<Json> = curve
+        .iter()
+        .map(|c| Json::obj(vec![
+            ("iter", c.iter.into()),
+            ("reward_per_step", c.mean_reward.into()),
+            ("loss", c.loss.into()),
+            ("entropy", c.entropy.into()),
+        ]))
+        .collect();
+    Json::obj(vec![
+        ("figure", "fig_joint".into()),
+        ("trace", TraceKind::Berkeley.name().into()),
+        ("family", Json::Arr(family.members.iter()
+            .map(|&m| Json::from(reg.models[m].name.as_str())).collect())),
+        ("palette", Json::Arr(palette.iter().map(|t| Json::from(t.name)).collect())),
+        ("rows", Json::Arr(rows)),
+        ("curve", Json::Arr(curve_json)),
+        ("summary", Json::obj(vec![
+            ("arrivals_match", Json::Bool(arrivals_match)),
+            ("decision_agreement", agreement.into()),
+            ("beats_typed_greedy", Json::Bool(beats_typed)),
+            ("beats_best_scheme", Json::Bool(beats_best_scheme)),
+            ("best_scheme", best_name.into()),
+            ("ppo_live_cost_usd", ppo_live.cost_usd.into()),
+            ("typed_live_cost_usd", typed_live.cost_usd.into()),
+            ("best_scheme_cost_usd", best_scheme.cost_usd.into()),
+        ])),
+    ])
+}
+
 // ----------------------------------------------------------------- fig 10
 
 /// Fig 10 (§V): PPO learning curve vs heuristics on the serving env.
@@ -1227,6 +1586,37 @@ mod tests {
                 "ensembles must serve floor queries: {j}");
         // Accuracy floors stay inviolable on every arm.
         assert!(get("spot+ensemble", "attainment_pct") > 95.0, "{j}");
+    }
+
+    #[test]
+    fn fig_joint_in_repo_policy_serves_live_and_beats_typed_greedy() {
+        let j = fig_joint(&reg(), &FigConfig::quick());
+        let summary = j.get("summary");
+        // Same Pcg substream on both backends ⇒ identical arrival counts.
+        assert_eq!(summary.get("arrivals_match").as_bool(), Some(true),
+                   "fluid and live arms must see the same arrivals: {j}");
+        // The live joint tick renders the env's own JointObsLayout, so the
+        // greedy net's live decisions track the fluid rollout. The floor
+        // is conservative: the two trajectories diverge wherever the
+        // discrete backend's fleet state does.
+        let agree = summary.get("decision_agreement").as_f64().unwrap();
+        assert!(agree >= 0.35,
+                "live joint ticks must track the fluid env's decisions \
+                 (agreement {agree}): {j}");
+        // The acceptance claim: the in-repo-trained joint policy beats the
+        // typed-greedy projection on cost at equal-or-better SLO
+        // attainment, on the live backend.
+        assert_eq!(summary.get("beats_typed_greedy").as_bool(), Some(true),
+                   "trained joint policy must dominate typed-greedy: {j}");
+        // Training really ran in-repo: a full, finite learning curve.
+        let curve = j.get("curve").as_arr().unwrap();
+        assert_eq!(curve.len(), 12);
+        for c in curve {
+            assert!(c.get("loss").as_f64().unwrap().is_finite(), "{j}");
+        }
+        // One row per arm: fluid + ppo-live + typed-live + every scheme.
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 3 + scheduler::ALL_SCHEMES.len(), "{j}");
     }
 
     #[test]

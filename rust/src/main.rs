@@ -5,12 +5,15 @@
 //!   simulate   run one (scheme, trace) simulation and print the report
 //!   profile    measure real PJRT latency of every pool model (needs artifacts)
 //!   train-rl   train the PPO controller through PJRT (needs artifacts)
+//!   train      native in-repo PPO over the joint (variant, vm_type, delta,
+//!              offload) space — pure Rust, no artifacts (also as `--train`)
 //!   traces     emit the four calibrated traces as CSV
 //!
 //! Examples:
 //!   paragon figures --fig all --out results
 //!   paragon simulate --scheme paragon --trace berkeley --rate 100
 //!   paragon train-rl --iters 20
+//!   paragon --train --train-iters 20 --train-out results
 
 use paragon::cloud::pricing::{parse_vm_type_list, spot_twin, SpotSpec};
 use paragon::cloud::spot::PreemptionProcess;
@@ -99,6 +102,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     }
     if want("spot") {
         figures::save(&out, "fig_spot", &figures::fig_spot(&reg, &cfg))?;
+    }
+    if want("joint") {
+        figures::save(&out, "fig_joint", &figures::fig_joint(&reg, &cfg))?;
     }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
@@ -252,6 +258,72 @@ fn cmd_train_rl(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `--train` / `train`: the in-repo training path of the self-managed
+/// loop — native PPO (pure Rust, zero XLA/Python artifacts) over the
+/// joint `(variant, vm_type, delta, offload)` space of
+/// [`VariantServeEnv`](paragon::rl::VariantServeEnv), saving plain-text
+/// weights servable by `ControlLoop::tick_policy_joint` on any backend
+/// (see `--fig joint`).
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    use paragon::rl::{train_native, NativePpoAgent, NativeTrainConfig, VariantServeEnv};
+    use paragon::util::json::Json;
+    use paragon::variants::VariantFamily;
+
+    let reg = registry(args);
+    let cfg = fig_config(args)?;
+    let trace_name = args.get_or("trace", "berkeley");
+    let kind = TraceKind::from_name(&trace_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace {trace_name}"))?;
+    let trace = generators::generate_with(kind, cfg.seed, cfg.duration_s, cfg.mean_rate);
+    let palette = match args.get("vm-types") {
+        Some(spec) => parse_vm_type_list(spec)?,
+        None => vec![
+            paragon::cloud::pricing::vm_type("m4.large").unwrap(),
+            paragon::cloud::pricing::vm_type("c5.large").unwrap(),
+        ],
+    };
+    let family = VariantFamily::from_members(&reg, "trio", vec![0, 3, 6]);
+    let mut env = VariantServeEnv::new(&reg, trace, family, cfg.seed, palette);
+    let mut agent = NativePpoAgent::new(env.obs_dim(), env.act_dim(), cfg.seed);
+    let tcfg = NativeTrainConfig {
+        horizon: args.get_usize("train-horizon", 512)?,
+        epochs: args.get_usize("train-epochs", 4)?,
+        iterations: args.get_usize("train-iters", 20)?,
+    };
+    println!("native PPO, joint (variant, vm_type, delta, offload) space");
+    println!("trace {trace_name}  obs_dim {}  act_dim {}  horizon {}  iters {}",
+             env.obs_dim(), env.act_dim(), tcfg.horizon, tcfg.iterations);
+    let curve = train_native(&mut env, &mut agent, &tcfg);
+    for c in &curve {
+        println!("iter {:>3}  reward/step {:>9.4}  cost ${:>8.3}  viol/req {:>6.3}  \
+                  loss {:>9.4}  kl {:>7.4}",
+                 c.iter, c.mean_reward, c.mean_cost_usd, c.mean_violation_rate,
+                 c.loss, c.approx_kl);
+    }
+    let out = PathBuf::from(args.get_or("train-out", "results"));
+    let weights = out.join("native_ppo_joint.txt");
+    agent.save(&weights)?;
+    println!("[saved {}]", weights.display());
+    let rows: Vec<Json> = curve
+        .iter()
+        .map(|c| Json::obj(vec![
+            ("iter", c.iter.into()),
+            ("reward_per_step", c.mean_reward.into()),
+            ("episode_cost_usd", c.mean_cost_usd.into()),
+            ("violation_rate", c.mean_violation_rate.into()),
+            ("loss", c.loss.into()),
+            ("entropy", c.entropy.into()),
+            ("approx_kl", c.approx_kl.into()),
+        ]))
+        .collect();
+    figures::save(&out, "native_ppo_curve", &Json::obj(vec![
+        ("figure", "native_ppo_curve".into()),
+        ("weights", weights.display().to_string().into()),
+        ("rows", Json::Arr(rows)),
+    ]))?;
+    Ok(())
+}
+
 fn cmd_traces(args: &Args) -> anyhow::Result<()> {
     let cfg = fig_config(args)?;
     let out = PathBuf::from(args.get_or("out", "results/traces"));
@@ -270,7 +342,7 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het|live|variants|spot  --out results
+  figures     --fig all|2..10|het|rl_het|live|variants|spot|joint  --out results
               [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
               [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]
@@ -280,6 +352,10 @@ SUBCOMMANDS
               [--ensemble N]
   profile     --iters N          (needs artifacts/)
   train-rl    --iters N          (needs artifacts/)
+  train       native in-repo PPO, joint (variant, vm_type) space — no
+              artifacts; also as bare `--train`
+              [--train-iters N] [--train-horizon H] [--train-epochs E]
+              [--train-out DIR] [--trace T] [--vm-types ...] [--quick]
   traces      --out DIR
 
 COMMON FLAGS
@@ -294,7 +370,9 @@ fn main() -> ExitCode {
         Some("simulate") => cmd_simulate(&args),
         Some("profile") => cmd_profile(&args),
         Some("train-rl") => cmd_train_rl(&args),
+        Some("train") => cmd_train(&args),
         Some("traces") => cmd_traces(&args),
+        None if args.has("train") => cmd_train(&args),
         _ => {
             print!("{USAGE}");
             return if args.has("help") || args.subcommand.is_none() {

@@ -22,15 +22,23 @@
 //! ([`env::act_dim_joint`], [`variant_env::VariantServeEnv`]), with the
 //! family-size compatibility check
 //! ([`agent::PpoManifest::check_family`]).
+//!
+//! The [`native`] subsystem closes the loop *in-repo*: a dependency-free
+//! PPO trainer (manual MLP forward/backward + Adam, seeded and
+//! bit-reproducible) over the same envs and [`Rollout`] buffer, whose
+//! trained [`NativePpoPolicy`] serves through `ControlLoop` on every
+//! backend with zero XLA/Python artifacts.
 
 pub mod agent;
 pub mod baselines;
 pub mod buffer;
 pub mod env;
+pub mod native;
 pub mod trainer;
 pub mod variant_env;
 
 pub use agent::{PpoAgent, PpoManifest, UpdateStats};
+pub use native::{train_native, NativePpoAgent, NativePpoPolicy, NativeTrainConfig};
 pub use buffer::Rollout;
 pub use env::{act_dim, decode_action, encode_action, obs_dim, ObsLayout, ObsSignals,
               ServeEnv};

@@ -1,0 +1,451 @@
+//! Native PPO agent: a softmax actor and a scalar critic over the
+//! [`net::Mlp`] substrate, trained with the clipped surrogate objective +
+//! entropy bonus — the same algorithm the AOT artifacts implement, with
+//! zero XLA/Python in the loop.
+//!
+//! The agent is shaped by the observation layouts of [`crate::rl::env`]
+//! (legacy [`ObsLayout`](crate::rl::env::ObsLayout) or the joint
+//! [`JointObsLayout`](crate::rl::env::JointObsLayout)): it carries its
+//! `(obs_dim, act_dim)` explicitly, so one implementation serves both the
+//! per-model and the joint `(variant, vm_type, delta, offload)` spaces.
+//! Trained weights round-trip through a plain-text format
+//! ([`NativePpoAgent::save`]/[`NativePpoAgent::load`] — Rust's float
+//! formatting is shortest-round-trip, so save/load is bit-exact), and
+//! [`NativePpoPolicy`] adapts a trained net to the [`EnvPolicy`] trait so
+//! it drops into every existing harness: [`run_episode`]
+//! (crate::rl::baselines::run_episode), `ControlLoop::tick_policy{,_joint}`
+//! and the figure sweeps.
+
+use super::net::{Linear, Mlp, MlpCache};
+use crate::rl::agent::UpdateStats;
+use crate::rl::baselines::EnvPolicy;
+use crate::rl::buffer::Rollout;
+use crate::util::rng::Pcg;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Magic first line of the plain-text weight format.
+const MAGIC: &str = "native-ppo v1";
+
+/// PPO actor-critic trained entirely in-process. See the module docs.
+pub struct NativePpoAgent {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    actor: Mlp,
+    critic: Mlp,
+    pub gamma: f32,
+    pub lam: f32,
+    /// Clipped-surrogate epsilon.
+    pub clip: f32,
+    pub lr: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    /// SGD minibatch size (capped at the rollout length).
+    pub minibatch: usize,
+    adam_t: u64,
+    rng: Pcg,
+}
+
+impl NativePpoAgent {
+    /// Seeded agent over an `(obs_dim, act_dim)` space. All arithmetic is
+    /// fixed-order `f32`, so equal seeds give bit-identical training runs.
+    pub fn new(obs_dim: usize, act_dim: usize, seed: u64) -> NativePpoAgent {
+        assert!(obs_dim > 0 && act_dim > 0, "degenerate net shape");
+        let hidden = 32;
+        // One stream for init, advanced past init for action sampling —
+        // both derived from the caller's seed only.
+        let mut rng = Pcg::new(seed, 0x0990);
+        let actor = Mlp::new(obs_dim, hidden, act_dim, 0.01, &mut rng);
+        let critic = Mlp::new(obs_dim, hidden, 1, 1.0, &mut rng);
+        NativePpoAgent {
+            obs_dim,
+            act_dim,
+            hidden,
+            actor,
+            critic,
+            gamma: 0.99,
+            lam: 0.95,
+            clip: 0.2,
+            lr: 3e-3,
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+            minibatch: 64,
+            adam_t: 0,
+            rng,
+        }
+    }
+
+    /// Action probabilities and state value for one observation.
+    pub fn policy(&self, obs: &[f32]) -> (Vec<f32>, f32) {
+        assert_eq!(obs.len(), self.obs_dim, "observation/agent shape mismatch");
+        let mut cache = MlpCache::default();
+        self.actor.forward(obs, &mut cache);
+        let probs = softmax(&cache.out);
+        self.critic.forward(obs, &mut cache);
+        (probs, cache.out[0])
+    }
+
+    /// Sample an action from the current policy: `(action, logp, value)`.
+    pub fn act(&mut self, obs: &[f32]) -> (usize, f32, f32) {
+        let (probs, value) = self.policy(obs);
+        let weights: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
+        let a = self.rng.weighted(&weights);
+        let logp = probs[a].max(1e-9).ln();
+        (a, logp, value)
+    }
+
+    /// Greedy (argmax) action — the deterministic serving mode.
+    pub fn act_greedy(&self, obs: &[f32]) -> usize {
+        let (probs, _) = self.policy(obs);
+        probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// State-value estimate (the GAE bootstrap for unfinished rollouts).
+    pub fn value(&self, obs: &[f32]) -> f32 {
+        self.policy(obs).1
+    }
+
+    /// One PPO update over a finished rollout: `epochs` shuffled passes of
+    /// minibatch Adam steps on `clip`-surrogate + entropy + value loss.
+    /// Advantages are normalized across the whole rollout.
+    pub fn update(&mut self, roll: &Rollout, epochs: usize) -> UpdateStats {
+        let n = roll.len();
+        assert!(n > 0, "empty rollout");
+        assert_eq!(roll.obs_dim, self.obs_dim, "rollout/agent shape mismatch");
+        let mean = roll.advantages.iter().sum::<f32>() / n as f32;
+        let var = roll
+            .advantages
+            .iter()
+            .map(|a| (a - mean) * (a - mean))
+            .sum::<f32>()
+            / n as f32;
+        let std = var.sqrt().max(1e-8);
+        let adv: Vec<f32> = roll.advantages.iter().map(|a| (a - mean) / std).collect();
+
+        let bsz = self.minibatch.min(n).max(1);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut tot = UpdateStats {
+            loss: 0.0,
+            pi_loss: 0.0,
+            v_loss: 0.0,
+            entropy: 0.0,
+            approx_kl: 0.0,
+            clip_frac: 0.0,
+            minibatches: 0,
+        };
+        let mut ac = MlpCache::default();
+        let mut cc = MlpCache::default();
+        let mut dlogits = vec![0.0f32; self.act_dim];
+        for _ in 0..epochs {
+            self.rng.shuffle(&mut idx);
+            for chunk in idx.chunks(bsz) {
+                let inv = 1.0 / chunk.len() as f32;
+                let (mut pi_l, mut v_l, mut ent_l, mut kl, mut clipped) =
+                    (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0usize);
+                for &i in chunk {
+                    let x = &roll.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+                    self.actor.forward(x, &mut ac);
+                    let probs = softmax(&ac.out);
+                    let a = roll.actions[i] as usize;
+                    let logp_new = probs[a].max(1e-9).ln();
+                    let ratio = (logp_new - roll.logp[i]).exp();
+                    let s1 = ratio * adv[i];
+                    let s2 = ratio.clamp(1.0 - self.clip, 1.0 + self.clip) * adv[i];
+                    let ent: f32 = probs
+                        .iter()
+                        .map(|&p| if p > 1e-9 { -p * p.ln() } else { 0.0 })
+                        .sum();
+                    pi_l += -s1.min(s2) as f64;
+                    ent_l += ent as f64;
+                    kl += (roll.logp[i] - logp_new) as f64;
+                    if (ratio - 1.0).abs() > self.clip {
+                        clipped += 1;
+                    }
+                    // ∂(-min(s1, s2))/∂logp_new: -ratio·adv on the
+                    // unclipped branch, 0 where the clamp binds.
+                    let g_logp = if s1 <= s2 { -ratio * adv[i] } else { 0.0 };
+                    for (j, d) in dlogits.iter_mut().enumerate() {
+                        let ind = if j == a { 1.0 } else { 0.0 };
+                        let lp = probs[j].max(1e-9).ln();
+                        // surrogate + entropy-bonus gradient through the
+                        // softmax: ∂logp_a/∂z_j = 1{a=j} − p_j and
+                        // ∂H/∂z_j = −p_j (ln p_j + H).
+                        *d = (g_logp * (ind - probs[j])
+                            + self.ent_coef * probs[j] * (lp + ent))
+                            * inv;
+                    }
+                    self.actor.backward(x, &mut ac, &dlogits);
+                    self.critic.forward(x, &mut cc);
+                    let v = cc.out[0];
+                    let ret = roll.returns[i];
+                    v_l += (0.5 * (v - ret) * (v - ret)) as f64;
+                    let dv = [self.vf_coef * (v - ret) * inv];
+                    self.critic.backward(x, &mut cc, &dv);
+                }
+                self.adam_t += 1;
+                self.actor.adam_step(self.lr, self.adam_t);
+                self.critic.adam_step(self.lr, self.adam_t);
+                let m = chunk.len() as f64;
+                tot.pi_loss += pi_l / m;
+                tot.v_loss += v_l / m;
+                tot.entropy += ent_l / m;
+                tot.approx_kl += kl / m;
+                tot.clip_frac += clipped as f64 / m;
+                tot.minibatches += 1;
+            }
+        }
+        let mbs = tot.minibatches.max(1) as f64;
+        tot.pi_loss /= mbs;
+        tot.v_loss /= mbs;
+        tot.entropy /= mbs;
+        tot.approx_kl /= mbs;
+        tot.clip_frac /= mbs;
+        tot.loss =
+            tot.pi_loss + self.vf_coef as f64 * tot.v_loss - self.ent_coef as f64 * tot.entropy;
+        tot
+    }
+
+    /// Save actor + critic weights as plain text (header, then one
+    /// `tensor <name> <in> <out>` block per layer with `w`/`b` lines).
+    /// Floats are written in Rust's shortest-round-trip decimal form, so
+    /// [`Self::load`] reconstructs them bit-exactly.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut s = String::new();
+        s.push_str(MAGIC);
+        s.push('\n');
+        s.push_str(&format!(
+            "obs_dim {}\nact_dim {}\nhidden {}\n",
+            self.obs_dim, self.act_dim, self.hidden
+        ));
+        for (net_name, net) in [("actor", &self.actor), ("critic", &self.critic)] {
+            for (layer_name, lin) in net.layers() {
+                s.push_str(&format!(
+                    "tensor {net_name}.{layer_name} {} {}\n",
+                    lin.in_dim, lin.out_dim
+                ));
+                push_floats(&mut s, "w", &lin.w);
+                push_floats(&mut s, "b", &lin.b);
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load an agent saved by [`Self::save`] (fresh optimizer state and
+    /// hyperparameters; the net itself is bit-exact).
+    pub fn load(path: &Path) -> Result<NativePpoAgent> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        if lines.next() != Some(MAGIC) {
+            bail!("{}: not a {MAGIC} weight file", path.display());
+        }
+        let header = |line: Option<&str>, key: &str| -> Result<usize> {
+            let line = line.ok_or_else(|| anyhow!("truncated header"))?;
+            let rest = line
+                .strip_prefix(key)
+                .ok_or_else(|| anyhow!("expected `{key} N`, got {line:?}"))?;
+            Ok(rest.trim().parse()?)
+        };
+        let obs_dim = header(lines.next(), "obs_dim")?;
+        let act_dim = header(lines.next(), "act_dim")?;
+        let hidden = header(lines.next(), "hidden")?;
+        let mut read_layer = |expect: &str| -> Result<Linear> {
+            let hdr = lines.next().ok_or_else(|| anyhow!("missing tensor {expect}"))?;
+            let mut parts = hdr.split_whitespace();
+            if parts.next() != Some("tensor") || parts.next() != Some(expect) {
+                bail!("expected `tensor {expect} ...`, got {hdr:?}");
+            }
+            let in_dim: usize = parts.next().ok_or_else(|| anyhow!("bad tensor header"))?.parse()?;
+            let out_dim: usize = parts.next().ok_or_else(|| anyhow!("bad tensor header"))?.parse()?;
+            let w = parse_floats(lines.next(), "w", in_dim * out_dim)?;
+            let b = parse_floats(lines.next(), "b", out_dim)?;
+            Ok(Linear::from_weights(in_dim, out_dim, w, b))
+        };
+        let actor = Mlp {
+            l1: read_layer("actor.l1")?,
+            l2: read_layer("actor.l2")?,
+            head: read_layer("actor.head")?,
+        };
+        let critic = Mlp {
+            l1: read_layer("critic.l1")?,
+            l2: read_layer("critic.l2")?,
+            head: read_layer("critic.head")?,
+        };
+        let mut agent = NativePpoAgent::new(obs_dim, act_dim, 0);
+        if agent.hidden != hidden {
+            // Future-proofing: accept files from differently-sized builds.
+            agent.hidden = hidden;
+        }
+        agent.actor = actor;
+        agent.critic = critic;
+        Ok(agent)
+    }
+}
+
+fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut e: Vec<f32> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let sum: f32 = e.iter().sum();
+    for p in &mut e {
+        *p /= sum;
+    }
+    e
+}
+
+fn push_floats(s: &mut String, tag: &str, xs: &[f32]) {
+    s.push_str(tag);
+    for x in xs {
+        s.push(' ');
+        s.push_str(&x.to_string());
+    }
+    s.push('\n');
+}
+
+fn parse_floats(line: Option<&str>, tag: &str, n: usize) -> Result<Vec<f32>> {
+    let line = line.ok_or_else(|| anyhow!("missing `{tag}` line"))?;
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some(tag) {
+        bail!("expected a `{tag}` line, got {line:?}");
+    }
+    let xs: Vec<f32> = parts.map(|t| t.parse()).collect::<std::result::Result<_, _>>()?;
+    if xs.len() != n {
+        bail!("`{tag}` holds {} floats, expected {n}", xs.len());
+    }
+    Ok(xs)
+}
+
+/// A trained native net behind the [`EnvPolicy`] trait: greedy (argmax)
+/// acting, explicit dimensions (joint observations do not satisfy the
+/// legacy layout's `obs_n_types` arithmetic, so the adapter never infers
+/// shape from the vector length).
+pub struct NativePpoPolicy {
+    agent: NativePpoAgent,
+}
+
+impl NativePpoPolicy {
+    pub fn new(agent: NativePpoAgent) -> NativePpoPolicy {
+        NativePpoPolicy { agent }
+    }
+
+    /// Load trained weights from a [`NativePpoAgent::save`] file.
+    pub fn from_file(path: &Path) -> Result<NativePpoPolicy> {
+        Ok(NativePpoPolicy { agent: NativePpoAgent::load(path)? })
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.agent.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.agent.act_dim
+    }
+
+    pub fn agent(&self) -> &NativePpoAgent {
+        &self.agent
+    }
+}
+
+impl EnvPolicy for NativePpoPolicy {
+    fn name(&self) -> &'static str {
+        "native-ppo"
+    }
+
+    fn act(&mut self, obs: &[f32]) -> usize {
+        self.agent.act_greedy(obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn act_samples_within_range_and_greedy_is_deterministic() {
+        let mut agent = NativePpoAgent::new(6, 5, 42);
+        let obs = vec![0.3f32; 6];
+        for _ in 0..50 {
+            let (a, logp, _) = agent.act(&obs);
+            assert!(a < 5);
+            assert!(logp <= 0.0);
+        }
+        let g1 = agent.act_greedy(&obs);
+        let g2 = agent.act_greedy(&obs);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_exact() {
+        let mut agent = NativePpoAgent::new(4, 3, 7);
+        // Perturb past init so the file carries non-trivial values.
+        let mut roll = Rollout::new(4);
+        let mut rng = Pcg::new(1, 2);
+        for i in 0..32 {
+            let obs: Vec<f32> = (0..4).map(|_| rng.normal() as f32).collect();
+            roll.push(&obs, (i % 3) as i32, -1.1, rng.normal() as f32, 0.0, i == 31);
+        }
+        roll.finish(0.0, 0.99, 0.95);
+        agent.update(&roll, 2);
+
+        let path = std::env::temp_dir().join("native_ppo_roundtrip.txt");
+        agent.save(&path).unwrap();
+        let loaded = NativePpoAgent::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.obs_dim, 4);
+        assert_eq!(loaded.act_dim, 3);
+        assert_eq!(agent.actor.l1.w, loaded.actor.l1.w, "actor.l1 drifted");
+        assert_eq!(agent.actor.head.b, loaded.actor.head.b);
+        assert_eq!(agent.critic.l2.w, loaded.critic.l2.w, "critic.l2 drifted");
+        // And behaviorally identical.
+        let obs: Vec<f32> = (0..4).map(|i| i as f32 * 0.2).collect();
+        assert_eq!(agent.policy(&obs), loaded.policy(&obs));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("native_ppo_garbage.txt");
+        std::fs::write(&path, "not a weight file\n").unwrap();
+        assert!(NativePpoAgent::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn update_reduces_policy_loss_on_a_bandit() {
+        // 3-armed bandit rendered as PPO: action 1 always pays. After
+        // updates on synthetic rollouts the policy must concentrate on it.
+        let mut agent = NativePpoAgent::new(2, 3, 5);
+        let obs = [1.0f32, 0.5];
+        for _ in 0..30 {
+            let mut roll = Rollout::new(2);
+            for i in 0..64 {
+                let (a, logp, v) = agent.act(&obs);
+                let r = if a == 1 { 1.0 } else { 0.0 };
+                roll.push(&obs, a as i32, logp, r, v, i == 63);
+            }
+            roll.finish(0.0, agent.gamma, agent.lam);
+            agent.update(&mut roll, 4);
+        }
+        let (probs, _) = agent.policy(&obs);
+        assert!(
+            probs[1] > 0.8,
+            "policy failed to find the paying arm: {probs:?}"
+        );
+    }
+}

@@ -1,0 +1,33 @@
+//! Native in-repo PPO — the training path that closes the paper's
+//! self-managed loop without leaving Rust.
+//!
+//! The AOT path ([`crate::rl::agent::PpoAgent`]) executes JAX/Pallas
+//! artifacts through PJRT; offline, the vendored `xla` shim errors at run
+//! time, so in this repo nothing could *learn* over the joint `(variant,
+//! vm_type, delta, offload)` space — it could only be evaluated. This
+//! module is the dependency-free replacement: a small MLP actor-critic
+//! ([`net`]) with manual forward/backward and Adam, the PPO update
+//! (clipped surrogate + entropy bonus) in [`agent`], and a
+//! backend-agnostic fixed-horizon loop in [`trainer`] that drives either
+//! serving env through the shared GAE [`Rollout`](crate::rl::buffer::
+//! Rollout) buffer.
+//!
+//! Everything is seeded, fixed-order `f32` arithmetic: equal seeds give
+//! bit-identical curves and weights (pinned in
+//! `rust/tests/native_ppo.rs`). Trained nets save/load as plain text and
+//! serve through [`NativePpoPolicy`] — an
+//! [`EnvPolicy`](crate::rl::baselines::EnvPolicy) like any baseline, so
+//! the same object drops into `run_episode`, the figure sweeps, and
+//! `ControlLoop::tick_policy{,_joint}` on all three backends.
+//!
+//! Entry points: `cargo run -- --train` (CLI over
+//! [`VariantServeEnv`](crate::rl::variant_env::VariantServeEnv)) and
+//! `--fig joint` (trained joint policy vs the heuristic frontier on the
+//! live backend).
+
+pub mod agent;
+pub mod net;
+pub mod trainer;
+
+pub use agent::{NativePpoAgent, NativePpoPolicy};
+pub use trainer::{train_native, NativeTrainConfig, TrainEnv};

@@ -1,0 +1,288 @@
+//! Dependency-free neural substrate for the native PPO trainer: dense
+//! layers with manual forward/backward passes and Adam, plus the small
+//! tanh MLP both policy heads are built from.
+//!
+//! Everything here is plain `f32` arithmetic in a fixed iteration order —
+//! no threads, no SIMD intrinsics, no allocator-dependent ordering — so a
+//! seeded training run is bit-reproducible across processes and machines
+//! (the convergence suite asserts it). Sizes are tiny (two hidden layers
+//! over observation vectors of tens of floats), so clarity wins over
+//! cache tricks.
+
+use crate::util::rng::Pcg;
+
+/// One dense layer `y = W·x + b` with gradient accumulators and Adam
+/// moment estimates. Weights are row-major `[out_dim × in_dim]`.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+    mw: Vec<f32>,
+    vw: Vec<f32>,
+    mb: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl Linear {
+    /// Seeded init: weights ~ N(0, scale²), biases zero. Hidden layers use
+    /// a Xavier-like `sqrt(1/in_dim)` scale; heads pass a small `scale`
+    /// explicitly so the initial policy is near-uniform (standard PPO
+    /// practice — early exploration is driven by the softmax, not by an
+    /// accidentally confident init).
+    pub fn new(in_dim: usize, out_dim: usize, scale: f64, rng: &mut Pcg) -> Linear {
+        let w = (0..in_dim * out_dim)
+            .map(|_| rng.normal_scaled(0.0, scale) as f32)
+            .collect();
+        Linear {
+            in_dim,
+            out_dim,
+            w,
+            b: vec![0.0; out_dim],
+            gw: vec![0.0; in_dim * out_dim],
+            gb: vec![0.0; out_dim],
+            mw: vec![0.0; in_dim * out_dim],
+            vw: vec![0.0; in_dim * out_dim],
+            mb: vec![0.0; out_dim],
+            vb: vec![0.0; out_dim],
+        }
+    }
+
+    /// Rebuild a layer from loaded weights (zeroed optimizer state).
+    pub fn from_weights(in_dim: usize, out_dim: usize, w: Vec<f32>, b: Vec<f32>)
+                        -> Linear {
+        assert_eq!(w.len(), in_dim * out_dim, "weight tensor shape mismatch");
+        assert_eq!(b.len(), out_dim, "bias tensor shape mismatch");
+        Linear {
+            in_dim,
+            out_dim,
+            w,
+            b,
+            gw: vec![0.0; in_dim * out_dim],
+            gb: vec![0.0; out_dim],
+            mw: vec![0.0; in_dim * out_dim],
+            vw: vec![0.0; in_dim * out_dim],
+            mb: vec![0.0; out_dim],
+            vb: vec![0.0; out_dim],
+        }
+    }
+
+    /// `out = W·x + b` (out is cleared and refilled).
+    pub fn forward(&self, x: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        out.clear();
+        for (o, &b) in self.b.iter().enumerate() {
+            let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+            let dot: f32 = row.iter().zip(x).map(|(&w, &xi)| w * xi).sum();
+            out.push(b + dot);
+        }
+    }
+
+    /// Accumulate parameter gradients for one sample and (optionally)
+    /// compute the gradient w.r.t. the input.
+    pub fn backward(&mut self, x: &[f32], dout: &[f32], dx: Option<&mut [f32]>) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(dout.len(), self.out_dim);
+        for (o, &g) in dout.iter().enumerate() {
+            self.gb[o] += g;
+            let row = &mut self.gw[o * self.in_dim..(o + 1) * self.in_dim];
+            for (gw, &xi) in row.iter_mut().zip(x) {
+                *gw += g * xi;
+            }
+        }
+        if let Some(dx) = dx {
+            dx.fill(0.0);
+            for (o, &g) in dout.iter().enumerate() {
+                let row = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                for (d, &w) in dx.iter_mut().zip(row) {
+                    *d += g * w;
+                }
+            }
+        }
+    }
+
+    /// One Adam step over the accumulated gradients, then zero them.
+    /// `t` is the 1-based global step for bias correction.
+    pub fn adam_step(&mut self, lr: f32, t: u64) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let c1 = 1.0 - B1.powi(t as i32);
+        let c2 = 1.0 - B2.powi(t as i32);
+        let step = |p: &mut [f32], g: &mut [f32], m: &mut [f32], v: &mut [f32]| {
+            for i in 0..p.len() {
+                m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+                v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+                let mh = m[i] / c1;
+                let vh = v[i] / c2;
+                p[i] -= lr * mh / (vh.sqrt() + EPS);
+                g[i] = 0.0;
+            }
+        };
+        step(&mut self.w, &mut self.gw, &mut self.mw, &mut self.vw);
+        step(&mut self.b, &mut self.gb, &mut self.mb, &mut self.vb);
+    }
+}
+
+/// Per-sample activation cache of one [`Mlp`] forward pass, reused across
+/// samples to keep the update loop allocation-free after warm-up.
+#[derive(Debug, Clone, Default)]
+pub struct MlpCache {
+    pub h1: Vec<f32>,
+    pub h2: Vec<f32>,
+    pub out: Vec<f32>,
+    // backward scratch
+    d2: Vec<f32>,
+    d1: Vec<f32>,
+}
+
+/// Two-hidden-layer tanh MLP: `head(tanh(l2(tanh(l1(x)))))`. The shape
+/// every native actor/critic uses.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub l1: Linear,
+    pub l2: Linear,
+    pub head: Linear,
+}
+
+impl Mlp {
+    /// Seeded init with a deliberately small `head_scale` (see
+    /// [`Linear::new`]).
+    pub fn new(in_dim: usize, hidden: usize, out_dim: usize, head_scale: f64,
+               rng: &mut Pcg) -> Mlp {
+        Mlp {
+            l1: Linear::new(in_dim, hidden, (1.0 / in_dim as f64).sqrt(), rng),
+            l2: Linear::new(hidden, hidden, (1.0 / hidden as f64).sqrt(), rng),
+            head: Linear::new(hidden, out_dim, head_scale, rng),
+        }
+    }
+
+    /// Forward one sample into `cache` (`cache.out` holds the head output).
+    pub fn forward(&self, x: &[f32], cache: &mut MlpCache) {
+        self.l1.forward(x, &mut cache.h1);
+        for h in &mut cache.h1 {
+            *h = h.tanh();
+        }
+        self.l2.forward(&cache.h1, &mut cache.h2);
+        for h in &mut cache.h2 {
+            *h = h.tanh();
+        }
+        self.head.forward(&cache.h2, &mut cache.out);
+    }
+
+    /// Accumulate gradients for one sample given `dout = ∂loss/∂head_out`.
+    /// `cache` must hold the forward pass of the same `x`.
+    pub fn backward(&mut self, x: &[f32], cache: &mut MlpCache, dout: &[f32]) {
+        cache.d2.resize(self.l2.out_dim, 0.0);
+        cache.d1.resize(self.l1.out_dim, 0.0);
+        self.head.backward(&cache.h2, dout, Some(&mut cache.d2));
+        // tanh'(z) = 1 - tanh(z)²; h2 already holds tanh(z).
+        for (d, &a) in cache.d2.iter_mut().zip(&cache.h2) {
+            *d *= 1.0 - a * a;
+        }
+        self.l2.backward(&cache.h1, &cache.d2, Some(&mut cache.d1));
+        for (d, &a) in cache.d1.iter_mut().zip(&cache.h1) {
+            *d *= 1.0 - a * a;
+        }
+        self.l1.backward(x, &cache.d1, None);
+    }
+
+    /// One Adam step over all three layers (gradients are then zeroed).
+    pub fn adam_step(&mut self, lr: f32, t: u64) {
+        self.l1.adam_step(lr, t);
+        self.l2.adam_step(lr, t);
+        self.head.adam_step(lr, t);
+    }
+
+    /// The layers with their stable tensor names, save/load order.
+    pub fn layers(&self) -> [(&'static str, &Linear); 3] {
+        [("l1", &self.l1), ("l2", &self.l2), ("head", &self.head)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_init_is_deterministic() {
+        let a = Mlp::new(7, 8, 3, 0.01, &mut Pcg::new(11, 0x7e7));
+        let b = Mlp::new(7, 8, 3, 0.01, &mut Pcg::new(11, 0x7e7));
+        assert_eq!(a.l1.w, b.l1.w);
+        assert_eq!(a.head.w, b.head.w);
+        let c = Mlp::new(7, 8, 3, 0.01, &mut Pcg::new(12, 0x7e7));
+        assert_ne!(a.l1.w, c.l1.w, "different seeds must differ");
+    }
+
+    /// Finite-difference check of the full backward pass: the analytic
+    /// gradient of a scalar loss must match (f(w+h) - f(w-h)) / 2h on a
+    /// sample of weights in every layer.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg::new(3, 0x91);
+        let mut net = Mlp::new(5, 6, 4, 0.5, &mut rng);
+        let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+        // Loss = Σ_k k · out_k (arbitrary fixed linear functional).
+        let dout: Vec<f32> = (0..4).map(|k| k as f32).collect();
+        let loss = |net: &Mlp, cache: &mut MlpCache| -> f64 {
+            net.forward(&x, cache);
+            cache.out.iter().zip(&dout).map(|(&o, &d)| (o * d) as f64).sum()
+        };
+        let mut cache = MlpCache::default();
+        net.forward(&x, &mut cache);
+        net.backward(&x, &mut cache, &dout);
+
+        let eps = 1e-3f32;
+        // (layer picker, flat weight index) probes across all layers.
+        let probes: [(usize, usize); 6] =
+            [(0, 0), (0, 17), (1, 5), (1, 20), (2, 3), (2, 11)];
+        for (li, wi) in probes {
+            let analytic = match li {
+                0 => net.l1.gw[wi],
+                1 => net.l2.gw[wi],
+                _ => net.head.gw[wi],
+            } as f64;
+            let bump = |net: &mut Mlp, d: f32| match li {
+                0 => net.l1.w[wi] += d,
+                1 => net.l2.w[wi] += d,
+                _ => net.head.w[wi] += d,
+            };
+            bump(&mut net, eps);
+            let up = loss(&net, &mut cache);
+            bump(&mut net, -2.0 * eps);
+            let down = loss(&net, &mut cache);
+            bump(&mut net, eps);
+            let numeric = (up - down) / (2.0 * eps as f64);
+            assert!(
+                (analytic - numeric).abs() < 1e-2 * (1.0 + numeric.abs()),
+                "layer {li} w[{wi}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_descends_a_quadratic() {
+        // Minimize ||W·x - y||² for fixed x, y: loss must fall steadily.
+        let mut rng = Pcg::new(9, 0x5);
+        let mut lin = Linear::new(3, 2, 0.5, &mut rng);
+        let x = [1.0f32, -2.0, 0.5];
+        let y = [0.3f32, -0.7];
+        let mut out = Vec::new();
+        let mut losses = Vec::new();
+        for t in 1..=200u64 {
+            lin.forward(&x, &mut out);
+            let dout: Vec<f32> =
+                out.iter().zip(&y).map(|(&o, &t)| 2.0 * (o - t)).collect();
+            losses.push(
+                out.iter().zip(&y).map(|(&o, &t)| (o - t) * (o - t)).sum::<f32>(),
+            );
+            lin.backward(&x, &dout, None);
+            lin.adam_step(0.05, t);
+        }
+        assert!(losses[199] < 1e-3, "loss did not converge: {}", losses[199]);
+        assert!(losses[199] < losses[0] * 0.01);
+    }
+}

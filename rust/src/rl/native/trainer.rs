@@ -1,0 +1,176 @@
+//! Backend-agnostic native training loop: the same fixed-horizon PPO
+//! driver as [`crate::rl::trainer::train`], generalized over a [`TrainEnv`]
+//! trait so one loop trains the per-model [`ServeEnv`] and the joint
+//! [`VariantServeEnv`] alike — and running entirely through
+//! [`NativePpoAgent`], with no AOT artifacts in the loop.
+
+use super::agent::NativePpoAgent;
+use crate::rl::buffer::Rollout;
+use crate::rl::env::ServeEnv;
+use crate::rl::trainer::IterStats;
+use crate::rl::variant_env::VariantServeEnv;
+
+/// The minimal gym surface the native trainer needs. Implemented by both
+/// serving environments; object-safe so callers can hold `&mut dyn
+/// TrainEnv` and pick the env at run time (the `--train` CLI does).
+pub trait TrainEnv {
+    fn reset(&mut self) -> Vec<f32>;
+    /// Advance one control interval; returns `(next_obs, step_result)`.
+    fn step(&mut self, a: usize) -> (Vec<f32>, crate::rl::env::StepResult);
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// `(episode_cost_usd, episode_violations, episode_requests)` of the
+    /// episode that just finished (read when `step` reports `done`).
+    fn episode_totals(&self) -> (f64, f64, f64);
+}
+
+impl TrainEnv for ServeEnv {
+    fn reset(&mut self) -> Vec<f32> {
+        ServeEnv::reset(self)
+    }
+    fn step(&mut self, a: usize) -> (Vec<f32>, crate::rl::env::StepResult) {
+        ServeEnv::step(self, a)
+    }
+    fn obs_dim(&self) -> usize {
+        ServeEnv::obs_dim(self)
+    }
+    fn act_dim(&self) -> usize {
+        ServeEnv::act_dim(self)
+    }
+    fn episode_totals(&self) -> (f64, f64, f64) {
+        (self.episode_cost, self.episode_violations, self.episode_requests)
+    }
+}
+
+impl TrainEnv for VariantServeEnv {
+    fn reset(&mut self) -> Vec<f32> {
+        VariantServeEnv::reset(self)
+    }
+    fn step(&mut self, a: usize) -> (Vec<f32>, crate::rl::env::StepResult) {
+        VariantServeEnv::step(self, a)
+    }
+    fn obs_dim(&self) -> usize {
+        VariantServeEnv::obs_dim(self)
+    }
+    fn act_dim(&self) -> usize {
+        VariantServeEnv::act_dim(self)
+    }
+    fn episode_totals(&self) -> (f64, f64, f64) {
+        (self.episode_cost, self.episode_violations, self.episode_requests)
+    }
+}
+
+/// Native loop knobs. Smaller default horizon than the AOT path: the
+/// native agent has no minibatch-size lowering constraint, and the tiny
+/// MLP converges on tens of thousands of samples.
+#[derive(Debug, Clone)]
+pub struct NativeTrainConfig {
+    /// env steps per rollout.
+    pub horizon: usize,
+    /// SGD passes over each rollout.
+    pub epochs: usize,
+    pub iterations: usize,
+}
+
+impl Default for NativeTrainConfig {
+    fn default() -> Self {
+        NativeTrainConfig { horizon: 512, epochs: 4, iterations: 20 }
+    }
+}
+
+/// Train `agent` on `env` for `cfg.iterations` fixed-horizon rollouts;
+/// returns the per-iteration learning curve. Episodes restart inside the
+/// rollout whenever the env reaches its horizon, the unfinished tail is
+/// bootstrapped with the critic's value — the exact structure of the AOT
+/// [`crate::rl::trainer::train`] loop, so curves are comparable.
+///
+/// Deterministic: equal `(env seed, agent seed, cfg)` gives a bit-identical
+/// curve and final weights (asserted in `rust/tests/native_ppo.rs`).
+pub fn train_native(env: &mut dyn TrainEnv, agent: &mut NativePpoAgent,
+                    cfg: &NativeTrainConfig) -> Vec<IterStats> {
+    assert_eq!(env.obs_dim(), agent.obs_dim, "env/agent obs_dim mismatch");
+    assert_eq!(env.act_dim(), agent.act_dim, "env/agent act_dim mismatch");
+    let mut curve = Vec::with_capacity(cfg.iterations);
+    let mut obs = env.reset();
+    let mut ep_costs: Vec<f64> = Vec::new();
+    let mut ep_viols: Vec<f64> = Vec::new();
+    let mut ep_reqs: Vec<f64> = Vec::new();
+
+    for iter in 0..cfg.iterations {
+        let mut roll = Rollout::new(agent.obs_dim);
+        let mut reward_sum = 0.0;
+        ep_costs.clear();
+        ep_viols.clear();
+        ep_reqs.clear();
+        for _ in 0..cfg.horizon {
+            let (a, logp, value) = agent.act(&obs);
+            let (next, r) = env.step(a);
+            roll.push(&obs, a as i32, logp, r.reward as f32, value, r.done);
+            reward_sum += r.reward;
+            if r.done {
+                let (cost, viols, reqs) = env.episode_totals();
+                ep_costs.push(cost);
+                ep_viols.push(viols);
+                ep_reqs.push(reqs);
+                obs = env.reset();
+            } else {
+                obs = next;
+            }
+        }
+        // Bootstrap value for the unfinished tail.
+        let last_v = agent.value(&obs);
+        roll.finish(last_v, agent.gamma, agent.lam);
+        let stats = agent.update(&roll, cfg.epochs);
+
+        let n_ep = ep_costs.len().max(1) as f64;
+        curve.push(IterStats {
+            iter,
+            mean_reward: reward_sum / cfg.horizon as f64,
+            mean_cost_usd: ep_costs.iter().sum::<f64>() / n_ep,
+            mean_violation_rate: if ep_reqs.iter().sum::<f64>() > 0.0 {
+                ep_viols.iter().sum::<f64>() / ep_reqs.iter().sum::<f64>()
+            } else {
+                0.0
+            },
+            loss: stats.loss,
+            entropy: stats.entropy,
+            approx_kl: stats.approx_kl,
+        });
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Registry;
+    use crate::trace::{generators, TraceKind};
+
+    fn bursty_env(seed: u64) -> ServeEnv {
+        let reg = Registry::builtin();
+        let trace = generators::generate_with(TraceKind::Twitter, 5, 900, 60.0);
+        ServeEnv::new(&reg, trace, 3, seed)
+    }
+
+    #[test]
+    fn native_loop_runs_and_reports_finite_stats() {
+        let mut env = bursty_env(3);
+        let mut agent = NativePpoAgent::new(env.obs_dim(), env.act_dim(), 3);
+        let cfg = NativeTrainConfig { horizon: 64, epochs: 2, iterations: 2 };
+        let curve = train_native(&mut env, &mut agent, &cfg);
+        assert_eq!(curve.len(), 2);
+        for it in &curve {
+            assert!(it.loss.is_finite(), "non-finite loss: {}", it.loss);
+            assert!(it.entropy.is_finite() && it.entropy >= 0.0);
+            assert!(it.mean_reward.is_finite());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "act_dim mismatch")]
+    fn dim_mismatch_is_rejected() {
+        let mut env = bursty_env(3);
+        let mut agent = NativePpoAgent::new(env.obs_dim(), env.act_dim() + 1, 3);
+        train_native(&mut env, &mut agent, &NativeTrainConfig::default());
+    }
+}

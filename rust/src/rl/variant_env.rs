@@ -166,8 +166,18 @@ impl VariantServeEnv {
             .unwrap_or_default()
     }
 
-    /// Slo class of a tier's traffic (see [`STRICT_FLOOR_BOUND`]).
-    fn tier_slos(floor: f64) -> (f64, f64) {
+    /// The `(accuracy floor %, share of arrivals)` demand mix — exposed so
+    /// live-backend harnesses (fig_joint) can replay the identical
+    /// model-less workload against a [`ServerFleet`](crate::control::
+    /// ServerFleet).
+    pub fn tiers(&self) -> &[(f64, f64)] {
+        &self.tiers
+    }
+
+    /// Slo class of a tier's traffic (see [`STRICT_FLOOR_BOUND`]): `(strict
+    /// SLO ms, relaxed SLO ms)`; the halves differ only below the bound,
+    /// where the tier carries an interactive 500 ms strict half.
+    pub fn tier_slos(floor: f64) -> (f64, f64) {
         if floor < STRICT_FLOOR_BOUND {
             (500.0, 20_000.0)
         } else {
@@ -346,17 +356,18 @@ impl VariantServeEnv {
             let mut nr = new_relaxed[vi];
             serve(&mut ns, &mut remaining);
             serve(&mut nr, &mut remaining);
-            let mut offloaded = 0.0;
+            let (mut off_strict, mut off_relaxed) = (0.0, 0.0);
             match offload {
                 OffloadPolicy::All => {
-                    offloaded = ns + nr + self.q_strict[vi] + self.q_relaxed[vi];
+                    off_strict = ns + self.q_strict[vi];
+                    off_relaxed = nr + self.q_relaxed[vi];
                     ns = 0.0;
                     nr = 0.0;
                     self.q_strict[vi] = 0.0;
                     self.q_relaxed[vi] = 0.0;
                 }
                 OffloadPolicy::StrictOnly => {
-                    offloaded = ns + self.q_strict[vi];
+                    off_strict = ns + self.q_strict[vi];
                     ns = 0.0;
                     self.q_strict[vi] = 0.0;
                 }
@@ -376,14 +387,23 @@ impl VariantServeEnv {
             }
             self.q_strict[vi] += ns;
             self.q_relaxed[vi] += nr;
-            if offloaded > 0.0 {
+            if off_strict + off_relaxed > 0.0 {
+                // Bill at the routed variant's own deployment, sized per
+                // SLO class — the env's two classes carry the tier SLOs
+                // (see [`Self::tier_slos`]).
+                let (strict_slo, relaxed_slo) = Self::tier_slos(0.0);
                 let model = self.family.members[vi];
-                lambda_cost += self
+                let valve = self
                     .fleet
                     .valve_mut()
-                    .expect("family fleets always carry a valve")
-                    .absorb(model, offloaded);
-                lambda_n += offloaded;
+                    .expect("family fleets always carry a valve");
+                if off_strict > 0.0 {
+                    lambda_cost += valve.absorb_for_slo(model, strict_slo, off_strict);
+                }
+                if off_relaxed > 0.0 {
+                    lambda_cost += valve.absorb_for_slo(model, relaxed_slo, off_relaxed);
+                }
+                lambda_n += off_strict + off_relaxed;
             }
         }
 

@@ -1,0 +1,238 @@
+//! `acc_aware`: accuracy-aware procurement for variant-plane traffic.
+//!
+//! Rate-only schemes treat a model family as independent fleets, so when
+//! the ladder's top variant runs short the router silently downgrades
+//! model-less queries onto cheaper variants — cost looks great while the
+//! *delivered* accuracy of the mix sags toward the requested floors. This
+//! scheme closes that blind spot with the [`ModelDemand::delivered_acc`]
+//! EWMAs the control loop already maintains: it runs reactive convergence
+//! per model, and whenever the rate-weighted delivered accuracy of the
+//! family sags more than a band below the best variant actually serving,
+//! it adds upgrade headroom to that top variant so the router can move
+//! queries back up the ladder.
+
+use super::{converge, drain_foreign_types, Action, OffloadPolicy, SchedObs, Scheme};
+use std::collections::BTreeMap;
+
+/// Seconds of sustained surplus before a drain is issued.
+const DRAIN_COOLDOWN_S: f64 = 60.0;
+/// Keep at least one VM per model group that has any demand.
+const MIN_VMS: usize = 1;
+/// Stochastic-headroom margin over the smoothed rate (see `reactive`).
+const MARGIN: f64 = 1.10;
+/// Engage upgrade pressure when the delivered mix sags more than this
+/// fraction below the top serving variant's delivered accuracy...
+const SAG_HIGH: f64 = 0.04;
+/// ...and release it only once the sag closes below this (hysteresis, so
+/// the extra fleet does not flap at the band edge).
+const SAG_LOW: f64 = 0.02;
+/// Upgrade headroom: extra fraction of the top variant's base fleet.
+const UPGRADE_HEADROOM: f64 = 0.25;
+
+pub struct AccAware {
+    surplus_since: BTreeMap<usize, Option<f64>>,
+    /// Latched while the delivered mix is sagging (hysteresis state).
+    pressure: bool,
+}
+
+impl AccAware {
+    pub fn new() -> Self {
+        AccAware { surplus_since: BTreeMap::new(), pressure: false }
+    }
+
+    /// `(top model, sag fraction)` of the delivered-accuracy mix, or None
+    /// when no demand carries a variant-plane accuracy signal (legacy
+    /// named-model runs: the scheme then degrades to pure reactive).
+    fn mix_sag(obs: &SchedObs) -> Option<(usize, f64)> {
+        let mut top: Option<(usize, f64)> = None;
+        let (mut mass, mut acc_mass) = (0.0, 0.0);
+        for d in obs.demands {
+            if d.delivered_acc <= 0.0 {
+                continue;
+            }
+            if top.map_or(true, |(_, a)| d.delivered_acc > a) {
+                top = Some((d.model, d.delivered_acc));
+            }
+            if d.rate > 0.0 {
+                mass += d.rate;
+                acc_mass += d.rate * d.delivered_acc;
+            }
+        }
+        let (model, top_acc) = top?;
+        if mass <= 0.0 {
+            return None;
+        }
+        Some((model, 1.0 - acc_mass / (mass * top_acc)))
+    }
+}
+
+impl Default for AccAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for AccAware {
+    fn name(&self) -> &'static str {
+        "acc_aware"
+    }
+
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
+        let mut out = Vec::new();
+        let ty = obs.primary();
+        let boost = match Self::mix_sag(obs) {
+            Some((model, sag)) => {
+                // Hysteresis: engage above SAG_HIGH, hold until SAG_LOW.
+                self.pressure = sag > if self.pressure { SAG_LOW } else { SAG_HIGH };
+                self.pressure.then_some(model)
+            }
+            None => {
+                self.pressure = false;
+                None
+            }
+        };
+        for d in obs.demands {
+            let mut desired = if d.rate <= 0.0 && d.queued == 0 {
+                0
+            } else {
+                (d.vms_for_rate(d.rate * MARGIN) + d.backlog_vms(60.0)).max(MIN_VMS)
+            };
+            if boost == Some(d.model) {
+                // Free slots on the top variant are what lets the weighted
+                // router upgrade queries; a fleet-proportional reserve.
+                desired += ((desired as f64 * UPGRADE_HEADROOM).ceil() as usize).max(1);
+            }
+            let since = self.surplus_since.entry(d.model).or_insert(None);
+            converge(obs, d.model, ty, desired, since, DRAIN_COOLDOWN_S, &mut out);
+            drain_foreign_types(obs, d.model, ty, desired, &mut out);
+        }
+        out
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        OffloadPolicy::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::default_vm_type;
+    use crate::cloud::Cluster;
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
+    use crate::scheduler::{LoadMonitor, ModelDemand, TypeCap};
+
+    /// Two-variant family demands: model 0 cheap/low-acc, model 1 top.
+    fn family_demands(acc0: f64, acc1: f64) -> Vec<ModelDemand> {
+        [(0, acc0), (1, acc1)]
+            .into_iter()
+            .map(|(model, delivered_acc)| ModelDemand {
+                model,
+                rate: 40.0,
+                service_s: 0.1,
+                slots_per_vm: 2,
+                queued: 0,
+                delivered_acc,
+                types: vec![TypeCap {
+                    vm_type: default_vm_type(),
+                    service_s: 0.1,
+                    slots_per_vm: 2,
+                }],
+            })
+            .collect()
+    }
+
+    fn family_cluster(vms: usize) -> Cluster {
+        let mut cluster = Cluster::new(2);
+        for model in 0..2 {
+            for _ in 0..vms {
+                cluster.spawn(default_vm_type(), model, 2, 0.0);
+            }
+        }
+        cluster.tick(1000.0, 0.0, 0.0);
+        cluster
+    }
+
+    #[test]
+    fn no_acc_signal_degrades_to_reactive() {
+        // obs_fixture's demand carries delivered_acc = 0.0 (no plane).
+        let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
+        let mut s = AccAware::new();
+        let fleet = view(&cluster, 30.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             fleet: &fleet, vm_types: palette() };
+        let acts = s.tick(&obs);
+        // ceil(40 q/s * 1.1 margin * 0.1 s / 2 slots) = 3 VMs, no boost.
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 3 }]
+        );
+        assert!(!s.pressure);
+    }
+
+    #[test]
+    fn sagging_mix_adds_headroom_on_top_variant() {
+        let mon = LoadMonitor::new();
+        // Delivered mean (40*52 + 40*87)/80 = 69.5 vs top 87: 20% sag.
+        let demands = family_demands(52.0, 87.0);
+        let cluster = family_cluster(3); // base desired is 3 per model
+        let mut s = AccAware::new();
+        let fleet = view(&cluster, 30.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             fleet: &fleet, vm_types: palette() };
+        let acts = s.tick(&obs);
+        assert_eq!(
+            acts,
+            vec![Action::Spawn { model: 1, vm_type: default_vm_type(), count: 1 }],
+            "only the top variant gets upgrade headroom"
+        );
+        assert!(s.pressure);
+    }
+
+    #[test]
+    fn healthy_mix_holds_base_fleet() {
+        let mon = LoadMonitor::new();
+        // Both variants deliver 87%: zero sag, no pressure.
+        let demands = family_demands(87.0, 87.0);
+        let cluster = family_cluster(3);
+        let mut s = AccAware::new();
+        let fleet = view(&cluster, 30.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             fleet: &fleet, vm_types: palette() };
+        assert!(s.tick(&obs).is_empty());
+        assert!(!s.pressure);
+    }
+
+    #[test]
+    fn pressure_latches_through_the_hysteresis_band() {
+        let mon = LoadMonitor::new();
+        let cluster = family_cluster(3);
+        let fleet = view(&cluster, 30.0);
+        let mut s = AccAware::new();
+        // Engage at 20% sag...
+        let sagging = family_demands(52.0, 87.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &sagging,
+                             fleet: &fleet, vm_types: palette() };
+        s.tick(&obs);
+        assert!(s.pressure);
+        // ...then an in-band sag keeps it latched: delivered mean
+        // (40*82 + 40*87)/80 = 84.5, sag 1 - 84.5/87 = 2.9% — between
+        // SAG_LOW and SAG_HIGH.
+        let inband = family_demands(82.0, 87.0);
+        let obs = SchedObs { now: 31.0, monitor: &mon, demands: &inband,
+                             fleet: &fleet, vm_types: palette() };
+        s.tick(&obs);
+        assert!(s.pressure, "2.9% sag is above SAG_LOW: pressure holds");
+        // A fully recovered mix releases it.
+        let healthy = family_demands(87.0, 87.0);
+        let obs = SchedObs { now: 32.0, monitor: &mon, demands: &healthy,
+                             fleet: &fleet, vm_types: palette() };
+        s.tick(&obs);
+        assert!(!s.pressure);
+    }
+
+    #[test]
+    fn never_offloads() {
+        assert_eq!(AccAware::new().offload(), OffloadPolicy::None);
+    }
+}

@@ -1,6 +1,6 @@
 //! Resource-procurement schemes — the paper's L3 coordination contribution.
 //!
-//! Five schemes, each modeled on the prior work the paper evaluates
+//! Six schemes, each modeled on the prior work the paper evaluates
 //! (§II-C/§II-D) plus the paper's own Paragon (§IV). Actions are
 //! *type-aware*: every Spawn/Drain names the instance type it targets, so
 //! a scheme can exploit resource heterogeneity (INFaaS/Cocktail-style)
@@ -13,6 +13,7 @@
 //! | `exascale`  | predictive w/ headroom [17]| provision above forecast | pins the primary type      | never                 |
 //! | `mixed`     | MArk [12] / Spock [13]    | reactive                  | pins the primary type      | offload all overflow  |
 //! | `paragon`   | this paper                | short-horizon predictive  | greedy cheapest-per-slot-second per model | strict-SLO overflow only, gated by peak-to-median |
+//! | `acc_aware` | accuracy-aware (INFaaS-style) | reactive + upgrade headroom when delivered accuracy sags | pins the primary type | never |
 //!
 //! Every scheme — type-aware or pinned — retires sub-fleets on foreign
 //! palette types through the shared `drain_foreign_types` sweep: once the
@@ -20,6 +21,7 @@
 //! inherited capacity on other types is drained (never before, so a
 //! migration cannot open a serving gap while replacements boot).
 
+pub mod acc_aware;
 pub mod exascale;
 pub mod load_monitor;
 pub mod mixed;
@@ -220,12 +222,13 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
         "exascale" => Some(Box::new(exascale::Exascale::new())),
         "mixed" => Some(Box::new(mixed::Mixed::new())),
         "paragon" => Some(Box::new(paragon::Paragon::new())),
+        "acc_aware" => Some(Box::new(acc_aware::AccAware::new())),
         _ => None,
     }
 }
 
-pub const ALL_SCHEMES: [&str; 5] =
-    ["reactive", "util_aware", "exascale", "mixed", "paragon"];
+pub const ALL_SCHEMES: [&str; 6] =
+    ["reactive", "util_aware", "exascale", "mixed", "paragon", "acc_aware"];
 
 /// Shared helper: emit Spawn/Drain to move the `(model, vm_type)`
 /// sub-fleet toward `desired`, draining only after `cooldown_s` of
