@@ -5,23 +5,27 @@
 //! req/s, peak RSS and build provenance. The live-path configuration —
 //! 100k requests ingested through a dry-run `ServerFleet` (per-replica
 //! bin-packing, valve, 1 Hz advances) — lands in `results/BENCH_7.json`
-//! with its own floor.
+//! with its own floor. The packed-long-tail configuration — a Zipf
+//! 8-model assignment co-located on shared VMs by `pack_aware`
+//! (placement plane: join gate, fair-share routing, per-model
+//! attribution) — lands in `results/BENCH_9.json` with its own floor.
 //!
 //! `--check` is the CI no-regression gate: it runs the 100k serial,
-//! sharded and live configurations and fails (exit 1) when measured
-//! req/s drops below 0.85x the floors recorded in the committed
-//! `results/BENCH_6.json` / `results/BENCH_7.json`. Floors are
+//! sharded, live and packed configurations and fails (exit 1) when
+//! measured req/s drops below 0.85x the floors recorded in the committed
+//! `results/BENCH_6.json` / `results/BENCH_7.json` /
+//! `results/BENCH_9.json`. Floors are
 //! deliberately conservative (well under a dev box's numbers) so the
 //! gate catches algorithmic regressions, not runner jitter; an
 //! intentional slowdown lands with the `perf-override` label on the PR
 //! (see `.github/workflows/ci.yml`).
 
-use paragon::control::{palette_caps, FleetActuator, LiveReport, ServerFleet,
-                       ServerFleetConfig};
+use paragon::control::{palette_caps, FleetActuator, LiveReport, PackPolicy,
+                       ServerFleet, ServerFleetConfig};
 use paragon::models::Registry;
 use paragon::scheduler::{self, Action, Scheme};
-use paragon::sim::{available_threads, simulate, simulate_sharded, FidelityConfig,
-                   SimConfig};
+use paragon::sim::{available_threads, simulate, simulate_sharded, Assignment,
+                   FidelityConfig, SimConfig};
 use paragon::trace::{generators, synthesize_requests, Request, WorkloadKind};
 use paragon::util::bench::{bench_meta, bench_throughput, peak_rss_mb};
 use paragon::util::json::Json;
@@ -39,6 +43,18 @@ fn workload(rate: f64, secs: usize) -> Vec<Request> {
 
 fn hybrid_cfg() -> SimConfig {
     SimConfig { fidelity: FidelityConfig::hybrid(), ..SimConfig::default() }
+}
+
+/// Zipf(skew 300) over all 8 builtin models, co-located on shared VMs
+/// (residency degree 4): the placement-plane hot path — join gate,
+/// fair-share shared routing, per-(VM, model) release — under a
+/// long-tail popularity the dedicated engine never exercises.
+fn packed_cfg(reg: &Registry) -> SimConfig {
+    SimConfig {
+        assignment: Assignment::LongTail { skew_pct: 300 },
+        pack: PackPolicy::for_registry(reg, 4),
+        ..SimConfig::default()
+    }
 }
 
 /// Drive 100k-scale ingest through the dry-run live fleet: a warm,
@@ -95,12 +111,14 @@ fn run<T>(name: &str, reqs: &[Request], iters: usize,
 }
 
 fn check_gate(measured: &[(String, f64)]) -> ! {
-    let files: [(&str, &[(&str, &str)]); 2] = [
+    let files: [(&str, &[(&str, &str)]); 3] = [
         ("results/BENCH_6.json",
          &[("floor_rps_serial_100k", "engine[serial-100k]"),
            ("floor_rps_sharded_100k", "engine[sharded-100k]")]),
         ("results/BENCH_7.json",
          &[("floor_rps_live_100k", "engine[live-100k]")]),
+        ("results/BENCH_9.json",
+         &[("floor_rps_packed_100k", "engine[packed-100k]")]),
     ];
     let mut failed = false;
     for (path, checks) in files {
@@ -162,6 +180,7 @@ fn main() {
 
     let mut results: Vec<Json> = Vec::new();
     let mut live_results: Vec<Json> = Vec::new();
+    let mut packed_results: Vec<Json> = Vec::new();
     let mut measured: Vec<(String, f64)> = Vec::new();
     for (label, rate, secs, iters) in scales {
         println!("== {label} requests ({rate} q/s x {secs}s, {SCHEME}) ==");
@@ -192,6 +211,17 @@ fn main() {
             let (j, rps) =
                 run(&name, &reqs, iters, || run_live(&reg, &reqs, secs));
             live_results.push(j);
+            measured.push((name, rps));
+
+            // The packed long tail likewise floors only at 100k: shared
+            // routing + per-model release is the hot path under test.
+            let packed = packed_cfg(&reg);
+            let name = format!("engine[packed-{label}]");
+            let (j, rps) = run(&name, &reqs, iters, || {
+                let mut s = scheduler::by_name("pack_aware").unwrap();
+                simulate(s.as_mut(), &reg, &reqs, "bench", &packed)
+            });
+            packed_results.push(j);
             measured.push((name, rps));
         }
 
@@ -269,4 +299,26 @@ fn main() {
     std::fs::write("results/BENCH_7.json", live_out.to_string())
         .expect("write results/BENCH_7.json");
     println!("[saved results/BENCH_7.json]");
+
+    // The packed-long-tail trajectory gets its own file for the same
+    // reason: the placement-plane floor moves independently of both the
+    // dedicated engine and the dry-run fleet.
+    let packed_out = Json::obj(vec![
+        ("bench", "BENCH_9".into()),
+        ("meta", bench_meta()),
+        ("scheme", "pack_aware".into()),
+        ("assignment", "long_tail(skew_pct=300)".into()),
+        ("pack_degree", 4usize.into()),
+        ("results", Json::Arr(packed_results)),
+        ("ci", Json::obj(vec![
+            ("note",
+             "req/s floors; CI fails below 0.85x (override: perf-override label)"
+                 .into()),
+            ("floor_rps_packed_100k",
+             (rps_of("engine[packed-100k]") * 0.4).into()),
+        ])),
+    ]);
+    std::fs::write("results/BENCH_9.json", packed_out.to_string())
+        .expect("write results/BENCH_9.json");
+    println!("[saved results/BENCH_9.json]");
 }

@@ -8,7 +8,7 @@
 //! across types (and equal the typed ones on a single-type palette).
 
 use super::pricing::VmType;
-use super::vm::{Vm, VmState};
+use super::vm::{PackPolicy, Vm, VmState};
 use crate::util::rng::Pcg;
 use std::collections::BTreeMap;
 
@@ -60,6 +60,111 @@ impl Cluster {
         id
     }
 
+    /// Launch a *packed* VM founded by the given resident set. Consumes the
+    /// same RNG draw as [`Self::spawn`] so a pack-disabled run replayed with
+    /// packing on sees identical boot jitter for identical spawn sequences.
+    pub fn spawn_shared(&mut self, vm_type: &'static VmType, residents: Vec<usize>,
+                        slots: u32, now: f64) -> u64 {
+        let jitter = self.rng.uniform(-vm_type.boot_jitter_s, vm_type.boot_jitter_s);
+        let boot = (vm_type.boot_mean_s + jitter).max(1.0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.vms.push(Vm::new_shared(id, vm_type, residents, slots, now, boot));
+        *self.spawned_by_type.entry(vm_type.name).or_insert(0) += 1;
+        id
+    }
+
+    /// Packed spawn: first-fit `model` onto an existing shared VM of
+    /// `vm_type` with residency/memory headroom (alive VMs in id order —
+    /// deterministic across backends), else boot a fresh shared VM. Joins
+    /// consume *no* RNG (no new machine, no boot sample). Returns the id
+    /// of the hosting VM.
+    pub fn pack_spawn(&mut self, vm_type: &'static VmType, model: usize,
+                      pack: &PackPolicy, now: f64) -> u64 {
+        let join = self.vms.iter().position(|v| {
+            v.vm_type == vm_type
+                && matches!(v.state, VmState::Running | VmState::Booting)
+                && v.is_shared()
+                && pack.can_join(vm_type, &v.residents, model)
+        });
+        if let Some(i) = join {
+            let mut residents = self.vms[i].residents.clone();
+            residents.push(model);
+            let slots = pack.slots_for(vm_type, &residents);
+            self.vms[i].add_resident(model, slots);
+            self.vms[i].id
+        } else {
+            self.spawn_shared(vm_type, vec![model], pack.slots_for(vm_type, &[model]), now)
+        }
+    }
+
+    /// Packed drain: remove `model`'s residency from the newest (highest-id)
+    /// alive VM of `vm_type` hosting it, `n` times. Deliberately
+    /// busy-independent — the fluid backend carries no per-request state, so
+    /// victim choice must not read occupancy to stay conformant. A VM left
+    /// resident-less is drained (idle → terminates immediately, busy →
+    /// finishes in-flight work, booting → cancelled).
+    pub fn pack_drain(&mut self, vm_type: &'static VmType, model: usize, n: usize,
+                      pack: &PackPolicy, now: f64) {
+        for _ in 0..n {
+            let Some(i) = self
+                .vms
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| {
+                    v.vm_type == vm_type
+                        && matches!(v.state, VmState::Running | VmState::Booting)
+                        && v.hosts(model)
+                })
+                .max_by_key(|(_, v)| v.id)
+                .map(|(i, _)| i)
+            else {
+                return;
+            };
+            let residents: Vec<usize> = self.vms[i]
+                .residents
+                .iter()
+                .copied()
+                .filter(|&m| m != model)
+                .collect();
+            let slots = pack.slots_for(self.vms[i].vm_type, &residents);
+            if self.vms[i].remove_resident(model, slots) {
+                self.vms[i].drain(now);
+            }
+        }
+    }
+
+    /// [`Self::route_typed`] over packed VMs: most-loaded running shared VM
+    /// of `vm_type` hosting `model` with a free slot — *unless* `model` is
+    /// already at its fair share on that VM while a backlogged co-resident
+    /// (per `has_backlog`) waits. The gate is work-conserving: with no
+    /// contending tenant queued, a hot model may burst past its share.
+    pub fn route_shared(&mut self, model: usize, vm_type: &VmType,
+                        has_backlog: impl Fn(usize) -> bool) -> Option<u64> {
+        let cand = self
+            .vms
+            .iter_mut()
+            .filter(|v| {
+                v.vm_type == vm_type && v.hosts(model) && v.can_accept() && {
+                    v.busy_of(model) < v.fair_share()
+                        || !v.residents.iter().any(|&o| o != model && has_backlog(o))
+                }
+            })
+            .max_by_key(|v| v.busy)?;
+        let id = cand.id;
+        let ok = cand.acquire_for(model);
+        debug_assert!(ok);
+        Some(id)
+    }
+
+    /// [`Self::release`] that also returns `model`'s per-resident slot on a
+    /// packed VM (identical to `release` on a dedicated VM).
+    pub fn release_for(&mut self, id: u64, model: usize, now: f64) {
+        if let Some(vm) = self.get_mut(id) {
+            vm.release_for(model, now);
+        }
+    }
+
     pub fn get_mut(&mut self, id: u64) -> Option<&mut Vm> {
         self.vms.iter_mut().find(|v| v.id == id)
     }
@@ -101,7 +206,14 @@ impl Cluster {
         let cand = self
             .vms
             .iter_mut()
-            .filter(|v| v.model == model && v.vm_type == vm_type && v.can_accept())
+            .filter(|v| {
+                // Shared VMs are routed through `route_shared` only: its
+                // fair-share gate and per-resident booking must not be
+                // bypassed by the dedicated path (`model` aliases
+                // `residents[0]` on a packed VM).
+                v.model == model && !v.is_shared() && v.vm_type == vm_type
+                    && v.can_accept()
+            })
             .max_by_key(|v| v.busy)?;
         cand.busy += 1;
         Some(cand.id)
@@ -436,6 +548,51 @@ mod tests {
         c.tick(3600.0, 0.0, 0.0);
         let cost = c.total_cost(3600.0);
         assert!((cost - 0.10 * 0.35).abs() < 1e-9, "one spot m4.large-hour: {cost}");
+    }
+
+    #[test]
+    fn pack_spawn_joins_before_booting_new_vms() {
+        let reg = crate::models::Registry::builtin();
+        let pack = PackPolicy::for_registry(&reg, 2);
+        let m4 = default_vm_type();
+        let mut c = Cluster::new(11);
+        let a = c.pack_spawn(m4, 0, &pack, 0.0);
+        let b = c.pack_spawn(m4, 1, &pack, 0.0);
+        assert_eq!(a, b, "second model joins the existing VM");
+        assert_eq!(c.total_alive(), 1);
+        let d = c.pack_spawn(m4, 2, &pack, 0.0);
+        assert_ne!(a, d, "residency cap spills to a fresh VM");
+        assert_eq!(c.total_alive(), 2);
+        c.tick(500.0, 0.0, 0.0);
+        // Drains peel residencies newest-VM-first; an emptied VM terminates.
+        c.pack_drain(m4, 2, 1, &pack, 501.0);
+        assert_eq!(c.total_alive(), 1);
+        c.pack_drain(m4, 1, 1, &pack, 502.0);
+        assert_eq!(c.total_alive(), 1, "VM survives while model 0 stays resident");
+        assert!(c.vms.iter().any(|v| v.hosts(0) && !v.hosts(1)));
+    }
+
+    #[test]
+    fn route_shared_yields_only_under_contention() {
+        let reg = crate::models::Registry::builtin();
+        let pack = PackPolicy::for_registry(&reg, 2);
+        let m4 = default_vm_type(); // 2 slots for the small pair
+        let mut c = Cluster::new(12);
+        c.pack_spawn(m4, 0, &pack, 0.0);
+        c.pack_spawn(m4, 1, &pack, 0.0);
+        c.tick(500.0, 0.0, 0.0);
+        // Work-conserving: with no co-resident backlog, model 0 bursts past
+        // its fair share of 1 and takes both slots.
+        let x = c.route_shared(0, m4, |_| false).unwrap();
+        assert!(c.route_shared(0, m4, |_| false).is_some());
+        assert!(c.route_shared(0, m4, |_| false).is_none(), "slots exhausted");
+        c.release_for(x, 0, 501.0);
+        c.release_for(x, 0, 501.0);
+        // Under contention the fair-share gate bites: model 0 at its share
+        // may not take the last slot while model 1 has queued work.
+        assert!(c.route_shared(0, m4, |m| m == 1).is_some());
+        assert!(c.route_shared(0, m4, |m| m == 1).is_none(), "gate holds");
+        assert!(c.route_shared(1, m4, |m| m == 0).is_some(), "tail tenant served");
     }
 
     #[test]

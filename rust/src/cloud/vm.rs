@@ -15,6 +15,81 @@ pub const PROVISION_MEAN_S: f64 = 100.0;
 /// Uniform jitter half-width around the mean.
 pub const PROVISION_JITTER_S: f64 = 20.0;
 
+/// Multi-tenant packing policy: whether an actuator may co-locate several
+/// models on one VM, and under what budget. "No DNN Left Behind" economics:
+/// a long tail of rarely-queried models must share machines, or each pays
+/// the 1-VM floor and the 60 s billing minimum alone.
+///
+/// The policy carries the per-model memory footprints (MB, indexed by
+/// registry index) so every backend — [`Cluster`](super::cluster::Cluster),
+/// `FluidFleet`, `ServerFleet` — prices headroom identically without
+/// needing a registry handle of its own.
+#[derive(Debug, Clone, Default)]
+pub struct PackPolicy {
+    /// Off by default: every spawn/drain path stays bit-identical to the
+    /// dedicated one-model-per-VM fleet.
+    pub enabled: bool,
+    /// Residency cap per VM (co-located model count budget).
+    pub max_models_per_vm: usize,
+    /// Memory footprint per model, MB, indexed by registry index.
+    pub mem_mb: Vec<f64>,
+}
+
+impl PackPolicy {
+    /// Packing enabled with the registry's memory profile and a residency
+    /// cap of `max_models_per_vm`.
+    pub fn for_registry(reg: &crate::models::Registry, max_models_per_vm: usize) -> PackPolicy {
+        PackPolicy {
+            enabled: true,
+            max_models_per_vm: max_models_per_vm.max(1),
+            mem_mb: reg.models.iter().map(|m| m.mem_mb).collect(),
+        }
+    }
+
+    /// Memory footprint of one model under this policy, MB.
+    pub fn mem_of(&self, model: usize) -> f64 {
+        self.mem_mb.get(model).copied().unwrap_or(f64::INFINITY)
+    }
+
+    /// May `model` join a VM of `vm_type` already hosting `residents`?
+    /// Gate = residency budget + un-clamped memory headroom: the joined
+    /// set must still fit at least one whole working set per slot
+    /// (`floor(mem / Σ mem_i) ≥ 1` *without* the 1-slot clamp that
+    /// dedicated sizing applies — the clamp would silently overcommit).
+    pub fn can_join(&self, vm_type: &VmType, residents: &[usize], model: usize) -> bool {
+        if !self.enabled || residents.contains(&model) {
+            return false;
+        }
+        if residents.len() + 1 > self.max_models_per_vm {
+            return false;
+        }
+        let total: f64 = residents.iter().chain(std::iter::once(&model))
+            .map(|&m| self.mem_of(m))
+            .sum();
+        total > 0.0 && (vm_type.mem_gb * 1024.0 / total).floor() >= 1.0
+    }
+
+    /// Concurrency slots a VM of `vm_type` offers when `residents` share it.
+    pub fn slots_for(&self, vm_type: &VmType, residents: &[usize]) -> u32 {
+        let mems: Vec<f64> = residents.iter().map(|&m| self.mem_of(m)).collect();
+        pack_slots(vm_type, &mems)
+    }
+}
+
+/// Concurrency slots of a VM whose memory is shared by models with the
+/// given footprints (MB). With a single resident this is exactly
+/// [`ModelProfile::slots_on`](crate::models::ModelProfile::slots_on):
+/// one in-flight inference per vCPU, bounded by how many whole resident
+/// working sets fit in memory.
+pub fn pack_slots(vm_type: &VmType, mem_mb: &[f64]) -> u32 {
+    let total: f64 = mem_mb.iter().sum();
+    if total <= 0.0 {
+        return vm_type.vcpus;
+    }
+    let by_mem = ((vm_type.mem_gb * 1024.0 / total).floor() as u32).max(1);
+    vm_type.vcpus.min(by_mem)
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum VmState {
     /// Launched, billing, not serving yet.
@@ -27,13 +102,16 @@ pub enum VmState {
     Terminated,
 }
 
-/// One virtual machine hosting instances of a single model type
-/// (the paper pins model replicas to VMs sized by offline profiling).
+/// One virtual machine hosting model replicas. Dedicated VMs (the paper's
+/// default: replicas pinned by offline profiling) leave `residents` empty
+/// and key on `model`; packed VMs carry the co-located model set in
+/// `residents` with per-model in-flight counts in `busy_by`.
 #[derive(Debug, Clone)]
 pub struct Vm {
     pub id: u64,
     pub vm_type: &'static VmType,
-    /// Index into the model registry of the model this VM hosts.
+    /// Index into the model registry of the model this VM hosts (for a
+    /// packed VM: its founding resident — occupancy lives in `residents`).
     pub model: usize,
     pub state: VmState,
     /// Simulation time the VM was launched (billing starts here).
@@ -46,6 +124,10 @@ pub struct Vm {
     pub slots: u32,
     /// Currently-occupied slots.
     pub busy: u32,
+    /// Co-located models on a packed VM (empty = dedicated legacy VM).
+    pub residents: Vec<usize>,
+    /// In-flight inferences per resident, parallel to `residents`.
+    pub busy_by: Vec<u32>,
 }
 
 impl Vm {
@@ -61,7 +143,101 @@ impl Vm {
             terminated_at: None,
             slots,
             busy: 0,
+            residents: Vec::new(),
+            busy_by: Vec::new(),
         }
+    }
+
+    /// A packed VM founded by `residents[0]` (which also fills the legacy
+    /// `model` field so census/billing aggregates keep working).
+    pub fn new_shared(id: u64, vm_type: &'static VmType, residents: Vec<usize>,
+                      slots: u32, launched_at: f64, provision_s: f64) -> Self {
+        assert!(!residents.is_empty(), "shared VM needs at least one resident");
+        let n = residents.len();
+        let mut vm = Vm::new(id, vm_type, residents[0], slots, launched_at, provision_s);
+        vm.residents = residents;
+        vm.busy_by = vec![0; n];
+        vm
+    }
+
+    /// Packed VM (non-empty resident set)?
+    pub fn is_shared(&self) -> bool {
+        !self.residents.is_empty()
+    }
+
+    /// Does this packed VM host `model`?
+    pub fn hosts(&self, model: usize) -> bool {
+        self.residents.contains(&model)
+    }
+
+    /// In-flight inferences of `model` on this packed VM.
+    pub fn busy_of(&self, model: usize) -> u32 {
+        self.residents
+            .iter()
+            .position(|&m| m == model)
+            .map_or(0, |i| self.busy_by[i])
+    }
+
+    /// Fair slot share of one resident: `ceil(slots / residents)`. A tenant
+    /// at or above its share yields free slots to backlogged co-residents.
+    pub fn fair_share(&self) -> u32 {
+        let n = self.residents.len().max(1) as u32;
+        self.slots.div_ceil(n)
+    }
+
+    /// Acquire a slot for `model` on a packed VM.
+    pub fn acquire_for(&mut self, model: usize) -> bool {
+        if !self.can_accept() || !self.hosts(model) {
+            return false;
+        }
+        self.busy += 1;
+        if let Some(i) = self.residents.iter().position(|&m| m == model) {
+            self.busy_by[i] += 1;
+        }
+        true
+    }
+
+    /// Release a slot held by `model`. Tolerant of a resident that was
+    /// drained away while its work was still in flight: the slot itself is
+    /// always returned.
+    pub fn release_for(&mut self, model: usize, now: f64) {
+        if let Some(i) = self.residents.iter().position(|&m| m == model) {
+            self.busy_by[i] = self.busy_by[i].saturating_sub(1);
+        }
+        self.release(now);
+    }
+
+    /// Add `model` to the resident set, resizing slots to the packed
+    /// capacity. `busy` may transiently exceed the shrunken `slots`; the
+    /// VM simply accepts nothing until in-flight work drains below it.
+    pub fn add_resident(&mut self, model: usize, new_slots: u32) {
+        debug_assert!(!self.hosts(model), "model {model} already resident");
+        if self.residents.is_empty() {
+            // Founding resident of a VM spawned through the legacy path.
+            self.residents.push(self.model);
+            self.busy_by.push(self.busy);
+        }
+        self.residents.push(model);
+        self.busy_by.push(0);
+        self.slots = new_slots;
+    }
+
+    /// Remove `model` from the resident set (its in-flight work, if any,
+    /// keeps its slots until completion). Returns true when the VM is left
+    /// with no residents and should be drained by the caller.
+    pub fn remove_resident(&mut self, model: usize, new_slots: u32) -> bool {
+        if let Some(i) = self.residents.iter().position(|&m| m == model) {
+            self.residents.remove(i);
+            self.busy_by.remove(i);
+        }
+        if self.residents.is_empty() {
+            return true;
+        }
+        if self.model == model {
+            self.model = self.residents[0];
+        }
+        self.slots = new_slots;
+        false
     }
 
     /// Advance lifecycle to `now` (Booting -> Running when boot completes;
@@ -85,7 +261,8 @@ impl Vm {
     }
 
     pub fn free_slots(&self) -> u32 {
-        if self.state == VmState::Running { self.slots - self.busy } else { 0 }
+        // saturating: a packed join may shrink `slots` below in-flight work.
+        if self.state == VmState::Running { self.slots.saturating_sub(self.busy) } else { 0 }
     }
 
     pub fn acquire(&mut self) -> bool {
@@ -210,5 +387,74 @@ mod tests {
         let c2 = v.cost_until(4000.0);
         assert!((c1 - c2).abs() < 1e-12);
         assert!((c1 - 300.0 * 0.10 / 3600.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pack_slots_singleton_matches_dedicated_sizing() {
+        let reg = crate::models::Registry::builtin();
+        let m4 = default_vm_type();
+        for m in &reg.models {
+            assert_eq!(pack_slots(m4, &[m.mem_mb]), m.slots_on(m4), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn pack_policy_gates_on_memory_and_count() {
+        let reg = crate::models::Registry::builtin();
+        let m4 = default_vm_type(); // 2 vcpu, 8 GB
+        let pack = PackPolicy::for_registry(&reg, 2);
+        // mobilenet_025 (512) + squeezenet (640) fit comfortably in 8 GB.
+        assert!(pack.can_join(m4, &[0], 1));
+        // Residency cap: a third model may not join even though memory fits.
+        assert!(!pack.can_join(m4, &[0, 1], 2));
+        // Same model never joins twice.
+        assert!(!pack.can_join(m4, &[0], 0));
+        // Memory gate un-clamped: resnet152 (2560 MB) + inception_v3
+        // (2048 MB) overflow a 4 GB c5.large even though the 1-slot clamp
+        // of dedicated sizing would have pretended otherwise.
+        let wide = PackPolicy::for_registry(&reg, 8);
+        let c5l = crate::cloud::pricing::vm_type("c5.large").unwrap();
+        assert!(!wide.can_join(c5l, &[7], 6));
+        assert!(wide.can_join(c5l, &[0], 1), "small pair fits the c5.large");
+        // Disabled policy never joins.
+        let off = PackPolicy::default();
+        assert!(!off.can_join(m4, &[0], 1));
+    }
+
+    #[test]
+    fn shared_vm_tracks_per_resident_busy() {
+        let reg = crate::models::Registry::builtin();
+        let m4 = default_vm_type();
+        let pack = PackPolicy::for_registry(&reg, 4);
+        let slots = pack.slots_for(m4, &[0, 1]);
+        assert_eq!(slots, 2, "two small models still vCPU-bound on m4.large");
+        let mut v = Vm::new_shared(9, m4, vec![0, 1], slots, 0.0, 100.0);
+        v.tick(200.0);
+        assert!(v.acquire_for(0));
+        assert!(v.acquire_for(1));
+        assert_eq!((v.busy_of(0), v.busy_of(1), v.busy), (1, 1, 2));
+        assert!(!v.acquire_for(0), "slots exhausted");
+        assert!(!v.acquire_for(3), "non-resident never acquires");
+        v.release_for(0, 201.0);
+        assert_eq!((v.busy_of(0), v.busy), (0, 1));
+        assert_eq!(v.fair_share(), 1);
+    }
+
+    #[test]
+    fn resident_departure_survives_inflight_work() {
+        let reg = crate::models::Registry::builtin();
+        let m4 = default_vm_type();
+        let pack = PackPolicy::for_registry(&reg, 4);
+        let mut v = Vm::new_shared(9, m4, vec![0, 1], pack.slots_for(m4, &[0, 1]), 0.0, 100.0);
+        v.tick(200.0);
+        assert!(v.acquire_for(0));
+        // Model 0 leaves while its inference is in flight.
+        let empty = v.remove_resident(0, pack.slots_for(m4, &[1]));
+        assert!(!empty);
+        assert_eq!(v.model, 1, "founding model re-keys to a live resident");
+        assert_eq!(v.busy, 1, "in-flight slot survives the departure");
+        v.release_for(0, 201.0); // tolerant: slot returned, no panic
+        assert_eq!(v.busy, 0);
+        assert!(v.remove_resident(1, 0), "last resident out empties the VM");
     }
 }

@@ -17,13 +17,30 @@
 //! constructors build precisely that.
 
 use super::valve::{LambdaOutcome, ServerlessValve};
-use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
+use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, PackPolicy,
+            VmPhase};
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::models::Registry;
 use crate::scheduler::{Action, OffloadPolicy};
 use crate::sim::core::SimCore;
 use crate::variants::{EnsembleChoice, VariantChoice, VariantFamily, VariantPlane};
+
+/// One shared (multi-tenant) VM of the fluid backend's packed pool. The
+/// fluid model carries no per-request state, so a packed VM is just its
+/// residency set and lifecycle timestamps: boots land at exactly the
+/// type's mean latency (no jitter — fluid determinism), and an emptied VM
+/// terminates immediately (the fluid analogue of draining an idle VM).
+#[derive(Debug, Clone)]
+struct PackedVm {
+    id: u64,
+    /// Palette index of the VM's type.
+    k: usize,
+    residents: Vec<usize>,
+    launched_at: f64,
+    ready_at: f64,
+    terminated_at: Option<f64>,
+}
 
 /// Fluid sub-fleets over a model family's palette. Drains cancel the
 /// target sub-fleet's newest boots first (LIFO within the `(variant,
@@ -56,6 +73,12 @@ pub struct FluidFleet {
     /// Variant plane (model-less query routing); installed by
     /// [`FluidFleet::with_family`] or `install_variants`.
     plane: Option<VariantPlane>,
+    /// Multi-tenant packing policy (disabled = dedicated legacy fleet).
+    pack: PackPolicy,
+    /// Shared (packed) VMs, join/peel semantics identical to
+    /// [`Cluster::pack_spawn`](crate::cloud::Cluster)/`pack_drain`.
+    packed: Vec<PackedVm>,
+    next_packed_id: u64,
     /// Spot preemption script (reclaim fault injection) when installed.
     preemption: Option<PreemptionProcess>,
     /// VMs reclaimed during the most recent reclaim sweep.
@@ -84,6 +107,9 @@ impl FluidFleet {
             boots: SimCore::new(),
             valve: None,
             plane: None,
+            pack: PackPolicy::default(),
+            packed: Vec::new(),
+            next_packed_id: 0,
             preemption: None,
             reclaims_tick: 0,
             reclaims_total: 0,
@@ -221,6 +247,76 @@ impl FluidFleet {
         }
         self.reclaims_tick
     }
+
+    /// Packed spawn: first-fit `model` onto the lowest-id alive shared VM
+    /// of palette entry `k` with residency/memory headroom, else launch a
+    /// fresh shared singleton booting at exactly the type's mean latency —
+    /// the fluid mirror of [`Cluster::pack_spawn`](crate::cloud::Cluster).
+    fn pack_spawn(&mut self, model: usize, k: usize, now: f64) {
+        let t = self.palette[k];
+        let pack = &self.pack;
+        let join = self
+            .packed
+            .iter_mut()
+            .filter(|p| {
+                p.k == k && p.terminated_at.is_none()
+                    && pack.can_join(t, &p.residents, model)
+            })
+            .min_by_key(|p| p.id);
+        if let Some(p) = join {
+            p.residents.push(model);
+        } else {
+            self.packed.push(PackedVm {
+                id: self.next_packed_id,
+                k,
+                residents: vec![model],
+                launched_at: now,
+                ready_at: now + t.boot_mean_s,
+                terminated_at: None,
+            });
+            self.next_packed_id += 1;
+        }
+    }
+
+    /// Packed drain: peel `model`'s residency off the newest (highest-id)
+    /// alive shared VM hosting it, `count` times. The fluid model has no
+    /// in-flight state, so an emptied VM terminates at `now` (a booting
+    /// one is likewise cancelled) — the packed pool deliberately bypasses
+    /// the dedicated path's one-VM drain floor, exactly like the other two
+    /// backends' pack_drain.
+    fn pack_drain(&mut self, model: usize, k: usize, count: usize, now: f64) {
+        for _ in 0..count {
+            let Some(p) = self
+                .packed
+                .iter_mut()
+                .filter(|p| {
+                    p.k == k && p.terminated_at.is_none()
+                        && p.residents.contains(&model)
+                })
+                .max_by_key(|p| p.id)
+            else {
+                return;
+            };
+            let pos = p.residents.iter().position(|&m| m == model).unwrap();
+            p.residents.remove(pos);
+            if p.residents.is_empty() {
+                p.terminated_at = Some(now);
+            }
+        }
+    }
+
+    /// Total billing of the packed pool as of `now` (terminated VMs at
+    /// their final bills, live ones pro-rated; per-second pricing with the
+    /// same 60 s minimum every backend applies).
+    pub fn packed_cost(&self, now: f64) -> f64 {
+        self.packed
+            .iter()
+            .map(|p| {
+                self.palette[p.k]
+                    .cost_between(p.launched_at, p.terminated_at.unwrap_or(now))
+            })
+            .sum()
+    }
 }
 
 impl FleetActuator for FluidFleet {
@@ -232,18 +328,31 @@ impl FleetActuator for FluidFleet {
         self.clock = self.clock.max(now);
         match *action {
             Action::Spawn { model, vm_type, count } => {
+                let k = self.type_index(vm_type);
+                if self.pack.enabled {
+                    // Packed placement: any registry model may share a VM,
+                    // so the packed pool is not restricted to the fleet's
+                    // member list (the count matrices stay untouched).
+                    for _ in 0..count {
+                        self.pack_spawn(model, k, now);
+                    }
+                    return;
+                }
                 let v = self.variant_of(model)
                     .expect("fluid fleet does not hold the action's model");
-                let k = self.type_index(vm_type);
                 for _ in 0..count {
                     self.boots.schedule_at(now + vm_type.boot_mean_s, (v, k));
                     self.booting[v][k] += 1;
                 }
             }
             Action::Drain { model, vm_type, count } => {
+                let k = self.type_index(vm_type);
+                if self.pack.enabled {
+                    self.pack_drain(model, k, count, now);
+                    return;
+                }
                 let v = self.variant_of(model)
                     .expect("fluid fleet does not hold the action's model");
-                let k = self.type_index(vm_type);
                 let mut left = count;
                 while left > 0
                     && self.booting[v][k] > 0
@@ -281,6 +390,23 @@ impl FleetActuator for FluidFleet {
                     b.add(m, t, VmPhase::Booting, 0.0);
                 }
             }
+        }
+        // Packed pool: fluid VMs carry no in-flight state, so per-resident
+        // busy is identically zero; occupancy (phase, slots, residency)
+        // still fingerprints identically to the other backends.
+        for p in &self.packed {
+            if p.terminated_at.is_some() {
+                continue;
+            }
+            let t = self.palette[p.k];
+            let phase = if self.clock >= p.ready_at {
+                VmPhase::Running
+            } else {
+                VmPhase::Booting
+            };
+            let slots = self.pack.slots_for(t, &p.residents);
+            let zeros = vec![0u32; p.residents.len()];
+            b.add_shared(t, phase, slots, &p.residents, &zeros);
         }
         if let Some(valve) = &self.valve {
             b.set_lambda(valve.usage());
@@ -326,6 +452,10 @@ impl FleetActuator for FluidFleet {
             acc_routed,
             ..DemandSnapshot::default()
         }
+    }
+
+    fn set_pack(&mut self, policy: PackPolicy) {
+        self.pack = policy;
     }
 
     fn set_offload(&mut self, policy: OffloadPolicy) {
@@ -577,6 +707,32 @@ mod tests {
         f.advance(30.0);
         assert_eq!(f.view().spot.reclaims_tick, 0);
         assert_eq!(f.view().spot.reclaims_total, 5);
+    }
+
+    #[test]
+    fn packed_fluid_joins_and_bills_shared_vms() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut f = FluidFleet::new(0, vec![m4]);
+        f.set_pack(PackPolicy::for_registry(&reg, 4));
+        f.apply(&Action::Spawn { model: 0, vm_type: m4, count: 1 }, 0.0);
+        f.apply(&Action::Spawn { model: 1, vm_type: m4, count: 1 }, 0.0);
+        let v = f.view();
+        assert!(v.subfleets().is_empty(), "packed capacity reports as a pool");
+        let p = v.pool(m4).expect("pool visible");
+        assert_eq!((p.running, p.booting), (0, 1), "join lands on the booting VM");
+        f.advance(m4.boot_mean_s);
+        let v = f.view();
+        let p = v.pool(m4).unwrap();
+        assert_eq!((p.running, p.vms_hosting(0), p.vms_hosting(1)), (1, 1, 1));
+        // Peel both residencies: the emptied VM terminates and stops billing.
+        f.apply(&Action::Drain { model: 0, vm_type: m4, count: 1 }, 1800.0);
+        f.apply(&Action::Drain { model: 1, vm_type: m4, count: 1 }, 1800.0);
+        assert_eq!(f.view().total_alive(), 0);
+        let half_hour = f.packed_cost(1800.0);
+        assert!((half_hour - 0.5 * m4.price.hourly_usd).abs() < 1e-9,
+                "shared VM bills once, not per resident: {half_hour}");
+        assert_eq!(f.packed_cost(3600.0), half_hour, "terminated VMs stop billing");
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub mod live;
 pub mod sim;
 pub mod valve;
 
+pub use crate::cloud::vm::{pack_slots, PackPolicy};
 pub use fluid::{FluidCredit, FluidFleet};
 pub use live::{LiveReport, ServerFleet, ServerFleetConfig};
 pub use sim::{cluster_view, ClusterActuator};
@@ -75,6 +76,55 @@ pub struct SubFleet {
     pub util_sum: f64,
 }
 
+/// One co-located model on a [`PoolView`]'s shared VMs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolResident {
+    pub model: usize,
+    /// Shared VMs of this pool hosting the model.
+    pub vms: usize,
+    /// In-flight inferences attributed to the model across the pool.
+    pub busy: u64,
+}
+
+/// Aggregate occupancy of one *packed* serving pool: every shared
+/// (multi-tenant) VM of one type, with per-resident-model attribution —
+/// the placement-plane counterpart of [`SubFleet`]. Packed capacity is
+/// deliberately *not* folded into `subfleets`: a shared VM belongs to
+/// several models at once, so per-(model,type) counters would double-count
+/// it, and pack-naive schemes would mistake shared capacity for dedicated
+/// headroom. Pack-aware deciders read `FleetView::pools` instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolView {
+    pub vm_type: &'static VmType,
+    /// Shared VMs serving requests.
+    pub running: usize,
+    /// Shared VMs provisioning (billing, not serving).
+    pub booting: usize,
+    /// Σ concurrency slots over the Running shared VMs.
+    pub slots: u64,
+    /// Σ in-flight inferences over the Running shared VMs.
+    pub busy: u64,
+    /// Per-model occupancy, sorted by model index.
+    pub residents: Vec<PoolResident>,
+}
+
+impl PoolView {
+    /// Free slots across the pool's running shared VMs.
+    pub fn free_slots(&self) -> u64 {
+        self.slots.saturating_sub(self.busy)
+    }
+
+    /// Alive (Running + Booting) shared VMs hosting `model`.
+    pub fn vms_hosting(&self, model: usize) -> usize {
+        self.residents.iter().find(|r| r.model == model).map_or(0, |r| r.vms)
+    }
+
+    /// In-flight inferences attributed to `model` across the pool.
+    pub fn busy_of(&self, model: usize) -> u64 {
+        self.residents.iter().find(|r| r.model == model).map_or(0, |r| r.busy)
+    }
+}
+
 /// Point-in-time, backend-agnostic fleet snapshot: the only fleet state a
 /// scheme may observe. Sub-fleets are sorted by `(model, vm_type.name)`
 /// and empty sub-fleets are dropped, so two backends that hold the same
@@ -83,6 +133,9 @@ pub struct SubFleet {
 pub struct FleetView {
     pub now: f64,
     subfleets: Vec<SubFleet>,
+    /// Packed (multi-tenant) pools, sorted by type name; empty unless the
+    /// backend's [`PackPolicy`] is enabled. See [`PoolView`].
+    pub pools: Vec<PoolView>,
     /// `(model, type name)` → position in `subfleets`. Keeps the hot
     /// per-`(model, vm_type)` lookup O(log n): routing and the variant
     /// plane query views at palette × family cardinality, where the old
@@ -150,9 +203,17 @@ impl FleetView {
             .sum()
     }
 
-    /// Alive members across every model and type.
+    /// Alive members across every model and type, including packed pool
+    /// VMs (each shared VM counts once, however many models it hosts).
     pub fn total_alive(&self) -> usize {
-        self.subfleets.iter().map(|s| s.running + s.booting).sum()
+        self.subfleets.iter().map(|s| s.running + s.booting).sum::<usize>()
+            + self.pools.iter().map(|p| p.running + p.booting).sum::<usize>()
+    }
+
+    /// The packed pool on `vm_type`, if the backend holds shared capacity
+    /// there.
+    pub fn pool(&self, vm_type: &VmType) -> Option<&PoolView> {
+        self.pools.iter().find(|p| p.vm_type.name == vm_type.name)
     }
 
     /// Alive (Running + Booting) members on transient (spot) palette
@@ -194,6 +255,8 @@ pub enum VmPhase {
 /// comparable across backends).
 pub struct FleetViewBuilder {
     map: BTreeMap<(usize, &'static str), SubFleet>,
+    /// Packed pools by type name; per-resident rows keyed by model.
+    pool_map: BTreeMap<&'static str, (PoolView, BTreeMap<usize, PoolResident>)>,
     lambda: LambdaUsage,
     accuracy: AccuracyUsage,
     spot: SpotUsage,
@@ -209,6 +272,7 @@ impl FleetViewBuilder {
     pub fn new() -> FleetViewBuilder {
         FleetViewBuilder {
             map: BTreeMap::new(),
+            pool_map: BTreeMap::new(),
             lambda: LambdaUsage::default(),
             accuracy: AccuracyUsage::default(),
             spot: SpotUsage::default(),
@@ -250,6 +314,34 @@ impl FleetViewBuilder {
         }
     }
 
+    /// Record one alive *shared* (packed) VM: its phase, slot capacity,
+    /// resident model set and the per-resident in-flight counts. Shared
+    /// members land in [`FleetView::pools`], never in `subfleets` — see
+    /// [`PoolView`] for why.
+    pub fn add_shared(&mut self, vm_type: &'static VmType, phase: VmPhase,
+                      slots: u32, residents: &[usize], busy_by: &[u32]) {
+        let (pool, rows) = self.pool_map.entry(vm_type.name).or_insert_with(|| {
+            (PoolView { vm_type, running: 0, booting: 0, slots: 0, busy: 0,
+                        residents: Vec::new() },
+             BTreeMap::new())
+        });
+        match phase {
+            VmPhase::Running => {
+                pool.running += 1;
+                pool.slots += slots as u64;
+                pool.busy += busy_by.iter().map(|&b| b as u64).sum::<u64>();
+            }
+            VmPhase::Booting => pool.booting += 1,
+        }
+        for (i, &m) in residents.iter().enumerate() {
+            let row = rows.entry(m).or_insert(PoolResident { model: m, vms: 0, busy: 0 });
+            row.vms += 1;
+            if phase == VmPhase::Running {
+                row.busy += busy_by.get(i).copied().unwrap_or(0) as u64;
+            }
+        }
+    }
+
     pub fn build(self, now: f64) -> FleetView {
         let mut subfleets = Vec::with_capacity(self.map.len());
         let mut index = BTreeMap::new();
@@ -257,7 +349,15 @@ impl FleetViewBuilder {
             index.insert(key, i);
             subfleets.push(s);
         }
-        FleetView { now, subfleets, index, lambda: self.lambda,
+        let pools = self
+            .pool_map
+            .into_values()
+            .map(|(mut pool, rows)| {
+                pool.residents = rows.into_values().collect();
+                pool
+            })
+            .collect();
+        FleetView { now, subfleets, pools, index, lambda: self.lambda,
                     accuracy: self.accuracy, spot: self.spot }
     }
 }
@@ -311,6 +411,17 @@ pub trait FleetActuator {
     fn demand(&mut self) -> DemandSnapshot {
         DemandSnapshot::default()
     }
+
+    /// Set the multi-tenant packing policy. With packing enabled, a
+    /// `Spawn{model, vm_type}` first tries to *join* an existing shared VM
+    /// of that type with residency/memory headroom (first-fit over alive
+    /// VMs in id order) and only boots a fresh VM when none fits, and a
+    /// `Drain{model, vm_type}` peels the model's residency off the newest
+    /// hosting VM (terminating it when left empty). All three backends
+    /// implement identical join/peel semantics
+    /// (`rust/tests/packing_conformance.rs`); the default is the dedicated
+    /// one-model-per-VM fleet, bit-identical to the pre-packing behavior.
+    fn set_pack(&mut self, _policy: PackPolicy) {}
 
     /// Set the serverless-valve policy: which overflow requests the fleet
     /// may divert to lambdas until the next control tick. The control loop
@@ -829,6 +940,35 @@ mod tests {
         let v = FleetView::empty(0.0);
         assert_eq!(v.total_alive(), 0);
         assert_eq!(v.utilization(0), 1.0);
+    }
+
+    #[test]
+    fn shared_members_aggregate_into_pools_not_subfleets() {
+        use crate::cloud::pricing::vm_type;
+        let m4 = vm_type("m4.large").unwrap();
+        let c5 = vm_type("c5.large").unwrap();
+        let mut b = FleetViewBuilder::new();
+        // Two running shared VMs on m4 (models {0,1} and {1,2}), one booting.
+        b.add_shared(m4, VmPhase::Running, 2, &[0, 1], &[1, 0]);
+        b.add_shared(m4, VmPhase::Running, 2, &[1, 2], &[2, 0]);
+        b.add_shared(m4, VmPhase::Booting, 2, &[3], &[0]);
+        // A dedicated member coexists with the pool.
+        b.add(0, c5, VmPhase::Running, 0.5);
+        let v = b.build(5.0);
+        assert_eq!(v.subfleets().len(), 1, "shared VMs never leak into subfleets");
+        assert_eq!(v.total_alive(), 4, "3 pool VMs + 1 dedicated");
+        let p = v.pool(m4).expect("m4 pool present");
+        assert_eq!((p.running, p.booting, p.slots, p.busy), (2, 1, 4, 3));
+        assert_eq!(p.free_slots(), 1);
+        assert_eq!(p.vms_hosting(1), 2, "model 1 resident on both running VMs");
+        assert_eq!(p.vms_hosting(3), 1, "booting residency visible");
+        assert_eq!(p.busy_of(1), 2, "per-model attribution, not pool-wide");
+        assert_eq!(p.busy_of(0), 1);
+        assert_eq!(p.busy_of(2), 0);
+        assert!(v.pool(c5).is_none(), "dedicated capacity forms no pool");
+        // Residents sorted by model index for fingerprint determinism.
+        let models: Vec<usize> = p.residents.iter().map(|r| r.model).collect();
+        assert_eq!(models, vec![0, 1, 2, 3]);
     }
 
     /// Scripted joint policy: always emits one fixed action id, recording

@@ -7,7 +7,8 @@
 //! ([`crate::sim::engine`]) no longer carries bespoke spawn/drain plumbing.
 
 use super::valve::{LambdaOutcome, ServerlessValve};
-use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, VmPhase};
+use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, PackPolicy,
+            VmPhase};
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::cloud::{Cluster, VmState};
@@ -20,11 +21,17 @@ use crate::variants::{EnsembleChoice, VariantChoice, VariantPlane};
 pub fn cluster_view(cluster: &Cluster, now: f64) -> FleetView {
     let mut b = FleetViewBuilder::new();
     for vm in &cluster.vms {
-        match vm.state {
-            VmState::Running => b.add(vm.model, vm.vm_type, VmPhase::Running,
-                                      vm.utilization()),
-            VmState::Booting => b.add(vm.model, vm.vm_type, VmPhase::Booting, 0.0),
-            VmState::Draining | VmState::Terminated => {}
+        let phase = match vm.state {
+            VmState::Running => VmPhase::Running,
+            VmState::Booting => VmPhase::Booting,
+            VmState::Draining | VmState::Terminated => continue,
+        };
+        if vm.is_shared() {
+            b.add_shared(vm.vm_type, phase, vm.slots, &vm.residents, &vm.busy_by);
+        } else if phase == VmPhase::Running {
+            b.add(vm.model, vm.vm_type, VmPhase::Running, vm.utilization());
+        } else {
+            b.add(vm.model, vm.vm_type, VmPhase::Booting, 0.0);
         }
     }
     b.build(now)
@@ -51,6 +58,8 @@ pub struct ClusterActuator {
     /// Variant plane: resolves the embedding loop's model-less queries
     /// ([`FleetActuator::route_modelless`]) when installed.
     plane: Option<VariantPlane>,
+    /// Multi-tenant packing policy (disabled = dedicated legacy fleet).
+    pack: PackPolicy,
     /// Spot preemption script (reclaim fault injection) when installed.
     preemption: Option<PreemptionProcess>,
     /// VMs reclaimed during the most recent [`Self::process_reclaims`].
@@ -76,6 +85,7 @@ impl ClusterActuator {
             queued: vec![0; n],
             valve: ServerlessValve::new(reg),
             plane: None,
+            pack: PackPolicy::default(),
             preemption: None,
             reclaims_tick: 0,
             reclaims_total: 0,
@@ -147,18 +157,47 @@ impl FleetActuator for ClusterActuator {
         self.clock = self.clock.max(now);
         match *action {
             Action::Spawn { model, vm_type, count } => {
-                // Account-level instance quota (EC2 service quotas): also a
-                // backstop against scheme feedback loops.
-                let room = self
-                    .instance_cap
-                    .saturating_sub(self.cluster.total_alive());
-                let slots = self.caps[model][self.type_index(vm_type)].slots_per_vm;
-                for _ in 0..count.min(room) {
-                    self.cluster.spawn(vm_type, model, slots, now);
+                if self.pack.enabled {
+                    // Packed placement: joins are free (no new instance, no
+                    // quota pressure); only genuine boots count against the
+                    // quota, which pack_spawn decides — so cap by room on
+                    // each iteration rather than up front.
+                    for _ in 0..count {
+                        let before = self.cluster.total_alive();
+                        if before >= self.instance_cap {
+                            // A join may still fit; a fresh boot may not.
+                            let can_join = self.cluster.vms.iter().any(|v| {
+                                v.vm_type == vm_type
+                                    && matches!(v.state,
+                                                VmState::Running | VmState::Booting)
+                                    && v.is_shared()
+                                    && self.pack.can_join(vm_type, &v.residents, model)
+                            });
+                            if !can_join {
+                                break;
+                            }
+                        }
+                        self.cluster.pack_spawn(vm_type, model, &self.pack, now);
+                    }
+                } else {
+                    // Account-level instance quota (EC2 service quotas): also
+                    // a backstop against scheme feedback loops.
+                    let room = self
+                        .instance_cap
+                        .saturating_sub(self.cluster.total_alive());
+                    let slots =
+                        self.caps[model][self.type_index(vm_type)].slots_per_vm;
+                    for _ in 0..count.min(room) {
+                        self.cluster.spawn(vm_type, model, slots, now);
+                    }
                 }
             }
             Action::Drain { model, vm_type, count } => {
-                self.cluster.scale_down_typed(model, vm_type, count, now);
+                if self.pack.enabled {
+                    self.cluster.pack_drain(vm_type, model, count, &self.pack, now);
+                } else {
+                    self.cluster.scale_down_typed(model, vm_type, count, now);
+                }
             }
         }
     }
@@ -218,6 +257,10 @@ impl FleetActuator for ClusterActuator {
             acc_sum,
             acc_routed,
         }
+    }
+
+    fn set_pack(&mut self, policy: PackPolicy) {
+        self.pack = policy;
     }
 
     fn set_offload(&mut self, policy: OffloadPolicy) {
@@ -327,6 +370,42 @@ mod tests {
         assert_eq!(s.reclaims_tick, 0, "per-tick counter resets");
         assert_eq!(s.reclaims_total, 2);
         assert_eq!(s.spot_vms, 2);
+    }
+
+    #[test]
+    fn packed_actions_join_and_report_pools() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut a = ClusterActuator::new(&reg, vec![m4], 100, 4);
+        a.set_pack(PackPolicy::for_registry(&reg, 4));
+        a.apply(&Action::Spawn { model: 0, vm_type: m4, count: 1 }, 0.0);
+        a.apply(&Action::Spawn { model: 1, vm_type: m4, count: 1 }, 0.0);
+        assert_eq!(a.cluster.total_alive(), 1, "second model joined, no boot");
+        a.advance(500.0);
+        let v = a.view();
+        assert!(v.subfleets().is_empty(), "packed fleet reports no dedicated rows");
+        let p = v.pool(m4).expect("pool visible to schemes");
+        assert_eq!((p.running, p.vms_hosting(0), p.vms_hosting(1)), (1, 1, 1));
+        assert_eq!(v.total_alive(), 1);
+        // Peeling both residencies terminates the shared VM.
+        a.apply(&Action::Drain { model: 0, vm_type: m4, count: 1 }, 501.0);
+        a.apply(&Action::Drain { model: 1, vm_type: m4, count: 1 }, 501.0);
+        a.advance(502.0);
+        assert_eq!(a.view().total_alive(), 0);
+    }
+
+    #[test]
+    fn packed_quota_still_admits_joins() {
+        let reg = Registry::builtin();
+        let m4 = vm_type("m4.large").unwrap();
+        let mut a = ClusterActuator::new(&reg, vec![m4], 1, 5);
+        a.set_pack(PackPolicy::for_registry(&reg, 4));
+        a.apply(&Action::Spawn { model: 0, vm_type: m4, count: 3 }, 0.0);
+        assert_eq!(a.cluster.total_alive(), 1, "quota caps fresh boots");
+        // At quota, a join (no new instance) must still land.
+        a.apply(&Action::Spawn { model: 1, vm_type: m4, count: 1 }, 1.0);
+        assert_eq!(a.cluster.total_alive(), 1);
+        assert!(a.cluster.vms[0].hosts(1), "join admitted at quota");
     }
 
     #[test]

@@ -100,6 +100,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     if want("variants") {
         figures::save(&out, "fig_variants", &figures::fig_variants(&reg, &cfg))?;
     }
+    if want("pack") {
+        figures::save(&out, "fig_pack", &figures::fig_pack(&reg, &cfg))?;
+    }
     if want("spot") {
         figures::save(&out, "fig_spot", &figures::fig_spot(&reg, &cfg))?;
     }
@@ -342,7 +345,7 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het|live|variants|spot|joint  --out results
+  figures     --fig all|2..10|het|rl_het|live|variants|pack|spot|joint  --out results
               [--quick|--duration S --rate R]
   simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
               [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]

@@ -25,6 +25,7 @@ pub mod acc_aware;
 pub mod exascale;
 pub mod load_monitor;
 pub mod mixed;
+pub mod pack_aware;
 pub mod paragon;
 pub mod reactive;
 pub mod util_aware;
@@ -223,6 +224,10 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scheme>> {
         "mixed" => Some(Box::new(mixed::Mixed::new())),
         "paragon" => Some(Box::new(paragon::Paragon::new())),
         "acc_aware" => Some(Box::new(acc_aware::AccAware::new())),
+        // Multi-tenant packing (needs SimConfig::pack enabled to join VMs;
+        // deliberately NOT in ALL_SCHEMES — the generic scheme sweeps run
+        // without a pack policy).
+        "pack_aware" => Some(Box::new(pack_aware::PackAware::new())),
         _ => None,
     }
 }

@@ -1,0 +1,183 @@
+//! `pack_aware`: multi-tenant procurement for long-tail model pools.
+//!
+//! Per-model schemes buy at least one VM per warm model, so a pool of N
+//! barely-warm tenants pays for N mostly-idle machines. This scheme
+//! counts *residencies* instead: a spawn for a model under an enabled
+//! [`PackPolicy`](crate::control::PackPolicy) joins an existing shared
+//! VM when the slot/memory budget allows (the actuator's first-fit
+//! join), so the long tail co-locates onto a handful of shared VMs
+//! while hot models still get as many residencies as their rate needs.
+//! Sizing is in slot units: one residency is conservatively assumed to
+//! hold a fair share of a fully-packed VM's slots, never the whole VM.
+//!
+//! The scheme is only registered through
+//! [`by_name`](crate::scheduler::by_name) — it is *not* part of
+//! [`ALL_SCHEMES`](crate::scheduler::ALL_SCHEMES), whose members must
+//! make sense without a pack policy installed.
+
+use super::{cheapest_cap_index, Action, OffloadPolicy, SchedObs, Scheme, TypeCap};
+use std::collections::BTreeMap;
+
+/// Seconds of sustained surplus before a residency is peeled.
+const DRAIN_COOLDOWN_S: f64 = 60.0;
+/// Assumed co-tenancy when sizing one residency's slot share: a packed
+/// VM split `PACK_DEGREE` ways. Conservative (a half-empty VM serves
+/// more), so under-provisioning resolves toward extra joins, not
+/// queueing.
+const PACK_DEGREE: u32 = 4;
+/// Stochastic-headroom margin over the smoothed rate (see `reactive`).
+const MARGIN: f64 = 1.10;
+/// Seconds within which a standing backlog should drain.
+const BACKLOG_DRAIN_S: f64 = 10.0;
+/// Rates below this are treated as a cold tenant (no capacity held).
+const EPS_RATE: f64 = 0.01;
+
+pub struct PackAware {
+    surplus_since: BTreeMap<usize, Option<f64>>,
+}
+
+impl PackAware {
+    pub fn new() -> Self {
+        PackAware { surplus_since: BTreeMap::new() }
+    }
+}
+
+impl Default for PackAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for PackAware {
+    fn name(&self) -> &'static str {
+        "pack_aware"
+    }
+
+    fn tick(&mut self, obs: &SchedObs) -> Vec<Action> {
+        let mut out = Vec::new();
+        for d in obs.demands {
+            // Cheapest effective $/query type, like paragon's greedy pick;
+            // legacy single-type observations fall back to the primary.
+            let fallback = [TypeCap {
+                vm_type: obs.primary(),
+                service_s: d.service_s,
+                slots_per_vm: d.slots_per_vm,
+            }];
+            let caps: &[TypeCap] =
+                if d.types.is_empty() { &fallback } else { &d.types };
+            let Some(ci) = cheapest_cap_index(caps) else { continue };
+            let c = &caps[ci];
+            let ty = c.vm_type;
+
+            let desired = if d.rate <= EPS_RATE && d.queued == 0 {
+                0
+            } else {
+                // Slots to stand up: steady-state demand plus enough to
+                // drain any backlog, each residency pessimistically worth
+                // a fully-packed VM's fair share.
+                let needed_slots = d.rate * MARGIN * c.service_s
+                    + d.queued as f64 * c.service_s / BACKLOG_DRAIN_S;
+                let per_res = (c.slots_per_vm / PACK_DEGREE).max(1) as f64;
+                (needed_slots / per_res).ceil().max(1.0) as usize
+            };
+
+            // Current residencies: dedicated sub-fleet members (legacy /
+            // pre-pack capacity) plus this model's residencies in the
+            // shared pool, booting included.
+            let current = obs.fleet.alive_typed(d.model, ty)
+                + obs.fleet.pool(ty).map_or(0, |p| p.vms_hosting(d.model));
+
+            let since = self.surplus_since.entry(d.model).or_insert(None);
+            if current < desired {
+                *since = None;
+                out.push(Action::Spawn {
+                    model: d.model,
+                    vm_type: ty,
+                    count: desired - current,
+                });
+            } else if current > desired {
+                let t0 = since.get_or_insert(obs.now);
+                if obs.now - *t0 >= DRAIN_COOLDOWN_S {
+                    out.push(Action::Drain {
+                        model: d.model,
+                        vm_type: ty,
+                        count: current - desired,
+                    });
+                    *since = None;
+                }
+            } else {
+                *since = None;
+            }
+        }
+        out
+    }
+
+    fn offload(&self) -> OffloadPolicy {
+        OffloadPolicy::None
+    }
+
+    fn preferred_type(&self, types: &[TypeCap]) -> usize {
+        cheapest_cap_index(types).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::default_vm_type;
+    use crate::scheduler::testutil::{obs_fixture, palette, view};
+
+    #[test]
+    fn long_tail_rate_gets_exactly_one_residency() {
+        // 0.5 q/s at 0.1 s service on a 2-slot type: 0.055 needed slots →
+        // one residency, not one whole VM per model.
+        let (mon, mut demands, cluster) = obs_fixture(40.0, 0, false);
+        demands[0].rate = 0.5;
+        let mut s = PackAware::new();
+        let fleet = view(&cluster, 30.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             fleet: &fleet, vm_types: palette() };
+        assert_eq!(
+            s.tick(&obs),
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 1 }]
+        );
+    }
+
+    #[test]
+    fn hot_rate_scales_residencies_with_demand() {
+        // 40 q/s * 1.1 * 0.1 s = 4.4 slots at 1 slot per residency → 5.
+        let (mon, demands, cluster) = obs_fixture(40.0, 0, false);
+        let mut s = PackAware::new();
+        let fleet = view(&cluster, 30.0);
+        let obs = SchedObs { now: 30.0, monitor: &mon, demands: &demands,
+                             fleet: &fleet, vm_types: palette() };
+        assert_eq!(
+            s.tick(&obs),
+            vec![Action::Spawn { model: 0, vm_type: default_vm_type(), count: 5 }]
+        );
+    }
+
+    #[test]
+    fn cold_tenant_peels_after_cooldown_only() {
+        let (mon, mut demands, cluster) = obs_fixture(40.0, 1, true);
+        demands[0].rate = 0.0;
+        let mut s = PackAware::new();
+        let fleet = view(&cluster, 100.0);
+        let mk = |now| SchedObs { now, monitor: &mon, demands: &demands,
+                                  fleet: &fleet, vm_types: palette() };
+        assert!(s.tick(&mk(100.0)).is_empty(), "cooldown starts, no drain yet");
+        assert!(s.tick(&mk(130.0)).is_empty(), "cooldown not elapsed");
+        assert_eq!(
+            s.tick(&mk(161.0)),
+            vec![Action::Drain { model: 0, vm_type: default_vm_type(), count: 1 }]
+        );
+    }
+
+    #[test]
+    fn registered_by_name_but_not_in_all_schemes() {
+        assert_eq!(crate::scheduler::by_name("pack_aware").unwrap().name(),
+                   "pack_aware");
+        assert!(!crate::scheduler::ALL_SCHEMES.contains(&"pack_aware"),
+                "pack_aware needs a pack policy; the generic sweeps must not run it");
+    }
+}

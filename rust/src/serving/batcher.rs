@@ -21,15 +21,40 @@ pub struct Batcher {
     queues: Vec<VecDeque<LiveRequest>>,
     max_batch: usize,
     timeout_ms: f64,
+    /// After this many consecutive flushes of one model, a non-empty
+    /// co-resident queue preempts it (see `poll`). `usize::MAX` disables.
+    fair_streak: usize,
+    last_model: Option<usize>,
+    streak: usize,
 }
 
 impl Batcher {
     pub fn new(n_models: usize, max_batch: usize, timeout_ms: f64) -> Batcher {
+        Batcher::with_fairness(n_models, max_batch, timeout_ms, usize::MAX)
+    }
+
+    /// A batcher with cross-tenant isolation for packed executors: once one
+    /// model has flushed `fair_streak` consecutive batches while another
+    /// queue holds requests, the other queue's oldest head flushes next —
+    /// even as a partial batch that is neither full nor timed out. On a
+    /// shared VM this bounds how long a flooding tenant can monopolize the
+    /// executor: a co-resident head waits at most `fair_streak` batch
+    /// executions, independent of the flood's depth.
+    pub fn with_fairness(
+        n_models: usize,
+        max_batch: usize,
+        timeout_ms: f64,
+        fair_streak: usize,
+    ) -> Batcher {
         assert!(max_batch >= 1);
+        assert!(fair_streak >= 1);
         Batcher {
             queues: (0..n_models).map(|_| VecDeque::new()).collect(),
             max_batch,
             timeout_ms,
+            fair_streak,
+            last_model: None,
+            streak: 0,
         }
     }
 
@@ -69,7 +94,26 @@ impl Batcher {
                 best = Some((m, wait_ms));
             }
         }
-        let (model, _) = best?;
+        let (mut model, _) = best?;
+        // Per-tenant isolation: a model at its consecutive-flush cap yields
+        // to the co-resident queue with the oldest head, flushed as-is.
+        if self.last_model == Some(model) && self.streak >= self.fair_streak {
+            let other = self
+                .queues
+                .iter()
+                .enumerate()
+                .filter(|(m, q)| *m != model && !q.is_empty())
+                .max_by_key(|(_, q)| now.duration_since(q[0].submitted));
+            if let Some((m, _)) = other {
+                model = m;
+            }
+        }
+        if self.last_model == Some(model) {
+            self.streak += 1;
+        } else {
+            self.last_model = Some(model);
+            self.streak = 1;
+        }
         let q = &mut self.queues[model];
         let take = q.len().min(self.max_batch);
         let requests: Vec<LiveRequest> = q.drain(..take).collect();
@@ -152,6 +196,37 @@ mod tests {
         b.push(0, req(1, t0 + Duration::from_millis(2)));
         let batch = b.poll(t0 + Duration::from_millis(5), true).unwrap();
         assert_eq!(batch.model, 1);
+    }
+
+    #[test]
+    fn fairness_cap_preempts_a_flooding_tenant() {
+        let t0 = Instant::now();
+        let now = t0 + Duration::from_millis(2);
+        // Model 0 floods with full batches; model 1 parks one request that
+        // is neither full nor timed out.
+        let mut b = Batcher::with_fairness(2, 4, 1e9, 2);
+        for i in 0..12 {
+            b.push(0, req(i, t0));
+        }
+        b.push(1, req(99, t0 + Duration::from_millis(1)));
+        let models: Vec<usize> =
+            std::iter::from_fn(|| b.poll(now, false).map(|x| x.model)).collect();
+        // Two flood batches, then the co-resident head flushes partial,
+        // then the flood resumes.
+        assert_eq!(models, vec![0, 0, 1, 0]);
+        assert_eq!(b.pending(), 0);
+
+        // The legacy constructor never yields: the parked request waits
+        // for its own timeout while the flood drains.
+        let mut legacy = Batcher::new(2, 4, 1e9);
+        for i in 0..12 {
+            legacy.push(0, req(i, t0));
+        }
+        legacy.push(1, req(99, t0 + Duration::from_millis(1)));
+        let models: Vec<usize> =
+            std::iter::from_fn(|| legacy.poll(now, false).map(|x| x.model)).collect();
+        assert_eq!(models, vec![0, 0, 0]);
+        assert_eq!(legacy.pending(), 1, "model 1 still parked");
     }
 
     #[test]

@@ -9,8 +9,88 @@
 //! from what m4.large-only pricing would suggest.
 
 use crate::cloud::pricing::VmType;
+use crate::cloud::vm::PackPolicy;
 use crate::models::{Registry, SelectionPolicy};
 use crate::trace::{Request, Strictness};
+
+/// Plan multi-tenant placement: first-fit-decreasing co-location of model
+/// slot demands onto shared VMs of `vm_type` under `policy`.
+///
+/// `demands` is `(model, needed_slots)` per tenant; `existing` seeds the
+/// bin list with the resident sets of live shared VMs (pass `&[]` for a
+/// from-scratch plan). Models are placed in decreasing slot demand (ties
+/// break on ascending model index, so the plan is deterministic): each
+/// demand goes to the first bin that can still host it — the join gate
+/// (residency cap + memory budget) and remaining slot headroom both
+/// honored — and spills to a freshly-opened bin (a spawn) otherwise. A
+/// tenant whose demand exceeds one VM keeps spilling until covered; a
+/// warm tenant with ~zero rate still gets one residency. The returned
+/// bins are resident sets per VM; `bins.len() - existing.len()` is the
+/// number of VMs the plan spawns.
+pub fn pack_plan(
+    policy: &PackPolicy,
+    vm_type: &'static VmType,
+    demands: &[(usize, f64)],
+    existing: &[Vec<usize>],
+) -> Vec<Vec<usize>> {
+    let mut bins: Vec<Vec<usize>> = existing.to_vec();
+    let mut load: Vec<f64> = vec![0.0; bins.len()];
+    let mut order: Vec<usize> = (0..demands.len()).collect();
+    order.sort_by(|&a, &b| {
+        demands[b]
+            .1
+            .total_cmp(&demands[a].1)
+            .then(demands[a].0.cmp(&demands[b].0))
+    });
+    for i in order {
+        let (model, want) = demands[i];
+        let mut remaining = want;
+        loop {
+            // First fit: a bin already hosting the tenant with slot
+            // headroom, or one the join gate admits it to.
+            let mut hit = None;
+            for (b, bin) in bins.iter().enumerate() {
+                let resident = bin.contains(&model);
+                if !resident && !policy.can_join(vm_type, bin, model) {
+                    continue;
+                }
+                let cap = if resident {
+                    policy.slots_for(vm_type, bin)
+                } else {
+                    let mut joined = bin.clone();
+                    joined.push(model);
+                    policy.slots_for(vm_type, &joined)
+                } as f64;
+                if cap - load[b] > 1e-9 {
+                    hit = Some((b, cap, resident));
+                    break;
+                }
+            }
+            match hit {
+                Some((b, cap, resident)) => {
+                    if !resident {
+                        bins[b].push(model);
+                    }
+                    let grant = (cap - load[b]).min(remaining.max(0.0));
+                    load[b] += grant.max(0.0);
+                    remaining -= grant;
+                }
+                None => {
+                    // Spill to spawn: open a fresh VM for the tenant.
+                    let cap = policy.slots_for(vm_type, &[model]) as f64;
+                    let grant = remaining.clamp(0.0, cap);
+                    bins.push(vec![model]);
+                    load.push(grant);
+                    remaining -= grant;
+                }
+            }
+            if remaining <= 1e-9 {
+                break;
+            }
+        }
+    }
+    bins
+}
 
 /// Stateless routing decision logic (the hot path keeps this allocation-free).
 pub struct Router {
@@ -146,6 +226,56 @@ mod tests {
         assert_eq!(idx, 3, "resnet18 is the best <=500ms model loaded");
         // Impossible latency too: fastest model.
         assert_eq!(r.route(1.0, 99.0), 0);
+    }
+
+    #[test]
+    fn pack_plan_colocates_the_long_tail_first_fit_decreasing() {
+        let reg = Registry::builtin();
+        let pol = PackPolicy::for_registry(&reg, 4);
+        let m4 = vm_type("m4.large").unwrap();
+        // Eight barely-warm tenants, 0.1 slots each: the residency cap (4)
+        // splits them across exactly two shared VMs, in index order (equal
+        // demands tie-break ascending).
+        let demands: Vec<(usize, f64)> = (0..reg.len()).map(|m| (m, 0.1)).collect();
+        let bins = pack_plan(&pol, m4, &demands, &[]);
+        assert_eq!(bins, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    }
+
+    #[test]
+    fn pack_plan_spills_hot_tenants_to_spawn() {
+        let reg = Registry::builtin();
+        let pol = PackPolicy::for_registry(&reg, 4);
+        let m4 = vm_type("m4.large").unwrap();
+        // mobilenet_025 gets 2 slots per m4.large; 5 needed slots = 3 VMs,
+        // the last one half-loaded.
+        let bins = pack_plan(&pol, m4, &[(0, 5.0)], &[]);
+        assert_eq!(bins, vec![vec![0], vec![0], vec![0]]);
+    }
+
+    #[test]
+    fn pack_plan_respects_the_memory_budget() {
+        let reg = Registry::builtin();
+        let pol = PackPolicy::for_registry(&reg, 4);
+        let c5 = vm_type("c5.large").unwrap();
+        // inception_v3 + resnet152 = 4608 MB > c5.large's 4096: the join
+        // gate refuses, so each gets its own VM despite the idle demand.
+        let bins = pack_plan(&pol, c5, &[(6, 0.1), (7, 0.1)], &[]);
+        assert_eq!(bins, vec![vec![6], vec![7]]);
+    }
+
+    #[test]
+    fn pack_plan_seeds_from_existing_residents_and_gates_on_disabled() {
+        let reg = Registry::builtin();
+        let pol = PackPolicy::for_registry(&reg, 4);
+        let m4 = vm_type("m4.large").unwrap();
+        // An incremental plan joins the live shared VM rather than spawning.
+        let existing = vec![vec![0usize, 1]];
+        let bins = pack_plan(&pol, m4, &[(2, 0.5)], &existing);
+        assert_eq!(bins, vec![vec![0, 1, 2]]);
+        // A disabled policy never co-locates: one dedicated bin per tenant.
+        let off = PackPolicy::default();
+        let bins = pack_plan(&off, m4, &[(0, 0.1), (1, 0.1)], &[]);
+        assert_eq!(bins, vec![vec![0], vec![1]]);
     }
 
     #[test]

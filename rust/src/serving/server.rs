@@ -49,6 +49,11 @@ pub struct ServerConfig {
     /// prices each model at its cheapest palette entry. Defaults to the
     /// paper's single m4.large worker type.
     pub vm_types: Vec<&'static VmType>,
+    /// Per-tenant isolation for packed executors: after this many
+    /// consecutive flushes of one model while another queue holds
+    /// requests, the other queue preempts (see
+    /// [`Batcher::with_fairness`]). `usize::MAX` disables.
+    pub fair_streak: usize,
 }
 
 impl Default for ServerConfig {
@@ -59,6 +64,7 @@ impl Default for ServerConfig {
             workers: 2,
             selection: SelectionPolicy::Paragon,
             vm_types: vec![crate::cloud::default_vm_type()],
+            fair_streak: 8,
         }
     }
 }
@@ -132,11 +138,13 @@ impl Server {
             let depths = depths.clone();
             let timeout = cfg.batch_timeout_ms;
             let max_batch = cfg.max_batch;
+            let fair_streak = cfg.fair_streak;
             threads.push(
                 std::thread::Builder::new()
                     .name("batcher".into())
                     .spawn(move || {
-                        let mut batcher = Batcher::new(n_models, max_batch, timeout);
+                        let mut batcher =
+                            Batcher::with_fairness(n_models, max_batch, timeout, fair_streak);
                         loop {
                             // Pull what's arrived (bounded wait keeps the
                             // timeout flush timely).

@@ -27,7 +27,8 @@ use super::metrics::SimReport;
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess};
 use crate::cloud::{Cluster, VmState};
-use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator};
+use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator,
+                     PackPolicy};
 use crate::models::{select, Registry, SelectionPolicy};
 use crate::scheduler::{Action, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
@@ -46,6 +47,11 @@ pub enum Assignment {
     /// Every request pinned to one registry model — the fixed-variant
     /// baselines `fig_variants` sweeps.
     Fixed(usize),
+    /// Zipf-weighted draw over the whole pool: model `i` is picked with
+    /// probability ∝ `1/(i+1)^(skew_pct/100)`. A high skew yields one hot
+    /// head model plus a long tail of barely-warm tenants — the regime
+    /// multi-tenant packing ([`SimConfig::pack`]) targets.
+    LongTail { skew_pct: u32 },
     /// Model-less queries (INFaaS-style): requests carry only
     /// `(min_accuracy, slo_ms)`; at arrival time the actuator's variant
     /// plane ([`crate::variants`]) resolves the concrete variant through
@@ -92,6 +98,12 @@ pub struct SimConfig {
     /// weighted voting when that undercuts the single pick —
     /// [`crate::variants::select_ensemble`]).
     pub ensemble: usize,
+    /// Multi-tenant placement: when enabled, spawns may join existing
+    /// shared VMs (slot/memory budget permitting), requests route to
+    /// co-resident capacity behind a fair-share gate, and drains peel
+    /// single residencies. Disabled (the default) the engine is
+    /// bit-identical to the per-model-fleet behavior.
+    pub pack: PackPolicy,
 }
 
 impl Default for SimConfig {
@@ -106,6 +118,7 @@ impl Default for SimConfig {
             fidelity: FidelityConfig::default(),
             preemption: None,
             ensemble: 0,
+            pack: PackPolicy::default(),
         }
     }
 }
@@ -189,6 +202,27 @@ pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<u
                     "fixed model index {m} out of range (pool has {} models)",
                     reg.len());
             vec![m; reqs.len()]
+        }
+        Assignment::LongTail { skew_pct } => {
+            // Seeded Zipf draw, cumulative-weight inversion. Weights are
+            // fixed per run, so the assignment is deterministic given the
+            // seed (one `f64` draw per request).
+            let s = skew_pct as f64 / 100.0;
+            let w: Vec<f64> =
+                (0..reg.len()).map(|i| 1.0 / ((i + 1) as f64).powf(s)).collect();
+            let total: f64 = w.iter().sum();
+            reqs.iter()
+                .map(|_| {
+                    let mut x = rng.f64() * total;
+                    for (i, wi) in w.iter().enumerate() {
+                        if x < *wi {
+                            return i;
+                        }
+                        x -= *wi;
+                    }
+                    reg.len() - 1
+                })
+                .collect()
         }
         Assignment::ModelLess => {
             let selector =
@@ -291,8 +325,14 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     // Route one request to the cheapest sub-fleet with a free slot,
     // preferring types whose service time fits the SLO (pass 0), then —
     // mirroring the homogeneous simulator, which never refuses its only
-    // type — any type at all (pass 1). Returns (vm id, palette index).
-    let route_best = |cluster: &mut Cluster, m: usize, slo_ms: f64|
+    // type — any type at all (pass 1). With packing enabled, each type
+    // additionally offers its shared (multi-tenant) VMs behind the
+    // fair-share gate: a tenant past its slot share yields to backlogged
+    // co-residents, but takes free slots when nobody is waiting
+    // (work-conserving). Returns (vm id, palette index).
+    let pack_on = cfg.pack.enabled;
+    let route_best = |cluster: &mut Cluster, queues: &[VecDeque<Queued>],
+                      m: usize, slo_ms: f64|
                      -> Option<(u64, usize)> {
         for pass in 0..2 {
             for &k in &order[m] {
@@ -300,6 +340,15 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                 if (pass == 0) == feasible {
                     if let Some(id) = cluster.route_typed(m, caps[m][k].vm_type) {
                         return Some((id, k));
+                    }
+                    if pack_on {
+                        if let Some(id) = cluster.route_shared(
+                            m,
+                            caps[m][k].vm_type,
+                            |o| !queues[o].is_empty(),
+                        ) {
+                            return Some((id, k));
+                        }
                     }
                 }
             }
@@ -315,6 +364,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     // Model-less runs resolve variants at arrival time through the
     // actuator's variant plane — the same selector/ladder the fluid and
     // live backends carry (`rust/tests/variant_conformance.rs`).
+    actuator.set_pack(cfg.pack.clone());
     let modelless = cfg.assignment == Assignment::ModelLess;
     if modelless {
         actuator.install_variants(
@@ -433,11 +483,14 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             // release the slot, never dispatch (double-serving a queued
             // request would break conservation).
             let (_, c) = completions.next().unwrap();
-            actuator.cluster.release(c.vm_id, now);
+            // `release_for` is identical to `release` on a dedicated VM
+            // and additionally returns the per-resident slot on a shared
+            // one.
+            actuator.cluster.release_for(c.vm_id, c.model, now);
             if !(hybrid && gov.is_fluid(c.model)) {
                 if let Some(q) = queues[c.model].pop_front() {
                     if let Some((vm_id, k)) =
-                        route_best(&mut actuator.cluster, c.model, q.slo_ms)
+                        route_best(&mut actuator.cluster, &queues, c.model, q.slo_ms)
                     {
                         let done = now + caps[c.model][k].service_s;
                         let latency_ms = (done - q.arrival) * 1000.0;
@@ -499,7 +552,8 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                         for c in &e.members {
                             actuator.note_arrival(c.model);
                             let (vm_id, k) =
-                                route_best(&mut actuator.cluster, c.model, r.slo_ms)
+                                route_best(&mut actuator.cluster, &queues,
+                                           c.model, r.slo_ms)
                                     .expect("free-slot gate admitted every member");
                             dispatched.push((vm_id, c.model,
                                              now + caps[c.model][k].service_s));
@@ -567,15 +621,11 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             let strict = r.strictness == Strictness::Strict;
             if hybrid && gov.is_fluid(m) {
                 // Fluid lane: one credit integration, no heap event, no
-                // slot occupancy. Latency prices as the discrete router
-                // would on an idle fleet ([`FluidLane::svc_for`]).
-                lanes[m].credit.accrue(now);
-                let mut fluid_served = None;
-                if let Some(svc) = lanes[m].svc_for(r.slo_ms) {
-                    if lanes[m].credit.try_serve() {
-                        fluid_served = Some(svc);
-                    }
-                }
+                // slot occupancy. Latency prices at the per-type bank
+                // that serves the request ([`FluidLane::try_serve`]),
+                // cheapest-feasible first — the discrete router's rule.
+                lanes[m].accrue(now);
+                let fluid_served = lanes[m].try_serve(r.slo_ms);
                 if let Some(svc) = fluid_served {
                     record(&mut rep, &mut lat_samples, svc * 1000.0, r.slo_ms, strict);
                     rep.served_vm += 1;
@@ -612,7 +662,9 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                         }
                     }
                 }
-            } else if let Some((vm_id, k)) = route_best(&mut actuator.cluster, m, r.slo_ms) {
+            } else if let Some((vm_id, k)) =
+                route_best(&mut actuator.cluster, &queues, m, r.slo_ms)
+            {
                 let svc = caps[m][k].service_s;
                 let done = now + svc;
                 record(&mut rep, &mut lat_samples,
@@ -659,6 +711,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                             arrival: now,
                             strict,
                             floor_ok,
+                            requeued: false,
                         });
                     }
                 }
@@ -684,7 +737,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                     while let Some(c) = completions.cancel_latest_matching(
                         |c: &Completion| c.vm_id == id && c.done > deadline,
                     ) {
-                        actuator.cluster.release(id, now);
+                        actuator.cluster.release_for(id, c.model, now);
                         if c.lat_idx == usize::MAX {
                             continue; // ensemble shadow: nothing booked
                         }
@@ -773,32 +826,26 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                 // *old* rate up to `now` before the rate changes — the
                 // integrator is piecewise-linear in capacity.
                 for m in 0..n_models {
-                    lanes[m].credit.accrue(now);
-                    let mut cap_rate = 0.0;
-                    let mut slots = 0.0;
-                    lanes[m].svc_by_cost.clear();
+                    lanes[m].accrue(now);
+                    let mut banks: Vec<(usize, f64, f64, f64)> = Vec::new();
                     for &k in &order[m] {
                         let c = &caps[m][k];
                         let n_run = actuator
                             .cluster
                             .count_typed(m, c.vm_type, VmState::Running);
                         if n_run > 0 {
-                            cap_rate +=
-                                n_run as f64 * c.slots_per_vm as f64 / c.service_s;
-                            slots += n_run as f64 * c.slots_per_vm as f64;
-                            lanes[m].svc_by_cost.push(c.service_s);
+                            let slots = n_run as f64 * c.slots_per_vm as f64;
+                            banks.push((k, c.service_s, slots / c.service_s, slots));
                         }
                     }
-                    lanes[m].credit.cap_rate = cap_rate;
-                    lanes[m].credit.burst = slots.max(1.0);
-                    lanes[m].credit.clamp();
-                    if gov.observe(m, tick.demands[m].rate, cap_rate,
+                    lanes[m].set_banks(now, &banks);
+                    if gov.observe(m, tick.demands[m].rate, lanes[m].cap_rate(),
                                    queues[m].len())
                         == Some(Fidelity::Fluid)
                     {
-                        // Fresh lane starts with an empty credit bank —
+                        // Fresh lane starts with empty credit banks —
                         // capacity never time-travels across the switch.
-                        lanes[m].credit.reset(now);
+                        lanes[m].reset(now);
                     }
                 }
             }
@@ -807,13 +854,10 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             for m in 0..n_models {
                 if hybrid && gov.is_fluid(m) {
                     while let Some(&head) = queues[m].front() {
-                        let svc = match lanes[m].svc_for(head.slo_ms) {
+                        let svc = match lanes[m].try_serve(head.slo_ms) {
                             Some(s) => s,
                             None => break,
                         };
-                        if !lanes[m].credit.try_serve() {
-                            break;
-                        }
                         queues[m].pop_front();
                         let latency_ms = (now - head.arrival + svc) * 1000.0;
                         record(&mut rep, &mut lat_samples,
@@ -828,7 +872,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                     continue;
                 }
                 while let Some(&head) = queues[m].front() {
-                    match route_best(&mut actuator.cluster, m, head.slo_ms) {
+                    match route_best(&mut actuator.cluster, &queues, m, head.slo_ms) {
                         Some((vm_id, k)) => {
                             queues[m].pop_front();
                             let done = now + caps[m][k].service_s;
@@ -902,10 +946,11 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cloud::pricing::vm_type;
+    use crate::cloud::pricing::{vm_type, VmPrice};
     use crate::scheduler;
     use crate::scheduler::{OffloadPolicy, SchedObs};
-    use crate::trace::{generators, synthesize_requests, WorkloadKind};
+    use crate::trace::{generators, synthesize_requests, Request, Strictness,
+                       WorkloadKind};
 
     fn run_scheme(name: &str, rate: f64) -> SimReport {
         let reg = Registry::builtin();
@@ -1132,6 +1177,120 @@ mod tests {
         assert!(rep.served_fluid <= rep.served_vm);
         let total: u64 = rep.served_by_model.iter().sum();
         assert_eq!(total, rep.served_vm + rep.served_lambda);
+    }
+
+    /// Spawns a fixed mixed fleet for model 0 at the first tick, then
+    /// holds it (no drains, no offload) — isolates routing/fidelity
+    /// behavior from procurement.
+    struct ScriptedFleet {
+        fast: &'static VmType,
+        slow: &'static VmType,
+        done: bool,
+    }
+    impl Scheme for ScriptedFleet {
+        fn name(&self) -> &'static str {
+            "scripted-fleet"
+        }
+        fn tick(&mut self, _obs: &SchedObs) -> Vec<Action> {
+            if self.done {
+                return Vec::new();
+            }
+            self.done = true;
+            vec![
+                Action::Spawn { model: 0, vm_type: self.fast, count: 1 },
+                Action::Spawn { model: 0, vm_type: self.slow, count: 16 },
+            ]
+        }
+        fn offload(&self) -> OffloadPolicy {
+            OffloadPolicy::None
+        }
+    }
+
+    /// One cheap-but-tiny fast type plus a big slow sub-fleet, uniform
+    /// 2.4 q/s of strict 1 s-SLO traffic pinned to model 0. The discrete
+    /// router alternates exactly: the single fast slot (0.5 s service)
+    /// is busy every other arrival, which spills to a 2.0 s slow VM —
+    /// ~50% violations. The fluid lane must price the same mix; the
+    /// pre-fix single-bank lane priced every fluid serve at the cheap
+    /// type's 0.5 s and reported ~0%.
+    fn mixed_palette_run(fidelity: FidelityConfig) -> SimReport {
+        let reg = Registry::builtin();
+        // mobilenet_025 is 45 ms at speed 1.0: speed 0.09 → 0.5 s,
+        // speed 0.0225 → 2.0 s. Zero boot keeps the fleet deterministic.
+        let fast: &'static VmType = Box::leak(Box::new(VmType {
+            name: "fast.test", vcpus: 1, mem_gb: 8.0,
+            price: VmPrice { hourly_usd: 0.05 }, speed: 0.09,
+            boot_mean_s: 0.0, boot_jitter_s: 0.0, spot: None,
+        }));
+        let slow: &'static VmType = Box::leak(Box::new(VmType {
+            name: "slow.test", vcpus: 1, mem_gb: 8.0,
+            price: VmPrice { hourly_usd: 0.04 }, speed: 0.0225,
+            boot_mean_s: 0.0, boot_jitter_s: 0.0, spot: None,
+        }));
+        // Uniform arrivals from t=10.2 (fleet up, governor settled):
+        // deterministic alternation instead of Poisson noise.
+        let reqs: Vec<Request> = (0..1440)
+            .map(|i| Request {
+                id: i,
+                arrival_s: 10.2 + i as f64 / 2.4,
+                slo_ms: 1000.0,
+                min_accuracy: 0.0,
+                strictness: Strictness::Strict,
+            })
+            .collect();
+        let cfg = SimConfig {
+            vm_types: vec![fast, slow],
+            assignment: Assignment::Fixed(0),
+            warm_start: false,
+            fidelity,
+            ..SimConfig::default()
+        };
+        let mut scheme = ScriptedFleet { fast, slow, done: false };
+        simulate(&mut scheme, &reg, &reqs, "mixed-palette", &cfg)
+    }
+
+    #[test]
+    fn mixed_palette_fluid_lane_prices_like_discrete() {
+        let discrete = mixed_palette_run(FidelityConfig::default());
+        let fluid = mixed_palette_run(FidelityConfig::hybrid());
+        assert_eq!(discrete.dropped, 0);
+        assert_eq!(fluid.dropped, 0);
+        // Pressure 2.4/10 = 0.24 sits under the cool threshold: the
+        // stream must actually run fluid.
+        assert!(fluid.fidelity_switches > 0, "stream must go fluid");
+        assert!(fluid.served_fluid as f64 > 0.9 * fluid.requests as f64,
+                "must serve through the lane: {}/{}",
+                fluid.served_fluid, fluid.requests);
+        let (dv, fv) = (discrete.violation_pct(), fluid.violation_pct());
+        // The exhausted 1-slot fast sub-fleet spills every other request
+        // to a 2 s VM in both fidelities.
+        assert!(dv > 30.0, "discrete must see the slow spill: {dv}%");
+        assert!(fv > 30.0,
+                "fluid lane hides the slow type mix: {fv}% vs discrete {dv}%");
+        assert!((dv - fv).abs() < 10.0,
+                "fluid ({fv}%) must price like discrete ({dv}%)");
+    }
+
+    #[test]
+    fn long_tail_packing_collapses_the_fleet_and_conserves() {
+        let reg = Registry::builtin();
+        let trace = generators::constant(4.0, 900);
+        let reqs = synthesize_requests(&trace, WorkloadKind::MixedSlo, 7);
+        let cfg = SimConfig {
+            assignment: Assignment::LongTail { skew_pct: 200 },
+            pack: PackPolicy::for_registry(&reg, 4),
+            ..SimConfig::default()
+        };
+        let mut scheme = scheduler::by_name("pack_aware").unwrap();
+        let rep = simulate(scheme.as_mut(), &reg, &reqs, "longtail", &cfg);
+        assert_eq!(rep.served_vm + rep.served_lambda + rep.dropped, rep.requests,
+                   "conservation through shared VMs");
+        assert_eq!(rep.dropped, 0, "a quiet long tail must not shed load");
+        // Per-model fleets would hold >= 1 VM for each of the 8 warm
+        // models; packing co-locates the tail onto a handful.
+        assert!(rep.peak_vms < reg.len(),
+                "packing must undercut one-VM-per-model: peak {}", rep.peak_vms);
+        assert!(rep.cost_vm > 0.0);
     }
 
     #[test]

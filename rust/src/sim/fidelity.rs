@@ -22,11 +22,12 @@
 //! at every instant by construction (asserted by the engine's existing
 //! conservation check and by `rust/tests/shard_determinism.rs`).
 //!
-//! Fidelity semantics of a fluid-served request: latency is the cheapest
-//! feasible running type's service time (plus queue wait if it had to
-//! queue) — exactly what the discrete router produces for an
-//! under-loaded fleet, which is the only regime the governor admits into
-//! fluid mode. Fluid serving does not occupy VM slots, so per-VM
+//! Fidelity semantics of a fluid-served request: latency is the service
+//! time of the *bank that serves it* — each running type integrates its
+//! own credit ([`FluidLane`]), preferred cheapest-feasible-first, so an
+//! exhausted cheap bank spills to a slower type exactly as the discrete
+//! router spills off a full sub-fleet (plus queue wait if the request
+//! had to queue). Fluid serving does not occupy VM slots, so per-VM
 //! utilization reads idle while a lane is fluid; rate-driven schemes
 //! (the paper's) are unaffected, and the governor's hot threshold flips
 //! the lane back to request-accurate before utilization detail matters.
@@ -154,28 +155,101 @@ impl FidelityGovernor {
     }
 }
 
-/// One model stream's fluid lane: the credit bank plus the service times
-/// of its *running* sub-fleets in cost order (refreshed each tick from
-/// the fleet view), used to price fluid-served latency exactly as the
-/// discrete router would for an idle fleet.
+/// One per-type credit bank of a [`FluidLane`]: `key` identifies the
+/// palette type (opaque to this module — the engine passes its palette
+/// index so credit survives refreshes), `service_s` prices the requests
+/// this bank serves.
+#[derive(Debug, Clone)]
+pub struct FluidBank {
+    pub key: usize,
+    pub service_s: f64,
+    pub credit: FluidCredit,
+}
+
+/// One model stream's fluid lane: a credit bank *per running sub-fleet
+/// type*, in cost order (refreshed each tick from the fleet view).
+///
+/// **Bug this layout fixes:** the lane used to carry a single credit
+/// bank whose `cap_rate` summed capacity across every running type,
+/// while every fluid-served request was priced at the cheapest feasible
+/// type's service time. On a mixed palette where most capacity sits on
+/// slow types, the cheap type's tiny sub-fleet implicitly lent its
+/// service time to the whole lane: latency (and SLO violations) were
+/// under-reported relative to the discrete router serving the same mix.
+/// Each type now integrates credit at its own rate with its own burst,
+/// and a request is priced at the service time of the bank that
+/// actually serves it — the spill from an exhausted cheap bank to a
+/// slow one is exactly the discrete router's full-sub-fleet spill.
 #[derive(Debug, Clone, Default)]
 pub struct FluidLane {
-    pub credit: FluidCredit,
-    /// Service seconds of palette types with running capacity, cheapest
-    /// effective $/query first (the discrete router's preference order).
-    pub svc_by_cost: Vec<f64>,
+    /// Banks for palette types with running capacity, cheapest effective
+    /// $/query first (the discrete router's preference order).
+    pub banks: Vec<FluidBank>,
 }
 
 impl FluidLane {
-    /// Service time a fluid-served request observes: the cheapest running
-    /// type meeting the SLO, else the cheapest running type at all (the
-    /// discrete router's two-pass rule), `None` when nothing runs.
-    pub fn svc_for(&self, slo_ms: f64) -> Option<f64> {
-        self.svc_by_cost
+    /// Integrate every bank's capacity up to `now`.
+    pub fn accrue(&mut self, now: f64) {
+        for b in &mut self.banks {
+            b.credit.accrue(now);
+        }
+    }
+
+    /// Zero every bank and re-anchor its clock (fidelity switch).
+    pub fn reset(&mut self, now: f64) {
+        for b in &mut self.banks {
+            b.credit.reset(now);
+        }
+    }
+
+    /// Aggregate serviceable requests/s (the governor's capacity input).
+    pub fn cap_rate(&self) -> f64 {
+        self.banks.iter().map(|b| b.credit.cap_rate).sum()
+    }
+
+    /// Replace the bank set with the currently-running types, cost order.
+    /// `types` is `(key, service_s, cap_rate, burst)` per type; a type
+    /// already in the lane keeps its banked credit (re-clamped to the new
+    /// burst), a new type starts empty at `now` — capacity never
+    /// time-travels. Callers accrue to `now` first, so the carried
+    /// balance is integrated at the old rate up to the switch point.
+    pub fn set_banks(&mut self, now: f64, types: &[(usize, f64, f64, f64)]) {
+        let old = std::mem::take(&mut self.banks);
+        self.banks = types
             .iter()
-            .copied()
-            .find(|s| s * 1000.0 <= slo_ms)
-            .or_else(|| self.svc_by_cost.first().copied())
+            .map(|&(key, service_s, cap_rate, burst)| {
+                let mut credit = old
+                    .iter()
+                    .find(|b| b.key == key)
+                    .map(|b| b.credit.clone())
+                    .unwrap_or_else(|| {
+                        let mut c = FluidCredit::default();
+                        c.reset(now);
+                        c
+                    });
+                credit.cap_rate = cap_rate;
+                credit.burst = burst.max(1.0);
+                credit.clamp();
+                FluidBank { key, service_s, credit }
+            })
+            .collect();
+    }
+
+    /// Serve one request: the cheapest bank meeting the SLO with a full
+    /// credit, else the cheapest bank with credit at all (the discrete
+    /// router's two-pass rule). Returns the *serving* bank's service
+    /// time — the latency the request actually observes — or `None`
+    /// when no bank has credit (or nothing runs).
+    pub fn try_serve(&mut self, slo_ms: f64) -> Option<f64> {
+        for pass in 0..2 {
+            for b in &mut self.banks {
+                let feasible = b.service_s * 1000.0 <= slo_ms;
+                if (pass == 0) == feasible && b.credit.try_serve() {
+                    return Some(b.service_s);
+                }
+            }
+        }
+        None
     }
 }
 
@@ -238,16 +312,38 @@ mod tests {
     }
 
     #[test]
-    fn lane_prices_like_the_discrete_router() {
-        let lane = FluidLane {
-            svc_by_cost: vec![0.5, 0.1],
-            ..Default::default()
-        };
-        // Cheapest feasible wins; infeasible SLO falls back to cheapest.
-        assert_eq!(lane.svc_for(600.0), Some(0.5));
-        assert_eq!(lane.svc_for(200.0), Some(0.1));
-        assert_eq!(lane.svc_for(50.0), Some(0.5), "two-pass fallback");
-        let empty = FluidLane::default();
-        assert_eq!(empty.svc_for(1000.0), None);
+    fn lane_prices_at_the_bank_that_serves() {
+        let mut lane = FluidLane::default();
+        // Cheap-but-tiny fast type (svc 0.5 s, burst 1) ahead of a big
+        // slow type (svc 2.0 s, burst 16) — the mixed-palette shape the
+        // single-bank lane mispriced.
+        lane.set_banks(0.0, &[(0, 0.5, 2.0, 1.0), (1, 2.0, 8.0, 16.0)]);
+        lane.accrue(10.0); // both banks fill to burst
+        // Cheapest feasible bank serves first, priced at ITS service time.
+        assert_eq!(lane.try_serve(1000.0), Some(0.5));
+        // Cheap bank exhausted (burst 1): the request spills to the slow
+        // bank and must be priced at 2.0 s. The pre-fix lane priced this
+        // at the cheap type's 0.5 s.
+        assert_eq!(lane.try_serve(1000.0), Some(2.0));
+        // Infeasible SLO: two-pass fallback to the cheapest with credit.
+        lane.accrue(20.0);
+        assert_eq!(lane.try_serve(50.0), Some(0.5));
+        // Nothing running serves nothing.
+        assert_eq!(FluidLane::default().try_serve(1000.0), None);
+    }
+
+    #[test]
+    fn set_banks_carries_credit_for_surviving_types_only() {
+        let mut lane = FluidLane::default();
+        lane.set_banks(0.0, &[(0, 0.5, 2.0, 4.0)]);
+        lane.accrue(10.0); // type 0 fills to burst: 4 credits
+        // A refresh keeps type 0 (new rate) and adds type 1, which must
+        // start empty — capacity never time-travels into a fresh bank.
+        lane.set_banks(10.0, &[(0, 0.5, 1.0, 4.0), (1, 2.0, 8.0, 16.0)]);
+        assert!((lane.cap_rate() - 9.0).abs() < 1e-12);
+        for _ in 0..4 {
+            assert_eq!(lane.try_serve(10_000.0), Some(0.5), "carried credit");
+        }
+        assert_eq!(lane.try_serve(10_000.0), None, "fresh banks hold no credit");
     }
 }

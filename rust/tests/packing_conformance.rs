@@ -1,0 +1,277 @@
+//! Packing conformance: multi-tenant placement is *backend-invariant*.
+//!
+//! The placement plane promises that a `Spawn{model, vm_type}` joins an
+//! existing shared VM (first-fit over alive VMs in id order) and a
+//! `Drain{model, vm_type}` peels the newest hosting VM, terminating it
+//! when left empty — on all three actuator backends: the event-driven
+//! cluster, the fluid macroscopic fleet, and the dry-run server fleet.
+//! These tests pin that contract:
+//!
+//! - an explicit action script produces identical pool fingerprints AND
+//!   identical bills at every checkpoint on all three backends;
+//! - the residency cap and the memory budget gate joins identically;
+//! - seeded random scripts never diverge (property-style sweep);
+//! - a flooding tenant cannot starve a packed co-resident past its
+//!   fair share (the paper's isolation requirement for co-location).
+//!
+//! Zero-jitter instance types make boot completion deterministic on the
+//! cluster; checkpoints deliberately avoid exact boot-landing times so a
+//! `<=` vs `<` boundary difference cannot masquerade as conformance.
+
+use paragon::cloud::pricing::{VmPrice, VmType};
+use paragon::control::{ClusterActuator, FleetActuator, FleetView, FluidFleet,
+                       PackPolicy, ServerFleet, ServerFleetConfig};
+use paragon::models::Registry;
+use paragon::scheduler::Action;
+use paragon::util::rng::Pcg;
+
+/// Leak a zero-jitter instance type so every backend boots at exactly the
+/// mean latency (the cluster normally samples jitter per spawn).
+fn leak_type(name: &str, hourly: f64, speed: f64, boot_s: f64,
+             mem_gb: f64) -> &'static VmType {
+    Box::leak(Box::new(VmType {
+        name: Box::leak(name.to_string().into_boxed_str()),
+        vcpus: 2,
+        mem_gb,
+        price: VmPrice { hourly_usd: hourly },
+        speed,
+        boot_mean_s: boot_s,
+        boot_jitter_s: 0.0,
+        spot: None,
+    }))
+}
+
+/// Comparable summary of the placement plane: per pool (type name,
+/// running, booting, Σ running slots, [(model, hosting VMs)]). In-flight
+/// counters are excluded on purpose — the fluid backend has no discrete
+/// requests — so the fingerprint is pure occupancy.
+fn pack_fingerprint(v: &FleetView) -> Vec<(String, usize, usize, u64, Vec<(usize, usize)>)> {
+    v.pools
+        .iter()
+        .map(|p| {
+            (
+                p.vm_type.name.to_string(),
+                p.running,
+                p.booting,
+                p.slots,
+                p.residents.iter().map(|r| (r.model, r.vms)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn three_backends(
+    reg: &Registry,
+    palette: &[&'static VmType],
+    pol: &PackPolicy,
+    seed: u64,
+) -> (ClusterActuator, FluidFleet, ServerFleet) {
+    let mut sim = ClusterActuator::new(reg, palette.to_vec(), 1000, seed);
+    let mut fluid = FluidFleet::new(0, palette.to_vec());
+    let mut live = ServerFleet::new(reg, ServerFleetConfig {
+        vm_types: palette.to_vec(),
+        instance_cap: 1000,
+        ..ServerFleetConfig::default()
+    });
+    sim.set_pack(pol.clone());
+    fluid.set_pack(pol.clone());
+    live.set_pack(pol.clone());
+    (sim, fluid, live)
+}
+
+#[test]
+fn packed_script_matches_on_all_three_backends() {
+    let reg = Registry::builtin();
+    let ta = leak_type("pack.m", 0.10, 1.0, 100.0, 8.0);
+    let tb = leak_type("pack.c", 0.085, 1.25, 60.0, 8.0);
+    let palette = [ta, tb];
+    let pol = PackPolicy::for_registry(&reg, 4);
+    let (mut sim, mut fluid, mut live) = three_backends(&reg, &palette, &pol, 7);
+
+    // Joins, singleton spills, a peel that keeps the VM, and a peel that
+    // empties (and must therefore terminate) it — across two pools.
+    let script: Vec<(f64, Action)> = vec![
+        (0.0, Action::Spawn { model: 0, vm_type: ta, count: 1 }),
+        (0.0, Action::Spawn { model: 1, vm_type: ta, count: 1 }), // joins VM A
+        (5.0, Action::Spawn { model: 2, vm_type: tb, count: 2 }), // B, C
+        (5.0, Action::Spawn { model: 3, vm_type: tb, count: 1 }), // joins B
+        (130.0, Action::Drain { model: 1, vm_type: ta, count: 1 }), // peel, A stays
+        (130.0, Action::Drain { model: 2, vm_type: tb, count: 1 }), // empties C
+    ];
+    // ta boots land at 100, tb boots at 65: checkpoints straddle both
+    // without ever hitting one exactly.
+    let checkpoints = [0.0, 5.0, 50.0, 64.0, 66.0, 99.0, 101.0, 130.0, 200.0, 400.0];
+    let mut si = 0;
+    for &t in &checkpoints {
+        while si < script.len() && script[si].0 <= t {
+            let (at, ref a) = script[si];
+            sim.apply(a, at);
+            fluid.apply(a, at);
+            live.apply(a, at);
+            si += 1;
+        }
+        sim.advance(t);
+        fluid.advance(t);
+        live.advance(t);
+        let f = pack_fingerprint(&sim.view());
+        assert!(!f.is_empty(), "t={t}: packed capacity must report as pools");
+        assert_eq!(f, pack_fingerprint(&fluid.view()), "sim vs fluid at t={t}");
+        assert_eq!(f, pack_fingerprint(&live.view()), "sim vs live at t={t}");
+        assert!(sim.view().subfleets().is_empty(),
+                "t={t}: a fully packed fleet owns no dedicated sub-fleets");
+        // Identical placement must bill identically: terminated VMs at
+        // their final bills, live ones pro-rated, on every backend.
+        let c_sim = sim.cluster.total_cost(t);
+        let c_fluid = fluid.packed_cost(t);
+        let c_live = live.report(t).cost_usd;
+        assert!((c_sim - c_fluid).abs() < 1e-9,
+                "t={t}: sim bill {c_sim} != fluid bill {c_fluid}");
+        assert!((c_sim - c_live).abs() < 1e-9,
+                "t={t}: sim bill {c_sim} != live bill {c_live}");
+    }
+    assert_eq!(si, script.len(), "script fully consumed");
+
+    // Final shape, spelled out: A{0} on ta; B{2,3} on tb; C terminated.
+    let v = sim.view();
+    assert_eq!(v.total_alive(), 2);
+    let pa = v.pool(ta).expect("ta pool");
+    assert_eq!((pa.running, pa.vms_hosting(0), pa.vms_hosting(1)), (1, 1, 0));
+    let pb = v.pool(tb).expect("tb pool");
+    assert_eq!((pb.running, pb.vms_hosting(2), pb.vms_hosting(3)), (1, 1, 1));
+}
+
+#[test]
+fn residency_cap_and_memory_gate_pack_identically() {
+    let reg = Registry::builtin();
+
+    // Residency cap: degree 2 splits three light models 2 + 1 on every
+    // backend — the third spawn must open a second shared VM.
+    let t8 = leak_type("pack.cap", 0.10, 1.0, 80.0, 8.0);
+    let pol = PackPolicy::for_registry(&reg, 2);
+    let (mut sim, mut fluid, mut live) = three_backends(&reg, &[t8], &pol, 3);
+    for m in 0..3 {
+        let a = Action::Spawn { model: m, vm_type: t8, count: 1 };
+        sim.apply(&a, 0.0);
+        fluid.apply(&a, 0.0);
+        live.apply(&a, 0.0);
+    }
+    sim.advance(81.0);
+    fluid.advance(81.0);
+    live.advance(81.0);
+    let f = pack_fingerprint(&sim.view());
+    assert_eq!(f, pack_fingerprint(&fluid.view()), "cap: sim vs fluid");
+    assert_eq!(f, pack_fingerprint(&live.view()), "cap: sim vs live");
+    let v = sim.view();
+    let p = v.pool(t8).expect("pool");
+    assert_eq!(p.running, 2, "cap 2 forces a second VM for the third tenant");
+    assert_eq!((p.vms_hosting(0), p.vms_hosting(1), p.vms_hosting(2)), (1, 1, 1));
+
+    // Memory budget: inception_v3 + resnet152 overflow a 4 GB type, so
+    // the join gate refuses co-location on every backend alike.
+    let t4 = leak_type("pack.mem", 0.08, 1.0, 40.0, 4.0);
+    let pol = PackPolicy::for_registry(&reg, 4);
+    let (mut sim, mut fluid, mut live) = three_backends(&reg, &[t4], &pol, 5);
+    for m in [6, 7] {
+        let a = Action::Spawn { model: m, vm_type: t4, count: 1 };
+        sim.apply(&a, 0.0);
+        fluid.apply(&a, 0.0);
+        live.apply(&a, 0.0);
+    }
+    sim.advance(41.0);
+    fluid.advance(41.0);
+    live.advance(41.0);
+    let f = pack_fingerprint(&sim.view());
+    assert_eq!(f, pack_fingerprint(&fluid.view()), "mem: sim vs fluid");
+    assert_eq!(f, pack_fingerprint(&live.view()), "mem: sim vs live");
+    let v = sim.view();
+    let p = v.pool(t4).expect("pool");
+    assert_eq!(p.running, 2, "memory gate must refuse the join");
+    assert_eq!(p.vms_hosting(6) + p.vms_hosting(7), 2);
+}
+
+#[test]
+fn random_packed_scripts_never_diverge() {
+    let reg = Registry::builtin();
+    let ta = leak_type("pack.pa", 0.11, 1.0, 90.0, 8.0);
+    let tb = leak_type("pack.pb", 0.08, 1.25, 45.0, 4.0);
+    let palette = [ta, tb];
+    for trial in 0..6u64 {
+        let pol = PackPolicy::for_registry(&reg, 2 + (trial as usize % 3));
+        let (mut sim, mut fluid, mut live) =
+            three_backends(&reg, &palette, &pol, 11 + trial);
+        let mut rng = Pcg::seeded(0x9ac0 + trial);
+        // Advance on a 12.5 s grid: boot means of 90/45 land at 2.5/7.5
+        // (mod 12.5), so no checkpoint ever coincides with a boot.
+        for step in 1..=40u32 {
+            let now = f64::from(step) * 12.5;
+            for _ in 0..=rng.below(2) {
+                let model = rng.below(reg.len() as u64) as usize;
+                let vm_type = if rng.f64() < 0.5 { ta } else { tb };
+                let count = 1 + rng.below(2) as usize;
+                let a = if rng.f64() < 0.7 {
+                    Action::Spawn { model, vm_type, count }
+                } else {
+                    Action::Drain { model, vm_type, count }
+                };
+                sim.apply(&a, now);
+                fluid.apply(&a, now);
+                live.apply(&a, now);
+            }
+            sim.advance(now);
+            fluid.advance(now);
+            live.advance(now);
+            let f = pack_fingerprint(&sim.view());
+            assert_eq!(f, pack_fingerprint(&fluid.view()),
+                       "trial {trial} t={now}: sim vs fluid");
+            assert_eq!(f, pack_fingerprint(&live.view()),
+                       "trial {trial} t={now}: sim vs live");
+        }
+        let end = 40.0 * 12.5 + 180.0;
+        sim.advance(end);
+        fluid.advance(end);
+        live.advance(end);
+        let c_sim = sim.cluster.total_cost(end);
+        let c_fluid = fluid.packed_cost(end);
+        let c_live = live.report(end).cost_usd;
+        assert!((c_sim - c_fluid).abs() < 1e-9 * c_sim.max(1.0),
+                "trial {trial}: sim bill {c_sim} != fluid bill {c_fluid}");
+        assert!((c_sim - c_live).abs() < 1e-9 * c_sim.max(1.0),
+                "trial {trial}: sim bill {c_sim} != live bill {c_live}");
+    }
+}
+
+#[test]
+fn hot_tenant_cannot_starve_a_packed_co_resident() {
+    let reg = Registry::builtin();
+    let t = leak_type("pack.fair", 0.10, 1.0, 50.0, 8.0);
+    let mut live = ServerFleet::new(&reg, ServerFleetConfig {
+        vm_types: vec![t],
+        ..ServerFleetConfig::default()
+    });
+    live.set_pack(PackPolicy::for_registry(&reg, 4));
+    live.apply(&Action::Spawn { model: 0, vm_type: t, count: 1 }, 0.0);
+    live.apply(&Action::Spawn { model: 1, vm_type: t, count: 1 }, 0.0);
+    live.advance(51.0);
+    {
+        let v = live.view();
+        let p = v.pool(t).expect("shared pool");
+        assert_eq!((p.running, p.vms_hosting(0), p.vms_hosting(1)), (1, 1, 1));
+        assert_eq!(p.slots, 2, "both light models fit 2 concurrency slots");
+    }
+    // A 200-deep relaxed flood from model 0, then one strict model-1
+    // request parked behind it. Under the fair-share gate the co-resident
+    // waits one in-flight service (~45 ms), far inside its 500 ms SLO;
+    // without the gate it would drain behind the whole flood (~4.5 s).
+    for _ in 0..200 {
+        live.ingest(0, 100_000.0, 51.0);
+    }
+    live.ingest(1, 500.0, 51.0);
+    live.advance(200.0);
+    let d = live.demand();
+    assert_eq!(d.violations[1], 0, "fair share must bound the co-resident's wait");
+    assert_eq!(d.violations.iter().sum::<u64>(), 0, "the relaxed flood also holds");
+    let rep = live.report(200.0);
+    assert_eq!(rep.served, 201);
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.queued, 0);
+}
