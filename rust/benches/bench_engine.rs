@@ -9,12 +9,16 @@
 //! 8-model assignment co-located on shared VMs by `pack_aware`
 //! (placement plane: join gate, fair-share routing, per-model
 //! attribution) — lands in `results/BENCH_9.json` with its own floor.
+//! The pipeline configuration — two-stage detect→classify chains under
+//! end-to-end budgets (`Assignment::Pipeline`: admission-time per-stage
+//! routing, handoff completions, per-stage ledgers) — lands in
+//! `results/BENCH_10.json` with its own floor.
 //!
 //! `--check` is the CI no-regression gate: it runs the 100k serial,
-//! sharded, live and packed configurations and fails (exit 1) when
-//! measured req/s drops below 0.85x the floors recorded in the committed
-//! `results/BENCH_6.json` / `results/BENCH_7.json` /
-//! `results/BENCH_9.json`. Floors are
+//! sharded, live, packed and pipeline configurations and fails (exit 1)
+//! when measured req/s drops below 0.85x the floors recorded in the
+//! committed `results/BENCH_6.json` / `results/BENCH_7.json` /
+//! `results/BENCH_9.json` / `results/BENCH_10.json`. Floors are
 //! deliberately conservative (well under a dev box's numbers) so the
 //! gate catches algorithmic regressions, not runner jitter; an
 //! intentional slowdown lands with the `perf-override` label on the PR
@@ -39,6 +43,15 @@ const LIVE_MODEL: usize = 3;
 fn workload(rate: f64, secs: usize) -> Vec<Request> {
     let trace = generators::constant(rate, secs);
     synthesize_requests(&trace, WorkloadKind::MixedSlo, 7)
+}
+
+/// End-to-end tiered two-stage queries for the pipeline point: every
+/// request is admission-routed through both stage ladders, dispatched
+/// twice and handed off through the completion heap — the pipeline-plane
+/// hot path.
+fn pipe_workload(rate: f64, secs: usize) -> Vec<Request> {
+    let trace = generators::constant(rate, secs);
+    synthesize_requests(&trace, WorkloadKind::PipelineTiered, 7)
 }
 
 fn hybrid_cfg() -> SimConfig {
@@ -111,7 +124,7 @@ fn run<T>(name: &str, reqs: &[Request], iters: usize,
 }
 
 fn check_gate(measured: &[(String, f64)]) -> ! {
-    let files: [(&str, &[(&str, &str)]); 3] = [
+    let files: [(&str, &[(&str, &str)]); 4] = [
         ("results/BENCH_6.json",
          &[("floor_rps_serial_100k", "engine[serial-100k]"),
            ("floor_rps_sharded_100k", "engine[sharded-100k]")]),
@@ -119,6 +132,8 @@ fn check_gate(measured: &[(String, f64)]) -> ! {
          &[("floor_rps_live_100k", "engine[live-100k]")]),
         ("results/BENCH_9.json",
          &[("floor_rps_packed_100k", "engine[packed-100k]")]),
+        ("results/BENCH_10.json",
+         &[("floor_rps_pipeline_100k", "engine[pipeline-100k]")]),
     ];
     let mut failed = false;
     for (path, checks) in files {
@@ -181,6 +196,7 @@ fn main() {
     let mut results: Vec<Json> = Vec::new();
     let mut live_results: Vec<Json> = Vec::new();
     let mut packed_results: Vec<Json> = Vec::new();
+    let mut pipeline_results: Vec<Json> = Vec::new();
     let mut measured: Vec<(String, f64)> = Vec::new();
     for (label, rate, secs, iters) in scales {
         println!("== {label} requests ({rate} q/s x {secs}s, {SCHEME}) ==");
@@ -222,6 +238,22 @@ fn main() {
                 simulate(s.as_mut(), &reg, &reqs, "bench", &packed)
             });
             packed_results.push(j);
+            measured.push((name, rps));
+
+            // The pipeline plane floors only at 100k too: every request
+            // costs two stage dispatches, a handoff completion and two
+            // ledger bookings — its own hot path, its own floor.
+            let pipe_reqs = pipe_workload(rate, secs);
+            let pipe = SimConfig {
+                assignment: Assignment::Pipeline,
+                ..SimConfig::default()
+            };
+            let name = format!("engine[pipeline-{label}]");
+            let (j, rps) = run(&name, &pipe_reqs, iters, || {
+                let mut s = scheduler::by_name(SCHEME).unwrap();
+                simulate(s.as_mut(), &reg, &pipe_reqs, "bench", &pipe)
+            });
+            pipeline_results.push(j);
             measured.push((name, rps));
         }
 
@@ -321,4 +353,26 @@ fn main() {
     std::fs::write("results/BENCH_9.json", packed_out.to_string())
         .expect("write results/BENCH_9.json");
     println!("[saved results/BENCH_9.json]");
+
+    // The pipeline-plane trajectory, same separation rationale: the
+    // two-stage hot path's floor moves independently of every other
+    // configuration.
+    let pipeline_out = Json::obj(vec![
+        ("bench", "BENCH_10".into()),
+        ("meta", bench_meta()),
+        ("scheme", SCHEME.into()),
+        ("assignment", "pipeline(detect-classify)".into()),
+        ("workload", "pipeline-tiered".into()),
+        ("results", Json::Arr(pipeline_results)),
+        ("ci", Json::obj(vec![
+            ("note",
+             "req/s floors; CI fails below 0.85x (override: perf-override label)"
+                 .into()),
+            ("floor_rps_pipeline_100k",
+             (rps_of("engine[pipeline-100k]") * 0.4).into()),
+        ])),
+    ]);
+    std::fs::write("results/BENCH_10.json", pipeline_out.to_string())
+        .expect("write results/BENCH_10.json");
+    println!("[saved results/BENCH_10.json]");
 }

@@ -90,6 +90,11 @@ pub struct ExperimentConfig {
     /// Maximum ensemble members per model-less floor query (0 disables;
     /// the engine requires ≥3 before voting kicks in).
     pub ensemble: usize,
+    /// Named stage DAG for `"selection": "pipeline"` runs (currently
+    /// `"detect-classify"`). Resolved against the registry by
+    /// [`crate::sim::run_experiment`]; pipeline runs default to
+    /// detect-classify when absent.
+    pub pipeline: Option<String>,
     pub paragon: ParagonKnobs,
 }
 
@@ -148,16 +153,36 @@ impl Default for ExperimentConfig {
             spot_rate: None,
             preemption_trace: None,
             ensemble: 0,
+            pipeline: None,
             paragon: ParagonKnobs::default(),
         }
     }
 }
 
+/// Every key [`ExperimentConfig::from_json`] understands. `name` and
+/// `description` are scenario-file documentation keys, accepted and
+/// ignored. Anything else is rejected by name — a typo'd scenario must
+/// fail loudly, not silently run the defaults.
+const KNOWN_KEYS: &[&str] = &[
+    "name", "description", "trace", "trace_file", "mean_rate", "duration_s",
+    "vm_type", "vm_types", "instance_cap", "queue_timeout_s", "scheme",
+    "workload", "selection", "seed", "fidelity", "spot", "spot_rate",
+    "preemption_trace", "ensemble", "pipeline", "paragon",
+];
+
 impl ExperimentConfig {
     pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
         let mut cfg = ExperimentConfig::default();
-        if j.as_obj().is_none() {
-            bail!("config root must be a JSON object");
+        let obj = match j.as_obj() {
+            Some(o) => o,
+            None => bail!("config root must be a JSON object"),
+        };
+        if let Some(k) = obj.keys().find(|k| !KNOWN_KEYS.contains(&k.as_str()))
+        {
+            bail!(
+                "unknown config field {k:?} (known fields: {})",
+                KNOWN_KEYS.join(", ")
+            );
         }
         if let Some(s) = j.get("trace").as_str() {
             cfg.trace = TraceKind::from_name(s)
@@ -221,6 +246,7 @@ impl ExperimentConfig {
                 "mixed-slo" => WorkloadKind::MixedSlo,
                 "constraints" => WorkloadKind::VarConstraints,
                 "tiered" => WorkloadKind::AccuracyTiered,
+                "pipeline-tiered" => WorkloadKind::PipelineTiered,
                 other => bail!("unknown workload {other:?}"),
             };
         }
@@ -230,6 +256,7 @@ impl ExperimentConfig {
                 "naive" => Assignment::Policy(SelectionPolicy::Naive),
                 "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
                 "modelless" => Assignment::ModelLess,
+                "pipeline" => Assignment::Pipeline,
                 other => match other.strip_prefix("fixed:") {
                     Some(idx) => Assignment::Fixed(
                         idx.parse()
@@ -260,6 +287,12 @@ impl ExperimentConfig {
         }
         if let Some(s) = j.get("preemption_trace").as_str() {
             cfg.preemption_trace = Some(s.to_string());
+        }
+        if let Some(s) = j.get("pipeline").as_str() {
+            if s != "detect-classify" {
+                bail!("unknown pipeline {s:?} (known: detect-classify)");
+            }
+            cfg.pipeline = Some(s.to_string());
         }
         if let Some(x) = j.get("ensemble").as_usize() {
             if x == 1 || x == 2 {
@@ -298,12 +331,14 @@ impl ExperimentConfig {
             Assignment::Policy(SelectionPolicy::Naive) => "naive".to_string(),
             Assignment::Policy(SelectionPolicy::Paragon) => "paragon".to_string(),
             Assignment::ModelLess => "modelless".to_string(),
+            Assignment::Pipeline => "pipeline".to_string(),
             Assignment::Fixed(m) => format!("fixed:{m}"),
         };
         let wl = match self.workload {
             WorkloadKind::MixedSlo => "mixed-slo",
             WorkloadKind::VarConstraints => "constraints",
             WorkloadKind::AccuracyTiered => "tiered",
+            WorkloadKind::PipelineTiered => "pipeline-tiered",
         };
         let mut fields = vec![
             ("trace", Json::from(self.trace.name())),
@@ -333,6 +368,9 @@ impl ExperimentConfig {
         }
         if let Some(p) = &self.preemption_trace {
             fields.push(("preemption_trace", p.as_str().into()));
+        }
+        if let Some(p) = &self.pipeline {
+            fields.push(("pipeline", p.as_str().into()));
         }
         Json::obj(fields)
     }
@@ -484,11 +522,43 @@ mod tests {
             r#"{"selection":"wat"}"#,
             r#"{"fidelity":"wat"}"#,
             r#"{"paragon":{"p2m_gate":0.5}}"#,
+            r#"{"pipeline":"wat"}"#,
             r#"[1,2,3]"#,
             r#"not json"#,
         ] {
             assert!(ExperimentConfig::from_str_json(bad).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn unknown_keys_rejected_by_name() {
+        let err = ExperimentConfig::from_str_json(r#"{"mean_rte": 50.0}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mean_rte"), "error must name the field: {err}");
+        assert!(err.contains("mean_rate"), "error must list known fields: {err}");
+        // Scenario documentation keys pass.
+        let c = ExperimentConfig::from_str_json(
+            r#"{"name":"diurnal","description":"a scenario","seed":3}"#,
+        )
+        .unwrap();
+        assert_eq!(c.seed, 3);
+    }
+
+    #[test]
+    fn pipeline_selection_round_trips() {
+        let c = ExperimentConfig::from_str_json(
+            r#"{"selection":"pipeline","workload":"pipeline-tiered",
+                "pipeline":"detect-classify"}"#,
+        )
+        .unwrap();
+        assert!(matches!(c.assignment, Assignment::Pipeline));
+        assert_eq!(c.workload, WorkloadKind::PipelineTiered);
+        assert_eq!(c.pipeline.as_deref(), Some("detect-classify"));
+        let c2 = ExperimentConfig::from_json(&c.to_json()).unwrap();
+        assert!(matches!(c2.assignment, Assignment::Pipeline));
+        assert_eq!(c2.workload, WorkloadKind::PipelineTiered);
+        assert_eq!(c2.pipeline.as_deref(), Some("detect-classify"));
     }
 
     #[test]

@@ -22,6 +22,7 @@ use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, PackPoli
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::models::Registry;
+use crate::pipeline::{PipelineChoice, PipelinePlane};
 use crate::scheduler::{Action, OffloadPolicy};
 use crate::sim::core::SimCore;
 use crate::variants::{EnsembleChoice, VariantChoice, VariantFamily, VariantPlane};
@@ -73,6 +74,11 @@ pub struct FluidFleet {
     /// Variant plane (model-less query routing); installed by
     /// [`FluidFleet::with_family`] or `install_variants`.
     plane: Option<VariantPlane>,
+    /// Pipeline plane (multi-stage query routing) when installed. Unlike
+    /// the variant plane it may span models outside the fleet's member
+    /// list: stage capacity is read from the fleet *view*, so its ladders
+    /// see exactly what the other backends' ladders see.
+    pipe: Option<PipelinePlane>,
     /// Multi-tenant packing policy (disabled = dedicated legacy fleet).
     pack: PackPolicy,
     /// Shared (packed) VMs, join/peel semantics identical to
@@ -107,6 +113,7 @@ impl FluidFleet {
             boots: SimCore::new(),
             valve: None,
             plane: None,
+            pipe: None,
             pack: PackPolicy::default(),
             packed: Vec::new(),
             next_packed_id: 0,
@@ -377,6 +384,7 @@ impl FleetActuator for FluidFleet {
         }
         self.process_reclaims(now);
         self.refresh_variants(now);
+        self.refresh_pipeline(now);
     }
 
     fn view(&self) -> FleetView {
@@ -532,6 +540,32 @@ impl FleetActuator for FluidFleet {
                       -> Option<EnsembleChoice> {
         self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
     }
+
+    fn install_pipeline(&mut self, plane: PipelinePlane) {
+        self.pipe = Some(plane);
+    }
+
+    fn pipeline(&self) -> Option<&PipelinePlane> {
+        self.pipe.as_ref()
+    }
+
+    fn route_pipeline(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<PipelineChoice> {
+        self.pipe.as_mut().map(|p| p.route(min_accuracy, slo_ms))
+    }
+
+    /// Pipeline ladders refresh from the fleet *view* (not the count
+    /// matrices): stage families may span models outside the member list,
+    /// and view-derived capacity is exactly what the other two backends
+    /// integrate — the cross-backend parity anchor.
+    fn refresh_pipeline(&mut self, now: f64) {
+        if self.pipe.is_some() {
+            let view = self.view();
+            if let Some(p) = self.pipe.as_mut() {
+                p.refresh(&view, now);
+            }
+        }
+    }
 }
 
 /// Credit-based fluid service integrator: the continuous half of the
@@ -595,6 +629,91 @@ impl FluidCredit {
     }
 }
 
+/// Stage lanes chained as credit flows — the fluid rendering of a
+/// multi-stage pipeline. Each stage owns one [`FluidCredit`] lane plus a
+/// queued bucket; arrivals enter stage 0's bucket, every serve at stage
+/// `i` pours exactly one request into stage `i+1`'s bucket, and a serve at
+/// the final stage leaves the chain. Pure arithmetic over caller-supplied
+/// timestamps (no RNG, no events), so the per-stage conservation law
+/// `ingested == served + queued` holds at every instant by construction —
+/// the fluid leg of `rust/tests/pipeline_conformance.rs`. Stage capacities
+/// are wired by the caller from the same per-stage sub-fleet aggregates
+/// [`FluidFleet::refresh_variants`] integrates.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineLanes {
+    lanes: Vec<FluidCredit>,
+    queued: Vec<u64>,
+    ingested: Vec<u64>,
+    served: Vec<u64>,
+}
+
+impl PipelineLanes {
+    pub fn new(stages: usize) -> PipelineLanes {
+        assert!(stages > 0, "a pipeline needs at least one stage");
+        PipelineLanes {
+            lanes: vec![FluidCredit::default(); stages],
+            queued: vec![0; stages],
+            ingested: vec![0; stages],
+            served: vec![0; stages],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// Rewire one stage's serviceable rate and burst bank (from the
+    /// stage sub-fleet's running slots / service time aggregate).
+    pub fn set_capacity(&mut self, stage: usize, cap_rate: f64, burst: f64) {
+        self.lanes[stage].cap_rate = cap_rate;
+        self.lanes[stage].burst = burst.max(1.0);
+        self.lanes[stage].clamp();
+    }
+
+    /// One request enters the chain at stage 0 (capacity up to `now` is
+    /// integrated first, so in-order arrival/drain calls commute).
+    pub fn arrive(&mut self, now: f64) {
+        self.drain(now);
+        self.ingested[0] += 1;
+        self.queued[0] += 1;
+    }
+
+    /// Integrate every lane up to `now`, in stage order, pouring each
+    /// serve into the next stage's bucket; mass poured forward may be
+    /// served at the same instant when the downstream lane holds credit.
+    pub fn drain(&mut self, now: f64) {
+        for s in 0..self.lanes.len() {
+            self.lanes[s].accrue(now);
+            while self.queued[s] > 0 && self.lanes[s].try_serve() {
+                self.queued[s] -= 1;
+                self.served[s] += 1;
+                if s + 1 < self.lanes.len() {
+                    self.ingested[s + 1] += 1;
+                    self.queued[s + 1] += 1;
+                }
+            }
+        }
+    }
+
+    /// Per-stage conservation snapshot (fluid lanes never drop, offload
+    /// or preempt: those counters stay zero and the law reduces to
+    /// `ingested == served + queued`).
+    pub fn stage_counts(&self) -> Vec<super::StageCounts> {
+        (0..self.lanes.len())
+            .map(|s| super::StageCounts {
+                ingested: self.ingested[s],
+                served: self.served[s],
+                queued: self.queued[s] as usize,
+                ..Default::default()
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -604,6 +723,31 @@ mod tests {
         let m4 = vm_type("m4.large").unwrap();
         let c5 = vm_type("c5.large").unwrap();
         FluidFleet::new(0, vec![m4, c5])
+    }
+
+    #[test]
+    fn pipeline_lanes_chain_and_conserve_mass_per_stage() {
+        let mut p = PipelineLanes::new(2);
+        p.set_capacity(0, 2.0, 4.0);
+        p.set_capacity(1, 1.0, 2.0);
+        for i in 0..20 {
+            p.arrive(i as f64);
+        }
+        let mid = p.stage_counts();
+        for (s, sc) in mid.iter().enumerate() {
+            assert_eq!(sc.ingested, sc.served + sc.queued as u64,
+                       "stage {s} mid-run");
+        }
+        p.drain(120.0);
+        let done = p.stage_counts();
+        assert_eq!(done[0].ingested, 20);
+        // Stage 1 only ever sees what stage 0 poured forward.
+        assert_eq!(done[1].ingested, done[0].served);
+        for (s, sc) in done.iter().enumerate() {
+            assert_eq!(sc.ingested, sc.served + sc.queued as u64,
+                       "stage {s} end-of-run");
+        }
+        assert_eq!(done[1].served, 20, "ample credit drains the whole chain");
     }
 
     #[test]

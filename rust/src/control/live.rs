@@ -37,6 +37,7 @@ use super::{DemandSnapshot, FleetActuator, FleetView, FleetViewBuilder, PackPoli
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionProcess, SpotUsage};
 use crate::models::Registry;
+use crate::pipeline::{PipelineChoice, PipelinePlane};
 use crate::runtime::engine::EngineHandle;
 use crate::scheduler::{Action, OffloadPolicy, TypeCap};
 use crate::serving::router::Router;
@@ -109,12 +110,50 @@ struct Replica {
     busy_by: Vec<u32>,
 }
 
+/// Sentinel job id: the queued/in-flight entry is a plain single-model
+/// request, not a pipeline stage.
+const NO_JOB: usize = usize::MAX;
+
 #[derive(Debug, Clone, Copy)]
 struct DryQueued {
     slo_ms: f64,
     arrival: f64,
     /// Already re-queued once by a spot reclaim; a second reclaim drops it.
     requeued: bool,
+    /// Pipeline job this entry belongs to ([`NO_JOB`] = single-model).
+    job: usize,
+}
+
+/// One in-system pipeline request: the per-stage models its admission-time
+/// [`PipelineChoice`] resolved, the stage it currently sits in, and the
+/// end-to-end budget the remaining deadline is computed from. Slots are
+/// recycled through a free list once the request leaves the system.
+#[derive(Debug, Clone)]
+struct PipeJob {
+    /// Resolved model per stage, stage order.
+    models: Vec<usize>,
+    /// Stage the request currently occupies (queued or in flight).
+    stage: usize,
+    /// End-to-end arrival time.
+    arrival: f64,
+    /// End-to-end latency SLO, ms.
+    slo_ms: f64,
+}
+
+/// Per-stage conservation counters of a pipeline-serving fleet. The
+/// invariant — asserted by [`ServerFleet::report`] and pinned across
+/// backends by `rust/tests/pipeline_conformance.rs`:
+/// `ingested == served + dropped + offloaded + queued + preempted`
+/// at every stage, where in-flight work counts as served (booked at
+/// dispatch, exactly like the request-level ledger).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageCounts {
+    pub ingested: u64,
+    pub served: u64,
+    pub dropped: u64,
+    pub offloaded: u64,
+    pub queued: usize,
+    pub preempted: u64,
 }
 
 /// Dry-run in-flight record. `done` duplicates the heap key so reclaim
@@ -131,6 +170,8 @@ struct DryInflight {
     wait_ms: f64,
     violated: bool,
     requeued: bool,
+    /// Pipeline job this completion advances ([`NO_JOB`] = single-model).
+    job: usize,
 }
 
 /// End-of-run summary of a [`ServerFleet`] drive.
@@ -167,6 +208,10 @@ pub struct LiveReport {
     pub peak_replicas: usize,
     /// Replicas launched per instance-type name over the whole run.
     pub spawned_by_type: Vec<(String, u64)>,
+    /// Per-stage conservation counters when a pipeline plane is installed
+    /// (empty otherwise). Each stage independently satisfies
+    /// `ingested == served + dropped + offloaded + queued + preempted`.
+    pub stages: Vec<StageCounts>,
 }
 
 /// Per-type live serving pools behind the [`FleetActuator`] contract.
@@ -193,6 +238,24 @@ pub struct ServerFleet {
     /// ([`Self::ingest_modelless`], plane-routed [`Self::submit`]) when
     /// installed.
     plane: Option<VariantPlane>,
+    /// Pipeline plane: resolves every stage's variant at admission
+    /// ([`Self::ingest_pipeline`]) when installed.
+    pipe: Option<PipelinePlane>,
+    /// In-system pipeline requests; slots recycle through `pipe_free`.
+    pipe_jobs: Vec<PipeJob>,
+    pipe_free: Vec<usize>,
+    /// Pipeline requests currently in flight on a MID stage (stage work
+    /// dispatched but the request not yet terminally booked) — the extra
+    /// "still in the system" term request conservation needs beyond the
+    /// queue depths.
+    pipe_inflight: u64,
+    /// Per-stage conservation ledger ([`StageCounts`]; queued depths are
+    /// scanned on demand from the FIFO queues).
+    stage_ingested: Vec<u64>,
+    stage_served: Vec<u64>,
+    stage_dropped: Vec<u64>,
+    stage_offloaded: Vec<u64>,
+    stage_preempted: Vec<u64>,
     retired_cost: f64,
     /// Dry-run requests admitted via [`Self::ingest`] (the conservation
     /// denominator; `note_arrival` demand-only counts are excluded).
@@ -279,6 +342,15 @@ impl ServerFleet {
             completions: SimCore::new(),
             valve: ServerlessValve::new(reg),
             plane: None,
+            pipe: None,
+            pipe_jobs: Vec::new(),
+            pipe_free: Vec::new(),
+            pipe_inflight: 0,
+            stage_ingested: Vec::new(),
+            stage_served: Vec::new(),
+            stage_dropped: Vec::new(),
+            stage_offloaded: Vec::new(),
+            stage_preempted: Vec::new(),
             retired_cost: 0.0,
             ingested: 0,
             served: 0,
@@ -446,7 +518,7 @@ impl ServerFleet {
     pub fn ingest(&mut self, model: usize, slo_ms: f64, now: f64) {
         self.arrivals[model] += 1;
         self.ingested += 1;
-        if self.try_dispatch(model, slo_ms, now, now, false) {
+        if self.try_dispatch(model, slo_ms, now, now, false, NO_JOB) {
             return;
         }
         if self.valve.admits(Strictness::from_slo_ms(slo_ms) == Strictness::Strict) {
@@ -456,8 +528,127 @@ impl ServerFleet {
                 slo_ms,
                 arrival: now,
                 requeued: false,
+                job: NO_JOB,
             });
         }
+    }
+
+    /// Pipeline arrival: resolve every stage's variant through the
+    /// installed [`PipelinePlane`] (end-to-end budget decomposition plus
+    /// the per-stage hysteresis ladders), then admit stage 0 through the
+    /// exact same slot/valve/queue path a single-model [`Self::ingest`]
+    /// takes. Completions chain the handoffs inside
+    /// [`FleetActuator::advance`]; the remaining end-to-end deadline
+    /// shrinks at each handoff and gates per-stage offload eligibility.
+    /// Returns the plane's choice, or `None` (and admits nothing) when no
+    /// pipeline is installed.
+    pub fn ingest_pipeline(&mut self, min_accuracy: f64, slo_ms: f64,
+                           now: f64) -> Option<PipelineChoice> {
+        let choice = self.route_pipeline(min_accuracy, slo_ms)?;
+        self.ingested += 1;
+        let models: Vec<usize> = choice.stages.iter().map(|c| c.model).collect();
+        let job = PipeJob { models, stage: 0, arrival: now, slo_ms };
+        let id = match self.pipe_free.pop() {
+            Some(i) => {
+                self.pipe_jobs[i] = job;
+                i
+            }
+            None => {
+                self.pipe_jobs.push(job);
+                self.pipe_jobs.len() - 1
+            }
+        };
+        self.arrivals[self.pipe_jobs[id].models[0]] += 1;
+        self.enter_stage(id, now);
+        Some(choice)
+    }
+
+    /// Admit pipeline job `id` into its current stage at `now`: free slot,
+    /// else valve (when the REMAINING end-to-end deadline's strictness
+    /// class admits), else the stage model's FIFO queue — the mirror of
+    /// [`Self::ingest`] with the remaining deadline in place of a
+    /// per-request SLO.
+    fn enter_stage(&mut self, id: usize, now: f64) {
+        let stage = self.pipe_jobs[id].stage;
+        let model = self.pipe_jobs[id].models[stage];
+        let rem = self.pipe_jobs[id].slo_ms
+            - (now - self.pipe_jobs[id].arrival) * 1000.0;
+        self.stage_ingested[stage] += 1;
+        if self.try_dispatch(model, rem, now, now, false, id) {
+            return;
+        }
+        if self.valve.admits(Strictness::from_slo_ms(rem) == Strictness::Strict) {
+            self.offload_stage(id, rem, now, now);
+        } else {
+            self.queues[model].push_back(DryQueued {
+                slo_ms: rem,
+                arrival: now,
+                requeued: false,
+                job: id,
+            });
+        }
+    }
+
+    /// Divert pipeline job `id`'s current stage to the valve. A mid-stage
+    /// lambda completes like a replica would — a sentinel completion (no
+    /// replica slot to release) chains the next stage at `now + latency` —
+    /// while a final-stage lambda terminally books the request offloaded,
+    /// exactly as [`Self::offload_one`] books single-model overflow.
+    fn offload_stage(&mut self, id: usize, rem_slo_ms: f64, arrival: f64,
+                     now: f64) {
+        let stage = self.pipe_jobs[id].stage;
+        let model = self.pipe_jobs[id].models[stage];
+        self.stage_offloaded[stage] += 1;
+        if stage + 1 == self.pipe_jobs[id].models.len() {
+            self.offload_one(model, rem_slo_ms, arrival, now);
+            self.free_job(id);
+        } else {
+            let out = self.valve.invoke(model, rem_slo_ms, now);
+            self.pipe_inflight += 1;
+            let done = now + out.latency_ms / 1000.0;
+            self.completions.schedule_at(done, DryInflight {
+                replica: u64::MAX,
+                model,
+                arrival,
+                slo_ms: rem_slo_ms,
+                done,
+                wait_ms: (now - arrival) * 1000.0,
+                violated: false,
+                requeued: false,
+                job: id,
+            });
+        }
+    }
+
+    /// Recycle a pipeline job slot once the request leaves the system.
+    fn free_job(&mut self, id: usize) {
+        self.pipe_jobs[id].models.clear();
+        self.pipe_free.push(id);
+    }
+
+    /// Snapshot the per-stage conservation ledger. In-flight stage work
+    /// counts as served (booked at dispatch, like the request-level
+    /// ledger); queued depths are scanned live from the FIFO queues.
+    pub fn stage_counts(&self) -> Vec<StageCounts> {
+        let n = self.stage_ingested.len();
+        let mut queued = vec![0usize; n];
+        for q in &self.queues {
+            for e in q {
+                if e.job != NO_JOB {
+                    queued[self.pipe_jobs[e.job].stage] += 1;
+                }
+            }
+        }
+        (0..n)
+            .map(|s| StageCounts {
+                ingested: self.stage_ingested[s],
+                served: self.stage_served[s],
+                dropped: self.stage_dropped[s],
+                offloaded: self.stage_offloaded[s],
+                queued: queued[s],
+                preempted: self.stage_preempted[s],
+            })
+            .collect()
     }
 
     /// Model-less live arrival: resolve `(min_accuracy, slo_ms)` through
@@ -492,7 +683,7 @@ impl ServerFleet {
     }
 
     fn try_dispatch(&mut self, model: usize, slo_ms: f64, arrival: f64,
-                    now: f64, requeued: bool) -> bool {
+                    now: f64, requeued: bool, job: usize) -> bool {
         for oi in 0..self.order[model].len() {
             let k = self.order[model][oi];
             let mut best: Option<usize> = None;
@@ -545,6 +736,19 @@ impl ServerFleet {
                 let id = self.replicas[i].id;
                 let wait_ms = (now - arrival) * 1000.0;
                 let violated = wait_ms + svc * 1000.0 > slo_ms;
+                // Terminal booking happens exactly once per request: at a
+                // single-model dispatch, or at a pipeline's FINAL stage
+                // (whose `slo_ms` is the remaining end-to-end deadline, so
+                // the violation check equals the end-to-end one). Mid-stage
+                // dispatches book only the stage ledger and park the
+                // request in `pipe_inflight` until their completion chains
+                // the next stage.
+                let terminal = job == NO_JOB
+                    || self.pipe_jobs[job].stage + 1
+                        == self.pipe_jobs[job].models.len();
+                if job != NO_JOB {
+                    self.stage_served[self.pipe_jobs[job].stage] += 1;
+                }
                 self.completions.schedule_at(now + svc, DryInflight {
                     replica: id,
                     model,
@@ -552,13 +756,18 @@ impl ServerFleet {
                     slo_ms,
                     done: now + svc,
                     wait_ms,
-                    violated,
+                    violated: violated && terminal,
                     requeued,
+                    job,
                 });
-                self.served += 1;
-                self.wait_ms_sum += wait_ms;
-                if violated {
-                    self.note_violation(model);
+                if terminal {
+                    self.served += 1;
+                    self.wait_ms_sum += wait_ms;
+                    if violated {
+                        self.note_violation(model);
+                    }
+                } else {
+                    self.pipe_inflight += 1;
                 }
                 return true;
             }
@@ -633,17 +842,39 @@ impl ServerFleet {
                     self.queues[m].pop_front();
                     self.dropped += 1;
                     self.note_violation(m); // a drop is by definition a violation
+                    if head.job != NO_JOB {
+                        self.stage_dropped[self.pipe_jobs[head.job].stage] += 1;
+                        self.free_job(head.job);
+                    }
                     continue;
                 }
-                if self.try_dispatch(m, head.slo_ms, head.arrival, t, head.requeued) {
+                if self.try_dispatch(m, head.slo_ms, head.arrival, t,
+                                     head.requeued, head.job) {
                     self.queues[m].pop_front();
                     continue;
                 }
-                let strict = Strictness::from_slo_ms(head.slo_ms)
+                // Offload eligibility: pipeline heads re-derive strictness
+                // from the deadline REMAINING at `t` (the entry's `slo_ms`
+                // was remaining-at-entry), so a stage burning its slack in
+                // queue becomes strict — and hence valve-eligible under
+                // strict-only policies — exactly when the end-to-end
+                // deadline nears. Single-model heads keep their admission
+                // class.
+                let rem_now = if head.job != NO_JOB {
+                    head.slo_ms - (t - head.arrival) * 1000.0
+                } else {
+                    head.slo_ms
+                };
+                let strict = Strictness::from_slo_ms(rem_now)
                     == Strictness::Strict;
                 if self.valve.admits(strict) {
                     self.queues[m].pop_front();
-                    self.offload_one(m, head.slo_ms, head.arrival, t);
+                    if head.job != NO_JOB {
+                        self.offload_stage(head.job, head.slo_ms,
+                                           head.arrival, t);
+                    } else {
+                        self.offload_one(m, head.slo_ms, head.arrival, t);
+                    }
                     continue;
                 }
                 break;
@@ -702,8 +933,23 @@ impl ServerFleet {
                     .completions
                     .cancel_latest_matching(|c| c.replica == id && c.done > deadline)
                 {
-                    self.served -= 1;
-                    self.wait_ms_sum -= c.wait_ms;
+                    // Reverse exactly what try_dispatch booked: terminal
+                    // work (single-model, or a pipeline's final stage)
+                    // un-serves; a mid-stage cancellation only leaves the
+                    // in-system bucket. Stage ledgers reverse either way.
+                    let terminal = c.job == NO_JOB
+                        || self.pipe_jobs[c.job].stage + 1
+                            == self.pipe_jobs[c.job].models.len();
+                    if terminal {
+                        self.served -= 1;
+                        self.wait_ms_sum -= c.wait_ms;
+                    } else {
+                        self.pipe_inflight -= 1;
+                    }
+                    if c.job != NO_JOB {
+                        let s = self.pipe_jobs[c.job].stage;
+                        self.stage_served[s] -= 1;
+                    }
                     if c.violated {
                         self.violations = self.violations.saturating_sub(1);
                         self.viol_delta[c.model] =
@@ -712,12 +958,18 @@ impl ServerFleet {
                     if c.requeued {
                         self.preempted += 1;
                         self.note_violation(c.model); // a preempted drop violates
+                        if c.job != NO_JOB {
+                            self.stage_preempted
+                                [self.pipe_jobs[c.job].stage] += 1;
+                            self.free_job(c.job);
+                        }
                     } else {
                         self.requeued += 1;
                         self.queues[c.model].push_back(DryQueued {
                             slo_ms: c.slo_ms,
                             arrival: c.arrival,
                             requeued: true,
+                            job: c.job,
                         });
                     }
                 }
@@ -794,7 +1046,10 @@ impl ServerFleet {
     /// mirrored from the simulator's `SimReport`): every ingested request
     /// is served, dropped or offloaded exactly once, or still queued.
     pub fn report(&self, now: f64) -> LiveReport {
-        let queued: usize = self.queues.iter().map(VecDeque::len).sum();
+        // Pipeline requests mid-flight between stages are still in the
+        // system: they join the queued bucket of the request-level law.
+        let queued: usize = self.queues.iter().map(VecDeque::len).sum::<usize>()
+            + self.pipe_inflight as usize;
         assert_eq!(
             self.ingested,
             self.served + self.dropped + self.offloaded + queued as u64
@@ -804,7 +1059,17 @@ impl ServerFleet {
             self.ingested, self.served, self.dropped, self.offloaded,
             self.preempted
         );
+        let stages = self.stage_counts();
+        for (s, c) in stages.iter().enumerate() {
+            assert_eq!(
+                c.ingested,
+                c.served + c.dropped + c.offloaded + c.queued as u64
+                    + c.preempted,
+                "stage {s} conservation violated: {c:?}"
+            );
+        }
         LiveReport {
+            stages,
             served: self.served,
             violations: self.violations,
             dropped: self.dropped,
@@ -993,6 +1258,24 @@ impl FleetActuator for ServerFleet {
                         self.retire(i, done_at);
                     }
                 }
+                // Pipeline handoff: a finished stage chains the next one
+                // at its own completion time (carrying the shrunken
+                // remaining deadline via `enter_stage`); a FINAL stage's
+                // completion was already terminally booked at dispatch and
+                // just recycles the job slot.
+                if inf.job != NO_JOB {
+                    let last = self.pipe_jobs[inf.job].models.len() - 1;
+                    if self.pipe_jobs[inf.job].stage < last {
+                        self.pipe_inflight -= 1;
+                        self.pipe_jobs[inf.job].stage += 1;
+                        let next = self.pipe_jobs[inf.job].models
+                            [self.pipe_jobs[inf.job].stage];
+                        self.arrivals[next] += 1;
+                        self.enter_stage(inf.job, done_at);
+                    } else {
+                        self.free_job(inf.job);
+                    }
+                }
             }
             self.dispatch_queued(t);
             self.peak_replicas = self.peak_replicas.max(self.total_alive());
@@ -1002,6 +1285,7 @@ impl FleetActuator for ServerFleet {
         self.dispatch_queued(now);
         self.peak_replicas = self.peak_replicas.max(self.total_alive());
         self.refresh_variants(now);
+        self.refresh_pipeline(now);
     }
 
     fn view(&self) -> FleetView {
@@ -1179,6 +1463,34 @@ impl FleetActuator for ServerFleet {
     fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
                       -> Option<EnsembleChoice> {
         self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
+    }
+
+    fn install_pipeline(&mut self, plane: PipelinePlane) {
+        let n = plane.len();
+        self.stage_ingested = vec![0; n];
+        self.stage_served = vec![0; n];
+        self.stage_dropped = vec![0; n];
+        self.stage_offloaded = vec![0; n];
+        self.stage_preempted = vec![0; n];
+        self.pipe = Some(plane);
+    }
+
+    fn pipeline(&self) -> Option<&PipelinePlane> {
+        self.pipe.as_ref()
+    }
+
+    fn route_pipeline(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<PipelineChoice> {
+        self.pipe.as_mut().map(|p| p.route(min_accuracy, slo_ms))
+    }
+
+    fn refresh_pipeline(&mut self, now: f64) {
+        if self.pipe.is_some() {
+            let view = self.view();
+            if let Some(p) = self.pipe.as_mut() {
+                p.refresh(&view, now);
+            }
+        }
     }
 }
 

@@ -45,14 +45,15 @@ pub mod sim;
 pub mod valve;
 
 pub use crate::cloud::vm::{pack_slots, PackPolicy};
-pub use fluid::{FluidCredit, FluidFleet};
-pub use live::{LiveReport, ServerFleet, ServerFleetConfig};
+pub use fluid::{FluidCredit, FluidFleet, PipelineLanes};
+pub use live::{LiveReport, ServerFleet, ServerFleetConfig, StageCounts};
 pub use sim::{cluster_view, ClusterActuator};
 pub use valve::{LambdaOutcome, LambdaUsage, ServerlessValve};
 
 use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionProcess, SpotUsage};
 use crate::models::Registry;
+use crate::pipeline::{PipelineChoice, PipelinePlane};
 use crate::rl::baselines::EnvPolicy;
 use crate::rl::env::{decode_action, decode_action_joint, JointObsLayout, ObsLayout,
                      ObsSignals};
@@ -492,6 +493,36 @@ pub trait FleetActuator {
                       -> Option<crate::variants::EnsembleChoice> {
         None
     }
+
+    /// Install a pipeline plane ([`crate::pipeline`]): from here on the
+    /// backend resolves multi-stage requests through it
+    /// ([`Self::route_pipeline`]) — one end-to-end `(min_accuracy, slo_ms)`
+    /// budget decomposed into per-stage floors/deadlines, every stage
+    /// picked through its own variant-selector ladder. Backends without
+    /// pipeline support ignore the plane (the default).
+    fn install_pipeline(&mut self, _plane: PipelinePlane) {}
+
+    /// The backend's pipeline plane, if one is installed.
+    fn pipeline(&self) -> Option<&PipelinePlane> {
+        None
+    }
+
+    /// Admit one pipeline request: decompose the end-to-end budget and
+    /// resolve every stage through the installed plane. Like
+    /// [`Self::route_modelless`] this is selection plus ledger booking
+    /// only — no arrival/admission side effects — so every backend answers
+    /// the same script with identical per-stage picks
+    /// (`rust/tests/pipeline_conformance.rs`). `None` when no plane is
+    /// installed.
+    fn route_pipeline(&mut self, _min_accuracy: f64, _slo_ms: f64)
+                      -> Option<PipelineChoice> {
+        None
+    }
+
+    /// Advance every stage ladder of the pipeline plane from the backend's
+    /// current fleet state (the pipeline mirror of
+    /// [`Self::refresh_variants`], same call discipline).
+    fn refresh_pipeline(&mut self, _now: f64) {}
 }
 
 /// Per-`(model, palette entry)` capacity table — the one way every

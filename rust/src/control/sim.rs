@@ -13,6 +13,7 @@ use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess, SpotUsage};
 use crate::cloud::{Cluster, VmState};
 use crate::models::Registry;
+use crate::pipeline::{PipelineChoice, PipelinePlane};
 use crate::scheduler::{Action, OffloadPolicy, TypeCap};
 use crate::variants::{EnsembleChoice, VariantChoice, VariantPlane};
 
@@ -58,6 +59,9 @@ pub struct ClusterActuator {
     /// Variant plane: resolves the embedding loop's model-less queries
     /// ([`FleetActuator::route_modelless`]) when installed.
     plane: Option<VariantPlane>,
+    /// Pipeline plane: resolves the embedding loop's multi-stage queries
+    /// ([`FleetActuator::route_pipeline`]) when installed.
+    pipeline: Option<PipelinePlane>,
     /// Multi-tenant packing policy (disabled = dedicated legacy fleet).
     pack: PackPolicy,
     /// Spot preemption script (reclaim fault injection) when installed.
@@ -85,6 +89,7 @@ impl ClusterActuator {
             queued: vec![0; n],
             valve: ServerlessValve::new(reg),
             plane: None,
+            pipeline: None,
             pack: PackPolicy::default(),
             preemption: None,
             reclaims_tick: 0,
@@ -223,6 +228,7 @@ impl FleetActuator for ClusterActuator {
             }
         }
         self.refresh_variants(now);
+        self.refresh_pipeline(now);
     }
 
     fn view(&self) -> FleetView {
@@ -308,6 +314,28 @@ impl FleetActuator for ClusterActuator {
     fn route_ensemble(&mut self, min_accuracy: f64, slo_ms: f64)
                       -> Option<EnsembleChoice> {
         self.plane.as_mut().and_then(|p| p.route_ensemble(min_accuracy, slo_ms))
+    }
+
+    fn install_pipeline(&mut self, plane: PipelinePlane) {
+        self.pipeline = Some(plane);
+    }
+
+    fn pipeline(&self) -> Option<&PipelinePlane> {
+        self.pipeline.as_ref()
+    }
+
+    fn route_pipeline(&mut self, min_accuracy: f64, slo_ms: f64)
+                      -> Option<PipelineChoice> {
+        self.pipeline.as_mut().map(|p| p.route(min_accuracy, slo_ms))
+    }
+
+    fn refresh_pipeline(&mut self, now: f64) {
+        if self.pipeline.is_some() {
+            let view = cluster_view(&self.cluster, self.clock);
+            if let Some(p) = self.pipeline.as_mut() {
+                p.refresh(&view, now);
+            }
+        }
     }
 }
 

@@ -28,6 +28,7 @@ pub mod config;
 pub mod control;
 pub mod figures;
 pub mod models;
+pub mod pipeline;
 pub mod runtime;
 pub mod rl;
 pub mod scheduler;

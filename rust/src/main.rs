@@ -109,6 +109,9 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     if want("joint") {
         figures::save(&out, "fig_joint", &figures::fig_joint(&reg, &cfg))?;
     }
+    if want("pipeline") {
+        figures::save(&out, "fig_pipeline", &figures::fig_pipeline(&reg, &cfg))?;
+    }
     if want("10") {
         let iters = args.get_usize("iters", 20)?;
         let dir = artifacts_dir(args);
@@ -123,6 +126,38 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let reg = registry(args);
+    // Scenario path: a declarative scenario document (`scenarios/*.json`)
+    // is an `ExperimentConfig` with optional `name`/`description` keys;
+    // `--rate`/`--duration`/`--seed` override its scale so CI can smoke
+    // every committed scenario cheaply.
+    if let Some(path) = args.get("scenario") {
+        let mut cfg =
+            paragon::config::ExperimentConfig::from_file(std::path::Path::new(path))?;
+        if let Some(r) = args.get("rate") {
+            cfg.mean_rate = r
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--rate must be a number, got {r:?}"))?;
+        }
+        if let Some(d) = args.get("duration") {
+            cfg.duration_s = d
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--duration must be an integer, got {d:?}"))?;
+        }
+        if let Some(s) = args.get("seed") {
+            cfg.seed = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--seed must be an integer, got {s:?}"))?;
+        }
+        let rep = paragon::sim::run_experiment(&reg, &cfg)?;
+        let mut j = rep.to_json();
+        if let paragon::util::json::Json::Obj(map) = &mut j {
+            map.insert("scenario".into(),
+                       paragon::util::json::Json::Str(path.to_string()));
+            map.insert("config".into(), cfg.to_json());
+        }
+        println!("{j}");
+        return Ok(());
+    }
     // Config-file path: the whole experiment from one JSON document.
     if let Some(path) = args.get("config") {
         let cfg = paragon::config::ExperimentConfig::from_file(std::path::Path::new(path))?;
@@ -141,6 +176,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "mixed-slo" => WorkloadKind::MixedSlo,
         "constraints" => WorkloadKind::VarConstraints,
         "tiered" => WorkloadKind::AccuracyTiered,
+        "pipeline-tiered" => WorkloadKind::PipelineTiered,
         other => anyhow::bail!("unknown workload {other}"),
     };
     let selection = match args.get_or("selection", "random").as_str() {
@@ -148,6 +184,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "naive" => Assignment::Policy(SelectionPolicy::Naive),
         "paragon" => Assignment::Policy(SelectionPolicy::Paragon),
         "modelless" => Assignment::ModelLess,
+        // The CLI path takes the default detect→classify DAG; a custom
+        // spec comes through `--scenario`/`--config`.
+        "pipeline" => Assignment::Pipeline,
         other => match other.strip_prefix("fixed:") {
             // Same spelling the config layer round-trips (fixed:<idx>).
             Some(idx) => Assignment::Fixed(idx.parse().map_err(|_| {
@@ -287,7 +326,22 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     let family = VariantFamily::from_members(&reg, "trio", vec![0, 3, 6]);
     let mut env = VariantServeEnv::new(&reg, trace, family, cfg.seed, palette);
-    let mut agent = NativePpoAgent::new(env.obs_dim(), env.act_dim(), cfg.seed);
+    // `--train-warm-start W` resumes from weights saved by a previous run
+    // (`NativePpoAgent::save` round-trips bit-exactly) instead of a fresh
+    // seeded init; the optimizer state starts fresh either way.
+    let mut agent = match args.get("train-warm-start") {
+        Some(path) => {
+            let a = NativePpoAgent::load(std::path::Path::new(path))?;
+            anyhow::ensure!(
+                a.obs_dim == env.obs_dim() && a.act_dim == env.act_dim(),
+                "warm-start weights are ({}, {}) but the env needs ({}, {})",
+                a.obs_dim, a.act_dim, env.obs_dim(), env.act_dim()
+            );
+            println!("[warm start from {path}]");
+            a
+        }
+        None => NativePpoAgent::new(env.obs_dim(), env.act_dim(), cfg.seed),
+    };
     let tcfg = NativeTrainConfig {
         horizon: args.get_usize("train-horizon", 512)?,
         epochs: args.get_usize("train-epochs", 4)?,
@@ -345,10 +399,13 @@ paragon — self-managed ML inference serving (paper reproduction)
 USAGE: paragon <subcommand> [flags]
 
 SUBCOMMANDS
-  figures     --fig all|2..10|het|rl_het|live|variants|pack|spot|joint  --out results
-              [--quick|--duration S --rate R]
-  simulate    --scheme S --trace T [--config exp.json]\n              [--workload mixed-slo|constraints|tiered]
-              [--selection random|naive|paragon|modelless|fixed:N] [--trace-file F.csv]
+  figures     --fig all|2..10|het|rl_het|live|variants|pack|spot|joint|pipeline
+              --out results [--quick|--duration S --rate R]
+  simulate    --scheme S --trace T [--config exp.json]
+              [--scenario scenarios/X.json [--rate R] [--duration S]]
+              [--workload mixed-slo|constraints|tiered|pipeline-tiered]
+              [--selection random|naive|paragon|modelless|pipeline|fixed:N]
+              [--trace-file F.csv]
               [--vm-types m4.large,c5.xlarge] [--instance-cap N]
               [--threads N|auto] [--fidelity discrete|hybrid]
               [--spot [--spot-rate EV_PER_H] [--preemption-trace F.csv]]
@@ -358,7 +415,8 @@ SUBCOMMANDS
   train       native in-repo PPO, joint (variant, vm_type) space — no
               artifacts; also as bare `--train`
               [--train-iters N] [--train-horizon H] [--train-epochs E]
-              [--train-out DIR] [--trace T] [--vm-types ...] [--quick]
+              [--train-out DIR] [--train-warm-start W.txt] [--trace T]
+              [--vm-types ...] [--quick]
   traces      --out DIR
 
 COMMON FLAGS

@@ -1,0 +1,295 @@
+//! The pipeline plane: multi-stage inference DAGs with per-stage variant
+//! control against one end-to-end budget.
+//!
+//! Real serving traffic is rarely a single model invocation — the
+//! workloads the related work names are chains (detect→classify,
+//! embed→rank) where the client states one end-to-end `(min_accuracy,
+//! slo_ms)` pair and the system must pick a concrete variant *per stage*.
+//! "Reconciling High Accuracy, Cost-Efficiency, and Low Latency" frames
+//! the interesting optimization exactly there: accuracy composes
+//! multiplicatively across stages, latency additively, so the budget has
+//! to be *decomposed* before the per-stage pick can reuse the existing
+//! single-stage machinery.
+//!
+//! Three pieces, mirroring the variant plane's layering:
+//! - [`PipelineSpec`] — a small DAG of [`StageSpec`]s, each stage bound to
+//!   a [`VariantFamily`]. The committed specs are linear chains (the
+//!   detect→classify path through a DAG); the spec is the unit scenarios
+//!   and figures declare.
+//! - [`BudgetDecomposer`] — splits the end-to-end budget into per-stage
+//!   accuracy floors (geometric slack split in fraction space, so the
+//!   per-stage floors multiply back to exactly the end-to-end floor) and
+//!   per-stage deadlines (proportional to observed per-stage latency
+//!   EWMAs, seeded from the family's reference latencies and fed by the
+//!   latencies of the variants actually routed — a deterministic signal
+//!   every backend sees identically, which is what keeps per-stage
+//!   decisions conformant across sim, fluid and live).
+//! - [`PipelinePlane`](plane::PipelinePlane) — one
+//!   [`VariantPlane`](crate::variants::VariantPlane) per stage behind a
+//!   single `route(min_accuracy, slo_ms)` entry point returning a
+//!   [`PipelineChoice`] with every stage resolved through the same
+//!   hysteresis ladder the single-stage plane uses.
+
+pub mod plane;
+
+pub use plane::{PipelineChoice, PipelinePlane};
+
+use crate::models::Registry;
+use crate::variants::VariantFamily;
+
+/// One pipeline stage: a named binding to the variant family the stage's
+/// model-less pick resolves over.
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub family: VariantFamily,
+}
+
+/// A small DAG of stages. Committed specs are linear chains — the single
+/// execution path through the DAG a request actually takes — which is the
+/// shape the budget decomposer splits (accuracy multiplies, latency adds
+/// along the path).
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+}
+
+impl PipelineSpec {
+    pub fn new(name: &str, stages: Vec<StageSpec>) -> PipelineSpec {
+        assert!(!stages.is_empty(), "empty pipeline spec");
+        PipelineSpec { name: name.to_string(), stages }
+    }
+
+    /// The default two-stage detect→classify chain over the paper's pool:
+    /// a light detector family (the three mobile-class models) feeding a
+    /// heavier classifier family (resnet18 and up). This is the spec the
+    /// `pipeline` scenario, `fig_pipeline` and the conformance suite use
+    /// unless a config declares its own stages.
+    pub fn detect_classify(reg: &Registry) -> PipelineSpec {
+        let cut = 3.min(reg.len().saturating_sub(1)).max(1);
+        let detect: Vec<usize> = (0..cut).collect();
+        let classify: Vec<usize> = (cut..reg.len()).collect();
+        PipelineSpec::new(
+            "detect_classify",
+            vec![
+                StageSpec {
+                    name: "detect".to_string(),
+                    family: VariantFamily::from_members(reg, "detect", detect),
+                },
+                StageSpec {
+                    name: "classify".to_string(),
+                    family: VariantFamily::from_members(reg, "classify", classify),
+                },
+            ],
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+/// Per-stage budgets for one request: accuracy floors (percent, one per
+/// stage, multiplying back to the end-to-end floor while feasible) and
+/// deadlines (ms, one per stage, summing to the end-to-end SLO).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageBudgets {
+    pub floors: Vec<f64>,
+    pub deadlines: Vec<f64>,
+}
+
+/// Splits one end-to-end `(min_accuracy, slo_ms)` budget into per-stage
+/// floors and deadlines.
+///
+/// **Accuracy** composes multiplicatively: with per-stage family maxima
+/// `A_i` (fractions) and an end-to-end floor `F`, the slack `s = Π A_i / F`
+/// is split geometrically — every stage's floor is its maximum relieved by
+/// `s^(1/n)`, so the floors multiply back to exactly `F` and no stage is
+/// asked for more than its family can deliver. An infeasible floor
+/// (`F > Π A_i`) clamps every stage to its maximum, mirroring the
+/// single-stage selector's accuracy-maximizing fallback.
+///
+/// **Latency** composes additively: the SLO is split proportionally to the
+/// per-stage latency EWMAs (seeded from each family's reference median
+/// latency, updated from the reference latency of whatever variant each
+/// route actually picked), with a 5% minimum share so a briefly-idle stage
+/// never collapses to a zero deadline. Rebalancing is the point: when one
+/// stage's routed variants run long, its share of the budget grows and the
+/// other stages' deadlines tighten accordingly.
+#[derive(Debug, Clone)]
+pub struct BudgetDecomposer {
+    /// Per-stage family maximum accuracy, as a fraction in (0, 1].
+    max_acc: Vec<f64>,
+    /// Per-stage latency EWMA, ms (the deadline-split weights).
+    lat_ewma: Vec<f64>,
+}
+
+impl BudgetDecomposer {
+    pub fn new(reg: &Registry, spec: &PipelineSpec) -> BudgetDecomposer {
+        let max_acc = spec
+            .stages
+            .iter()
+            .map(|s| {
+                s.family
+                    .members
+                    .iter()
+                    .map(|&m| reg.models[m].accuracy / 100.0)
+                    .fold(0.0, f64::max)
+            })
+            .collect();
+        // Seed the EWMAs with each family's median reference latency so the
+        // very first request already gets a sane proportional split.
+        let lat_ewma = spec
+            .stages
+            .iter()
+            .map(|s| reg.models[s.family.members[s.family.len() / 2]].latency_ms)
+            .collect();
+        BudgetDecomposer { max_acc, lat_ewma }
+    }
+
+    /// Number of stages this decomposer splits over.
+    pub fn len(&self) -> usize {
+        self.max_acc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.max_acc.is_empty()
+    }
+
+    /// The best end-to-end accuracy the pipeline can deliver, percent —
+    /// the feasibility ceiling for end-to-end floors.
+    pub fn max_e2e_accuracy(&self) -> f64 {
+        self.max_acc.iter().product::<f64>() * 100.0
+    }
+
+    /// Current per-stage latency EWMAs, ms.
+    pub fn latency_ewma(&self) -> &[f64] {
+        &self.lat_ewma
+    }
+
+    /// Feed one observed (or routed-nominal) stage latency into the
+    /// deadline-split EWMA (0.9/0.1 — slow enough that one outlier does
+    /// not thrash every in-flight request's split).
+    pub fn observe_latency(&mut self, stage: usize, latency_ms: f64) {
+        if latency_ms > 0.0 {
+            let e = &mut self.lat_ewma[stage];
+            *e = 0.9 * *e + 0.1 * latency_ms;
+        }
+    }
+
+    /// Split one end-to-end budget. See the type-level docs for the math.
+    pub fn decompose(&self, min_accuracy: f64, slo_ms: f64) -> StageBudgets {
+        let n = self.max_acc.len();
+        let floors = if min_accuracy <= 0.0 {
+            vec![0.0; n]
+        } else {
+            let f = min_accuracy / 100.0;
+            let prod: f64 = self.max_acc.iter().product();
+            if f >= prod {
+                // Infeasible end to end: ask every stage for its best.
+                self.max_acc.iter().map(|a| a * 100.0).collect()
+            } else {
+                let relief = (prod / f).powf(1.0 / n as f64);
+                self.max_acc.iter().map(|a| a / relief * 100.0).collect()
+            }
+        };
+        let total: f64 = self.lat_ewma.iter().sum();
+        let min_share = 0.05;
+        let mut shares: Vec<f64> = self
+            .lat_ewma
+            .iter()
+            .map(|&l| (l / total).max(min_share))
+            .collect();
+        let norm: f64 = shares.iter().sum();
+        for s in &mut shares {
+            *s /= norm;
+        }
+        let deadlines = shares.iter().map(|s| s * slo_ms).collect();
+        StageBudgets { floors, deadlines }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> (Registry, PipelineSpec) {
+        let reg = Registry::builtin();
+        let spec = PipelineSpec::detect_classify(&reg);
+        (reg, spec)
+    }
+
+    #[test]
+    fn detect_classify_partitions_the_pool() {
+        let (reg, spec) = spec();
+        assert_eq!(spec.len(), 2);
+        let total: usize = spec.stages.iter().map(|s| s.family.len()).sum();
+        assert_eq!(total, reg.len(), "stages partition the pool");
+        let d_max = spec.stages[0].family.members.iter()
+            .map(|&m| reg.models[m].accuracy).fold(0.0, f64::max);
+        let c_min = spec.stages[1].family.members.iter()
+            .map(|&m| reg.models[m].accuracy).fold(f64::MAX, f64::min);
+        assert!(d_max < c_min, "detect stage is the light prefix");
+    }
+
+    #[test]
+    fn floors_multiply_back_to_the_end_to_end_floor() {
+        let (reg, spec) = spec();
+        let d = BudgetDecomposer::new(&reg, &spec);
+        for &f in &[10.0, 40.0, 55.0, 62.0] {
+            let b = d.decompose(f, 2000.0);
+            let prod: f64 = b.floors.iter().map(|x| x / 100.0).product();
+            assert!(
+                (prod * 100.0 - f).abs() < 1e-9,
+                "floors {:?} must multiply to {f}", b.floors
+            );
+            for (s, &fl) in b.floors.iter().enumerate() {
+                assert!(fl <= d.max_acc[s] * 100.0 + 1e-9,
+                        "stage {s} floor {fl} above its family max");
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_floor_clamps_to_stage_maxima() {
+        let (reg, spec) = spec();
+        let d = BudgetDecomposer::new(&reg, &spec);
+        let ceiling = d.max_e2e_accuracy();
+        assert!(ceiling < 80.0, "two-stage product is well below one stage");
+        let b = d.decompose(ceiling + 5.0, 2000.0);
+        for (s, &fl) in b.floors.iter().enumerate() {
+            assert!((fl - d.max_acc[s] * 100.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deadlines_sum_to_slo_and_rebalance_with_ewma() {
+        let (reg, spec) = spec();
+        let mut d = BudgetDecomposer::new(&reg, &spec);
+        let b = d.decompose(0.0, 1000.0);
+        assert!((b.deadlines.iter().sum::<f64>() - 1000.0).abs() < 1e-9);
+        let before = b.deadlines[1];
+        // Stage 1 keeps routing a slow variant: its share must grow.
+        for _ in 0..50 {
+            d.observe_latency(1, 2200.0);
+        }
+        let after = d.decompose(0.0, 1000.0);
+        assert!((after.deadlines.iter().sum::<f64>() - 1000.0).abs() < 1e-9);
+        assert!(after.deadlines[1] > before, "slow stage must gain budget");
+        assert!(after.deadlines[0] >= 0.05 * 1000.0 / 2.0,
+                "minimum share keeps the fast stage alive");
+    }
+
+    #[test]
+    fn zero_floor_passes_through() {
+        let (reg, spec) = spec();
+        let d = BudgetDecomposer::new(&reg, &spec);
+        let b = d.decompose(0.0, 500.0);
+        assert!(b.floors.iter().all(|&f| f == 0.0));
+    }
+}

@@ -1,0 +1,284 @@
+//! [`PipelinePlane`]: the pipeline spec + budget decomposer packaged for
+//! the control plane, one [`VariantPlane`] per stage.
+//!
+//! Every [`FleetActuator`](crate::control::FleetActuator) backend owns an
+//! optional pipeline plane and exposes it through
+//! `route_pipeline`/`refresh_pipeline`, exactly as the single-stage
+//! variant plane is exposed through `route_modelless`/`refresh_variants`.
+//! All per-stage decisions are resolved **at admission**: the plane
+//! decomposes the end-to-end budget, then routes every stage through its
+//! own [`VariantSelector`](crate::variants::VariantSelector) ladder in
+//! stage order. Because the decomposer's deadline EWMAs are fed from the
+//! *routed* variants' nominal service latencies (not from backend-specific
+//! measured latencies), two backends fed the same script hold identical
+//! decomposer and ladder state and therefore make identical per-stage
+//! picks — the invariant `rust/tests/pipeline_conformance.rs` pins across
+//! the sim engine, the fluid fleet and the dry-run server fleet. Remaining
+//! deadlines at stage handoff affect only runtime queueing and offload
+//! eligibility, never the variant choice.
+
+use super::{BudgetDecomposer, PipelineSpec, StageBudgets};
+use crate::cloud::pricing::VmType;
+use crate::control::FleetView;
+use crate::models::Registry;
+use crate::variants::plane::AccuracyUsage;
+use crate::variants::{VariantChoice, VariantPlane, VariantSelector};
+
+/// One admitted pipeline request, every stage resolved: the per-stage
+/// variant choices (stage order), the budgets they were resolved against,
+/// and the end-to-end accuracy the chain will deliver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineChoice {
+    /// Per-stage `(variant, model, vm_type)` picks, stage order.
+    pub stages: Vec<VariantChoice>,
+    /// The per-stage budgets this request was decomposed into.
+    pub budgets: StageBudgets,
+    /// Π stage accuracies, percent — what the chain delivers end to end.
+    pub e2e_accuracy: f64,
+    /// Whether the delivered end-to-end accuracy meets the request's
+    /// floor (always true for floor-less requests).
+    pub floor_ok: bool,
+}
+
+impl PipelineChoice {
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+}
+
+/// Cheapest deadline-feasible palette entry for the pinned member `v`,
+/// else its fastest entry — the pinned-variant mirror of the selector's
+/// own feasibility fallback, used by fixed-per-stage baseline arms.
+fn pinned_type(sel: &VariantSelector, v: usize, slo_ms: f64) -> usize {
+    let caps = sel.caps();
+    let mut best: Option<usize> = None;
+    for (k, c) in caps[v].iter().enumerate() {
+        if c.service_s * 1000.0 > slo_ms {
+            continue;
+        }
+        best = match best {
+            Some(b) if caps[v][b].cost_per_query() <= c.cost_per_query() => Some(b),
+            _ => Some(k),
+        };
+    }
+    best.unwrap_or_else(|| {
+        let mut bk = 0;
+        for (k, c) in caps[v].iter().enumerate() {
+            if c.service_s < caps[v][bk].service_s {
+                bk = k;
+            }
+        }
+        bk
+    })
+}
+
+/// The pipeline spec, its budget decomposer and one [`VariantPlane`] per
+/// stage — the object a fleet backend installs to serve pipeline traffic.
+#[derive(Debug, Clone)]
+pub struct PipelinePlane {
+    spec: PipelineSpec,
+    stages: Vec<VariantPlane>,
+    decomposer: BudgetDecomposer,
+    /// Pinned family position per stage — the fixed-variant-per-stage
+    /// baseline arms `fig_pipeline` compares against. `None` = adaptive.
+    fixed: Option<Vec<usize>>,
+    /// End-to-end delivered-accuracy ledger (stage planes keep their own
+    /// per-stage ledgers; this one books one entry per *request* at the
+    /// multiplied-out chain accuracy).
+    usage: AccuracyUsage,
+}
+
+impl PipelinePlane {
+    pub fn new(reg: &Registry, spec: PipelineSpec,
+               palette: &[&'static VmType]) -> PipelinePlane {
+        let stages = spec
+            .stages
+            .iter()
+            .map(|s| VariantPlane::new(reg, s.family.clone(), palette))
+            .collect();
+        let decomposer = BudgetDecomposer::new(reg, &spec);
+        PipelinePlane { spec, stages, decomposer, fixed: None, usage: AccuracyUsage::default() }
+    }
+
+    /// Pin every stage to a fixed family position (baseline arms). Panics
+    /// if the pin list does not match the stage count or a pin is out of
+    /// its family's range.
+    pub fn with_fixed(mut self, pins: Vec<usize>) -> PipelinePlane {
+        assert_eq!(pins.len(), self.spec.len(), "one pin per stage");
+        for (s, &v) in pins.iter().enumerate() {
+            assert!(v < self.spec.stages[s].family.len(), "pin out of family range");
+        }
+        self.fixed = Some(pins);
+        self
+    }
+
+    /// Override every stage ladder's maximum upgrade rung.
+    pub fn with_ladder_cap(mut self, cap: usize) -> PipelinePlane {
+        self.stages = self
+            .stages
+            .into_iter()
+            .map(|p| p.with_ladder_cap(cap))
+            .collect();
+        self
+    }
+
+    pub fn spec(&self) -> &PipelineSpec {
+        &self.spec
+    }
+
+    /// Number of stages.
+    pub fn len(&self) -> usize {
+        self.spec.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spec.is_empty()
+    }
+
+    /// The per-stage variant planes, stage order.
+    pub fn stage_planes(&self) -> &[VariantPlane] {
+        &self.stages
+    }
+
+    pub fn decomposer(&self) -> &BudgetDecomposer {
+        &self.decomposer
+    }
+
+    /// End-to-end delivered-accuracy ledger (one entry per request).
+    pub fn usage(&self) -> AccuracyUsage {
+        self.usage
+    }
+
+    /// Split an end-to-end budget without routing (tests, planners).
+    pub fn decompose(&self, min_accuracy: f64, slo_ms: f64) -> StageBudgets {
+        self.decomposer.decompose(min_accuracy, slo_ms)
+    }
+
+    /// Admit one pipeline request: decompose the budget, resolve every
+    /// stage through its ladder (or its pin), book the ledgers and feed
+    /// the deadline EWMAs with the routed variants' nominal latencies.
+    pub fn route(&mut self, min_accuracy: f64, slo_ms: f64) -> PipelineChoice {
+        let budgets = self.decomposer.decompose(min_accuracy, slo_ms);
+        let mut choices = Vec::with_capacity(self.stages.len());
+        let mut e2e = 1.0;
+        for s in 0..self.stages.len() {
+            let choice = match &self.fixed {
+                Some(pins) => {
+                    let v = pins[s];
+                    let sel = self.stages[s].selector();
+                    let k = pinned_type(sel, v, budgets.deadlines[s]);
+                    VariantChoice {
+                        variant: v,
+                        model: sel.family().members[v],
+                        vm_type_index: k,
+                    }
+                }
+                None => self.stages[s]
+                    .route_weighted(budgets.floors[s], budgets.deadlines[s], 1.0),
+            };
+            let acc = self.stages[s].selector().accuracy_of(choice.variant);
+            e2e *= acc / 100.0;
+            // Nominal latency of the routed (variant, type) pair — the
+            // deterministic EWMA feed every backend sees identically.
+            let cap = &self.stages[s].selector().caps()[choice.variant][choice.vm_type_index];
+            self.decomposer.observe_latency(s, cap.service_s * 1000.0);
+            choices.push(choice);
+        }
+        let e2e_pct = e2e * 100.0;
+        let floor_ok = min_accuracy <= 0.0 || e2e_pct >= min_accuracy - 1e-9;
+        self.usage.routed += 1.0;
+        self.usage.acc_sum += e2e_pct;
+        if min_accuracy > 0.0 {
+            self.usage.floor_routed += 1.0;
+            if floor_ok {
+                self.usage.floor_attained += 1.0;
+            }
+        }
+        PipelineChoice { stages: choices, budgets, e2e_accuracy: e2e_pct, floor_ok }
+    }
+
+    /// Advance every stage ladder from the backend's fleet snapshot (the
+    /// pipeline mirror of [`VariantPlane::refresh`]). Call once per
+    /// control tick.
+    pub fn refresh(&mut self, view: &FleetView, now: f64) {
+        for p in &mut self.stages {
+            p.refresh(view, now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::pricing::vm_type;
+
+    fn plane() -> (Registry, PipelinePlane) {
+        let reg = Registry::builtin();
+        let palette = [vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+        let spec = PipelineSpec::detect_classify(&reg);
+        let p = PipelinePlane::new(&reg, spec, &palette);
+        (reg, p)
+    }
+
+    #[test]
+    fn route_resolves_every_stage_and_meets_feasible_floors() {
+        let (_reg, mut p) = plane();
+        let c = p.route(55.0, 5000.0);
+        assert_eq!(c.len(), 2);
+        assert!(c.floor_ok, "55% e2e is feasible: {c:?}");
+        assert!(c.e2e_accuracy >= 55.0 - 1e-9);
+        // Per-stage floors multiply back to the e2e floor.
+        let prod: f64 = c.budgets.floors.iter().map(|f| f / 100.0).product();
+        assert!((prod * 100.0 - 55.0).abs() < 1e-9);
+        // Deadlines sum to the SLO.
+        assert!((c.budgets.deadlines.iter().sum::<f64>() - 5000.0).abs() < 1e-9);
+        let u = p.usage();
+        assert_eq!(u.routed, 1.0);
+        assert_eq!(u.floor_attained, 1.0);
+    }
+
+    #[test]
+    fn infeasible_floor_reports_not_ok_but_maximizes_accuracy() {
+        let (_reg, mut p) = plane();
+        let ceiling = p.decomposer().max_e2e_accuracy();
+        let c = p.route(ceiling + 5.0, 60_000.0);
+        assert!(!c.floor_ok);
+        // Every stage fell back to (at worst near) its family maximum.
+        assert!((c.e2e_accuracy - ceiling).abs() < 1e-6,
+                "e2e {} vs ceiling {ceiling}", c.e2e_accuracy);
+    }
+
+    #[test]
+    fn fixed_pins_override_the_ladder() {
+        let (reg, p) = plane();
+        let mut pinned = {
+            let palette = [vm_type("m4.large").unwrap(), vm_type("c5.large").unwrap()];
+            PipelinePlane::new(&reg, PipelineSpec::detect_classify(&reg), &palette)
+                .with_fixed(vec![0, 0])
+        };
+        drop(p);
+        let c = pinned.route(0.0, 60_000.0);
+        assert_eq!(c.stages[0].variant, 0);
+        assert_eq!(c.stages[1].variant, 0);
+        // Pin 0 on both stages: mobilenet_025 then resnet18.
+        assert_eq!(reg.models[c.stages[0].model].name, "mobilenet_025");
+        assert_eq!(reg.models[c.stages[1].model].name, "resnet18");
+    }
+
+    #[test]
+    fn identical_scripts_give_identical_choices() {
+        let (_ra, mut a) = plane();
+        let (_rb, mut b) = plane();
+        for i in 0..200 {
+            let floor = (i % 4) as f64 * 15.0;
+            let slo = 800.0 + (i % 7) as f64 * 400.0;
+            let ca = a.route(floor, slo);
+            let cb = b.route(floor, slo);
+            assert_eq!(ca, cb, "divergence at request {i}");
+        }
+    }
+}

@@ -28,8 +28,9 @@ use crate::cloud::pricing::VmType;
 use crate::cloud::spot::{PreemptionEvent, PreemptionProcess};
 use crate::cloud::{Cluster, VmState};
 use crate::control::{palette_caps, ClusterActuator, ControlLoop, FleetActuator,
-                     PackPolicy};
+                     PackPolicy, StageCounts};
 use crate::models::{select, Registry, SelectionPolicy};
+use crate::pipeline::{PipelinePlane, PipelineSpec};
 use crate::scheduler::{Action, Scheme, TypeCap};
 use crate::trace::{Request, Strictness};
 use crate::util::rng::Pcg;
@@ -58,6 +59,13 @@ pub enum Assignment {
     /// the load-adaptive selector — the same selector the fluid and live
     /// backends route through.
     ModelLess,
+    /// Multi-stage pipeline queries: requests carry an END-TO-END
+    /// `(min_accuracy, slo_ms)` budget which the actuator's pipeline
+    /// plane ([`crate::pipeline`]) decomposes into per-stage floors and
+    /// deadlines, resolving every stage's variant at admission. Stage
+    /// handoffs chain through the completion heap with the remaining
+    /// deadline; requires [`SimConfig::pipeline`].
+    Pipeline,
 }
 
 #[derive(Debug, Clone)]
@@ -104,6 +112,11 @@ pub struct SimConfig {
     /// single residencies. Disabled (the default) the engine is
     /// bit-identical to the per-model-fleet behavior.
     pub pack: PackPolicy,
+    /// Stage DAG for [`Assignment::Pipeline`] runs (required there,
+    /// ignored everywhere else). Pipeline streams stay request-accurate:
+    /// hybrid fidelity is inert for them, because fluid lanes are keyed by
+    /// model and cannot carry a stage handoff.
+    pub pipeline: Option<PipelineSpec>,
 }
 
 impl Default for SimConfig {
@@ -119,6 +132,7 @@ impl Default for SimConfig {
             preemption: None,
             ensemble: 0,
             pack: PackPolicy::default(),
+            pipeline: None,
         }
     }
 }
@@ -161,8 +175,29 @@ struct Completion {
     /// Member of an ensemble vote (shadows and primary alike).
     ensemble: bool,
     /// Index of this dispatch's latency sample, to tombstone on cancel;
-    /// `usize::MAX` for ensemble shadows (which record nothing).
+    /// `usize::MAX` for ensemble shadows and pipeline MID stages (which
+    /// record nothing — only a pipeline's final stage samples latency).
     lat_idx: usize,
+    /// Pipeline job this completion advances ([`NO_JOB`] = single-model).
+    /// Mid-stage lambda legs use the sentinel `vm_id == u64::MAX` (no
+    /// slot to release, unreachable by reclaim victim predicates).
+    job: usize,
+}
+
+/// Sentinel job id: the entry is a plain single-model request.
+const NO_JOB: usize = usize::MAX;
+
+/// One in-system pipeline request: its admission-time per-stage models,
+/// current stage, and the end-to-end budget remaining deadlines derive
+/// from. Slots recycle through a free list.
+#[derive(Debug, Clone)]
+struct PipeJob {
+    models: Vec<usize>,
+    stage: usize,
+    arrival: f64,
+    slo_ms: f64,
+    floor_ok: bool,
+    strict: bool,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -176,6 +211,8 @@ struct Queued {
     /// Requeued off a reclaimed VM: a second reclaim must not requeue
     /// again.
     requeued: bool,
+    /// Pipeline job this entry belongs to ([`NO_JOB`] = single-model).
+    job: usize,
 }
 
 /// Assign a model to every request up front (deterministic given seed).
@@ -229,6 +266,21 @@ pub fn assign_models(reqs: &[Request], reg: &Registry, cfg: &SimConfig) -> Vec<u
                 VariantSelector::new(reg, VariantFamily::full_pool(reg), palette);
             reqs.iter()
                 .map(|r| selector.select(r.min_accuracy, r.slo_ms).model)
+                .collect()
+        }
+        Assignment::Pipeline => {
+            // Static approximation (mirrors ModelLess): a fresh
+            // pressure-free pipeline plane routes each request and the
+            // stage-0 pick is kept; at run time every arrival re-resolves
+            // all stages through the actuator's live plane, and warm-start
+            // sizing replays the first window across every stage.
+            let spec = cfg
+                .pipeline
+                .clone()
+                .unwrap_or_else(|| PipelineSpec::detect_classify(reg));
+            let mut plane = PipelinePlane::new(reg, spec, palette);
+            reqs.iter()
+                .map(|r| plane.route(r.min_accuracy, r.slo_ms).stages[0].model)
                 .collect()
         }
         Assignment::RandomFeasible => {
@@ -372,6 +424,25 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                 .with_ensemble(cfg.ensemble),
         );
     }
+    // Pipeline runs resolve EVERY stage's variant at admission through
+    // the actuator's pipeline plane — the same plane the fluid and live
+    // backends carry (`rust/tests/pipeline_conformance.rs`). Jobs live in
+    // a slab recycled through a free list; exactly one live entity (an
+    // in-flight completion or one queue entry) references a job at a time.
+    let pipe_on = cfg.assignment == Assignment::Pipeline;
+    let pipe_spec = if pipe_on {
+        Some(cfg.pipeline.clone()
+            .unwrap_or_else(|| PipelineSpec::detect_classify(reg)))
+    } else {
+        None
+    };
+    if let Some(spec) = &pipe_spec {
+        actuator.install_pipeline(PipelinePlane::new(reg, spec.clone(), &palette));
+    }
+    let mut pipe_jobs: Vec<PipeJob> = Vec::new();
+    let mut pipe_free: Vec<usize> = Vec::new();
+    let mut stage_counts: Vec<StageCounts> =
+        vec![StageCounts::default(); pipe_spec.as_ref().map_or(0, |s| s.len())];
     let mut cl = ControlLoop::new(reg, palette.clone());
     let mut queues: Vec<VecDeque<Queued>> = (0..n_models).map(|_| VecDeque::new()).collect();
     let mut completions: SimCore<Completion> = SimCore::new();
@@ -386,7 +457,9 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     // (default) disabled config, `hybrid` is false and no fluid branch
     // below is ever taken — the stream is bit-identical to the
     // pre-fidelity engine.
-    let hybrid = cfg.fidelity.enabled;
+    // (Pipeline streams stay request-accurate: fluid lanes are keyed by
+    // model and cannot carry a stage handoff, so hybrid is inert there.)
+    let hybrid = cfg.fidelity.enabled && !pipe_on;
     let mut gov = FidelityGovernor::new(cfg.fidelity.clone(), n_models);
     let mut lanes: Vec<FluidLane> = vec![FluidLane::default(); n_models];
 
@@ -404,10 +477,27 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
     if cfg.warm_start && !reqs.is_empty() {
         let window = reqs.iter().take_while(|r| r.arrival_s < 5.0).count();
         let first_rate = window as f64 / 5.0;
+        // Per-model share of the first-window work. Pipeline runs replay
+        // the window through a throwaway plane and count EVERY stage's
+        // model — each stage's sub-fleet faces the full arrival rate.
+        let mut hits = vec![0usize; n_models];
+        if pipe_on {
+            let mut plane = PipelinePlane::new(
+                reg, pipe_spec.clone().expect("pipe_on implies a spec"),
+                &palette);
+            for r in &reqs[..window] {
+                for ch in &plane.route(r.min_accuracy, r.slo_ms).stages {
+                    hits[ch.model] += 1;
+                }
+            }
+        } else {
+            for &m in &models[..window] {
+                hits[m] += 1;
+            }
+        }
         for m in 0..n_models {
             let share = if window > 0 {
-                models[..window].iter().filter(|&&x| x == m).count() as f64
-                    / window as f64
+                hits[m] as f64 / window as f64
             } else {
                 0.0
             };
@@ -437,6 +527,136 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             } else {
                 rep.violations_relaxed += 1;
             }
+        }
+    };
+
+    // Book one VM dispatch and schedule its completion. For [`NO_JOB`]
+    // entries this is operation-for-operation the legacy booking (record
+    // → served → attained → schedule), keeping non-pipeline runs
+    // behaviorally identical. A pipeline job books the request-level
+    // ledger only at its FINAL stage — against the END-TO-END latency
+    // and budget — so each request is counted exactly once; mid stages
+    // schedule an unrecorded completion (`lat_idx == usize::MAX`) that
+    // exists purely to chain the next stage.
+    let book_vm = |rep: &mut SimReport, lat_samples: &mut Vec<f64>,
+                   completions: &mut SimCore<Completion>,
+                   pipe_jobs: &[PipeJob], m: usize, k: usize, vm_id: u64,
+                   now: f64, arrival: f64, slo_ms: f64, strict: bool,
+                   floor_ok: bool, requeued: bool, job: usize| {
+        let done = now + caps[m][k].service_s;
+        let terminal = job == NO_JOB
+            || pipe_jobs[job].stage + 1 == pipe_jobs[job].models.len();
+        let lat_idx = if terminal {
+            if job == NO_JOB {
+                record(rep, lat_samples, (done - arrival) * 1000.0,
+                       slo_ms, strict);
+                rep.served_vm += 1;
+                rep.served_by_model[m] += 1;
+                if floor_ok {
+                    rep.attained += 1;
+                }
+            } else {
+                let j = &pipe_jobs[job];
+                record(rep, lat_samples, (done - j.arrival) * 1000.0,
+                       j.slo_ms, j.strict);
+                rep.served_vm += 1;
+                rep.served_by_model[m] += 1;
+                if j.floor_ok {
+                    rep.attained += 1;
+                }
+            }
+            lat_samples.len() - 1
+        } else {
+            usize::MAX
+        };
+        completions.schedule_at(done, Completion {
+            vm_id,
+            model: m,
+            done,
+            slo_ms,
+            arrival,
+            strict,
+            floor_ok,
+            requeued,
+            ensemble: false,
+            lat_idx,
+            job,
+        });
+    };
+
+    // Advance a pipeline job into its current stage at `now`: dispatch on
+    // a VM, else offload through the serverless valve (eligibility judged
+    // on the REMAINING end-to-end deadline), else queue on the stage
+    // model's FIFO. Mirrors `ServerFleet::enter_stage` on the live
+    // backend.
+    let pipe_enter = |rep: &mut SimReport, lat_samples: &mut Vec<f64>,
+                      completions: &mut SimCore<Completion>,
+                      actuator: &mut ClusterActuator,
+                      queues: &mut [VecDeque<Queued>],
+                      pipe_jobs: &mut Vec<PipeJob>,
+                      pipe_free: &mut Vec<usize>,
+                      stage_counts: &mut [StageCounts],
+                      job: usize, now: f64| {
+        let (m, stage, rem, strict_now, final_stage, floor_ok) = {
+            let j = &pipe_jobs[job];
+            let rem = (j.slo_ms - (now - j.arrival) * 1000.0).max(0.0);
+            (j.models[j.stage], j.stage, rem,
+             Strictness::from_slo_ms(rem) == Strictness::Strict,
+             j.stage + 1 == j.models.len(), j.floor_ok)
+        };
+        stage_counts[stage].ingested += 1;
+        if let Some((vm_id, k)) =
+            route_best(&mut actuator.cluster, queues, m, rem)
+        {
+            stage_counts[stage].served += 1;
+            book_vm(rep, lat_samples, completions, pipe_jobs, m, k, vm_id,
+                    now, now, rem, strict_now, floor_ok, false, job);
+        } else if let Some(out) = actuator.try_offload(m, rem, strict_now, now)
+        {
+            stage_counts[stage].offloaded += 1;
+            rep.cost_lambda += out.cost_usd;
+            if out.cold {
+                rep.lambda_cold_starts += 1;
+            }
+            if final_stage {
+                let j = &pipe_jobs[job];
+                rep.served_lambda += 1;
+                rep.served_by_model[m] += 1;
+                if j.floor_ok {
+                    rep.attained += 1;
+                }
+                record(rep, lat_samples,
+                       (now - j.arrival) * 1000.0 + out.latency_ms,
+                       j.slo_ms, j.strict);
+                pipe_free.push(job);
+            } else {
+                // A lambda leg holds no slot: the sentinel `vm_id` keeps
+                // the completion alive purely to chain the next stage
+                // (reclaim victim predicates never match it).
+                let done = now + out.latency_ms / 1000.0;
+                completions.schedule_at(done, Completion {
+                    vm_id: u64::MAX,
+                    model: m,
+                    done,
+                    slo_ms: rem,
+                    arrival: now,
+                    strict: strict_now,
+                    floor_ok,
+                    requeued: false,
+                    ensemble: false,
+                    lat_idx: usize::MAX,
+                    job,
+                });
+            }
+        } else {
+            queues[m].push_back(Queued {
+                slo_ms: rem,
+                arrival: now,
+                strict: strict_now,
+                floor_ok,
+                requeued: false,
+                job,
+            });
         }
     };
 
@@ -485,34 +705,50 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             let (_, c) = completions.next().unwrap();
             // `release_for` is identical to `release` on a dedicated VM
             // and additionally returns the per-resident slot on a shared
-            // one.
-            actuator.cluster.release_for(c.vm_id, c.model, now);
-            if !(hybrid && gov.is_fluid(c.model)) {
+            // one. Mid-stage lambda legs (`vm_id == u64::MAX`) hold no
+            // slot at all.
+            if c.vm_id != u64::MAX {
+                actuator.cluster.release_for(c.vm_id, c.model, now);
+            }
+            if c.job != NO_JOB {
+                // Stage handoff: the final stage's booking happened at
+                // dispatch, so its completion just retires the job; a mid
+                // stage enqueues the next one with whatever end-to-end
+                // deadline remains.
+                if pipe_jobs[c.job].stage + 1 == pipe_jobs[c.job].models.len()
+                {
+                    pipe_free.push(c.job);
+                } else {
+                    pipe_jobs[c.job].stage += 1;
+                    let next_m = pipe_jobs[c.job].models[pipe_jobs[c.job].stage];
+                    actuator.note_arrival(next_m);
+                    pipe_enter(&mut rep, &mut lat_samples, &mut completions,
+                               &mut actuator, &mut queues, &mut pipe_jobs,
+                               &mut pipe_free, &mut stage_counts, c.job, now);
+                }
+            }
+            if c.vm_id != u64::MAX && !(hybrid && gov.is_fluid(c.model)) {
                 if let Some(q) = queues[c.model].pop_front() {
+                    // Queued pipeline entries re-derive the remaining
+                    // deadline at dispatch time (the queue wait consumed
+                    // budget); plain entries keep their SLO.
+                    let slo_eff = if q.job != NO_JOB {
+                        let j = &pipe_jobs[q.job];
+                        (j.slo_ms - (now - j.arrival) * 1000.0).max(0.0)
+                    } else {
+                        q.slo_ms
+                    };
                     if let Some((vm_id, k)) =
-                        route_best(&mut actuator.cluster, &queues, c.model, q.slo_ms)
+                        route_best(&mut actuator.cluster, &queues, c.model,
+                                   slo_eff)
                     {
-                        let done = now + caps[c.model][k].service_s;
-                        let latency_ms = (done - q.arrival) * 1000.0;
-                        record(&mut rep, &mut lat_samples,
-                               latency_ms, q.slo_ms, q.strict);
-                        rep.served_vm += 1;
-                        rep.served_by_model[c.model] += 1;
-                        if q.floor_ok {
-                            rep.attained += 1;
+                        if q.job != NO_JOB {
+                            stage_counts[pipe_jobs[q.job].stage].served += 1;
                         }
-                        completions.schedule_at(done, Completion {
-                            vm_id,
-                            model: c.model,
-                            done,
-                            slo_ms: q.slo_ms,
-                            arrival: q.arrival,
-                            strict: q.strict,
-                            floor_ok: q.floor_ok,
-                            requeued: q.requeued,
-                            ensemble: false,
-                            lat_idx: lat_samples.len() - 1,
-                        });
+                        book_vm(&mut rep, &mut lat_samples, &mut completions,
+                                &pipe_jobs, c.model, k, vm_id, now, q.arrival,
+                                slo_eff, q.strict, q.floor_ok, q.requeued,
+                                q.job);
                     } else {
                         queues[c.model].push_front(q);
                     }
@@ -521,6 +757,44 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
         } else if t_arr <= t_tick {
             // --- arrival
             let r = &reqs[req_i];
+            if pipe_on {
+                // Admission: decompose the end-to-end budget and resolve
+                // every stage's variant through the shared pipeline plane
+                // (the decomposer's EWMAs feed on routed NOMINAL
+                // latencies only, so identical scripts pick identically
+                // on every backend), then enter stage 0.
+                let choice = actuator
+                    .route_pipeline(r.min_accuracy, r.slo_ms)
+                    .expect("pipeline plane installed");
+                req_i += 1;
+                rep.requests += 1;
+                if r.min_accuracy > 0.0 {
+                    rep.floor_requests += 1;
+                }
+                let job = PipeJob {
+                    models: choice.stages.iter().map(|s| s.model).collect(),
+                    stage: 0,
+                    arrival: now,
+                    slo_ms: r.slo_ms,
+                    floor_ok: r.min_accuracy > 0.0 && choice.floor_ok,
+                    strict: r.strictness == Strictness::Strict,
+                };
+                actuator.note_arrival(job.models[0]);
+                let id = match pipe_free.pop() {
+                    Some(id) => {
+                        pipe_jobs[id] = job;
+                        id
+                    }
+                    None => {
+                        pipe_jobs.push(job);
+                        pipe_jobs.len() - 1
+                    }
+                };
+                pipe_enter(&mut rep, &mut lat_samples, &mut completions,
+                           &mut actuator, &mut queues, &mut pipe_jobs,
+                           &mut pipe_free, &mut stage_counts, id, now);
+                continue;
+            }
             // Ensemble mode: a model-less floor query may resolve to N
             // cheap members + weighted voting when that undercuts the
             // single pick AND every member has a free slot *right now* —
@@ -592,6 +866,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                                 } else {
                                     usize::MAX
                                 },
+                                job: NO_JOB,
                             });
                         }
                         continue;
@@ -658,6 +933,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                                 strict,
                                 floor_ok,
                                 requeued: false,
+                                job: NO_JOB,
                             });
                         }
                     }
@@ -685,6 +961,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                     requeued: false,
                     ensemble: false,
                     lat_idx: lat_samples.len() - 1,
+                    job: NO_JOB,
                 });
             } else {
                 // Overflow: the actuator's serverless valve (shared with
@@ -712,6 +989,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                             strict,
                             floor_ok,
                             requeued: false,
+                            job: NO_JOB,
                         });
                     }
                 }
@@ -738,6 +1016,59 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                         |c: &Completion| c.vm_id == id && c.done > deadline,
                     ) {
                         actuator.cluster.release_for(id, c.model, now);
+                        if c.job != NO_JOB {
+                            // Pipeline dispatch cancelled: reverse the
+                            // per-stage booking; a FINAL stage also
+                            // reverses its request-level (end-to-end)
+                            // booking. This branch must run before the
+                            // `lat_idx == MAX` shadow skip — mid stages
+                            // share that sentinel but still carry work.
+                            let stage = pipe_jobs[c.job].stage;
+                            stage_counts[stage].served -= 1;
+                            let j_slo = pipe_jobs[c.job].slo_ms;
+                            let j_strict = pipe_jobs[c.job].strict;
+                            if c.lat_idx != usize::MAX {
+                                rep.served_vm -= 1;
+                                rep.served_by_model[c.model] -= 1;
+                                if pipe_jobs[c.job].floor_ok {
+                                    rep.attained -= 1;
+                                }
+                                // The recorded sample and its violation
+                                // judgement are END-TO-END (`j_slo`), not
+                                // the stage-remaining `c.slo_ms`.
+                                if lat_samples[c.lat_idx] > j_slo {
+                                    rep.violations -= 1;
+                                    if j_strict {
+                                        rep.violations_strict -= 1;
+                                    } else {
+                                        rep.violations_relaxed -= 1;
+                                    }
+                                }
+                                lat_samples[c.lat_idx] = f64::NAN;
+                            }
+                            if c.requeued {
+                                rep.preempted += 1;
+                                rep.violations += 1;
+                                if j_strict {
+                                    rep.violations_strict += 1;
+                                } else {
+                                    rep.violations_relaxed += 1;
+                                }
+                                stage_counts[stage].preempted += 1;
+                                pipe_free.push(c.job);
+                            } else {
+                                rep.requeued += 1;
+                                queues[c.model].push_back(Queued {
+                                    slo_ms: c.slo_ms,
+                                    arrival: c.arrival,
+                                    strict: c.strict,
+                                    floor_ok: c.floor_ok,
+                                    requeued: true,
+                                    job: c.job,
+                                });
+                            }
+                            continue;
+                        }
                         if c.lat_idx == usize::MAX {
                             continue; // ensemble shadow: nothing booked
                         }
@@ -779,6 +1110,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                                 // member solo: never credit the floor.
                                 floor_ok: c.floor_ok && !c.ensemble,
                                 requeued: true,
+                                job: NO_JOB,
                             });
                         }
                     }
@@ -799,6 +1131,22 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                     }
                     q.pop_front();
                     rep.dropped += 1;
+                    if h.job != NO_JOB {
+                        // A pipeline request expiring at ANY stage is the
+                        // whole request dropped: one request-level drop
+                        // (judged at end-to-end strictness), one
+                        // stage-level drop, and the job retires.
+                        let j = &pipe_jobs[h.job];
+                        stage_counts[j.stage].dropped += 1;
+                        rep.violations += 1;
+                        if j.strict {
+                            rep.violations_strict += 1;
+                        } else {
+                            rep.violations_relaxed += 1;
+                        }
+                        pipe_free.push(h.job);
+                        continue;
+                    }
                     rep.violations += 1;
                     if h.strict {
                         rep.violations_strict += 1;
@@ -819,6 +1167,7 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
             // slots), so the variant ladder is advanced here rather than
             // through `advance` — post-boot capacity, pre-next-arrival.
             actuator.refresh_variants(now);
+            actuator.refresh_pipeline(now);
             rep.peak_vms = rep.peak_vms.max(actuator.cluster.total_alive());
             if hybrid {
                 // Refresh every lane from the post-scaling fleet, then let
@@ -872,30 +1221,24 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
                     continue;
                 }
                 while let Some(&head) = queues[m].front() {
-                    match route_best(&mut actuator.cluster, &queues, m, head.slo_ms) {
+                    let slo_eff = if head.job != NO_JOB {
+                        let j = &pipe_jobs[head.job];
+                        (j.slo_ms - (now - j.arrival) * 1000.0).max(0.0)
+                    } else {
+                        head.slo_ms
+                    };
+                    match route_best(&mut actuator.cluster, &queues, m, slo_eff)
+                    {
                         Some((vm_id, k)) => {
                             queues[m].pop_front();
-                            let done = now + caps[m][k].service_s;
-                            let latency_ms = (done - head.arrival) * 1000.0;
-                            record(&mut rep, &mut lat_samples,
-                                   latency_ms, head.slo_ms, head.strict);
-                            rep.served_vm += 1;
-                            rep.served_by_model[m] += 1;
-                            if head.floor_ok {
-                                rep.attained += 1;
+                            if head.job != NO_JOB {
+                                stage_counts[pipe_jobs[head.job].stage]
+                                    .served += 1;
                             }
-                            completions.schedule_at(done, Completion {
-                                vm_id,
-                                model: m,
-                                done,
-                                slo_ms: head.slo_ms,
-                                arrival: head.arrival,
-                                strict: head.strict,
-                                floor_ok: head.floor_ok,
-                                requeued: head.requeued,
-                                ensemble: false,
-                                lat_idx: lat_samples.len() - 1,
-                            });
+                            book_vm(&mut rep, &mut lat_samples,
+                                    &mut completions, &pipe_jobs, m, k, vm_id,
+                                    now, head.arrival, slo_eff, head.strict,
+                                    head.floor_ok, head.requeued, head.job);
                         }
                         None => break,
                     }
@@ -926,6 +1269,30 @@ pub(crate) fn simulate_stream(scheme: &mut dyn Scheme, reg: &Registry,
         .iter()
         .map(|(name, n)| (name.to_string(), *n))
         .collect();
+    if pipe_on {
+        // Per-stage ledger. Queues drain through the timeout sweep before
+        // the loop exits, so the queued bucket is normally zero — scan
+        // defensively anyway so the conservation identity below is
+        // unconditional.
+        for q in &queues {
+            for e in q {
+                if e.job != NO_JOB {
+                    stage_counts[pipe_jobs[e.job].stage].queued += 1;
+                }
+            }
+        }
+        for (s, sc) in stage_counts.iter().enumerate() {
+            assert_eq!(
+                sc.ingested,
+                sc.served + sc.dropped + sc.offloaded + sc.queued as u64
+                    + sc.preempted,
+                "stage {s} conservation violated ({}/{})",
+                rep.scheme,
+                rep.trace
+            );
+        }
+        rep.stages = stage_counts;
+    }
     // Unbooked (reclaim-cancelled) dispatches left NaN tombstones in the
     // sample log; drop them before the stats see them.
     lat_samples.retain(|x| !x.is_nan());

@@ -65,6 +65,15 @@ pub struct SimReport {
     /// Peak alive VMs at any tick.
     pub peak_vms: usize,
     pub duration_s: f64,
+    /// Per-stage conservation counters of a pipeline run
+    /// ([`Assignment::Pipeline`](super::Assignment)): empty for
+    /// single-model runs, one entry per stage otherwise. Each stage
+    /// independently satisfies
+    /// `ingested == served + dropped + offloaded + queued + preempted`
+    /// (in-flight work books served at dispatch; `queued` is the
+    /// end-of-run remainder). Staying empty on non-pipeline runs keeps
+    /// legacy reports bit-identical.
+    pub stages: Vec<crate::control::StageCounts>,
 }
 
 impl SimReport {
@@ -146,6 +155,17 @@ impl SimReport {
         for (i, &n) in o.served_by_model.iter().enumerate() {
             self.served_by_model[i] += n;
         }
+        if self.stages.len() < o.stages.len() {
+            self.stages.resize(o.stages.len(), Default::default());
+        }
+        for (i, s) in o.stages.iter().enumerate() {
+            self.stages[i].ingested += s.ingested;
+            self.stages[i].served += s.served;
+            self.stages[i].dropped += s.dropped;
+            self.stages[i].offloaded += s.offloaded;
+            self.stages[i].queued += s.queued;
+            self.stages[i].preempted += s.preempted;
+        }
         // vms_by_type entries merge by type name; the result stays sorted
         // by name (both inputs are), so merged reports diff cleanly.
         for (name, n) in &o.vms_by_type {
@@ -183,6 +203,19 @@ impl SimReport {
                 self.served_by_model
                     .iter()
                     .map(|&n| Json::from(n as usize))
+                    .collect(),
+            )),
+            ("stages", Json::Arr(
+                self.stages
+                    .iter()
+                    .map(|s| Json::obj(vec![
+                        ("ingested", (s.ingested as usize).into()),
+                        ("served", (s.served as usize).into()),
+                        ("dropped", (s.dropped as usize).into()),
+                        ("offloaded", (s.offloaded as usize).into()),
+                        ("queued", s.queued.into()),
+                        ("preempted", (s.preempted as usize).into()),
+                    ]))
                     .collect(),
             )),
             ("floor_requests", (self.floor_requests as usize).into()),

@@ -55,6 +55,15 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
         }
         None => None,
     };
+    // Named stage DAGs resolve against the registry here; the config layer
+    // already validated the name, this is just the lookup.
+    let pipeline = match cfg.pipeline.as_deref() {
+        None => None,
+        Some("detect-classify") => {
+            Some(crate::pipeline::PipelineSpec::detect_classify(reg))
+        }
+        Some(other) => anyhow::bail!("unknown pipeline spec {other:?}"),
+    };
     Ok(simulate(scheme.as_mut(), reg, &reqs, &trace.name, &SimConfig {
         vm_types: cfg.effective_vm_types(),
         assignment: cfg.assignment,
@@ -69,5 +78,7 @@ pub fn run_experiment(reg: &Registry, cfg: &ExperimentConfig) -> Result<SimRepor
         },
         preemption,
         ensemble: cfg.ensemble,
+        pipeline,
+        ..SimConfig::default()
     }))
 }

@@ -70,7 +70,10 @@ pub fn simulate_sharded(factory: &(dyn Fn() -> Box<dyn Scheme> + Sync),
                         reg: &Registry, reqs: &[Request], trace_name: &str,
                         cfg: &SimConfig, threads: usize) -> SimReport {
     let models = assign_models(reqs, reg, cfg);
-    let single_stream = cfg.assignment == Assignment::ModelLess;
+    // Model-less and pipeline runs couple models through one shared plane
+    // (and, for pipelines, through stage handoffs): both stay one stream.
+    let single_stream = cfg.assignment == Assignment::ModelLess
+        || cfg.assignment == Assignment::Pipeline;
     let shards = partition(reqs, &models, reg.len(), single_stream);
     let threads = if threads == 0 { available_threads() } else { threads };
     let n_workers = threads.min(shards.len()).max(1);

@@ -118,6 +118,15 @@ pub enum WorkloadKind {
     /// what lets the variant plane attain ~100% of floors). The workload
     /// the `fig_variants` frontier replays.
     AccuracyTiered,
+    /// End-to-end accuracy tiers for two-stage pipeline queries. A chain's
+    /// deliverable accuracy is the PRODUCT of its stages' — the
+    /// detect→classify pool tops out near 0.72 × 0.89 ≈ 64% end to end —
+    /// so the floors here (none / 45% / 55% / 60%) sit inside that
+    /// envelope where `AccuracyTiered`'s 65/78/86 would all be infeasible.
+    /// SLOs cover the chain's additive latency (cheapest chain ≈ 0.5 s
+    /// nominal; tight floors force slow classify variants). The workload
+    /// `fig_pipeline` and the pipeline scenarios replay.
+    PipelineTiered,
 }
 
 /// Expand a rate trace into a concrete request stream (Poisson arrivals
@@ -170,6 +179,33 @@ pub fn synthesize_requests(trace: &Trace, kind: WorkloadKind, seed: u64) -> Vec<
                     } else {
                         (rng.uniform(20_000.0, 120_000.0), floor, Strictness::Relaxed)
                     }
+                }
+                WorkloadKind::PipelineTiered => {
+                    // Four end-to-end floor tiers inside the chain's ~64%
+                    // product envelope: 40% unconstrained, 25% ≥45, 20%
+                    // ≥55, 15% ≥60. Unconstrained queries may be
+                    // interactive (the cheapest chain fits ~1 s);
+                    // floor-bearing ones carry chain-scale deadlines.
+                    let roll = rng.f64();
+                    let floor = if roll < 0.40 {
+                        0.0
+                    } else if roll < 0.65 {
+                        45.0
+                    } else if roll < 0.85 {
+                        55.0
+                    } else {
+                        60.0
+                    };
+                    let slo = if floor == 0.0 {
+                        rng.uniform(800.0, 4000.0)
+                    } else if floor < 50.0 {
+                        rng.uniform(2_000.0, 10_000.0)
+                    } else if floor < 58.0 {
+                        rng.uniform(3_000.0, 20_000.0)
+                    } else {
+                        rng.uniform(5_000.0, 30_000.0)
+                    };
+                    (slo, floor, Strictness::from_slo_ms(slo))
                 }
             };
             out.push(Request {

@@ -1,0 +1,138 @@
+//! Scenario-harness conformance: every committed `scenarios/*.json`
+//! document loads through [`ExperimentConfig`], runs end to end at a
+//! smoke scale (~1k requests), survives a serialize→reload round trip,
+//! and typo'd documents are rejected by field name.
+
+use paragon::config::ExperimentConfig;
+use paragon::models::Registry;
+use paragon::sim::run_experiment;
+use paragon::util::json::Json;
+use std::path::PathBuf;
+
+/// The committed scenario directory (the manifest sits at the repo root).
+fn scenario_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+fn scenario_files() -> Vec<PathBuf> {
+    let mut files: Vec<PathBuf> = std::fs::read_dir(scenario_dir())
+        .expect("scenarios/ must exist")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "json"))
+        .collect();
+    files.sort();
+    files
+}
+
+#[test]
+fn committed_scenarios_cover_the_planes() {
+    let files = scenario_files();
+    assert!(files.len() >= 6, "expected the committed scenario set: {files:?}");
+    let names: Vec<String> = files
+        .iter()
+        .map(|p| p.file_stem().unwrap().to_string_lossy().into_owned())
+        .collect();
+    for want in ["diurnal", "flash_crowd", "preemption_storm",
+                 "tiered_accuracy", "long_tail", "pipeline_two_stage"] {
+        assert!(names.iter().any(|n| n == want),
+                "missing scenario {want}: {names:?}");
+    }
+}
+
+/// Every committed scenario loads, runs ~1k requests, and its `to_json`
+/// round trip reloads to an equivalent experiment.
+#[test]
+fn every_scenario_loads_runs_and_round_trips() {
+    let reg = Registry::builtin();
+    for path in scenario_files() {
+        let cfg = ExperimentConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{path:?} must load: {e:#}"));
+        // Documentation keys are mandatory in committed scenarios.
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(doc.get("name").as_str().is_some(), "{path:?} needs a name");
+        assert!(doc.get("description").as_str().is_some(),
+                "{path:?} needs a description");
+
+        // Smoke scale: ~1k requests regardless of the document's own
+        // rate/duration (the CI matrix runs the committed scale).
+        let mut small = cfg.clone();
+        small.duration_s = 50;
+        small.mean_rate = 20.0;
+        let rep = run_experiment(&reg, &small)
+            .unwrap_or_else(|e| panic!("{path:?} must run: {e:#}"));
+        assert!(rep.requests > 500, "{path:?} too quiet: {}", rep.requests);
+        assert_eq!(rep.requests,
+                   rep.served_vm + rep.served_lambda + rep.dropped
+                       + rep.preempted,
+                   "{path:?} broke request conservation: {rep:?}");
+
+        // Round trip: to_json → from_json reproduces the experiment.
+        let back = ExperimentConfig::from_json(&cfg.to_json())
+            .unwrap_or_else(|e| panic!("{path:?} round trip: {e:#}"));
+        assert_eq!(back.trace, cfg.trace, "{path:?}");
+        assert_eq!(back.scheme, cfg.scheme, "{path:?}");
+        assert_eq!(back.workload, cfg.workload, "{path:?}");
+        assert_eq!(back.assignment, cfg.assignment, "{path:?}");
+        assert_eq!(back.seed, cfg.seed, "{path:?}");
+        assert_eq!(back.mean_rate, cfg.mean_rate, "{path:?}");
+        assert_eq!(back.duration_s, cfg.duration_s, "{path:?}");
+        assert_eq!(back.pipeline, cfg.pipeline, "{path:?}");
+        assert_eq!(back.spot, cfg.spot, "{path:?}");
+        assert_eq!(back.spot_rate, cfg.spot_rate, "{path:?}");
+        assert_eq!(
+            back.vm_types.iter().map(|t| t.name).collect::<Vec<_>>(),
+            cfg.vm_types.iter().map(|t| t.name).collect::<Vec<_>>(),
+            "{path:?}"
+        );
+        // And the reloaded config runs the identical experiment.
+        let mut small2 = back;
+        small2.duration_s = 50;
+        small2.mean_rate = 20.0;
+        let rep2 = run_experiment(&reg, &small2).unwrap();
+        assert_eq!(rep, rep2, "{path:?} round trip changed the experiment");
+    }
+}
+
+/// The pipeline scenario really drives the pipeline plane: stage ledgers
+/// appear and conserve.
+#[test]
+fn pipeline_scenario_produces_stage_ledgers() {
+    let reg = Registry::builtin();
+    let mut cfg = ExperimentConfig::from_file(
+        &scenario_dir().join("pipeline_two_stage.json")).unwrap();
+    cfg.duration_s = 60;
+    cfg.mean_rate = 20.0;
+    let rep = run_experiment(&reg, &cfg).unwrap();
+    assert_eq!(rep.stages.len(), 2, "two-stage chain: {rep:?}");
+    for (s, c) in rep.stages.iter().enumerate() {
+        assert_eq!(
+            c.ingested,
+            c.served + c.dropped + c.offloaded + c.queued as u64 + c.preempted,
+            "stage {s} conservation violated: {c:?}"
+        );
+    }
+    assert_eq!(rep.stages[0].ingested, rep.requests);
+    // Non-pipeline scenarios stay ledger-free (legacy reports unchanged).
+    let mut plain = ExperimentConfig::from_file(
+        &scenario_dir().join("diurnal.json")).unwrap();
+    plain.duration_s = 30;
+    plain.mean_rate = 10.0;
+    assert!(run_experiment(&reg, &plain).unwrap().stages.is_empty());
+}
+
+/// A typo'd field fails loudly, naming both the offender and the known
+/// fields — a scenario must never silently run the defaults.
+#[test]
+fn unknown_scenario_keys_rejected_by_name() {
+    let err = ExperimentConfig::from_str_json(
+        r#"{"name":"typo","descriptino":"oops","trace":"berkeley"}"#)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("descriptino"), "must name the bad field: {err}");
+    assert!(err.contains("description"), "must list known fields: {err}");
+    let err2 = ExperimentConfig::from_str_json(r#"{"pipelin":"detect-classify"}"#)
+        .unwrap_err()
+        .to_string();
+    assert!(err2.contains("pipelin"), "must name the bad field: {err2}");
+}
